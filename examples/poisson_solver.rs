@@ -1,0 +1,96 @@
+//! HPC scenario: spectral solver for the 3D periodic Poisson equation
+//! `∇²u = f` — the classic consumer of 3D DFTs that motivates the paper's
+//! HPC workloads (MD electrostatics, astrophysics).
+//!
+//! Method: forward 3D DFT of `f` (via the split-complex GEMT chain — the
+//! exact computation the TriADA device executes), divide by the discrete
+//! Laplacian eigenvalues `λ(k) = 2Σ(cos(2πk_s/N_s) − 1)/h²`, inverse DFT,
+//! and verify against the analytic solution.
+//!
+//! Run: `cargo run --release --example poisson_solver`
+
+use std::f64::consts::PI;
+
+use triada::gemt::split::{dft3d_split, pack_complex, unpack_complex};
+use triada::sim::{self, SimConfig};
+use triada::gemt::CoeffSet;
+use triada::tensor::Tensor3;
+use triada::transforms::TransformKind;
+use triada::util::{human, Timer};
+
+fn main() -> anyhow::Result<()> {
+    // Cuboid, non-power-of-two grid — the MD regime the paper highlights
+    // (32–128 per dim, not power of two).
+    let (n1, n2, n3) = (24, 20, 12);
+    println!("3D periodic Poisson solver on a {n1}x{n2}x{n3} grid (spectral, via 3D DFT)\n");
+
+    // Manufactured solution: u* = sin(2πx)·cos(4πy)·sin(2πz)
+    // ⇒ f = ∇²u* = −(4π² + 16π² + 4π²) u*.
+    let u_star = Tensor3::from_fn(n1, n2, n3, |i, j, k| {
+        let (x, y, z) = (i as f64 / n1 as f64, j as f64 / n2 as f64, k as f64 / n3 as f64);
+        (2.0 * PI * x).sin() * (4.0 * PI * y).cos() * (2.0 * PI * z).sin()
+    });
+
+    // Discrete RHS: apply the 7-point Laplacian to u* so the discrete
+    // problem is solved exactly (no truncation-error floor).
+    let h = 1.0;
+    let f = Tensor3::from_fn(n1, n2, n3, |i, j, k| {
+        let c = u_star.get(i, j, k);
+        let xp = u_star.get((i + 1) % n1, j, k);
+        let xm = u_star.get((i + n1 - 1) % n1, j, k);
+        let yp = u_star.get(i, (j + 1) % n2, k);
+        let ym = u_star.get(i, (j + n2 - 1) % n2, k);
+        let zp = u_star.get(i, j, (k + 1) % n3);
+        let zm = u_star.get(i, j, (k + n3 - 1) % n3);
+        (xp + xm + yp + ym + zp + zm - 6.0 * c) / (h * h)
+    });
+
+    // Forward 3D DFT of f (split representation — what the AOT path runs).
+    let t = Timer::start();
+    let (fr, fi) = dft3d_split(&f, &Tensor3::zeros(n1, n2, n3), false);
+    let fwd_time = t.elapsed_s();
+
+    // Divide by eigenvalues of the discrete Laplacian.
+    let eig = |k: usize, n: usize| 2.0 * ((2.0 * PI * k as f64 / n as f64).cos() - 1.0) / (h * h);
+    let mut ur = Tensor3::zeros(n1, n2, n3);
+    let mut ui = Tensor3::zeros(n1, n2, n3);
+    for i in 0..n1 {
+        for j in 0..n2 {
+            for k in 0..n3 {
+                let lam = eig(i, n1) + eig(j, n2) + eig(k, n3);
+                if lam.abs() < 1e-12 {
+                    // zero mode: fix the free constant at 0
+                    ur.set(i, j, k, 0.0);
+                    ui.set(i, j, k, 0.0);
+                } else {
+                    ur.set(i, j, k, fr.get(i, j, k) / lam);
+                    ui.set(i, j, k, fi.get(i, j, k) / lam);
+                }
+            }
+        }
+    }
+
+    // Inverse DFT back to physical space.
+    let t = Timer::start();
+    let (u, u_imag) = dft3d_split(&ur, &ui, true);
+    let inv_time = t.elapsed_s();
+
+    let err = u.max_abs_diff(&u_star);
+    println!("forward DFT: {} | inverse DFT: {}", human::duration(fwd_time), human::duration(inv_time));
+    println!("imaginary residue (should be ~0): {:.2e}", u_imag.frob_norm());
+    println!("max |u − u*| = {err:.2e}");
+    anyhow::ensure!(err < 1e-9, "spectral solve failed");
+
+    // What would this cost on the TriADA device? One real mode-product
+    // chain of the same shape (the split DFT = 4× this workload/mode).
+    let cs = CoeffSet::forward(TransformKind::Dht, n1, n2, n3);
+    let sim_out = sim::simulate(&u_star, &cs, &SimConfig::esop((128, 128, 128)));
+    println!(
+        "\nTriADA device model: a {n1}x{n2}x{n3} real transform = {} time-steps ({} MACs); \
+         the split 3D DFT streams 4 such chains per mode pair.",
+        sim_out.counters.time_steps,
+        human::count(sim_out.counters.macs as f64),
+    );
+    println!("\npoisson_solver OK");
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Quickstart: the three ways to run a 3D transform with this crate.
+//!
+//! 1. CPU reference (`gemt`) — exact, always available.
+//! 2. TriADA device simulator (`sim`) — same numerics + architecture
+//!    counters (time-steps, MACs, energy).
+//! 3. AOT/PJRT (`runtime`) — the production path over HLO artifacts
+//!    (requires `make artifacts`; skipped gracefully if missing).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use triada::gemt::{self, CoeffSet};
+use triada::runtime::{Direction, PjrtService};
+use triada::sim::{self, SimConfig};
+use triada::tensor::Tensor3;
+use triada::transforms::TransformKind;
+use triada::util::{human, Rng, Timer};
+
+fn main() -> anyhow::Result<()> {
+    let shape = (8, 8, 8);
+    let kind = TransformKind::Dct2;
+    let mut rng = Rng::new(42);
+    let x = Tensor3::random(shape.0, shape.1, shape.2, &mut rng);
+    println!("TriADA quickstart — {} on {:?}, ‖X‖ = {:.6}\n", kind.name(), shape, x.frob_norm());
+
+    // 1. CPU reference: forward, then inverse, check the round-trip.
+    let t = Timer::start();
+    let y = gemt::dxt3d_forward(&x, kind);
+    let fwd_time = t.elapsed_s();
+    let back = gemt::dxt3d_inverse(&y, kind);
+    println!("[1] cpu reference  : forward in {}, round-trip max|Δ| = {:.2e}",
+        human::duration(fwd_time), x.max_abs_diff(&back));
+
+    // 2. Device simulator: same transform, plus what the paper counts.
+    let cs = CoeffSet::forward(kind, shape.0, shape.1, shape.2);
+    let out = sim::simulate(&x, &cs, &SimConfig::esop((64, 64, 64)));
+    println!(
+        "[2] triada device  : {} time-steps (= N1+N2+N3 = {}), {} MACs, {} energy units, vs ref max|Δ| = {:.2e}",
+        out.counters.time_steps,
+        shape.0 + shape.1 + shape.2,
+        human::count(out.counters.macs as f64),
+        human::count(out.energy),
+        out.result.max_abs_diff(&y)
+    );
+
+    // 3. AOT/PJRT: load the compiled artifact and execute it from Rust.
+    match PjrtService::spawn("artifacts") {
+        Ok(service) => {
+            let handle = service.handle();
+            let t = Timer::start();
+            let got = handle.run(kind, Direction::Forward, vec![x.to_f32()])?;
+            let exec_time = t.elapsed_s();
+            let diff = got[0].to_f64().max_abs_diff(&y);
+            println!(
+                "[3] pjrt artifact  : executed in {} (f32), vs ref max|Δ| = {:.2e}",
+                human::duration(exec_time),
+                diff
+            );
+            anyhow::ensure!(diff < 1e-3, "PJRT output disagrees with reference");
+        }
+        Err(e) => println!("[3] pjrt artifact  : skipped ({e:#}); run `make artifacts`"),
+    }
+
+    println!("\nquickstart OK");
+    Ok(())
+}

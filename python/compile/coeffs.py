@@ -1,0 +1,101 @@
+"""Coefficient (change-of-basis) matrices for the 3D-DXT family — the JAX
+mirror of ``rust/src/transforms/``.
+
+Convention (identical to the Rust side): the forward transform along one
+mode is ``y_k = sum_n x_n * C[n, k]`` — rows are contracted against the
+tensor mode. All real kinds are orthonormal so the inverse matrix is the
+transpose; the DFT is carried as a split (re, im) pair of real matrices so
+AOT artifacts stay real-typed (see DESIGN.md §1).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+REAL_KINDS = ("identity", "dct2", "dht", "dst1", "dwht")
+ALL_KINDS = REAL_KINDS + ("dft-split",)
+
+
+def identity_matrix(n: int) -> np.ndarray:
+    return np.eye(n, dtype=np.float64)
+
+
+def dct2_matrix(n: int) -> np.ndarray:
+    """Orthonormal DCT-II: C[n,k] = s_k cos(pi (2n+1) k / 2N)."""
+    if n < 1:
+        raise ValueError("n must be >= 1")
+    rows = np.arange(n)[:, None].astype(np.float64)
+    cols = np.arange(n)[None, :].astype(np.float64)
+    mat = np.cos(np.pi * (2.0 * rows + 1.0) * cols / (2.0 * n))
+    scale = np.full((1, n), np.sqrt(2.0 / n))
+    scale[0, 0] = np.sqrt(1.0 / n)
+    return mat * scale
+
+
+def dht_matrix(n: int) -> np.ndarray:
+    """Orthonormal DHT: C[n,k] = cas(2 pi n k / N) / sqrt(N)."""
+    if n < 1:
+        raise ValueError("n must be >= 1")
+    theta = 2.0 * np.pi * np.outer(np.arange(n), np.arange(n)) / n
+    return (np.cos(theta) + np.sin(theta)) / np.sqrt(n)
+
+
+def dst1_matrix(n: int) -> np.ndarray:
+    """Orthonormal DST-I: C[n,k] = sqrt(2/(N+1)) sin(pi (n+1)(k+1)/(N+1))."""
+    if n < 1:
+        raise ValueError("n must be >= 1")
+    m = float(n + 1)
+    rows = np.arange(1, n + 1)[:, None].astype(np.float64)
+    cols = np.arange(1, n + 1)[None, :].astype(np.float64)
+    return np.sqrt(2.0 / m) * np.sin(np.pi * rows * cols / m)
+
+
+def dwht_matrix(n: int) -> np.ndarray:
+    """Orthonormal natural-order Walsh–Hadamard; n must be a power of two."""
+    if n < 1 or (n & (n - 1)) != 0:
+        raise ValueError(f"DWHT requires power-of-two n, got {n}")
+    idx = np.arange(n)
+    bits = np.bitwise_and(idx[:, None], idx[None, :])
+    # parity of popcount via successive folds
+    parity = bits
+    shift = 1
+    while shift < 64:
+        parity = parity ^ (parity >> shift)
+        shift *= 2
+    signs = 1.0 - 2.0 * (parity & 1).astype(np.float64)
+    return signs / np.sqrt(n)
+
+
+def dft_split(n: int) -> tuple[np.ndarray, np.ndarray]:
+    """Split unitary DFT: (re, im) with C = re + i*im, C[n,k]=e^{-2πi nk/N}/√N."""
+    if n < 1:
+        raise ValueError("n must be >= 1")
+    theta = 2.0 * np.pi * np.outer(np.arange(n), np.arange(n)) / n
+    scale = 1.0 / np.sqrt(n)
+    return np.cos(theta) * scale, -np.sin(theta) * scale
+
+
+def forward_matrix(kind: str, n: int) -> np.ndarray:
+    """Forward coefficient matrix for a real kind."""
+    if kind == "identity":
+        return identity_matrix(n)
+    if kind == "dct2":
+        return dct2_matrix(n)
+    if kind == "dht":
+        return dht_matrix(n)
+    if kind == "dst1":
+        return dst1_matrix(n)
+    if kind == "dwht":
+        return dwht_matrix(n)
+    raise ValueError(f"no single real matrix for kind {kind!r}")
+
+
+def inverse_matrix(kind: str, n: int) -> np.ndarray:
+    """Inverse = transpose for the orthonormal real kinds."""
+    return forward_matrix(kind, n).T
+
+
+def supports_size(kind: str, n: int) -> bool:
+    if kind == "dwht":
+        return n >= 1 and (n & (n - 1)) == 0
+    return n >= 1

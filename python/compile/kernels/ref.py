@@ -1,0 +1,51 @@
+# Pure-jnp correctness oracle for the Pallas kernels and the L2 model.
+#
+# Everything here is the *definition* (einsum mode products); the kernels
+# and the Rust reference must agree with these to tolerance. This is the
+# CORE correctness signal of the python layer.
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mode1_product(x: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """out[k1,j,k] = sum_i x[i,j,k] * c[i,k1] (rows contracted)."""
+    return jnp.einsum("ijk,ia->ajk", x, c)
+
+
+def mode2_product(x: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """out[i,k2,k] = sum_j x[i,j,k] * c[j,k2]."""
+    return jnp.einsum("ijk,jb->ibk", x, c)
+
+
+def mode3_product(x: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """out[i,j,k3] = sum_k x[i,j,k] * c[k,k3]."""
+    return jnp.einsum("ijk,kc->ijc", x, c)
+
+
+def gemt3(x: jnp.ndarray, c1: jnp.ndarray, c2: jnp.ndarray, c3: jnp.ndarray) -> jnp.ndarray:
+    """Three-mode GEMT in TriADA's summation order s = {3, 1, 2} (Eq. 6)."""
+    return mode2_product(mode1_product(mode3_product(x, c3), c1), c2)
+
+
+def sr_gemm(x: jnp.ndarray, c: jnp.ndarray, acc: jnp.ndarray) -> jnp.ndarray:
+    """Output-stationary square-by-rectangular GEMM: acc += x @ c
+    (the §5.1 kernel (3) semantics; c square)."""
+    return acc + x @ c
+
+
+def dft3d_split(re: jnp.ndarray, im: jnp.ndarray, cr1, ci1, cr2, ci2, cr3, ci3):
+    """Split-complex 3D DFT: four real mode products per complex one."""
+    a, b = re, im
+    for mode_prod, (cr, ci) in (
+        (mode3_product, (cr3, ci3)),
+        (mode1_product, (cr1, ci1)),
+        (mode2_product, (cr2, ci2)),
+    ):
+        ar = mode_prod(a, cr)
+        am = mode_prod(a, ci)
+        br = mode_prod(b, cr)
+        bm = mode_prod(b, ci)
+        a, b = ar - bm, am + br
+    return a, b

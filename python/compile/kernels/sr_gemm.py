@@ -1,0 +1,71 @@
+"""Layer-1 Pallas kernel: the output-stationary SR-GEMM of paper §5.1 (3).
+
+The paper's kernel keeps the rectangular operand and the accumulator
+*stationary in the cells* while the square coefficient matrix streams in as
+rank-1 updates. The TPU re-think (DESIGN.md §Hardware-Adaptation): one
+TriADA time-step = one grid step of a VMEM-resident block outer product.
+The k-axis of the grid is the streamed summation index; BlockSpec expresses
+the HBM↔VMEM schedule the paper's operand buses express in space; the
+output block never leaves VMEM (output-stationary, accumulate in place) —
+rank-`block_k` updates keep the MXU as busy as a dense matmul.
+
+``interpret=True`` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls; numerics are identical (see python/tests).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, c_ref, o_ref):
+    """One grid step: accumulate a rank-`block_k` update into the
+    stationary output block (the paper's per-time-step cell update)."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += x_ref[...] @ c_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def matmul_streamed(x: jnp.ndarray, c: jnp.ndarray, block_k: int = 128) -> jnp.ndarray:
+    """``x @ c`` with the streamed-coefficient schedule.
+
+    ``x: (m, n)`` is the stationary operand; ``c: (n, p)`` streams through
+    VMEM in ``block_k``-row slabs. Falls back to a single slab when the
+    contraction axis does not divide evenly (odd shapes from hypothesis).
+    """
+    m, n = x.shape
+    n2, p = c.shape
+    if n != n2:
+        raise ValueError(f"inner dims mismatch: {x.shape} @ {c.shape}")
+    bk = block_k if n % block_k == 0 else n
+    grid = (n // bk,)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, bk), lambda k: (0, k)),
+            pl.BlockSpec((bk, p), lambda k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, p), lambda k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, p), x.dtype),
+        interpret=True,
+    )(x, c)
+
+
+def sr_gemm(x: jnp.ndarray, c: jnp.ndarray, acc: jnp.ndarray, block_k: int = 128) -> jnp.ndarray:
+    """Output-stationary square-by-rectangular GEMM: ``acc += x @ c``.
+
+    ``c`` must be square (the §5.2 tag-synchronization requirement — the
+    same constraint the Rust actuator enforces).
+    """
+    if c.shape[0] != c.shape[1]:
+        raise ValueError(f"SR-GEMM streams a square coefficient matrix, got {c.shape}")
+    return acc + matmul_streamed(x, c, block_k=block_k)

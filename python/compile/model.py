@@ -1,0 +1,108 @@
+"""Layer-2: the JAX 3D-DXT model — forward/inverse transforms per kind,
+calling the Layer-1 Pallas kernels, with coefficient matrices baked in as
+compile-time constants (the paper's HPC setting: "orthogonal ... matrices
+of *predefined* coefficients").
+
+Each ``make_*`` returns a function of the runtime tensor(s) only, so
+``aot.py`` can lower it once per (kind, shape, direction) variant and the
+Rust coordinator can execute it with zero Python on the request path.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import coeffs
+from .kernels import dxt3d as kern
+
+
+def _coeff_triple(kind: str, shape, inverse: bool):
+    n1, n2, n3 = shape
+    mat = coeffs.inverse_matrix if inverse else coeffs.forward_matrix
+    return (
+        jnp.asarray(mat(kind, n1), dtype=jnp.float32),
+        jnp.asarray(mat(kind, n2), dtype=jnp.float32),
+        jnp.asarray(mat(kind, n3), dtype=jnp.float32),
+    )
+
+
+def make_real_dxt(kind: str, shape, inverse: bool = False, block_k: int = 128):
+    """Transform function ``x -> (y,)`` for a real kind at a fixed shape."""
+    if kind not in coeffs.REAL_KINDS:
+        raise ValueError(f"not a real kind: {kind!r}")
+    for n in shape:
+        if not coeffs.supports_size(kind, n):
+            raise ValueError(f"{kind} does not support size {n}")
+    c1, c2, c3 = _coeff_triple(kind, shape, inverse)
+
+    def fn(x):
+        return (kern.dxt3d(x, c1, c2, c3, block_k=block_k),)
+
+    return fn
+
+
+def make_dft_split(shape, inverse: bool = False, block_k: int = 128):
+    """Transform function ``(re, im) -> (re', im')`` for the split DFT."""
+    n1, n2, n3 = shape
+    mats = []
+    for n in (n1, n2, n3):
+        cr, ci = coeffs.dft_split(n)
+        if inverse:
+            ci = -ci  # inverse = conjugate for the unitary DFT
+        mats.append((jnp.asarray(cr, dtype=jnp.float32), jnp.asarray(ci, dtype=jnp.float32)))
+    (cr1, ci1), (cr2, ci2), (cr3, ci3) = mats
+
+    def fn(re, im):
+        return kern.dft3d_split(re, im, cr1, ci1, cr2, ci2, cr3, ci3, block_k=block_k)
+
+    return fn
+
+
+def make_fn(kind: str, shape, inverse: bool = False, block_k: int = 128):
+    """Dispatch: returns (fn, n_inputs, n_outputs)."""
+    if kind == "dft-split":
+        return make_dft_split(shape, inverse, block_k), 2, 2
+    return make_real_dxt(kind, shape, inverse, block_k), 1, 1
+
+
+def reference_fn(kind: str, shape, inverse: bool = False):
+    """Pure-jnp oracle with the same signature as ``make_fn``'s function —
+    used by pytest to validate the kernels and by E6 sanity checks."""
+    from .kernels import ref
+
+    if kind == "dft-split":
+        n1, n2, n3 = shape
+        mats = []
+        for n in (n1, n2, n3):
+            cr, ci = coeffs.dft_split(n)
+            if inverse:
+                ci = -ci
+            mats.append((jnp.asarray(cr, jnp.float32), jnp.asarray(ci, jnp.float32)))
+        (cr1, ci1), (cr2, ci2), (cr3, ci3) = mats
+
+        def fn(re, im):
+            return ref.dft3d_split(re, im, cr1, ci1, cr2, ci2, cr3, ci3)
+
+        return fn
+
+    c1, c2, c3 = _coeff_triple(kind, shape, inverse)
+
+    def fn(x):
+        return (ref.gemt3(x, c1, c2, c3),)
+
+    return fn
+
+
+def variant_name(kind: str, shape, inverse: bool) -> str:
+    """Canonical artifact/variant name, shared with the Rust manifest."""
+    n1, n2, n3 = shape
+    d = "inv" if inverse else "fwd"
+    k = kind.replace("-", "_")
+    return f"{k}_{d}_{n1}x{n2}x{n3}"
+
+
+def demo_input(shape, seed: int = 0) -> np.ndarray:
+    """Deterministic demo tensor (for smoke tests)."""
+    rng = np.random.default_rng(seed)
+    return rng.uniform(-1.0, 1.0, size=shape).astype(np.float32)

@@ -1,0 +1,68 @@
+"""Coefficient-matrix properties (mirrors rust/src/transforms tests)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import coeffs
+
+
+@pytest.mark.parametrize("kind", ["identity", "dct2", "dht", "dst1"])
+@pytest.mark.parametrize("n", [1, 2, 3, 5, 8, 16, 33])
+def test_real_kinds_orthonormal(kind, n):
+    c = coeffs.forward_matrix(kind, n)
+    np.testing.assert_allclose(c @ c.T, np.eye(n), atol=1e-10)
+
+
+@pytest.mark.parametrize("n", [1, 2, 4, 8, 32])
+def test_dwht_orthonormal_pow2(n):
+    c = coeffs.dwht_matrix(n)
+    np.testing.assert_allclose(c @ c.T, np.eye(n), atol=1e-10)
+    assert np.allclose(np.abs(c), 1.0 / np.sqrt(n))
+
+
+def test_dwht_rejects_non_pow2():
+    with pytest.raises(ValueError):
+        coeffs.dwht_matrix(6)
+    assert not coeffs.supports_size("dwht", 6)
+    assert coeffs.supports_size("dwht", 8)
+
+
+@pytest.mark.parametrize("n", [2, 5, 9])
+def test_dht_involutory(n):
+    h = coeffs.dht_matrix(n)
+    np.testing.assert_allclose(h @ h, np.eye(n), atol=1e-10)
+
+
+@given(n=st.integers(min_value=1, max_value=24))
+@settings(max_examples=25, deadline=None)
+def test_inverse_is_transpose(n):
+    for kind in ("dct2", "dht", "dst1"):
+        c = coeffs.forward_matrix(kind, n)
+        d = coeffs.inverse_matrix(kind, n)
+        np.testing.assert_allclose(c @ d, np.eye(n), atol=1e-9)
+
+
+@given(n=st.integers(min_value=1, max_value=20))
+@settings(max_examples=25, deadline=None)
+def test_dft_split_is_unitary(n):
+    cr, ci = coeffs.dft_split(n)
+    c = cr + 1j * ci
+    np.testing.assert_allclose(c @ c.conj().T, np.eye(n), atol=1e-9)
+
+
+def test_dft_split_matches_numpy_dft():
+    n = 7
+    cr, ci = coeffs.dft_split(n)
+    c = cr + 1j * ci
+    # y_k = sum_n x_n C[n,k] must equal the unitary numpy DFT
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=n)
+    y = x @ c
+    np.testing.assert_allclose(y, np.fft.fft(x) / np.sqrt(n), atol=1e-10)
+
+
+def test_dct2_matches_known_2x2():
+    c = coeffs.dct2_matrix(2)
+    h = 1.0 / np.sqrt(2.0)
+    np.testing.assert_allclose(c, [[h, h], [h, -h]], atol=1e-12)

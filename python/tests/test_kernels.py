@@ -1,0 +1,118 @@
+"""Pallas kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes (including odd, non-power-of-two, degenerate) and
+dtypes, asserting allclose against ``kernels/ref.py``.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dxt3d as kern
+from compile.kernels import ref
+from compile.kernels.sr_gemm import matmul_streamed, sr_gemm
+
+dims = st.integers(min_value=1, max_value=12)
+
+
+def rand(shape, seed, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(-1, 1, size=shape).astype(dtype))
+
+
+@given(m=dims, n=dims, p=dims, seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_matmul_streamed_matches_jnp(m, n, p, seed):
+    x = rand((m, n), seed)
+    c = rand((n, p), seed + 1)
+    got = matmul_streamed(x, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x @ c), atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("block_k", [1, 2, 4, 128])
+def test_matmul_block_sizes_agree(block_k):
+    x = rand((8, 8), 1)
+    c = rand((8, 8), 2)
+    got = matmul_streamed(x, c, block_k=block_k)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x @ c), atol=1e-5)
+
+
+def test_sr_gemm_accumulates():
+    x = rand((4, 6), 3)
+    c = rand((6, 6), 4)
+    acc = rand((4, 6), 5)
+    got = sr_gemm(x, c, acc)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.sr_gemm(x, c, acc)), atol=1e-5)
+
+
+def test_sr_gemm_rejects_rectangular():
+    with pytest.raises(ValueError):
+        sr_gemm(rand((4, 6), 0), rand((6, 5), 1), rand((4, 5), 2))
+
+
+@given(n1=dims, n2=dims, n3=dims, seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_mode_products_match_ref(n1, n2, n3, seed):
+    x = rand((n1, n2, n3), seed)
+    c1 = rand((n1, n1), seed + 1)
+    c2 = rand((n2, n2), seed + 2)
+    c3 = rand((n3, n3), seed + 3)
+    np.testing.assert_allclose(
+        np.asarray(kern.mode1_pallas(x, c1)), np.asarray(ref.mode1_product(x, c1)), atol=1e-4
+    )
+    np.testing.assert_allclose(
+        np.asarray(kern.mode2_pallas(x, c2)), np.asarray(ref.mode2_product(x, c2)), atol=1e-4
+    )
+    np.testing.assert_allclose(
+        np.asarray(kern.mode3_pallas(x, c3)), np.asarray(ref.mode3_product(x, c3)), atol=1e-4
+    )
+
+
+@given(n1=dims, n2=dims, n3=dims, seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_dxt3d_matches_ref(n1, n2, n3, seed):
+    x = rand((n1, n2, n3), seed)
+    c1 = rand((n1, n1), seed + 1)
+    c2 = rand((n2, n2), seed + 2)
+    c3 = rand((n3, n3), seed + 3)
+    got = kern.dxt3d(x, c1, c2, c3)
+    want = ref.gemt3(x, c1, c2, c3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3, rtol=1e-3)
+
+
+def test_rectangular_mode_products():
+    # expansion and compression via rectangular coefficients
+    x = rand((4, 5, 6), 10)
+    c1 = rand((4, 9), 11)  # expand mode 1
+    c3 = rand((6, 2), 12)  # compress mode 3
+    got1 = kern.mode1_pallas(x, c1)
+    assert got1.shape == (9, 5, 6)
+    np.testing.assert_allclose(np.asarray(got1), np.asarray(ref.mode1_product(x, c1)), atol=1e-4)
+    got3 = kern.mode3_pallas(x, c3)
+    assert got3.shape == (4, 5, 2)
+    np.testing.assert_allclose(np.asarray(got3), np.asarray(ref.mode3_product(x, c3)), atol=1e-4)
+
+
+def test_dft_split_kernel_matches_ref():
+    re = rand((3, 4, 5), 20)
+    im = rand((3, 4, 5), 21)
+    from compile import coeffs
+
+    mats = []
+    for n in (3, 4, 5):
+        cr, ci = coeffs.dft_split(n)
+        mats += [jnp.asarray(cr, jnp.float32), jnp.asarray(ci, jnp.float32)]
+    got_r, got_i = kern.dft3d_split(re, im, *mats)
+    want_r, want_i = ref.dft3d_split(re, im, *mats)
+    np.testing.assert_allclose(np.asarray(got_r), np.asarray(want_r), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got_i), np.asarray(want_i), atol=1e-4)
+
+
+def test_f64_dtype_supported():
+    # interpret-mode kernels should respect input dtype
+    x = rand((5, 5), 30, np.float64)
+    c = rand((5, 5), 31, np.float64)
+    got = matmul_streamed(x, c)
+    assert got.dtype == x.dtype
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x @ c), atol=1e-12)

@@ -1,0 +1,86 @@
+"""Layer-2 model properties: round-trips, Parseval, numpy cross-checks."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import coeffs, model
+
+dims = st.integers(min_value=1, max_value=10)
+
+
+def rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(-1, 1, size=shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("kind", ["dct2", "dht", "dst1", "dwht"])
+def test_forward_inverse_roundtrip(kind):
+    shape = (4, 8, 2) if kind == "dwht" else (3, 5, 4)
+    x = rand(shape, 1)
+    fwd, _, _ = model.make_fn(kind, shape)
+    inv, _, _ = model.make_fn(kind, shape, inverse=True)
+    (y,) = fwd(x)
+    (back,) = inv(y)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x), atol=1e-4)
+
+
+@pytest.mark.parametrize("kind", ["dct2", "dht", "dst1"])
+def test_parseval(kind):
+    shape = (4, 6, 5)
+    x = rand(shape, 2)
+    fwd, _, _ = model.make_fn(kind, shape)
+    (y,) = fwd(x)
+    assert abs(float(jnp.linalg.norm(x)) - float(jnp.linalg.norm(y))) < 1e-3
+
+
+def test_dft_split_roundtrip_and_numpy():
+    shape = (3, 4, 5)
+    re, im = rand(shape, 3), rand(shape, 4)
+    fwd, n_in, n_out = model.make_fn("dft-split", shape)
+    assert (n_in, n_out) == (2, 2)
+    fr, fi = fwd(re, im)
+    z = np.fft.fftn(np.asarray(re, np.float64) + 1j * np.asarray(im, np.float64))
+    z /= np.sqrt(np.prod(shape))
+    np.testing.assert_allclose(np.asarray(fr), z.real, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(fi), z.imag, atol=1e-4)
+    inv, _, _ = model.make_fn("dft-split", shape, inverse=True)
+    br, bi = inv(fr, fi)
+    np.testing.assert_allclose(np.asarray(br), np.asarray(re), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(bi), np.asarray(im), atol=1e-4)
+
+
+@given(n1=dims, n2=dims, n3=dims, seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_model_matches_reference_fn(n1, n2, n3, seed):
+    shape = (n1, n2, n3)
+    x = rand(shape, seed)
+    fwd, _, _ = model.make_fn("dht", shape)
+    rfn = model.reference_fn("dht", shape)
+    np.testing.assert_allclose(
+        np.asarray(fwd(x)[0]), np.asarray(rfn(x)[0]), atol=1e-3, rtol=1e-3
+    )
+
+
+def test_dct2_matches_scipy_style_definition():
+    # orthonormal DCT-II along each axis == our 3D transform
+    shape = (4, 4, 4)
+    x = np.asarray(rand(shape, 5), np.float64)
+    want = x.copy()
+    for axis, n in enumerate(shape):
+        c = coeffs.dct2_matrix(n)
+        want = np.moveaxis(np.tensordot(np.moveaxis(want, axis, -1), c, axes=([-1], [0])), -1, axis)
+    fwd, _, _ = model.make_fn("dct2", shape)
+    (got,) = fwd(jnp.asarray(x, jnp.float32))
+    np.testing.assert_allclose(np.asarray(got), want, atol=1e-4)
+
+
+def test_variant_name_is_canonical():
+    assert model.variant_name("dct2", (8, 8, 8), False) == "dct2_fwd_8x8x8"
+    assert model.variant_name("dft-split", (32, 48, 64), True) == "dft_split_inv_32x48x64"
+
+
+def test_unsupported_size_raises():
+    with pytest.raises(ValueError):
+        model.make_fn("dwht", (3, 4, 4))

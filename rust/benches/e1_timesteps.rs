@@ -1,0 +1,72 @@
+//! E1 — Linear time-steps (paper §5.4, Conclusion).
+//!
+//! Claims reproduced:
+//!  * an `N1×N2×N3` transform completes in exactly `N1+N2+N3` time-steps,
+//!    independent of shape, kind, and cell count;
+//!  * the same `P³` device serves any problem with `Ns ≤ Ps`;
+//!  * cuboid and non-power-of-two shapes are first-class (unlike FFT).
+//!
+//! Run: `cargo bench --bench e1_timesteps`
+
+use triada::bench::Table;
+use triada::gemt::CoeffSet;
+use triada::sim::{self, SimConfig};
+use triada::tensor::Tensor3;
+use triada::transforms::TransformKind;
+use triada::util::{human, Rng, Timer};
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let grid = (64, 64, 64);
+    let shapes: &[(usize, usize, usize)] = &[
+        (4, 4, 4),
+        (8, 8, 8),
+        (16, 16, 16),
+        (32, 32, 32),
+        (64, 64, 64),   // fills the device exactly
+        (3, 5, 7),      // primes
+        (12, 24, 48),   // cuboid
+        (24, 20, 12),   // MD-like, non-power-of-two
+        (32, 48, 64),   // MD-like large
+        (64, 2, 2),     // extreme aspect ratio
+    ];
+
+    let mut t = Table::new(
+        "E1: time-steps are linear in N1+N2+N3 (one 64³ device serves all shapes)",
+        &["shape", "N1+N2+N3", "sim steps", "linear?", "efficiency", "sim wall", "macs"],
+    );
+    for &(n1, n2, n3) in shapes {
+        let x = Tensor3::random(n1, n2, n3, &mut rng);
+        let cs = CoeffSet::forward(TransformKind::Dht, n1, n2, n3);
+        let timer = Timer::start();
+        let out = sim::simulate(&x, &cs, &SimConfig::dense(grid));
+        let wall = timer.elapsed_s();
+        let expect = (n1 + n2 + n3) as u64;
+        assert_eq!(out.counters.time_steps, expect, "linearity violated at {n1}x{n2}x{n3}");
+        t.row(&[
+            format!("{n1}x{n2}x{n3}"),
+            expect.to_string(),
+            out.counters.time_steps.to_string(),
+            "yes".into(),
+            format!("{:.3}", out.counters.efficiency((n1 * n2 * n3) as u64)),
+            human::duration(wall),
+            human::count(out.counters.macs as f64),
+        ]);
+    }
+    t.print();
+
+    // Shape-independence of the *cells*: kind does not change the schedule.
+    let mut t2 = Table::new(
+        "E1b: step count is kind-independent (coordinate-free, data-driven cells)",
+        &["kind", "shape", "steps"],
+    );
+    for kind in [TransformKind::Identity, TransformKind::Dct2, TransformKind::Dht, TransformKind::Dwht] {
+        let (n1, n2, n3) = (8, 16, 4);
+        let x = Tensor3::random(n1, n2, n3, &mut rng);
+        let cs = CoeffSet::forward(kind, n1, n2, n3);
+        let out = sim::simulate(&x, &cs, &SimConfig::dense((32, 32, 32)));
+        t2.row(&[kind.name().into(), format!("{n1}x{n2}x{n3}"), out.counters.time_steps.to_string()]);
+    }
+    t2.print();
+    println!("\nE1 OK: every shape ran in exactly N1+N2+N3 steps on the same device.");
+}

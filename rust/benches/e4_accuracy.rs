@@ -1,0 +1,156 @@
+//! E4 — Accuracy/stability effect of shorter accumulation chains
+//! (paper §6, last paragraph).
+//!
+//! Claim reproduced: “the final rounding error depends on the total number
+//! of local data update steps or the length of the calculation. The ESOP
+//! approach avoids the update ... and, therefore, reduces the length of
+//! the calculation. The more sparse the data, the more arithmetic ...
+//! operations are avoided, improving ... the accuracy of the computing.”
+//!
+//! Method: run the transform in f32 (the device's plausible arithmetic)
+//! against an f64 ground truth. Sparse data shortens the effective
+//! accumulation chain per output element, so the f32 error shrinks with
+//! sparsity; it grows with problem size N (chain length) for dense data.
+//!
+//! Run: `cargo bench --bench e4_accuracy`
+
+use triada::bench::Table;
+use triada::gemt::{gemt_outer, CoeffSet};
+use triada::tensor::{sparsify, Mat, Tensor3};
+use triada::util::Rng;
+
+/// Relative f32-vs-f64 error of the three-stage transform.
+///
+/// Inputs and coefficients are pre-quantized to f32-representable values
+/// so the measured error is *pure accumulation rounding* (the quantity §6
+/// argues ESOP reduces), not input-quantization noise.
+fn f32_rel_error(x: &Tensor3<f64>, cs: &CoeffSet<f64>) -> f64 {
+    // snap everything to f32 grid first
+    let xq: Tensor3<f64> = x.map(|v| v as f32 as f64);
+    let csq = CoeffSet::new(
+        cs.c1.map(|v| v as f32 as f64),
+        cs.c2.map(|v| v as f32 as f64),
+        cs.c3.map(|v| v as f32 as f64),
+    );
+    let truth = gemt_outer(&xq, &csq); // f64 accumulation, same operands
+    let x32: Tensor3<f32> = xq.map(|v| v as f32);
+    let cs32 = CoeffSet::new(
+        csq.c1.map(|v| v as f32),
+        csq.c2.map(|v| v as f32),
+        csq.c3.map(|v| v as f32),
+    );
+    let got32: Tensor3<f32> = gemt_outer(&x32, &cs32); // f32 accumulation
+    let got = got32.map(|v| v as f64);
+    let mut num = 0.0f64;
+    for (a, b) in truth.data().iter().zip(got.data()) {
+        num = num.max((a - b).abs());
+    }
+    num / truth.frob_norm().max(1e-300) * (truth.len() as f64).sqrt()
+}
+
+/// Pure accumulation error of ONE mode product (Stage I alone), where a
+/// sparse input genuinely shortens every accumulation chain.
+fn stage1_f32_rel_error(x: &Tensor3<f64>, c: &Mat<f64>) -> f64 {
+    use triada::gemt::mode3_product;
+    let xq: Tensor3<f64> = x.map(|v| v as f32 as f64);
+    let cq: Mat<f64> = c.map(|v| v as f32 as f64);
+    let truth = mode3_product(&xq, &cq);
+    let got = mode3_product(&xq.map(|v| v as f32), &cq.map(|v| v as f32)).map(|v| v as f64);
+    let mut num = 0.0f64;
+    for (a, b) in truth.data().iter().zip(got.data()) {
+        num = num.max((a - b).abs());
+    }
+    num / truth.frob_norm().max(1e-300) * (truth.len() as f64).sqrt()
+}
+
+fn main() {
+    let mut rng = Rng::new(4);
+
+    // Stage-I error vs sparsity: the chain-shortening effect in isolation.
+    let n = 48;
+    let c3 = Mat::random(n, n, &mut rng);
+    let mut t0 = Table::new(
+        "E4: f32 accumulation error of one rank-N stage vs input sparsity (N=48³, avg 5 seeds)",
+        &["sparsity", "mean chain len", "rel error", "vs dense"],
+    );
+    let mut dense_stage_err = 0.0;
+    for s in [0.0, 0.5, 0.75, 0.9, 0.97] {
+        let mut errs = Vec::new();
+        for seed in 0..5 {
+            let mut x = Tensor3::random(n, n, n, &mut Rng::new(300 + seed));
+            let mut srng = Rng::new(400 + seed);
+            sparsify(&mut x, s, &mut srng);
+            errs.push(stage1_f32_rel_error(&x, &c3));
+        }
+        let mean = errs.iter().sum::<f64>() / errs.len() as f64;
+        if s == 0.0 {
+            dense_stage_err = mean;
+        }
+        t0.row(&[
+            format!("{:.0}%", s * 100.0),
+            format!("{:.1}", n as f64 * (1.0 - s)),
+            format!("{mean:.3e}"),
+            format!("{:.2}x", mean / dense_stage_err),
+        ]);
+    }
+    t0.print();
+
+    // Full three-stage transform vs sparsity: stages II/III re-densify the
+    // intermediate tensor, so their chains stay length N — the accuracy
+    // benefit is per-stage, not end-to-end (a nuance the paper does not
+    // spell out; see EXPERIMENTS.md).
+    let n = 32;
+    let cs = CoeffSet::new(
+        Mat::random(n, n, &mut rng),
+        Mat::random(n, n, &mut rng),
+        Mat::random(n, n, &mut rng),
+    );
+    let mut t = Table::new(
+        "E4b: full three-stage f32 error vs input sparsity (N=32³; stages II/III re-densify)",
+        &["sparsity", "stage-I chain len", "rel error", "vs dense"],
+    );
+    let mut dense_err = 0.0;
+    for s in [0.0, 0.5, 0.75, 0.9, 0.97] {
+        let mut errs = Vec::new();
+        for seed in 0..5 {
+            let mut x = Tensor3::random(n, n, n, &mut Rng::new(100 + seed));
+            let mut srng = Rng::new(200 + seed);
+            sparsify(&mut x, s, &mut srng);
+            errs.push(f32_rel_error(&x, &cs));
+        }
+        let mean = errs.iter().sum::<f64>() / errs.len() as f64;
+        if s == 0.0 {
+            dense_err = mean;
+        }
+        t.row(&[
+            format!("{:.0}%", s * 100.0),
+            format!("{:.1}", n as f64 * (1.0 - s)),
+            format!("{mean:.3e}"),
+            format!("{:.2}x", mean / dense_err),
+        ]);
+    }
+    t.print();
+
+    // error vs chain length (problem size) for dense data
+    let mut t2 = Table::new(
+        "E4c: f32 error grows with accumulation length (dense cubes)",
+        &["N", "chain length 3N", "rel error"],
+    );
+    for n in [4usize, 8, 16, 32, 48] {
+        let cs = CoeffSet::new(
+            Mat::random(n, n, &mut rng),
+            Mat::random(n, n, &mut rng),
+            Mat::random(n, n, &mut rng),
+        );
+        let x = Tensor3::random(n, n, n, &mut rng);
+        t2.row(&[
+            n.to_string(),
+            (3 * n).to_string(),
+            format!("{:.3e}", f32_rel_error(&x, &cs)),
+        ]);
+    }
+    t2.print();
+    println!("\nE4 OK: per-stage error falls with sparsity (shorter chains) and grows with N,");
+    println!("matching §6's accuracy argument; end-to-end the effect is bounded by the");
+    println!("re-densified stages II/III (nuance recorded in EXPERIMENTS.md).");
+}

@@ -1,0 +1,104 @@
+//! E6 — Served throughput/latency of the AOT/PJRT path (paper §1/§5:
+//! acceleration of the transforms as an AI/HPC service).
+//!
+//! Measures the full Layer-3 stack: batcher + worker pool + PJRT
+//! executable cache, against the CPU-reference backend, across batching
+//! policies — quantifying the executable-reuse gain that mirrors the
+//! device's coefficient-matrix sharing.
+//!
+//! Requires `make artifacts` (falls back to reference-only if missing).
+//!
+//! Run: `cargo bench --bench e6_throughput`
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use triada::bench::Table;
+use triada::coordinator::backend::{Backend, PjrtBackend, ReferenceBackend};
+use triada::coordinator::batcher::BatchPolicy;
+use triada::coordinator::{Coordinator, CoordinatorConfig, TransformJob};
+use triada::runtime::{Direction, PjrtService};
+use triada::tensor::Tensor3;
+use triada::transforms::TransformKind;
+use triada::util::{human, Rng, Timer};
+
+fn drive(backend: Arc<dyn Backend>, policy: BatchPolicy, jobs: usize) -> (f64, f64, f64, f64) {
+    let config = CoordinatorConfig { workers: 4, queue_depth: 256, batch: policy };
+    let c = Coordinator::start(config, backend);
+    let mut rng = Rng::new(6);
+    let t = Timer::start();
+    let handles: Vec<_> = (0..jobs)
+        .map(|i| {
+            let x = Tensor3::random(8, 8, 8, &mut rng).to_f32();
+            let kind = [TransformKind::Dct2, TransformKind::Dht][i % 2];
+            c.submit(TransformJob::new(kind, Direction::Forward, vec![x])).unwrap()
+        })
+        .collect();
+    for h in handles {
+        let r = h.wait().unwrap();
+        assert!(r.outputs.is_ok());
+    }
+    let wall = t.elapsed_s();
+    let snap = c.metrics();
+    c.shutdown();
+    (jobs as f64 / wall, snap.latency_p50_s, snap.latency_p99_s, snap.mean_batch_size)
+}
+
+fn main() {
+    let jobs = 200;
+
+    let pjrt_service = PjrtService::spawn("artifacts").ok();
+    let mut t = Table::new(
+        "E6: served throughput vs backend and batching policy (8³, 200 jobs, 4 workers)",
+        &["backend", "max_batch", "window", "throughput", "p50", "p99", "mean batch"],
+    );
+
+    let policies = [
+        (1usize, 0u64),   // no batching
+        (8, 2),
+        (16, 2),
+        (32, 5),
+    ];
+
+    for &(max_batch, window_ms) in &policies {
+        let policy = BatchPolicy { max_batch, window: Duration::from_millis(window_ms) };
+        let (thrpt, p50, p99, mb) = drive(Arc::new(ReferenceBackend), policy, jobs);
+        t.row(&[
+            "cpu-reference".into(),
+            max_batch.to_string(),
+            format!("{window_ms}ms"),
+            human::rate(thrpt),
+            human::duration(p50),
+            human::duration(p99),
+            format!("{mb:.1}"),
+        ]);
+    }
+
+    if let Some(service) = &pjrt_service {
+        service.handle().warmup().expect("warmup");
+        for &(max_batch, window_ms) in &policies {
+            let policy = BatchPolicy { max_batch, window: Duration::from_millis(window_ms) };
+            let backend = Arc::new(PjrtBackend::new(service.handle()));
+            let (thrpt, p50, p99, mb) = drive(backend, policy, jobs);
+            t.row(&[
+                "pjrt (AOT)".into(),
+                max_batch.to_string(),
+                format!("{window_ms}ms"),
+                human::rate(thrpt),
+                human::duration(p50),
+                human::duration(p99),
+                format!("{mb:.1}"),
+            ]);
+        }
+        let (compiles, execs, hits) = service.handle().stats().unwrap();
+        println!(
+            "\npjrt executable cache: {compiles} compiles, {execs} executions, {hits} cache hits \
+             ({:.1}% reuse)",
+            100.0 * hits as f64 / (hits + compiles).max(1) as f64
+        );
+    } else {
+        println!("\n(pjrt artifacts unavailable — run `make artifacts` for the AOT rows)");
+    }
+    t.print();
+    println!("\nE6 OK.");
+}

@@ -1,0 +1,101 @@
+//! Perf — the L3 hot-path microbenchmarks driving the §Perf optimization
+//! log in EXPERIMENTS.md. Not a paper experiment; a regression harness.
+//!
+//! Run: `cargo bench --bench perf_hotpath`
+
+use triada::bench::{bench, black_box, BenchConfig, Table};
+use triada::gemt::{gemt_outer, mode3_product, CoeffSet};
+use triada::sim::{self, SimConfig};
+use triada::tensor::{sparsify, Mat, Tensor3};
+use triada::util::{human, Rng};
+
+fn main() {
+    let cfg = BenchConfig { min_time_s: 0.4, samples: 9, warmup_s: 0.05 };
+    let mut rng = Rng::new(99);
+    let mut t = Table::new("perf: L3 hot paths", &["path", "median", "p90", "rate"]);
+
+    // device simulator, dense 32³
+    let n = 32;
+    let x = Tensor3::random(n, n, n, &mut rng);
+    let cs = CoeffSet::new(
+        Mat::random(n, n, &mut rng),
+        Mat::random(n, n, &mut rng),
+        Mat::random(n, n, &mut rng),
+    );
+    let macs = (n as f64).powi(3) * (3 * n) as f64;
+    let m = bench(&cfg, || {
+        black_box(sim::simulate(black_box(&x), black_box(&cs), &SimConfig::dense((64, 64, 64))));
+    });
+    t.row(&[
+        "sim dense 32³".into(),
+        human::duration(m.median_s()),
+        human::duration(m.summary.p90),
+        format!("{} MAC/s", human::count(macs / m.median_s())),
+    ]);
+
+    // device simulator, ESOP 90% sparse 32³
+    let mut xs = x.clone();
+    sparsify(&mut xs, 0.9, &mut rng);
+    let m = bench(&cfg, || {
+        black_box(sim::simulate(black_box(&xs), black_box(&cs), &SimConfig::esop((64, 64, 64))));
+    });
+    t.row(&[
+        "sim esop 32³ @90%".into(),
+        human::duration(m.median_s()),
+        human::duration(m.summary.p90),
+        format!("{} dense-MAC/s", human::count(macs / m.median_s())),
+    ]);
+
+    // CPU reference outer-product chain 32³
+    let m = bench(&cfg, || {
+        black_box(gemt_outer(black_box(&x), black_box(&cs)));
+    });
+    t.row(&[
+        "gemt_outer 32³".into(),
+        human::duration(m.median_s()),
+        human::duration(m.summary.p90),
+        format!("{} MAC/s", human::count(macs / m.median_s())),
+    ]);
+
+    // single mode product 64³ (the SR-GEMM shape)
+    let n2 = 64;
+    let big = Tensor3::random(n2, n2, n2, &mut rng);
+    let c = Mat::random(n2, n2, &mut rng);
+    let mode_macs = (n2 as f64).powi(4);
+    let m = bench(&cfg, || {
+        black_box(mode3_product(black_box(&big), black_box(&c)));
+    });
+    t.row(&[
+        "mode3_product 64³".into(),
+        human::duration(m.median_s()),
+        human::duration(m.summary.p90),
+        format!("{} MAC/s", human::count(mode_macs / m.median_s())),
+    ]);
+
+    // 3D FFT 32³ (baseline substrate)
+    use triada::fft::fft3d;
+    use triada::gemt::split::pack_complex;
+    let z = pack_complex(&x, &Tensor3::zeros(n, n, n));
+    let m = bench(&cfg, || {
+        black_box(fft3d(black_box(&z)));
+    });
+    t.row(&[
+        "fft3d 32³".into(),
+        human::duration(m.median_s()),
+        human::duration(m.summary.p90),
+        String::new(),
+    ]);
+
+    // tiled run (padding + accumulate machinery)
+    let m = bench(&cfg, || {
+        black_box(sim::simulate(black_box(&x), black_box(&cs), &SimConfig::dense((16, 16, 16))));
+    });
+    t.row(&[
+        "sim tiled 32³/16³grid".into(),
+        human::duration(m.median_s()),
+        human::duration(m.summary.p90),
+        String::new(),
+    ]);
+
+    t.print();
+}

@@ -1,0 +1,196 @@
+//! Benchmark harness substrate (the offline image has no `criterion`;
+//! see DESIGN.md §Substitutions).
+//!
+//! [`bench()`](bench) measures a closure with warmup + adaptive iteration count
+//! and reports robust statistics; [`Table`] prints the paper-style rows the
+//! E1–E9 benches regenerate (deliverable d). All benches run under
+//! `cargo bench` with `harness = false`.
+
+use crate::util::{human, Summary, Timer};
+
+/// Configuration for a measurement.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    /// Minimum wall-clock time to spend sampling (seconds).
+    pub min_time_s: f64,
+    /// Number of timed samples to collect.
+    pub samples: usize,
+    /// Warmup time before sampling (seconds).
+    pub warmup_s: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        // Modest defaults: benches print whole tables, so keep each cell fast.
+        BenchConfig { min_time_s: 0.05, samples: 15, warmup_s: 0.02 }
+    }
+}
+
+/// Quick config for expensive cells (fewer samples).
+impl BenchConfig {
+    pub fn quick() -> BenchConfig {
+        BenchConfig { min_time_s: 0.01, samples: 5, warmup_s: 0.005 }
+    }
+}
+
+/// Measurement result: per-iteration seconds.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub summary: Summary,
+    /// Iterations per sample used.
+    pub iters: u64,
+}
+
+impl Measurement {
+    pub fn median_s(&self) -> f64 {
+        self.summary.p50
+    }
+
+    pub fn display(&self) -> String {
+        format!(
+            "{} (p10 {}, p90 {}, n={})",
+            human::duration(self.summary.p50),
+            human::duration(self.summary.p10),
+            human::duration(self.summary.p90),
+            self.summary.n
+        )
+    }
+}
+
+/// Measure `f`, returning per-iteration statistics.
+pub fn bench(cfg: &BenchConfig, mut f: impl FnMut()) -> Measurement {
+    // Warmup and iteration-count calibration.
+    let t = Timer::start();
+    let mut calib_iters = 0u64;
+    while t.elapsed_s() < cfg.warmup_s.max(1e-4) {
+        f();
+        calib_iters += 1;
+    }
+    let per_iter = t.elapsed_s() / calib_iters as f64;
+    let target_sample_s = (cfg.min_time_s / cfg.samples as f64).max(1e-5);
+    let iters = ((target_sample_s / per_iter).ceil() as u64).max(1);
+
+    let mut samples = Vec::with_capacity(cfg.samples);
+    for _ in 0..cfg.samples {
+        let t = Timer::start();
+        for _ in 0..iters {
+            f();
+        }
+        samples.push(t.elapsed_s() / iters as f64);
+    }
+    Measurement {
+        summary: Summary::of(&samples).expect("nonempty samples"),
+        iters,
+    }
+}
+
+/// Black-box to stop the optimizer deleting benched work (std::hint on
+/// stable is enough for our data-heavy workloads).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// A fixed-width text table matching the repo's bench output style.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            widths: headers.iter().map(|s| s.len()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        for (w, c) in self.widths.iter_mut().zip(cells) {
+            *w = (*w).max(c.len());
+        }
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render to a string (and `print` convenience below).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("\n## {}\n\n", self.title));
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                s.push_str(&format!(" {:<width$} |", c, width = w));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&self.headers, &self.widths));
+        let sep: Vec<String> = self.widths.iter().map(|w| "-".repeat(*w)).collect();
+        out.push_str(&line(&sep, &self.widths));
+        for r in &self.rows {
+            out.push_str(&line(r, &self.widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let cfg = BenchConfig::quick();
+        let m = bench(&cfg, || {
+            let mut s = 0u64;
+            for i in 0..1000u64 {
+                s = s.wrapping_add(black_box(i));
+            }
+            black_box(s);
+        });
+        assert!(m.median_s() > 0.0);
+        assert!(m.iters >= 1);
+        assert_eq!(m.summary.n, cfg.samples);
+    }
+
+    #[test]
+    fn bench_orders_workloads_correctly() {
+        let cfg = BenchConfig::quick();
+        let small = bench(&cfg, || {
+            let v: Vec<u64> = (0..100).collect();
+            black_box(v);
+        });
+        let large = bench(&cfg, || {
+            let v: Vec<u64> = (0..100_000).collect();
+            black_box(v);
+        });
+        assert!(large.median_s() > small.median_s());
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["shape", "steps"]);
+        t.row(&["4x4x4".into(), "12".into()]);
+        t.row(&["32x48x64".into(), "144".into()]);
+        let s = t.render();
+        assert!(s.contains("## demo"));
+        assert!(s.contains("| 4x4x4"));
+        assert!(s.contains("| 32x48x64 |"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_wrong_arity() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,225 @@
+//! `triada` subcommand implementations.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context};
+
+use super::Args;
+use crate::coordinator::{Coordinator, CoordinatorConfig, ReferenceBackend, SimBackend, TransformJob};
+use crate::gemt::{self, CoeffSet};
+use crate::runtime::{Direction, PjrtService};
+use crate::sim::{self, SimConfig};
+use crate::tensor::{sparsify, Tensor3};
+use crate::transforms::TransformKind;
+use crate::util::{human, Rng, Timer};
+
+pub const USAGE: &str = "\
+triada — TriADA trilinear transform accelerator (Sedukhin et al., 2025 reproduction)
+
+USAGE:
+    triada <command> [options]
+
+COMMANDS:
+    info                         platform, artifact, and build information
+    transform                    run one 3D transform on the CPU reference
+        --kind dct|dht|dwht|dft  transform family        [dct]
+        --shape N1xN2xN3         problem shape           [8x8x8]
+        --inverse                inverse transform
+    simulate                     run the TriADA device simulator
+        --kind, --shape          as above
+        --sparsity F             zero-fraction of the input [0]
+        --no-esop                disable ESOP (dense schedule)
+        --grid P1xP2xP3          device size             [128x128x128]
+        --trace                  print per-step activity
+    serve                        start the coordinator and run a demo load
+        --artifacts DIR          artifact dir            [artifacts]
+        --jobs N                 demo jobs to submit     [64]
+        --workers N              worker threads
+        --backend pjrt|reference|sim
+        --config FILE            INI config (section [coordinator])
+    help                         this text
+";
+
+/// Dispatch a parsed command line.
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    match args.command.as_deref() {
+        None | Some("help") => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some("info") => cmd_info(args),
+        Some("transform") => cmd_transform(args),
+        Some("simulate") => cmd_simulate(args),
+        Some("serve") => cmd_serve(args),
+        Some(other) => bail!("unknown command {other:?}; see `triada help`"),
+    }
+}
+
+fn parse_kind(args: &Args) -> anyhow::Result<TransformKind> {
+    let s = args.opt_or("kind", "dct");
+    TransformKind::parse(s).with_context(|| format!("unknown transform kind {s:?}"))
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    println!("triada {} — three-layer Rust+JAX+Pallas TriADA reproduction", env!("CARGO_PKG_VERSION"));
+    println!("kinds: {}", TransformKind::ALL.map(|k| k.name()).join(", "));
+    let dir = args.opt_or("artifacts", "artifacts");
+    match crate::runtime::ArtifactManifest::load(dir) {
+        Ok(m) => {
+            println!("artifacts ({dir}): {} variants", m.specs.len());
+            for s in &m.specs {
+                println!(
+                    "  {} — {} {} {:?} ({} in / {} out)",
+                    s.name,
+                    s.kind.name(),
+                    s.direction.name(),
+                    s.shape,
+                    s.inputs,
+                    s.outputs
+                );
+            }
+        }
+        Err(e) => println!("artifacts ({dir}): unavailable ({e:#}); run `make artifacts`"),
+    }
+    match xla::PjRtClient::cpu() {
+        Ok(c) => println!("pjrt: platform={} devices={}", c.platform_name(), c.device_count()),
+        Err(e) => println!("pjrt: unavailable ({e})"),
+    }
+    Ok(())
+}
+
+fn cmd_transform(args: &Args) -> anyhow::Result<()> {
+    let kind = parse_kind(args)?;
+    let shape = args.opt_shape("shape", (8, 8, 8))?;
+    let inverse = args.flag("inverse");
+    let mut rng = Rng::new(args.opt_usize("seed", 42)? as u64);
+    let x = Tensor3::random(shape.0, shape.1, shape.2, &mut rng);
+    let t = Timer::start();
+    let y = if inverse {
+        gemt::dxt3d_inverse(&x, kind)
+    } else {
+        gemt::dxt3d_forward(&x, kind)
+    };
+    let dt = t.elapsed_s();
+    let macs = gemt::three_stage_macs(shape.0, shape.1, shape.2, shape.0, shape.1, shape.2);
+    println!(
+        "{} {} {:?}: {} | {} MACs | {} | ‖X‖={:.6} ‖Y‖={:.6}",
+        kind.name(),
+        if inverse { "inverse" } else { "forward" },
+        shape,
+        human::duration(dt),
+        human::count(macs as f64),
+        human::rate(macs as f64 / dt),
+        x.frob_norm(),
+        y.frob_norm()
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let kind = parse_kind(args)?;
+    let shape = args.opt_shape("shape", (8, 8, 8))?;
+    let grid = args.opt_shape("grid", (128, 128, 128))?;
+    let sparsity = args.opt_f64("sparsity", 0.0)?;
+    let esop = !args.flag("no-esop") && !args.flag("dense");
+    let mut rng = Rng::new(args.opt_usize("seed", 42)? as u64);
+    let mut x = Tensor3::random(shape.0, shape.1, shape.2, &mut rng);
+    if sparsity > 0.0 {
+        sparsify(&mut x, sparsity, &mut rng);
+    }
+    let cs = CoeffSet::forward(kind, shape.0, shape.1, shape.2);
+    let cfg = SimConfig {
+        grid,
+        esop,
+        record_trace: args.flag("trace"),
+        ..SimConfig::default()
+    };
+    let out = sim::simulate(&x, &cs, &cfg);
+    let c = &out.counters;
+    println!("TriADA simulation: {} forward {:?} on grid {:?} (esop={})", kind.name(), shape, grid, esop);
+    println!("  time-steps      : {} (+{} skipped)", c.time_steps, c.steps_skipped);
+    println!("  MACs            : {} performed, {} skipped", human::count(c.macs as f64), human::count(c.macs_skipped as f64));
+    println!("  line activations: {} (+{} suppressed)", human::count(c.line_activations as f64), human::count(c.lines_suppressed as f64));
+    println!("  operand receives: {}", human::count(c.operand_receives as f64));
+    println!("  actuator stream : {} elements (+{} suppressed)", human::count(c.actuator_elements as f64), human::count(c.actuator_suppressed as f64));
+    println!("  cell efficiency : {:.3}", c.efficiency((shape.0 * shape.1 * shape.2) as u64));
+    println!("  dynamic energy  : {} units", human::count(out.energy));
+    // cross-check
+    let reference = gemt::gemt_outer(&x, &cs);
+    let err = out.result.max_abs_diff(&reference);
+    println!("  vs CPU reference: max |Δ| = {err:.3e}");
+    if args.flag("trace") {
+        for (stage, executed, skipped, macs) in sim::trace::stage_summary(&out.traces) {
+            println!(
+                "  stage {:>3}: {} steps executed, {} skipped, {} MACs",
+                stage.name(),
+                executed,
+                skipped,
+                human::count(macs as f64)
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => CoordinatorConfig::from_config(&crate::config::Config::load(path)?)?,
+        None => CoordinatorConfig::default(),
+    };
+    if let Some(w) = args.opt("workers") {
+        cfg.workers = w.parse().context("--workers")?;
+    }
+    let backend_name = args.opt_or("backend", "pjrt");
+    let backend: Arc<dyn crate::coordinator::Backend> = match backend_name {
+        "reference" => Arc::new(ReferenceBackend),
+        "sim" => Arc::new(SimBackend::new(SimConfig::default())),
+        "pjrt" => {
+            let dir = args.opt_or("artifacts", "artifacts");
+            let service = PjrtService::spawn(dir).with_context(|| {
+                format!("loading artifacts from {dir:?}; run `make artifacts` first or use --backend reference")
+            })?;
+            println!("pjrt: compiled warmup of {} variants", service.handle().warmup()?);
+            let backend = crate::coordinator::backend::PjrtBackend::with_fallback(service.handle());
+            // keep the service alive for the process lifetime
+            std::mem::forget(service);
+            Arc::new(backend)
+        }
+        other => bail!("unknown backend {other:?}"),
+    };
+    let jobs = args.opt_usize("jobs", 64)?;
+    let shape = args.opt_shape("shape", (8, 8, 8))?;
+    println!(
+        "coordinator: backend={} workers={} queue={} batch={}x/{:?}",
+        backend.name(),
+        cfg.workers,
+        cfg.queue_depth,
+        cfg.batch.max_batch,
+        cfg.batch.window
+    );
+    let coordinator = Coordinator::start(cfg, backend);
+
+    // Demo load: mixed kinds/directions at one shape.
+    let mut rng = Rng::new(7);
+    let kinds = [TransformKind::Dct2, TransformKind::Dht];
+    let mut handles = Vec::new();
+    let t = Timer::start();
+    for i in 0..jobs {
+        let x = Tensor3::random(shape.0, shape.1, shape.2, &mut rng).to_f32();
+        let kind = kinds[i % kinds.len()];
+        let dir = if i % 3 == 0 { Direction::Inverse } else { Direction::Forward };
+        handles.push(coordinator.submit(TransformJob::new(kind, dir, vec![x]))?);
+    }
+    let mut ok = 0;
+    for h in handles {
+        if h.wait()?.outputs.is_ok() {
+            ok += 1;
+        }
+    }
+    let dt = t.elapsed_s();
+    let snap = coordinator.metrics();
+    println!("served {ok}/{jobs} jobs in {} ({})", human::duration(dt), human::rate(jobs as f64 / dt));
+    println!("{}", snap.summary());
+    coordinator.shutdown();
+    Ok(())
+}

@@ -1,0 +1,172 @@
+//! CLI argument-parsing substrate (no `clap` offline; DESIGN.md
+//! §Substitutions) and the `triada` subcommand surface.
+//!
+//! Grammar: `triada <subcommand> [--key value]... [--flag]... [positional]...`
+
+pub mod commands;
+
+use std::collections::BTreeMap;
+
+use anyhow::bail;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// Subcommand (first non-flag token).
+    pub command: Option<String>,
+    /// `--key value` options.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    pub flags: Vec<String>,
+    /// Remaining positional arguments.
+    pub positional: Vec<String>,
+}
+
+/// Option names that take no value (everything else with `--` expects one).
+const KNOWN_FLAGS: &[&str] = &[
+    "help", "version", "esop", "no-esop", "dense", "trace", "verbose", "quiet", "inverse",
+];
+
+/// Parse a raw argv (excluding the program name).
+pub fn parse_args(argv: &[String]) -> anyhow::Result<Args> {
+    let mut args = Args::default();
+    let mut it = argv.iter().peekable();
+    while let Some(tok) = it.next() {
+        if let Some(name) = tok.strip_prefix("--") {
+            if name.is_empty() {
+                // `--` terminator: rest is positional
+                args.positional.extend(it.cloned());
+                break;
+            }
+            if let Some((k, v)) = name.split_once('=') {
+                args.options.insert(k.to_string(), v.to_string());
+            } else if KNOWN_FLAGS.contains(&name) {
+                args.flags.push(name.to_string());
+            } else if let Some(next) = it.peek() {
+                if next.starts_with("--") {
+                    bail!("option --{name} expects a value");
+                }
+                args.options.insert(name.to_string(), it.next().unwrap().clone());
+            } else {
+                bail!("option --{name} expects a value");
+            }
+        } else if args.command.is_none() {
+            args.command = Some(tok.clone());
+        } else {
+            args.positional.push(tok.clone());
+        }
+    }
+    Ok(args)
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}={v:?} is not an integer")),
+        }
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}={v:?} is not a number")),
+        }
+    }
+
+    /// Parse `--shape N1xN2xN3` (also accepts `N1,N2,N3`).
+    pub fn opt_shape(
+        &self,
+        name: &str,
+        default: (usize, usize, usize),
+    ) -> anyhow::Result<(usize, usize, usize)> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => parse_shape(v),
+        }
+    }
+}
+
+/// Parse `N1xN2xN3` / `N1,N2,N3`.
+pub fn parse_shape(s: &str) -> anyhow::Result<(usize, usize, usize)> {
+    let parts: Vec<&str> = s.split(['x', 'X', ',']).collect();
+    if parts.len() != 3 {
+        bail!("shape {s:?} must be N1xN2xN3");
+    }
+    let dims: Vec<usize> = parts
+        .iter()
+        .map(|p| p.trim().parse().map_err(|_| anyhow::anyhow!("bad dim {p:?} in {s:?}")))
+        .collect::<anyhow::Result<_>>()?;
+    if dims.iter().any(|&d| d == 0) {
+        bail!("shape {s:?} has a zero dimension");
+    }
+    Ok((dims[0], dims[1], dims[2]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = parse_args(&argv(&[
+            "simulate", "--shape", "4x5x6", "--esop", "--kind=dct", "extra",
+        ]))
+        .unwrap();
+        assert_eq!(a.command.as_deref(), Some("simulate"));
+        assert_eq!(a.opt("shape"), Some("4x5x6"));
+        assert_eq!(a.opt("kind"), Some("dct"));
+        assert!(a.flag("esop"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn shape_parsing() {
+        assert_eq!(parse_shape("4x5x6").unwrap(), (4, 5, 6));
+        assert_eq!(parse_shape("4,5,6").unwrap(), (4, 5, 6));
+        assert!(parse_shape("4x5").is_err());
+        assert!(parse_shape("0x5x6").is_err());
+        assert!(parse_shape("axbxc").is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(parse_args(&argv(&["run", "--shape"])).is_err());
+        assert!(parse_args(&argv(&["run", "--shape", "--esop"])).is_err());
+    }
+
+    #[test]
+    fn double_dash_terminates() {
+        let a = parse_args(&argv(&["run", "--", "--not-an-option"])).unwrap();
+        assert_eq!(a.positional, vec!["--not-an-option"]);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse_args(&argv(&["x", "--n", "12", "--f", "2.5"])).unwrap();
+        assert_eq!(a.opt_usize("n", 1).unwrap(), 12);
+        assert_eq!(a.opt_usize("missing", 7).unwrap(), 7);
+        assert!((a.opt_f64("f", 0.0).unwrap() - 2.5).abs() < 1e-12);
+        assert!(a.opt_usize("f", 1).is_err());
+    }
+}

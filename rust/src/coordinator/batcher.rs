@@ -1,0 +1,180 @@
+//! Dynamic batcher: groups queued jobs by [`crate::coordinator::job::BatchKey`]
+//! so every job in a batch executes against the same compiled executable —
+//! the L3 reuse that mirrors the device's coefficient-matrix sharing across
+//! slices.
+//!
+//! Policy: a bucket flushes when it reaches `max_batch` jobs or when its
+//! oldest job has waited `window`; a periodic sweep flushes stragglers.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use super::job::{BatchKey, TransformJob};
+
+/// A flushed batch: compatible jobs plus their reply channels (attached by
+/// the server; generic here so the batcher is testable standalone).
+#[derive(Debug)]
+pub struct Batch<J> {
+    pub key: BatchKey,
+    pub jobs: Vec<J>,
+}
+
+/// Batching policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub window: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 16, window: Duration::from_millis(2) }
+    }
+}
+
+/// Accumulates jobs into per-key buckets and decides when to flush.
+pub struct Batcher<J> {
+    policy: BatchPolicy,
+    buckets: HashMap<BatchKey, Bucket<J>>,
+}
+
+struct Bucket<J> {
+    jobs: Vec<J>,
+    oldest: Instant,
+}
+
+impl<J> Batcher<J> {
+    pub fn new(policy: BatchPolicy) -> Batcher<J> {
+        Batcher { policy, buckets: HashMap::new() }
+    }
+
+    /// Add a job; returns a batch if its bucket is now full.
+    pub fn add(&mut self, key: BatchKey, job: J, now: Instant) -> Option<Batch<J>> {
+        let bucket = self
+            .buckets
+            .entry(key)
+            .or_insert_with(|| Bucket { jobs: Vec::new(), oldest: now });
+        if bucket.jobs.is_empty() {
+            bucket.oldest = now;
+        }
+        bucket.jobs.push(job);
+        if bucket.jobs.len() >= self.policy.max_batch {
+            let b = self.buckets.remove(&key).unwrap();
+            Some(Batch { key, jobs: b.jobs })
+        } else {
+            None
+        }
+    }
+
+    /// Flush every bucket whose oldest job has exceeded the window.
+    pub fn flush_expired(&mut self, now: Instant) -> Vec<Batch<J>> {
+        let expired: Vec<BatchKey> = self
+            .buckets
+            .iter()
+            .filter(|(_, b)| now.duration_since(b.oldest) >= self.policy.window)
+            .map(|(k, _)| *k)
+            .collect();
+        expired
+            .into_iter()
+            .map(|key| {
+                let b = self.buckets.remove(&key).unwrap();
+                Batch { key, jobs: b.jobs }
+            })
+            .collect()
+    }
+
+    /// Flush everything (shutdown).
+    pub fn flush_all(&mut self) -> Vec<Batch<J>> {
+        self.buckets
+            .drain()
+            .map(|(key, b)| Batch { key, jobs: b.jobs })
+            .collect()
+    }
+
+    /// Next deadline at which some bucket expires (for the poll timeout).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.buckets
+            .values()
+            .map(|b| b.oldest + self.policy.window)
+            .min()
+    }
+
+    pub fn pending(&self) -> usize {
+        self.buckets.values().map(|b| b.jobs.len()).sum()
+    }
+}
+
+/// Helper used by the server: key extraction for real jobs.
+pub fn key_of(job: &TransformJob) -> BatchKey {
+    job.batch_key()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Direction;
+    use crate::transforms::TransformKind;
+
+    fn key(kind: TransformKind) -> BatchKey {
+        BatchKey { kind, direction: Direction::Forward, shape: (4, 4, 4) }
+    }
+
+    #[test]
+    fn flushes_on_max_batch() {
+        let mut b: Batcher<u32> = Batcher::new(BatchPolicy { max_batch: 3, window: Duration::from_secs(10) });
+        let now = Instant::now();
+        assert!(b.add(key(TransformKind::Dct2), 1, now).is_none());
+        assert!(b.add(key(TransformKind::Dct2), 2, now).is_none());
+        let batch = b.add(key(TransformKind::Dct2), 3, now).unwrap();
+        assert_eq!(batch.jobs, vec![1, 2, 3]);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn keeps_keys_separate() {
+        let mut b: Batcher<u32> = Batcher::new(BatchPolicy { max_batch: 2, window: Duration::from_secs(10) });
+        let now = Instant::now();
+        b.add(key(TransformKind::Dct2), 1, now);
+        b.add(key(TransformKind::Dht), 2, now);
+        assert_eq!(b.pending(), 2);
+        let batch = b.add(key(TransformKind::Dct2), 3, now).unwrap();
+        assert_eq!(batch.key.kind, TransformKind::Dct2);
+        assert_eq!(batch.jobs, vec![1, 3]);
+    }
+
+    #[test]
+    fn flushes_on_window_expiry() {
+        let mut b: Batcher<u32> =
+            Batcher::new(BatchPolicy { max_batch: 100, window: Duration::from_millis(5) });
+        let t0 = Instant::now();
+        b.add(key(TransformKind::Dct2), 1, t0);
+        assert!(b.flush_expired(t0).is_empty());
+        let later = t0 + Duration::from_millis(6);
+        let flushed = b.flush_expired(later);
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(flushed[0].jobs, vec![1]);
+    }
+
+    #[test]
+    fn next_deadline_tracks_oldest() {
+        let mut b: Batcher<u32> =
+            Batcher::new(BatchPolicy { max_batch: 100, window: Duration::from_millis(5) });
+        assert!(b.next_deadline().is_none());
+        let t0 = Instant::now();
+        b.add(key(TransformKind::Dct2), 1, t0);
+        let d = b.next_deadline().unwrap();
+        assert_eq!(d, t0 + Duration::from_millis(5));
+    }
+
+    #[test]
+    fn flush_all_empties() {
+        let mut b: Batcher<u32> =
+            Batcher::new(BatchPolicy { max_batch: 100, window: Duration::from_secs(1) });
+        let now = Instant::now();
+        b.add(key(TransformKind::Dct2), 1, now);
+        b.add(key(TransformKind::Dht), 2, now);
+        let all = b.flush_all();
+        assert_eq!(all.iter().map(|x| x.jobs.len()).sum::<usize>(), 2);
+        assert_eq!(b.pending(), 0);
+    }
+}

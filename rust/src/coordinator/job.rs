@@ -1,0 +1,145 @@
+//! Job and result types flowing through the coordinator.
+
+use std::time::Instant;
+
+use crate::runtime::Direction;
+use crate::tensor::Tensor3;
+use crate::transforms::TransformKind;
+
+/// Monotone job identifier.
+pub type JobId = u64;
+
+/// A transform request.
+#[derive(Clone, Debug)]
+pub struct TransformJob {
+    pub id: JobId,
+    pub kind: TransformKind,
+    pub direction: Direction,
+    /// One tensor for real kinds; two (re, im) for [`TransformKind::DftSplit`].
+    pub inputs: Vec<Tensor3<f32>>,
+    /// Submission timestamp (set by the coordinator).
+    pub submitted_at: Instant,
+}
+
+impl TransformJob {
+    /// Build a job (id and timestamp are assigned at submit time).
+    pub fn new(kind: TransformKind, direction: Direction, inputs: Vec<Tensor3<f32>>) -> TransformJob {
+        TransformJob { id: 0, kind, direction, inputs, submitted_at: Instant::now() }
+    }
+
+    /// The shape of the (first) input tensor.
+    pub fn shape(&self) -> (usize, usize, usize) {
+        self.inputs.first().map(|t| t.shape()).unwrap_or((0, 0, 0))
+    }
+
+    /// The batching key: jobs with equal keys share a compiled executable.
+    pub fn batch_key(&self) -> BatchKey {
+        BatchKey { kind: self.kind, direction: self.direction, shape: self.shape() }
+    }
+
+    /// Validate the request (input arity matches the kind, nonempty dims).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let expected = if self.kind == TransformKind::DftSplit { 2 } else { 1 };
+        anyhow::ensure!(
+            self.inputs.len() == expected,
+            "{} expects {} input tensor(s), got {}",
+            self.kind.name(),
+            expected,
+            self.inputs.len()
+        );
+        let shape = self.shape();
+        anyhow::ensure!(
+            shape.0 > 0 && shape.1 > 0 && shape.2 > 0,
+            "degenerate input shape {shape:?}"
+        );
+        for t in &self.inputs {
+            anyhow::ensure!(t.shape() == shape, "mismatched input shapes in one job");
+        }
+        for n in [shape.0, shape.1, shape.2] {
+            anyhow::ensure!(
+                self.kind.supports_size(n),
+                "{} does not support size {n}",
+                self.kind.name()
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Grouping key for the batcher.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct BatchKey {
+    pub kind: TransformKind,
+    pub direction: Direction,
+    pub shape: (usize, usize, usize),
+}
+
+/// A completed (or failed) job.
+#[derive(Debug)]
+pub struct JobResult {
+    pub id: JobId,
+    /// Output tensors, or the failure.
+    pub outputs: anyhow::Result<Vec<Tensor3<f32>>>,
+    /// Queue + execute latency from submission.
+    pub latency_s: f64,
+    /// Which backend served it.
+    pub backend: &'static str,
+    /// How many jobs shared the batch (1 = unbatched).
+    pub batch_size: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: (usize, usize, usize)) -> Tensor3<f32> {
+        Tensor3::zeros(shape.0, shape.1, shape.2)
+    }
+
+    #[test]
+    fn batch_key_groups_compatible_jobs() {
+        let a = TransformJob::new(TransformKind::Dct2, Direction::Forward, vec![t((2, 3, 4))]);
+        let b = TransformJob::new(TransformKind::Dct2, Direction::Forward, vec![t((2, 3, 4))]);
+        let c = TransformJob::new(TransformKind::Dct2, Direction::Inverse, vec![t((2, 3, 4))]);
+        let d = TransformJob::new(TransformKind::Dht, Direction::Forward, vec![t((2, 3, 4))]);
+        let e = TransformJob::new(TransformKind::Dct2, Direction::Forward, vec![t((2, 3, 5))]);
+        assert_eq!(a.batch_key(), b.batch_key());
+        assert_ne!(a.batch_key(), c.batch_key());
+        assert_ne!(a.batch_key(), d.batch_key());
+        assert_ne!(a.batch_key(), e.batch_key());
+    }
+
+    #[test]
+    fn validation_checks_arity() {
+        let ok = TransformJob::new(TransformKind::Dct2, Direction::Forward, vec![t((2, 3, 4))]);
+        assert!(ok.validate().is_ok());
+        let bad = TransformJob::new(TransformKind::Dct2, Direction::Forward, vec![t((2, 3, 4)), t((2, 3, 4))]);
+        assert!(bad.validate().is_err());
+        let dft_ok = TransformJob::new(
+            TransformKind::DftSplit,
+            Direction::Forward,
+            vec![t((2, 3, 4)), t((2, 3, 4))],
+        );
+        assert!(dft_ok.validate().is_ok());
+        let dft_bad = TransformJob::new(TransformKind::DftSplit, Direction::Forward, vec![t((2, 3, 4))]);
+        assert!(dft_bad.validate().is_err());
+    }
+
+    #[test]
+    fn validation_checks_dwht_pow2() {
+        let bad = TransformJob::new(TransformKind::Dwht, Direction::Forward, vec![t((3, 4, 4))]);
+        assert!(bad.validate().is_err());
+        let ok = TransformJob::new(TransformKind::Dwht, Direction::Forward, vec![t((2, 4, 8))]);
+        assert!(ok.validate().is_ok());
+    }
+
+    #[test]
+    fn validation_rejects_mismatched_pair() {
+        let bad = TransformJob::new(
+            TransformKind::DftSplit,
+            Direction::Forward,
+            vec![t((2, 3, 4)), t((2, 3, 5))],
+        );
+        assert!(bad.validate().is_err());
+    }
+}

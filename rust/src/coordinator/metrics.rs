@@ -1,0 +1,157 @@
+//! Coordinator metrics: latency histograms, throughput, batching gain.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::Histogram;
+
+/// Shared metrics sink (one per coordinator).
+pub struct Metrics {
+    inner: Mutex<Inner>,
+    started: Instant,
+}
+
+struct Inner {
+    latency: Histogram,
+    queue_wait: Histogram,
+    completed: u64,
+    failed: u64,
+    batches: u64,
+    batched_jobs: u64,
+    rejected: u64,
+}
+
+/// A point-in-time copy for reporting.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub completed: u64,
+    pub failed: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    /// Mean jobs per batch (executable-reuse factor).
+    pub mean_batch_size: f64,
+    pub throughput_jobs_per_s: f64,
+    pub latency_p50_s: f64,
+    pub latency_p95_s: f64,
+    pub latency_p99_s: f64,
+    pub latency_mean_s: f64,
+    pub queue_wait_p50_s: f64,
+    pub uptime_s: f64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            inner: Mutex::new(Inner {
+                latency: Histogram::latency(),
+                queue_wait: Histogram::latency(),
+                completed: 0,
+                failed: 0,
+                batches: 0,
+                batched_jobs: 0,
+                rejected: 0,
+            }),
+            started: Instant::now(),
+        }
+    }
+
+    pub fn record_completion(&self, latency_s: f64, queue_wait_s: f64, ok: bool) {
+        let mut g = self.inner.lock().unwrap();
+        g.latency.record(latency_s.max(0.0));
+        g.queue_wait.record(queue_wait_s.max(0.0));
+        if ok {
+            g.completed += 1;
+        } else {
+            g.failed += 1;
+        }
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.batched_jobs += size as u64;
+    }
+
+    pub fn record_rejection(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.inner.lock().unwrap();
+        let uptime = self.started.elapsed().as_secs_f64().max(1e-9);
+        MetricsSnapshot {
+            completed: g.completed,
+            failed: g.failed,
+            rejected: g.rejected,
+            batches: g.batches,
+            mean_batch_size: if g.batches == 0 {
+                0.0
+            } else {
+                g.batched_jobs as f64 / g.batches as f64
+            },
+            throughput_jobs_per_s: g.completed as f64 / uptime,
+            latency_p50_s: g.latency.quantile(0.50),
+            latency_p95_s: g.latency.quantile(0.95),
+            latency_p99_s: g.latency.quantile(0.99),
+            latency_mean_s: g.latency.mean(),
+            queue_wait_p50_s: g.queue_wait.quantile(0.50),
+            uptime_s: uptime,
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        use crate::util::human;
+        format!(
+            "jobs={} ok / {} failed / {} rejected | batches={} (mean {:.1} jobs) | thrpt={} | p50={} p95={} p99={}",
+            self.completed,
+            self.failed,
+            self.rejected,
+            self.batches,
+            self.mean_batch_size,
+            human::rate(self.throughput_jobs_per_s),
+            human::duration(self.latency_p50_s),
+            human::duration(self.latency_p95_s),
+            human::duration(self.latency_p99_s),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        m.record_completion(0.010, 0.001, true);
+        m.record_completion(0.020, 0.002, true);
+        m.record_completion(0.5, 0.4, false);
+        m.record_batch(3);
+        m.record_rejection();
+        let s = m.snapshot();
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.failed, 1);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.batches, 1);
+        assert!((s.mean_batch_size - 3.0).abs() < 1e-12);
+        assert!(s.latency_p50_s > 0.0);
+        assert!(s.latency_p99_s >= s.latency_p50_s);
+        assert!(s.summary().contains("jobs=2 ok"));
+    }
+
+    #[test]
+    fn empty_snapshot_is_zeroes() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.mean_batch_size, 0.0);
+    }
+}

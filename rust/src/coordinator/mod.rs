@@ -1,0 +1,27 @@
+//! The serving coordinator — Layer 3's request path.
+//!
+//! Clients submit [`job::TransformJob`]s; the [`batcher`] groups them by
+//! `(kind, direction, shape)` so every job in a batch reuses the same
+//! compiled PJRT executable; a [`worker`] pool executes batches on a
+//! [`backend`]; [`metrics`] records latency histograms and throughput.
+//! Everything is std-threads + condvars (no tokio offline — the work is
+//! CPU-bound, so thread-per-worker is the right shape anyway).
+//!
+//! ```text
+//! submit() ─→ JobQueue ─→ batcher thread ─→ BatchQueue ─→ worker × W
+//!     ↑ backpressure (bounded)                    │
+//!     └────────────── JobHandle ←─ per-job channel┘
+//! ```
+
+pub mod backend;
+pub mod batcher;
+pub mod job;
+pub mod metrics;
+pub mod queue;
+pub mod server;
+pub mod worker;
+
+pub use backend::{Backend, ReferenceBackend, SimBackend};
+pub use job::{JobId, JobResult, TransformJob};
+pub use metrics::MetricsSnapshot;
+pub use server::{Coordinator, CoordinatorConfig};

@@ -1,0 +1,339 @@
+//! The coordinator itself: submit-side API, batcher thread, worker pool,
+//! and graceful shutdown.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Context;
+
+use super::backend::Backend;
+use super::batcher::{Batch, BatchPolicy, Batcher};
+use super::job::{JobId, JobResult, TransformJob};
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::queue::{BoundedQueue, PopError};
+use super::worker::{worker_loop, Pending};
+
+/// Coordinator knobs (see `config/` for the file form).
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub workers: usize,
+    /// Submit-queue capacity — the backpressure bound.
+    pub queue_depth: usize,
+    pub batch: BatchPolicy,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8),
+            queue_depth: 256,
+            batch: BatchPolicy::default(),
+        }
+    }
+}
+
+impl CoordinatorConfig {
+    /// Build from a parsed [`crate::config::Config`] `[coordinator]` section.
+    pub fn from_config(cfg: &crate::config::Config) -> anyhow::Result<CoordinatorConfig> {
+        let mut c = CoordinatorConfig::default();
+        if let Some(w) = cfg.get_usize("coordinator", "workers")? {
+            anyhow::ensure!(w > 0, "coordinator.workers must be positive");
+            c.workers = w;
+        }
+        if let Some(d) = cfg.get_usize("coordinator", "queue_depth")? {
+            anyhow::ensure!(d > 0, "coordinator.queue_depth must be positive");
+            c.queue_depth = d;
+        }
+        if let Some(b) = cfg.get_usize("coordinator", "max_batch")? {
+            anyhow::ensure!(b > 0, "coordinator.max_batch must be positive");
+            c.batch.max_batch = b;
+        }
+        if let Some(ms) = cfg.get_f64("coordinator", "batch_window_ms")? {
+            c.batch.window = Duration::from_secs_f64(ms / 1000.0);
+        }
+        Ok(c)
+    }
+}
+
+/// Handle for a submitted job.
+pub struct JobHandle {
+    pub id: JobId,
+    rx: Receiver<JobResult>,
+}
+
+impl JobHandle {
+    /// Block for the result.
+    pub fn wait(self) -> anyhow::Result<JobResult> {
+        self.rx.recv().context("coordinator dropped the job (shutdown?)")
+    }
+
+    /// Block with a timeout.
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<JobResult> {
+        self.rx.recv_timeout(timeout).ok()
+    }
+}
+
+/// The running coordinator.
+pub struct Coordinator {
+    submit_q: Arc<BoundedQueue<Pending>>,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    threads: Vec<JoinHandle<()>>,
+    backend_name: &'static str,
+}
+
+impl Coordinator {
+    /// Start batcher + workers over a backend.
+    pub fn start(config: CoordinatorConfig, backend: Arc<dyn Backend>) -> Coordinator {
+        let submit_q: Arc<BoundedQueue<Pending>> = Arc::new(BoundedQueue::new(config.queue_depth));
+        let batch_q: Arc<BoundedQueue<Batch<Pending>>> =
+            Arc::new(BoundedQueue::new(config.queue_depth));
+        let metrics = Arc::new(Metrics::new());
+        let mut threads = Vec::new();
+        let backend_name = backend.name();
+
+        // Batcher thread.
+        {
+            let submit_q = submit_q.clone();
+            let batch_q = batch_q.clone();
+            let policy = config.batch;
+            threads.push(
+                std::thread::Builder::new()
+                    .name("triada-batcher".into())
+                    .spawn(move || batcher_loop(submit_q, batch_q, policy))
+                    .expect("spawn batcher"),
+            );
+        }
+
+        // Workers.
+        for w in 0..config.workers.max(1) {
+            let batch_q = batch_q.clone();
+            let backend = backend.clone();
+            let metrics = metrics.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("triada-worker-{w}"))
+                    .spawn(move || worker_loop(batch_q, backend, metrics))
+                    .expect("spawn worker"),
+            );
+        }
+
+        Coordinator { submit_q, metrics, next_id: AtomicU64::new(1), threads, backend_name }
+    }
+
+    /// Which backend this coordinator serves with.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend_name
+    }
+
+    /// Submit a job, blocking if the queue is full (backpressure).
+    pub fn submit(&self, mut job: TransformJob) -> anyhow::Result<JobHandle> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        job.id = id;
+        job.submitted_at = Instant::now();
+        let (tx, rx) = channel();
+        let pending = Pending { job, reply: tx, enqueued_at: Instant::now() };
+        self.submit_q
+            .push(pending)
+            .map_err(|_| anyhow::anyhow!("coordinator is shut down"))?;
+        Ok(JobHandle { id, rx })
+    }
+
+    /// Non-blocking submit; `None` when the queue is full (load-shed).
+    pub fn try_submit(&self, mut job: TransformJob) -> Option<JobHandle> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        job.id = id;
+        job.submitted_at = Instant::now();
+        let (tx, rx) = channel();
+        let pending = Pending { job, reply: tx, enqueued_at: Instant::now() };
+        match self.submit_q.try_push(pending) {
+            Ok(()) => Some(JobHandle { id, rx }),
+            Err(_) => {
+                self.metrics.record_rejection();
+                None
+            }
+        }
+    }
+
+    /// Submit and wait (convenience).
+    pub fn transform(&self, job: TransformJob) -> anyhow::Result<JobResult> {
+        self.submit(job)?.wait()
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.submit_q.len()
+    }
+
+    /// Graceful shutdown: stop intake, drain, join all threads.
+    pub fn shutdown(mut self) {
+        self.submit_q.close();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.submit_q.close();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Batcher thread body: accumulate → flush on size/window → forward.
+fn batcher_loop(
+    submit_q: Arc<BoundedQueue<Pending>>,
+    batch_q: Arc<BoundedQueue<Batch<Pending>>>,
+    policy: BatchPolicy,
+) {
+    let mut batcher: Batcher<Pending> = Batcher::new(policy);
+    loop {
+        let timeout = batcher
+            .next_deadline()
+            .map(|d| d.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_millis(50));
+        match submit_q.pop_timeout(timeout.max(Duration::from_micros(100))) {
+            Ok(pending) => {
+                let key = pending.job.batch_key();
+                if let Some(batch) = batcher.add(key, pending, Instant::now()) {
+                    if batch_q.push(batch).is_err() {
+                        return; // downstream closed
+                    }
+                }
+            }
+            Err(PopError::Timeout) => {}
+            Err(PopError::Closed) => {
+                for batch in batcher.flush_all() {
+                    if batch_q.push(batch).is_err() {
+                        break;
+                    }
+                }
+                batch_q.close();
+                return;
+            }
+        }
+        for batch in batcher.flush_expired(Instant::now()) {
+            if batch_q.push(batch).is_err() {
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::ReferenceBackend;
+    use crate::runtime::Direction;
+    use crate::tensor::Tensor3;
+    use crate::transforms::TransformKind;
+    use crate::util::Rng;
+
+    fn coordinator(workers: usize) -> Coordinator {
+        let cfg = CoordinatorConfig {
+            workers,
+            queue_depth: 64,
+            batch: BatchPolicy { max_batch: 4, window: Duration::from_millis(1) },
+        };
+        Coordinator::start(cfg, Arc::new(ReferenceBackend))
+    }
+
+    fn job(seed: u64) -> TransformJob {
+        let mut rng = Rng::new(seed);
+        let x = Tensor3::random(4, 5, 6, &mut rng).to_f32();
+        TransformJob::new(TransformKind::Dct2, Direction::Forward, vec![x])
+    }
+
+    #[test]
+    fn single_job_roundtrip() {
+        let c = coordinator(2);
+        let res = c.transform(job(1)).unwrap();
+        let out = res.outputs.unwrap();
+        assert_eq!(out[0].shape(), (4, 5, 6));
+        assert!(res.latency_s >= 0.0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn many_concurrent_jobs_all_complete() {
+        let c = Arc::new(coordinator(4));
+        let handles: Vec<_> = (0..40).map(|i| c.submit(job(i)).unwrap()).collect();
+        let mut ids = std::collections::HashSet::new();
+        for h in handles {
+            let r = h.wait().unwrap();
+            assert!(r.outputs.is_ok());
+            assert!(ids.insert(r.id), "duplicate result id {}", r.id);
+        }
+        let snap = c.metrics();
+        assert_eq!(snap.completed, 40);
+        assert_eq!(snap.failed, 0);
+        assert!(snap.mean_batch_size >= 1.0);
+        Arc::try_unwrap(c).ok().unwrap().shutdown();
+    }
+
+    #[test]
+    fn batching_groups_compatible_jobs() {
+        let c = coordinator(1);
+        let handles: Vec<_> = (0..8).map(|i| c.submit(job(i)).unwrap()).collect();
+        let mut max_batch = 0;
+        for h in handles {
+            max_batch = max_batch.max(h.wait().unwrap().batch_size);
+        }
+        assert!(max_batch >= 2, "no batching observed (max={max_batch})");
+        c.shutdown();
+    }
+
+    #[test]
+    fn invalid_jobs_fail_without_poisoning() {
+        let c = coordinator(2);
+        let bad = TransformJob::new(TransformKind::Dwht, Direction::Forward, vec![Tensor3::zeros(3, 3, 3)]);
+        let r = c.transform(bad).unwrap();
+        assert!(r.outputs.is_err());
+        // still serving
+        let ok = c.transform(job(9)).unwrap();
+        assert!(ok.outputs.is_ok());
+        c.shutdown();
+    }
+
+    #[test]
+    fn shutdown_rejects_new_jobs() {
+        let c = coordinator(1);
+        let q = c.submit_q.clone();
+        c.shutdown();
+        assert!(q
+            .try_push(Pending {
+                job: job(1),
+                reply: channel().0,
+                enqueued_at: Instant::now()
+            })
+            .is_err());
+    }
+
+    #[test]
+    fn config_from_file_section() {
+        let cfg = crate::config::Config::parse(
+            "[coordinator]\nworkers = 3\nqueue_depth = 7\nmax_batch = 5\nbatch_window_ms = 4\n",
+        )
+        .unwrap();
+        let c = CoordinatorConfig::from_config(&cfg).unwrap();
+        assert_eq!(c.workers, 3);
+        assert_eq!(c.queue_depth, 7);
+        assert_eq!(c.batch.max_batch, 5);
+        assert_eq!(c.batch.window, Duration::from_millis(4));
+    }
+
+    #[test]
+    fn config_rejects_zero_workers() {
+        let cfg = crate::config::Config::parse("[coordinator]\nworkers = 0\n").unwrap();
+        assert!(CoordinatorConfig::from_config(&cfg).is_err());
+    }
+}

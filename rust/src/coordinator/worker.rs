@@ -1,0 +1,123 @@
+//! Worker pool: executes flushed batches on the backend and replies to each
+//! job's channel. One OS thread per worker (CPU-bound work).
+
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::backend::Backend;
+use super::batcher::Batch;
+use super::job::{JobResult, TransformJob};
+use super::metrics::Metrics;
+use super::queue::BoundedQueue;
+
+/// A job waiting for execution, with its reply channel.
+#[derive(Debug)]
+pub struct Pending {
+    pub job: TransformJob,
+    pub reply: Sender<JobResult>,
+    /// When the job entered the submit queue.
+    pub enqueued_at: Instant,
+}
+
+/// Worker loop: pop batches until the queue closes.
+pub fn worker_loop(
+    batch_q: Arc<BoundedQueue<Batch<Pending>>>,
+    backend: Arc<dyn Backend>,
+    metrics: Arc<Metrics>,
+) {
+    while let Some(batch) = batch_q.pop() {
+        let batch_size = batch.jobs.len();
+        metrics.record_batch(batch_size);
+        for pending in batch.jobs {
+            execute_one(pending, batch_size, backend.as_ref(), &metrics);
+        }
+    }
+}
+
+/// Execute a single job and reply.
+pub fn execute_one(
+    pending: Pending,
+    batch_size: usize,
+    backend: &dyn Backend,
+    metrics: &Metrics,
+) {
+    let Pending { job, reply, enqueued_at } = pending;
+    let started = Instant::now();
+    let queue_wait = started.duration_since(enqueued_at).as_secs_f64();
+    let outputs = job
+        .validate()
+        .and_then(|_| backend.execute(job.kind, job.direction, &job.inputs));
+    let latency = job.submitted_at.elapsed().as_secs_f64();
+    let ok = outputs.is_ok();
+    metrics.record_completion(latency, queue_wait, ok);
+    // Receiver may have hung up (client gave up); that's fine.
+    let _ = reply.send(JobResult {
+        id: job.id,
+        outputs,
+        latency_s: latency,
+        backend: backend.name(),
+        batch_size,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::ReferenceBackend;
+    use crate::runtime::Direction;
+    use crate::tensor::Tensor3;
+    use crate::transforms::TransformKind;
+    use std::sync::mpsc::channel;
+
+    fn pending(kind: TransformKind, inputs: Vec<Tensor3<f32>>) -> (Pending, std::sync::mpsc::Receiver<JobResult>) {
+        let (tx, rx) = channel();
+        let job = TransformJob::new(kind, Direction::Forward, inputs);
+        (Pending { job, reply: tx, enqueued_at: Instant::now() }, rx)
+    }
+
+    #[test]
+    fn execute_one_replies_with_output() {
+        let metrics = Metrics::new();
+        let (p, rx) = pending(TransformKind::Dct2, vec![Tensor3::zeros(2, 2, 2)]);
+        execute_one(p, 1, &ReferenceBackend, &metrics);
+        let res = rx.recv().unwrap();
+        assert!(res.outputs.is_ok());
+        assert_eq!(res.backend, "cpu-reference");
+        assert_eq!(metrics.snapshot().completed, 1);
+    }
+
+    #[test]
+    fn invalid_job_fails_cleanly() {
+        let metrics = Metrics::new();
+        // DWHT on non-power-of-two must error, not panic.
+        let (p, rx) = pending(TransformKind::Dwht, vec![Tensor3::zeros(3, 4, 4)]);
+        execute_one(p, 1, &ReferenceBackend, &metrics);
+        let res = rx.recv().unwrap();
+        assert!(res.outputs.is_err());
+        assert_eq!(metrics.snapshot().failed, 1);
+    }
+
+    #[test]
+    fn dropped_receiver_does_not_panic() {
+        let metrics = Metrics::new();
+        let (p, rx) = pending(TransformKind::Dct2, vec![Tensor3::zeros(2, 2, 2)]);
+        drop(rx);
+        execute_one(p, 1, &ReferenceBackend, &metrics);
+        assert_eq!(metrics.snapshot().completed, 1);
+    }
+
+    #[test]
+    fn worker_loop_drains_queue_until_close() {
+        let q: Arc<BoundedQueue<Batch<Pending>>> = Arc::new(BoundedQueue::new(4));
+        let metrics = Arc::new(Metrics::new());
+        let backend: Arc<dyn Backend> = Arc::new(ReferenceBackend);
+        let (p1, rx1) = pending(TransformKind::Dct2, vec![Tensor3::zeros(2, 2, 2)]);
+        let key = p1.job.batch_key();
+        q.push(Batch { key, jobs: vec![p1] }).map_err(|_| ()).unwrap();
+        q.close();
+        worker_loop(q, backend, metrics.clone());
+        assert!(rx1.recv().unwrap().outputs.is_ok());
+        assert_eq!(metrics.snapshot().batches, 1);
+    }
+}

@@ -1,0 +1,127 @@
+//! Bluestein's chirp-z algorithm: DFT of **arbitrary** length via a
+//! power-of-two convolution.
+//!
+//! The paper stresses that fast algorithms “require the problem's size to be
+//! equal to power-of-two, which significantly limits the generality” — the
+//! MD shapes (32–128, not power-of-two) still need an FFT baseline, and
+//! Bluestein is how real FFT libraries provide it. `nk = (n² + k² −
+//! (k−n)²)/2` turns the DFT into a convolution with the chirp
+//! `e^{−iπ m²/N}` which we evaluate with zero-padded radix-2 FFTs.
+
+use super::radix2::fft_in_place;
+use crate::tensor::Complex64;
+
+/// Unnormalized DFT of arbitrary length (O(N log N)); `inverse` conjugates.
+pub fn fft_bluestein(x: &[Complex64], inverse: bool) -> Vec<Complex64> {
+    let n = x.len();
+    if n <= 1 {
+        return x.to_vec();
+    }
+    let sign = if inverse { 1.0 } else { -1.0 };
+    // chirp(m) = e^{sign·iπ m²/N}; m² mod 2N to avoid precision blowup.
+    let chirp: Vec<Complex64> = (0..n)
+        .map(|m| {
+            let sq = ((m as u128 * m as u128) % (2 * n as u128)) as f64;
+            Complex64::cis(sign * std::f64::consts::PI * sq / n as f64)
+        })
+        .collect();
+
+    // a[k] = x[k]·chirp[k], zero-padded to M ≥ 2N−1 (power of two)
+    let m = (2 * n - 1).next_power_of_two();
+    let mut a = vec![Complex64::ZERO; m];
+    for k in 0..n {
+        a[k] = x[k] * chirp[k];
+    }
+    // b[k] = conj(chirp[|k|]) with wraparound support for negative lags
+    let mut b = vec![Complex64::ZERO; m];
+    b[0] = chirp[0].conj();
+    for k in 1..n {
+        b[k] = chirp[k].conj();
+        b[m - k] = chirp[k].conj();
+    }
+    // circular convolution via radix-2 FFT
+    fft_in_place(&mut a, false);
+    fft_in_place(&mut b, false);
+    for i in 0..m {
+        a[i] = a[i] * b[i];
+    }
+    fft_in_place(&mut a, true);
+    let scale = 1.0 / m as f64;
+    (0..n).map(|k| (a[k] * chirp[k]).scale(scale)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Mat;
+    use crate::transforms::dft::dft_matrix;
+    use crate::util::Rng;
+
+    fn direct(x: &[Complex64], inverse: bool) -> Vec<Complex64> {
+        let n = x.len();
+        let c: Mat<Complex64> = dft_matrix(n);
+        let s = (n as f64).sqrt(); // un-normalize to match bluestein
+        (0..n)
+            .map(|k| {
+                let mut acc = Complex64::ZERO;
+                for (i, &xv) in x.iter().enumerate() {
+                    let coef = if inverse { c.get(i, k).conj() } else { c.get(i, k) };
+                    acc += xv * coef;
+                }
+                acc.scale(s / n as f64 * n as f64 / s * s) // = acc·s ⇒ unnormalized
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_direct_small_primes() {
+        let mut rng = Rng::new(90);
+        for n in [2usize, 3, 5, 7, 11, 13] {
+            let x: Vec<Complex64> = (0..n)
+                .map(|_| Complex64::new(rng.f64_range(-1.0, 1.0), rng.f64_range(-1.0, 1.0)))
+                .collect();
+            let got = fft_bluestein(&x, false);
+            let want = direct(&x, false);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((*g - *w).abs() < 1e-9, "N={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn power_of_two_also_works() {
+        let mut rng = Rng::new(91);
+        let x: Vec<Complex64> =
+            (0..8).map(|_| Complex64::new(rng.f64_range(-1.0, 1.0), 0.0)).collect();
+        let got = fft_bluestein(&x, false);
+        let want = super::super::radix2::fft_radix2(&x);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((*g - *w).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn forward_then_inverse_scales_by_n() {
+        let mut rng = Rng::new(92);
+        let n = 12;
+        let x: Vec<Complex64> =
+            (0..n).map(|_| Complex64::new(rng.f64_range(-1.0, 1.0), rng.f64_range(-1.0, 1.0))).collect();
+        let y = fft_bluestein(&fft_bluestein(&x, false), true);
+        for (a, b) in x.iter().zip(&y) {
+            assert!((b.scale(1.0 / n as f64) - *a).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn large_prime() {
+        let mut rng = Rng::new(93);
+        let n = 101;
+        let x: Vec<Complex64> =
+            (0..n).map(|_| Complex64::new(rng.f64_range(-1.0, 1.0), 0.0)).collect();
+        let got = fft_bluestein(&x, false);
+        let want = direct(&x, false);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((*g - *w).abs() < 1e-8);
+        }
+    }
+}

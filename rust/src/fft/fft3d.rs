@@ -1,0 +1,106 @@
+//! 3D FFT by pencils: 1D FFTs along each of the three modes in turn —
+//! the standard library decomposition (FFTW/heFFTe-style) the paper's prior
+//! supercomputer work competed against. Unitary normalization matches
+//! `gemt::split::dft3d_complex`, so E5 can compare numerics directly.
+
+use super::{fft, ifft};
+use crate::tensor::{Complex64, Tensor3};
+
+fn transform_mode3(x: &mut Tensor3<Complex64>, inverse: bool) {
+    let (n1, n2, _) = x.shape();
+    for i in 0..n1 {
+        for j in 0..n2 {
+            let row = x.row(i, j).to_vec();
+            let out = if inverse { ifft(&row) } else { fft(&row) };
+            x.row_mut(i, j).copy_from_slice(&out);
+        }
+    }
+}
+
+fn transform_mode2(x: &mut Tensor3<Complex64>, inverse: bool) {
+    let (n1, n2, n3) = x.shape();
+    for i in 0..n1 {
+        for k in 0..n3 {
+            let pencil: Vec<Complex64> = (0..n2).map(|j| x.get(i, j, k)).collect();
+            let out = if inverse { ifft(&pencil) } else { fft(&pencil) };
+            for (j, v) in out.into_iter().enumerate() {
+                x.set(i, j, k, v);
+            }
+        }
+    }
+}
+
+fn transform_mode1(x: &mut Tensor3<Complex64>, inverse: bool) {
+    let (n1, n2, n3) = x.shape();
+    for j in 0..n2 {
+        for k in 0..n3 {
+            let pencil: Vec<Complex64> = (0..n1).map(|i| x.get(i, j, k)).collect();
+            let out = if inverse { ifft(&pencil) } else { fft(&pencil) };
+            for (i, v) in out.into_iter().enumerate() {
+                x.set(i, j, k, v);
+            }
+        }
+    }
+}
+
+/// Forward 3D FFT (unitary), arbitrary cuboid shape.
+pub fn fft3d(x: &Tensor3<Complex64>) -> Tensor3<Complex64> {
+    let mut out = x.clone();
+    transform_mode3(&mut out, false);
+    transform_mode1(&mut out, false);
+    transform_mode2(&mut out, false);
+    out
+}
+
+/// Inverse 3D FFT (unitary).
+pub fn ifft3d(x: &Tensor3<Complex64>) -> Tensor3<Complex64> {
+    let mut out = x.clone();
+    transform_mode3(&mut out, true);
+    transform_mode1(&mut out, true);
+    transform_mode2(&mut out, true);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemt::split::dft3d_complex;
+    use crate::util::Rng;
+
+    fn rand_c(n1: usize, n2: usize, n3: usize, seed: u64) -> Tensor3<Complex64> {
+        let mut rng = Rng::new(seed);
+        Tensor3::from_fn(n1, n2, n3, |_, _, _| {
+            Complex64::new(rng.f64_range(-1.0, 1.0), rng.f64_range(-1.0, 1.0))
+        })
+    }
+
+    #[test]
+    fn matches_gemt_dft_pow2() {
+        let x = rand_c(4, 8, 2, 1);
+        let a = fft3d(&x);
+        let b = dft3d_complex(&x, false);
+        assert!(a.max_abs_diff(&b) < 1e-9);
+    }
+
+    #[test]
+    fn matches_gemt_dft_cuboid_non_pow2() {
+        let x = rand_c(3, 5, 6, 2);
+        let a = fft3d(&x);
+        let b = dft3d_complex(&x, false);
+        assert!(a.max_abs_diff(&b) < 1e-9);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let x = rand_c(5, 4, 7, 3);
+        let back = ifft3d(&fft3d(&x));
+        assert!(x.max_abs_diff(&back) < 1e-9);
+    }
+
+    #[test]
+    fn parseval() {
+        let x = rand_c(6, 6, 6, 4);
+        let y = fft3d(&x);
+        assert!((x.frob_norm() - y.frob_norm()).abs() < 1e-9);
+    }
+}

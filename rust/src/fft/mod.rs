@@ -1,0 +1,146 @@
+//! Fast Fourier Transform baseline substrate.
+//!
+//! The paper positions TriADA against recursion-based FT algorithms
+//! (Cooley–Tukey) whose `O(N log N)` arithmetic beats the direct
+//! `O(N²)` transform but whose serialization and poor data reuse bound
+//! them on parallel hardware (§1). Experiment E5 needs a real FFT to
+//! measure the `O(N/log N)` ratio and the crossover, so we build one:
+//! iterative radix-2 Cooley–Tukey for power-of-two sizes and Bluestein's
+//! chirp-z for arbitrary N (the paper's cuboid, non-power-of-two shapes).
+
+pub mod bluestein;
+pub mod fft3d;
+pub mod radix2;
+
+pub use bluestein::fft_bluestein;
+pub use fft3d::{fft3d, ifft3d};
+pub use radix2::{fft_radix2, ifft_radix2};
+
+use crate::tensor::Complex64;
+
+/// Forward 1D DFT of arbitrary length, unitary normalization (`1/√N`),
+/// matching `transforms::dft_matrix`. Dispatches radix-2 / Bluestein.
+pub fn fft(x: &[Complex64]) -> Vec<Complex64> {
+    let n = x.len();
+    let mut v = x.to_vec();
+    if n <= 1 {
+        return v;
+    }
+    if n.is_power_of_two() {
+        radix2::fft_in_place(&mut v, false);
+    } else {
+        v = bluestein::fft_bluestein(&v, false);
+    }
+    let s = 1.0 / (n as f64).sqrt();
+    for z in &mut v {
+        *z = z.scale(s);
+    }
+    v
+}
+
+/// Inverse 1D DFT, unitary normalization.
+pub fn ifft(x: &[Complex64]) -> Vec<Complex64> {
+    let n = x.len();
+    let mut v = x.to_vec();
+    if n <= 1 {
+        return v;
+    }
+    if n.is_power_of_two() {
+        radix2::fft_in_place(&mut v, true);
+    } else {
+        v = bluestein::fft_bluestein(&v, true);
+    }
+    let s = 1.0 / (n as f64).sqrt();
+    for z in &mut v {
+        *z = z.scale(s);
+    }
+    v
+}
+
+/// Closed-form FLOP model used in E5: complex butterflies of an N-point
+/// radix-2 FFT ≈ `(N/2)·log2 N` complex MACs; direct DFT = `N²`.
+pub fn fft_macs(n: usize) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    (n as f64 / 2.0) * (n as f64).log2()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Mat;
+    use crate::transforms::dft::dft_matrix;
+    use crate::util::Rng;
+
+    fn dft_direct(x: &[Complex64]) -> Vec<Complex64> {
+        let n = x.len();
+        let c: Mat<Complex64> = dft_matrix(n);
+        (0..n)
+            .map(|k| {
+                let mut acc = Complex64::ZERO;
+                for (i, &xv) in x.iter().enumerate() {
+                    acc += xv * c.get(i, k);
+                }
+                acc
+            })
+            .collect()
+    }
+
+    fn rand_signal(n: usize, seed: u64) -> Vec<Complex64> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| Complex64::new(rng.f64_range(-1.0, 1.0), rng.f64_range(-1.0, 1.0)))
+            .collect()
+    }
+
+    #[test]
+    fn matches_direct_dft_pow2() {
+        for n in [2usize, 4, 8, 16, 64] {
+            let x = rand_signal(n, n as u64);
+            let got = fft(&x);
+            let want = dft_direct(&x);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((*g - *w).abs() < 1e-9, "N={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_direct_dft_arbitrary_n() {
+        for n in [3usize, 5, 6, 7, 12, 33, 48] {
+            let x = rand_signal(n, 100 + n as u64);
+            let got = fft(&x);
+            let want = dft_direct(&x);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((*g - *w).abs() < 1e-8, "N={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_all_sizes() {
+        for n in [1usize, 2, 3, 8, 15, 32, 45] {
+            let x = rand_signal(n, 200 + n as u64);
+            let back = ifft(&fft(&x));
+            for (a, b) in x.iter().zip(&back) {
+                assert!((*a - *b).abs() < 1e-9, "N={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn parseval_unitary() {
+        let x = rand_signal(24, 7);
+        let y = fft(&x);
+        let ex: f64 = x.iter().map(|z| z.norm_sqr()).sum();
+        let ey: f64 = y.iter().map(|z| z.norm_sqr()).sum();
+        assert!((ex - ey).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mac_model_monotone() {
+        assert!(fft_macs(1024) < 1024.0 * 1024.0);
+        assert!(fft_macs(2048) > fft_macs(1024));
+    }
+}

@@ -1,0 +1,116 @@
+//! Iterative radix-2 Cooley–Tukey FFT (power-of-two N), unnormalized.
+//!
+//! Bit-reversal permutation followed by `log2 N` butterfly passes — the
+//! textbook serialized recursion the paper contrasts with TriADA's
+//! fully-parallel direct evaluation.
+
+use crate::tensor::Complex64;
+
+/// In-place unnormalized FFT; `inverse` flips the twiddle sign.
+/// Length must be a power of two.
+pub fn fft_in_place(x: &mut [Complex64], inverse: bool) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "radix-2 needs power-of-two length");
+    if n <= 1 {
+        return;
+    }
+    // bit-reversal permutation
+    let bits = n.trailing_zeros();
+    for i in 0..n {
+        let j = (i.reverse_bits() >> (usize::BITS - bits)) & (n - 1);
+        if i < j {
+            x.swap(i, j);
+        }
+    }
+    // butterfly passes
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * std::f64::consts::PI / len as f64;
+        let wlen = Complex64::cis(ang);
+        for start in (0..n).step_by(len) {
+            let mut w = Complex64::ONE;
+            for k in 0..len / 2 {
+                let u = x[start + k];
+                let v = x[start + k + len / 2] * w;
+                x[start + k] = u + v;
+                x[start + k + len / 2] = u - v;
+                w = w * wlen;
+            }
+        }
+        len <<= 1;
+    }
+}
+
+/// Unnormalized forward FFT (copies input).
+pub fn fft_radix2(x: &[Complex64]) -> Vec<Complex64> {
+    let mut v = x.to_vec();
+    fft_in_place(&mut v, false);
+    v
+}
+
+/// Normalized (1/N) inverse of [`fft_radix2`].
+pub fn ifft_radix2(x: &[Complex64]) -> Vec<Complex64> {
+    let mut v = x.to_vec();
+    fft_in_place(&mut v, true);
+    let s = 1.0 / v.len() as f64;
+    for z in &mut v {
+        *z = z.scale(s);
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn impulse_is_flat() {
+        let mut x = vec![Complex64::ZERO; 8];
+        x[0] = Complex64::ONE;
+        let y = fft_radix2(&x);
+        for z in y {
+            assert!((z - Complex64::ONE).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn constant_is_impulse() {
+        let x = vec![Complex64::ONE; 8];
+        let y = fft_radix2(&x);
+        assert!((y[0] - Complex64::new(8.0, 0.0)).abs() < 1e-12);
+        for z in &y[1..] {
+            assert!(z.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let x: Vec<Complex64> =
+            (0..16).map(|i| Complex64::new(i as f64, (i * i) as f64 * 0.1)).collect();
+        let back = ifft_radix2(&fft_radix2(&x));
+        for (a, b) in x.iter().zip(&back) {
+            assert!((*a - *b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn linearity() {
+        let a: Vec<Complex64> = (0..8).map(|i| Complex64::new(i as f64, 0.0)).collect();
+        let b: Vec<Complex64> = (0..8).map(|i| Complex64::new(0.0, (8 - i) as f64)).collect();
+        let sum: Vec<Complex64> = a.iter().zip(&b).map(|(&x, &y)| x + y).collect();
+        let fa = fft_radix2(&a);
+        let fb = fft_radix2(&b);
+        let fsum = fft_radix2(&sum);
+        for i in 0..8 {
+            assert!((fsum[i] - (fa[i] + fb[i])).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_power_of_two() {
+        let mut x = vec![Complex64::ZERO; 6];
+        fft_in_place(&mut x, false);
+    }
+}

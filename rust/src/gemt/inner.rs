@@ -1,0 +1,124 @@
+//! Three-stage **inner-product** formulation, Eq. (4.1)–(4.3).
+//!
+//! Horizontal slicing first (Stages I and II run per horizontal slice
+//! `n2`), then the frontal/lateral re-slicing of Eq. (5) for Stage III.
+//! Implemented literally as row-by-column dot products so it doubles as a
+//! readable specification of the paper's chain.
+
+use super::CoeffSet;
+use crate::tensor::{Mat, Scalar, Tensor3};
+
+/// Three-stage inner-product 3D-GEMT. Square or rectangular coefficients.
+pub fn gemt_inner<T: Scalar>(x: &Tensor3<T>, cs: &CoeffSet<T>) -> Tensor3<T> {
+    let (n1, n2, n3) = x.shape();
+    assert_eq!(cs.input_shape(), (n1, n2, n3));
+    let (k1s, k2s, k3s) = cs.output_shape();
+
+    // Stage I (Eq. 4.1): ∀n2: ẋ^{(n2)}[n1,k3] += x-row(n1)·c3-col(k3).
+    let mut dot1 = Tensor3::<T>::zeros(n1, n2, k3s);
+    for j in 0..n2 {
+        for i in 0..n1 {
+            let xrow = x.row(i, j); // x(n1)^{(n2)} along n3
+            for kk3 in 0..k3s {
+                let mut acc = T::zero();
+                for (k, &xv) in xrow.iter().enumerate() {
+                    acc += xv * cs.c3.get(k, kk3);
+                }
+                dot1.add_assign_at(i, j, kk3, acc);
+            }
+        }
+    }
+
+    // Stage II (Eq. 4.2): ∀n2: ẍ^{(n2)}[k1,k3] += c1ᵀ-row(k1)·ẋ-col(k3).
+    let mut dot2 = Tensor3::<T>::zeros(k1s, n2, k3s);
+    for j in 0..n2 {
+        for kk1 in 0..k1s {
+            for kk3 in 0..k3s {
+                let mut acc = T::zero();
+                for i in 0..n1 {
+                    // c_{k1,n1} of C₁ᵀ is c1[n1][k1]
+                    acc += cs.c1.get(i, kk1) * dot1.get(i, j, kk3);
+                }
+                dot2.add_assign_at(kk1, j, kk3, acc);
+            }
+        }
+    }
+
+    // Stage III (Eq. 4.3): re-slice laterally (Eq. 5); ∀k3:
+    // x⃛^{(k3)}[k1,k2] += ẍ-row(k1)·c2-col(k2).
+    let mut out = Tensor3::<T>::zeros(k1s, k2s, k3s);
+    for kk3 in 0..k3s {
+        for kk1 in 0..k1s {
+            for kk2 in 0..k2s {
+                let mut acc = T::zero();
+                for j in 0..n2 {
+                    acc += dot2.get(kk1, j, kk3) * cs.c2.get(j, kk2);
+                }
+                out.add_assign_at(kk1, kk2, kk3, acc);
+            }
+        }
+    }
+    out
+}
+
+/// Stage I alone (the *linear* transform of the chain) — used by tests
+/// and by the stage-level comparison in E9.
+pub fn stage1_inner<T: Scalar>(x: &Tensor3<T>, c3: &Mat<T>) -> Tensor3<T> {
+    super::mode_product::mode3_product(x, c3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemt::gemt_naive;
+    use crate::tensor::Mat;
+    use crate::util::Rng;
+
+    #[test]
+    fn matches_naive_square() {
+        let mut rng = Rng::new(40);
+        let x = Tensor3::random(3, 4, 5, &mut rng);
+        let cs = CoeffSet::new(
+            Mat::random(3, 3, &mut rng),
+            Mat::random(4, 4, &mut rng),
+            Mat::random(5, 5, &mut rng),
+        );
+        assert!(gemt_inner(&x, &cs).max_abs_diff(&gemt_naive(&x, &cs)) < 1e-10);
+    }
+
+    #[test]
+    fn matches_naive_rectangular() {
+        let mut rng = Rng::new(41);
+        let x = Tensor3::random(4, 2, 3, &mut rng);
+        let cs = CoeffSet::new(
+            Mat::random(4, 2, &mut rng),
+            Mat::random(2, 6, &mut rng),
+            Mat::random(3, 3, &mut rng),
+        );
+        let got = gemt_inner(&x, &cs);
+        assert_eq!(got.shape(), (2, 6, 3));
+        assert!(got.max_abs_diff(&gemt_naive(&x, &cs)) < 1e-10);
+    }
+
+    #[test]
+    fn stage1_is_mode3() {
+        let mut rng = Rng::new(42);
+        let x = Tensor3::random(2, 3, 4, &mut rng);
+        let c3 = Mat::random(4, 4, &mut rng);
+        let s1 = stage1_inner(&x, &c3);
+        let want = crate::gemt::mode3_product(&x, &c3);
+        assert!(s1.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_dims() {
+        let mut rng = Rng::new(43);
+        let x = Tensor3::random(1, 1, 6, &mut rng);
+        let cs = CoeffSet::new(
+            Mat::random(1, 1, &mut rng),
+            Mat::random(1, 1, &mut rng),
+            Mat::random(6, 6, &mut rng),
+        );
+        assert!(gemt_inner(&x, &cs).max_abs_diff(&gemt_naive(&x, &cs)) < 1e-11);
+    }
+}

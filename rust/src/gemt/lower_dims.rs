@@ -1,0 +1,137 @@
+//! Linear (1D) and bilinear (2D) transforms as degenerate trilinear ones.
+//!
+//! Paper §5.3: “a linear projection of the 3D Tensor Core along the
+//! direction n2 … gives a planar array processor … able to extremely
+//! accelerate the execution of a bilinear transform”. In this codebase the
+//! degenerate axes simply carry extent 1 with an identity coefficient, so
+//! vectors and matrices ride the same three-stage machinery (and the same
+//! device) with `N+1+1`- or `N1+1+N3`-step schedules.
+
+use super::{gemt_outer, CoeffSet};
+use crate::tensor::{Mat, Tensor3};
+use crate::transforms::{forward_matrix, inverse_matrix, TransformKind};
+
+/// Embed a matrix as an `N1×1×N3` tensor (one horizontal slice).
+pub fn mat_as_tensor(m: &Mat<f64>) -> Tensor3<f64> {
+    Tensor3::from_fn(m.rows(), 1, m.cols(), |i, _, k| m.get(i, k))
+}
+
+/// Extract the single horizontal slice back to a matrix.
+pub fn tensor_as_mat(t: &Tensor3<f64>) -> Mat<f64> {
+    let (n1, n2, n3) = t.shape();
+    assert_eq!(n2, 1, "expected an N1×1×N3 tensor");
+    Mat::from_fn(n1, n3, |i, k| t.get(i, 0, k))
+}
+
+/// Bilinear (2D) separable transform of a matrix: `Y = C₁ᵀ · X · C₃`.
+pub fn dxt2d_forward(x: &Mat<f64>, kind: TransformKind) -> Mat<f64> {
+    let cs = CoeffSet::new(
+        forward_matrix(kind, x.rows()),
+        Mat::identity(1),
+        forward_matrix(kind, x.cols()),
+    );
+    tensor_as_mat(&gemt_outer(&mat_as_tensor(x), &cs))
+}
+
+/// Inverse bilinear transform.
+pub fn dxt2d_inverse(x: &Mat<f64>, kind: TransformKind) -> Mat<f64> {
+    let cs = CoeffSet::new(
+        inverse_matrix(kind, x.rows()),
+        Mat::identity(1),
+        inverse_matrix(kind, x.cols()),
+    );
+    tensor_as_mat(&gemt_outer(&mat_as_tensor(x), &cs))
+}
+
+/// Linear (1D) transform of a vector: `y = Cᵀ x`.
+pub fn dxt1d_forward(x: &[f64], kind: TransformKind) -> Vec<f64> {
+    let t = Tensor3::from_vec(x.len(), 1, 1, x.to_vec());
+    let cs = CoeffSet::new(
+        forward_matrix(kind, x.len()),
+        Mat::identity(1),
+        Mat::identity(1),
+    );
+    gemt_outer(&t, &cs).data().to_vec()
+}
+
+/// Inverse linear transform.
+pub fn dxt1d_inverse(x: &[f64], kind: TransformKind) -> Vec<f64> {
+    let t = Tensor3::from_vec(x.len(), 1, 1, x.to_vec());
+    let cs = CoeffSet::new(
+        inverse_matrix(kind, x.len()),
+        Mat::identity(1),
+        Mat::identity(1),
+    );
+    gemt_outer(&t, &cs).data().to_vec()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{self, SimConfig};
+    use crate::util::Rng;
+
+    #[test]
+    fn mat_tensor_roundtrip() {
+        let mut rng = Rng::new(150);
+        let m = Mat::random(4, 6, &mut rng);
+        assert_eq!(tensor_as_mat(&mat_as_tensor(&m)), m);
+    }
+
+    #[test]
+    fn bilinear_matches_direct_matrix_form() {
+        let mut rng = Rng::new(151);
+        let x = Mat::random(5, 7, &mut rng);
+        let got = dxt2d_forward(&x, TransformKind::Dct2);
+        // direct: Y = C₁ᵀ X C₃ with our row-contraction convention
+        let c1 = forward_matrix(TransformKind::Dct2, 5);
+        let c3 = forward_matrix(TransformKind::Dct2, 7);
+        let want = c1.transpose().matmul(&x).matmul(&c3);
+        assert!(got.max_abs_diff(&want) < 1e-10);
+    }
+
+    #[test]
+    fn bilinear_roundtrip_all_kinds() {
+        let mut rng = Rng::new(152);
+        for kind in TransformKind::REAL {
+            let (r, c) = if kind == TransformKind::Dwht { (8, 4) } else { (5, 9) };
+            let x = Mat::random(r, c, &mut rng);
+            let back = dxt2d_inverse(&dxt2d_forward(&x, kind), kind);
+            assert!(x.max_abs_diff(&back) < 1e-9, "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn linear_matches_matvec() {
+        let mut rng = Rng::new(153);
+        let x: Vec<f64> = (0..9).map(|_| rng.f64_range(-1.0, 1.0)).collect();
+        let got = dxt1d_forward(&x, TransformKind::Dht);
+        let c = forward_matrix(TransformKind::Dht, 9);
+        for (k, g) in got.iter().enumerate() {
+            let want: f64 = (0..9).map(|n| x[n] * c.get(n, k)).sum();
+            assert!((g - want).abs() < 1e-10);
+        }
+        let back = dxt1d_inverse(&got, TransformKind::Dht);
+        for (a, b) in x.iter().zip(&back) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes_run_on_the_device_in_linear_steps() {
+        // The same Tensor Core runs vectors and matrices: N1+1+N3 steps.
+        let mut rng = Rng::new(154);
+        let m = Mat::random(6, 10, &mut rng);
+        let t = mat_as_tensor(&m);
+        let cs = CoeffSet::new(
+            forward_matrix(TransformKind::Dht, 6),
+            Mat::identity(1),
+            forward_matrix(TransformKind::Dht, 10),
+        );
+        let out = sim::simulate(&t, &cs, &SimConfig::dense((16, 16, 16)));
+        assert_eq!(out.counters.time_steps, 6 + 1 + 10);
+        assert!(tensor_as_mat(&out.result)
+            .max_abs_diff(&dxt2d_forward(&m, TransformKind::Dht))
+            < 1e-10);
+    }
+}

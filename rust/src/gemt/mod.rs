@@ -1,0 +1,169 @@
+//! Three-mode generalized matrix-by-tensor (3D-GEMT) multiplication — exact
+//! CPU reference algorithms for everything the TriADA device computes.
+//!
+//! Three equivalent formulations from the paper, all implemented:
+//!
+//! * [`naive`] — direct element-wise Eq. (1)/(2): the 6-nested-loop form
+//!   with `(N1N2N3)·(K1K2K3)` MACs (hypercubic, `(N1N2N3)²` when square).
+//! * [`inner`] — the three-stage inner-product chain, Eq. (4.1)–(4.3).
+//! * [`outer`] — the three-stage outer-product (rank-1 update) chain,
+//!   Eq. (6.1)–(6.3) — the formulation TriADA's schedule is isomorphic to.
+//!
+//! Plus [`mode_product`] (single rectangular mode-s products, the building
+//! block of Tucker compression/expansion §2.3) and the [`parenthesize`]
+//! module enumerating all six orders of §3.
+
+pub mod inner;
+pub mod lower_dims;
+pub mod mode_product;
+pub mod naive;
+pub mod outer;
+pub mod parenthesize;
+pub mod rect;
+pub mod split;
+
+pub use inner::gemt_inner;
+pub use lower_dims::{dxt1d_forward, dxt1d_inverse, dxt2d_forward, dxt2d_inverse};
+pub use mode_product::{mode1_product, mode2_product, mode3_product};
+pub use naive::gemt_naive;
+pub use outer::gemt_outer;
+pub use rect::{gemt_rect, tucker_compress, tucker_expand};
+
+use crate::tensor::{Mat, Scalar, Tensor3};
+use crate::transforms::{forward_matrix, inverse_matrix, TransformKind};
+
+/// Coefficient-matrix triple for a 3D-GEMT. `c1: N1×K1`, `c2: N2×K2`,
+/// `c3: N3×K3` (square `Ns = Ks` for the orthogonal 3D-DXT case).
+#[derive(Clone, Debug)]
+pub struct CoeffSet<T: Scalar = f64> {
+    pub c1: Mat<T>,
+    pub c2: Mat<T>,
+    pub c3: Mat<T>,
+}
+
+impl<T: Scalar> CoeffSet<T> {
+    pub fn new(c1: Mat<T>, c2: Mat<T>, c3: Mat<T>) -> CoeffSet<T> {
+        CoeffSet { c1, c2, c3 }
+    }
+
+    /// Input shape this set expects.
+    pub fn input_shape(&self) -> (usize, usize, usize) {
+        (self.c1.rows(), self.c2.rows(), self.c3.rows())
+    }
+
+    /// Output shape this set produces.
+    pub fn output_shape(&self) -> (usize, usize, usize) {
+        (self.c1.cols(), self.c2.cols(), self.c3.cols())
+    }
+}
+
+impl CoeffSet<f64> {
+    /// Forward coefficient set for a real transform kind on an
+    /// `(n1, n2, n3)` problem.
+    pub fn forward(kind: TransformKind, n1: usize, n2: usize, n3: usize) -> CoeffSet<f64> {
+        CoeffSet::new(
+            forward_matrix(kind, n1),
+            forward_matrix(kind, n2),
+            forward_matrix(kind, n3),
+        )
+    }
+
+    /// Inverse coefficient set.
+    pub fn inverse(kind: TransformKind, n1: usize, n2: usize, n3: usize) -> CoeffSet<f64> {
+        CoeffSet::new(
+            inverse_matrix(kind, n1),
+            inverse_matrix(kind, n2),
+            inverse_matrix(kind, n3),
+        )
+    }
+}
+
+/// Forward 3D-DXT of a real tensor via the outer-product three-stage chain.
+pub fn dxt3d_forward(x: &Tensor3<f64>, kind: TransformKind) -> Tensor3<f64> {
+    let (n1, n2, n3) = x.shape();
+    gemt_outer(x, &CoeffSet::forward(kind, n1, n2, n3))
+}
+
+/// Inverse 3D-DXT.
+pub fn dxt3d_inverse(x: &Tensor3<f64>, kind: TransformKind) -> Tensor3<f64> {
+    let (n1, n2, n3) = x.shape();
+    gemt_outer(x, &CoeffSet::inverse(kind, n1, n2, n3))
+}
+
+/// Dense MAC count of the three-stage algorithm: `N1N2N3(K3) + N1N2K3(K1) +
+/// K1N2K3(K2)`; for the square case this is the paper's
+/// `N1N2N3(N1+N2+N3)`.
+pub fn three_stage_macs(n1: usize, n2: usize, n3: usize, k1: usize, k2: usize, k3: usize) -> u64 {
+    let (n1, n2, n3, k1, k2, k3) =
+        (n1 as u64, n2 as u64, n3 as u64, k1 as u64, k2 as u64, k3 as u64);
+    n1 * n2 * n3 * k3 + n1 * n2 * k3 * k1 + k1 * n2 * k3 * k2
+}
+
+/// Dense MAC count of the direct element-wise evaluation, Eq. (1):
+/// `(N1N2N3)·(K1K2K3)`; the paper's `(N1N2N3)²` when square.
+pub fn direct_macs(n1: usize, n2: usize, n3: usize, k1: usize, k2: usize, k3: usize) -> u64 {
+    (n1 as u64) * (n2 as u64) * (n3 as u64) * (k1 as u64) * (k2 as u64) * (k3 as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn three_formulations_agree() {
+        let mut rng = Rng::new(7);
+        let x = Tensor3::random(3, 4, 5, &mut rng);
+        let cs = CoeffSet::new(
+            Mat::random(3, 3, &mut rng),
+            Mat::random(4, 4, &mut rng),
+            Mat::random(5, 5, &mut rng),
+        );
+        let a = gemt_naive(&x, &cs);
+        let b = gemt_inner(&x, &cs);
+        let c = gemt_outer(&x, &cs);
+        assert!(a.max_abs_diff(&b) < 1e-10);
+        assert!(a.max_abs_diff(&c) < 1e-10);
+    }
+
+    #[test]
+    fn forward_inverse_roundtrip_all_kinds() {
+        let mut rng = Rng::new(8);
+        for kind in TransformKind::REAL {
+            let (n1, n2, n3) = if kind == TransformKind::Dwht { (4, 8, 2) } else { (3, 5, 4) };
+            let x = Tensor3::random(n1, n2, n3, &mut rng);
+            let y = dxt3d_forward(&x, kind);
+            let back = dxt3d_inverse(&y, kind);
+            assert!(x.max_abs_diff(&back) < 1e-9, "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn parseval_isometry() {
+        let mut rng = Rng::new(9);
+        for kind in [TransformKind::Dct2, TransformKind::Dht] {
+            let x = Tensor3::random(4, 6, 5, &mut rng);
+            let y = dxt3d_forward(&x, kind);
+            assert!(
+                (x.frob_norm() - y.frob_norm()).abs() < 1e-9,
+                "{} norm not preserved",
+                kind.name()
+            );
+        }
+    }
+
+    #[test]
+    fn mac_formulas_square_case() {
+        // paper: N1N2N3(N1+N2+N3) vs (N1N2N3)^2
+        assert_eq!(three_stage_macs(4, 5, 6, 4, 5, 6), 4 * 5 * 6 * (4 + 5 + 6));
+        assert_eq!(direct_macs(4, 5, 6, 4, 5, 6), (4u64 * 5 * 6).pow(2));
+    }
+
+    #[test]
+    fn identity_transform_is_noop() {
+        let mut rng = Rng::new(10);
+        let x = Tensor3::random(3, 4, 5, &mut rng);
+        let y = dxt3d_forward(&x, TransformKind::Identity);
+        assert!(x.max_abs_diff(&y) < 1e-12);
+    }
+}

@@ -1,0 +1,159 @@
+//! Single-mode (mode-s) matrix-by-tensor products — the building block of
+//! every parenthesization of Eq. (3) and of Tucker compression (§2.3).
+//!
+//! Convention (see `transforms`): `y_k = Σ_n x_n · c[n][k]`, i.e. the
+//! coefficient matrix is applied with its *rows* contracted against the
+//! tensor mode.
+
+use crate::tensor::{Mat, Scalar, Tensor3};
+
+/// Mode-1 product: `out[k1, j, k] = Σ_i x[i, j, k] · c[i, k1]`,
+/// `c: N1 × K1` → output `K1 × N2 × N3`.
+pub fn mode1_product<T: Scalar>(x: &Tensor3<T>, c: &Mat<T>) -> Tensor3<T> {
+    let (n1, n2, n3) = x.shape();
+    assert_eq!(c.rows(), n1, "mode-1 coefficient rows must equal N1");
+    let k1 = c.cols();
+    let mut out = Tensor3::zeros(k1, n2, n3);
+    for i in 0..n1 {
+        for kk in 0..k1 {
+            let cv = c.get(i, kk);
+            if cv.is_zero() {
+                continue;
+            }
+            for j in 0..n2 {
+                let src = x.row(i, j);
+                let dst = out.row_mut(kk, j);
+                for (d, &s) in dst.iter_mut().zip(src) {
+                    *d += s * cv;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Mode-2 product: `out[i, k2, k] = Σ_j x[i, j, k] · c[j, k2]`,
+/// `c: N2 × K2` → output `N1 × K2 × N3`.
+pub fn mode2_product<T: Scalar>(x: &Tensor3<T>, c: &Mat<T>) -> Tensor3<T> {
+    let (n1, n2, n3) = x.shape();
+    assert_eq!(c.rows(), n2, "mode-2 coefficient rows must equal N2");
+    let k2 = c.cols();
+    let mut out = Tensor3::zeros(n1, k2, n3);
+    for i in 0..n1 {
+        for j in 0..n2 {
+            let src = x.row(i, j);
+            for kk in 0..k2 {
+                let cv = c.get(j, kk);
+                if cv.is_zero() {
+                    continue;
+                }
+                let dst = out.row_mut(i, kk);
+                for (d, &s) in dst.iter_mut().zip(src) {
+                    *d += s * cv;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Mode-3 product: `out[i, j, k3] = Σ_k x[i, j, k] · c[k, k3]`,
+/// `c: N3 × K3` → output `N1 × N2 × K3`.
+pub fn mode3_product<T: Scalar>(x: &Tensor3<T>, c: &Mat<T>) -> Tensor3<T> {
+    let (n1, n2, n3) = x.shape();
+    assert_eq!(c.rows(), n3, "mode-3 coefficient rows must equal N3");
+    let k3 = c.cols();
+    let mut out = Tensor3::zeros(n1, n2, k3);
+    for i in 0..n1 {
+        for j in 0..n2 {
+            let src = x.row(i, j);
+            let dst = out.row_mut(i, j);
+            for (k, &s) in src.iter().enumerate() {
+                if s.is_zero() {
+                    continue;
+                }
+                let crow = c.row(k);
+                for (d, &cv) in dst.iter_mut().zip(crow) {
+                    *d += s * cv;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn brute_mode1(x: &Tensor3<f64>, c: &Mat<f64>) -> Tensor3<f64> {
+        let (n1, n2, n3) = x.shape();
+        Tensor3::from_fn(c.cols(), n2, n3, |kk, j, k| {
+            (0..n1).map(|i| x.get(i, j, k) * c.get(i, kk)).sum()
+        })
+    }
+
+    #[test]
+    fn mode1_matches_brute_force() {
+        let mut rng = Rng::new(30);
+        let x = Tensor3::random(4, 3, 5, &mut rng);
+        let c = Mat::random(4, 6, &mut rng);
+        assert!(mode1_product(&x, &c).max_abs_diff(&brute_mode1(&x, &c)) < 1e-12);
+    }
+
+    #[test]
+    fn mode2_matches_brute_force() {
+        let mut rng = Rng::new(31);
+        let x = Tensor3::random(3, 5, 4, &mut rng);
+        let c = Mat::random(5, 2, &mut rng);
+        let got = mode2_product(&x, &c);
+        let want = Tensor3::from_fn(3, 2, 4, |i, kk, k| {
+            (0..5).map(|j| x.get(i, j, k) * c.get(j, kk)).sum()
+        });
+        assert!(got.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn mode3_matches_brute_force() {
+        let mut rng = Rng::new(32);
+        let x = Tensor3::random(2, 3, 6, &mut rng);
+        let c = Mat::random(6, 6, &mut rng);
+        let got = mode3_product(&x, &c);
+        let want = Tensor3::from_fn(2, 3, 6, |i, j, kk| {
+            (0..6).map(|k| x.get(i, j, k) * c.get(k, kk)).sum()
+        });
+        assert!(got.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn identity_is_noop_on_each_mode() {
+        let mut rng = Rng::new(33);
+        let x = Tensor3::random(3, 4, 5, &mut rng);
+        assert!(mode1_product(&x, &Mat::identity(3)).max_abs_diff(&x) < 1e-15);
+        assert!(mode2_product(&x, &Mat::identity(4)).max_abs_diff(&x) < 1e-15);
+        assert!(mode3_product(&x, &Mat::identity(5)).max_abs_diff(&x) < 1e-15);
+    }
+
+    #[test]
+    fn modes_commute_when_distinct() {
+        // Mode products along different modes commute (multilinearity).
+        let mut rng = Rng::new(34);
+        let x = Tensor3::random(3, 4, 5, &mut rng);
+        let c1 = Mat::random(3, 2, &mut rng);
+        let c3 = Mat::random(5, 7, &mut rng);
+        let a = mode3_product(&mode1_product(&x, &c1), &c3);
+        let b = mode1_product(&mode3_product(&x, &c3), &c1);
+        assert!(a.max_abs_diff(&b) < 1e-12);
+    }
+
+    #[test]
+    fn expansion_and_compression_shapes() {
+        let mut rng = Rng::new(35);
+        let x = Tensor3::random(4, 4, 4, &mut rng);
+        // expansion K > N
+        assert_eq!(mode2_product(&x, &Mat::random(4, 9, &mut rng)).shape(), (4, 9, 4));
+        // compression K < N
+        assert_eq!(mode3_product(&x, &Mat::random(4, 2, &mut rng)).shape(), (4, 4, 2));
+    }
+}

@@ -1,0 +1,107 @@
+//! Direct element-wise evaluation of Eq. (1)/(2): the monolithic 6D index
+//! space with `(N1N2N3)·(K1K2K3)` MACs. This is the complexity *baseline*
+//! the paper's three-stage algorithm is measured against (E2), and the
+//! ground-truth oracle for the fast paths.
+
+use super::CoeffSet;
+use crate::tensor::{Scalar, Tensor3};
+
+/// Compute `out[k1,k2,k3] += Σ_{n1,n2,n3} x[n1,n2,n3]·c1[n1,k1]·c2[n2,k2]·c3[n3,k3]`
+/// starting from a zero output (pass the result through [`gemt_naive_into`]
+/// for the affine `+=` form).
+pub fn gemt_naive<T: Scalar>(x: &Tensor3<T>, cs: &CoeffSet<T>) -> Tensor3<T> {
+    let (k1, k2, k3) = cs.output_shape();
+    let mut out = Tensor3::zeros(k1, k2, k3);
+    gemt_naive_into(x, cs, &mut out);
+    out
+}
+
+/// Affine form of Eq. (1): accumulates into a caller-initialized output
+/// (“elements of the output tensor should be initialized at the beginning of
+/// processing, and, in general, might initially not be a zero tensor”).
+pub fn gemt_naive_into<T: Scalar>(x: &Tensor3<T>, cs: &CoeffSet<T>, out: &mut Tensor3<T>) {
+    let (n1, n2, n3) = x.shape();
+    assert_eq!(cs.input_shape(), (n1, n2, n3), "coefficient rows must match input");
+    let (k1s, k2s, k3s) = cs.output_shape();
+    assert_eq!(out.shape(), (k1s, k2s, k3s), "output shape mismatch");
+    for kk1 in 0..k1s {
+        for kk2 in 0..k2s {
+            for kk3 in 0..k3s {
+                let mut acc = T::zero();
+                for i in 0..n1 {
+                    let c1 = cs.c1.get(i, kk1);
+                    for j in 0..n2 {
+                        let c12 = c1 * cs.c2.get(j, kk2);
+                        let row = x.row(i, j);
+                        for (k, &xv) in row.iter().take(n3).enumerate() {
+                            acc += xv * c12 * cs.c3.get(k, kk3);
+                        }
+                    }
+                }
+                out.add_assign_at(kk1, kk2, kk3, acc);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Mat;
+    use crate::util::Rng;
+
+    #[test]
+    fn identity_coefficients_passthrough() {
+        let mut rng = Rng::new(20);
+        let x = Tensor3::random(2, 3, 4, &mut rng);
+        let cs = CoeffSet::new(Mat::identity(2), Mat::identity(3), Mat::identity(4));
+        let y = gemt_naive(&x, &cs);
+        assert!(x.max_abs_diff(&y) < 1e-15);
+    }
+
+    #[test]
+    fn single_element_tensor() {
+        let x = Tensor3::from_vec(1, 1, 1, vec![3.0]);
+        let cs = CoeffSet::new(
+            Mat::from_vec(1, 1, vec![2.0]),
+            Mat::from_vec(1, 1, vec![5.0]),
+            Mat::from_vec(1, 1, vec![7.0]),
+        );
+        let y = gemt_naive(&x, &cs);
+        assert!((y.get(0, 0, 0) - 3.0f64 * 2.0 * 5.0 * 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn affine_accumulation() {
+        let mut rng = Rng::new(21);
+        let x = Tensor3::random(2, 2, 2, &mut rng);
+        let cs = CoeffSet::new(
+            Mat::random(2, 2, &mut rng),
+            Mat::random(2, 2, &mut rng),
+            Mat::random(2, 2, &mut rng),
+        );
+        let mut out = Tensor3::from_fn(2, 2, 2, |_, _, _| 10.0);
+        gemt_naive_into(&x, &cs, &mut out);
+        let fresh = gemt_naive(&x, &cs);
+        for i in 0..2 {
+            for j in 0..2 {
+                for k in 0..2 {
+                    assert!((out.get(i, j, k) - fresh.get(i, j, k) - 10.0).abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rectangular_output_shape() {
+        let mut rng = Rng::new(22);
+        let x = Tensor3::random(2, 3, 4, &mut rng);
+        let cs = CoeffSet::new(
+            Mat::random(2, 5, &mut rng),
+            Mat::random(3, 1, &mut rng),
+            Mat::random(4, 2, &mut rng),
+        );
+        let y = gemt_naive(&x, &cs);
+        assert_eq!(y.shape(), (5, 1, 2));
+    }
+}

@@ -1,0 +1,179 @@
+//! Three-stage **outer-product** (rank-1 update) formulation,
+//! Eq. (6.1)–(6.3) — the low-rank algorithm TriADA's schedule is
+//! isomorphic to, and the semantics of the new SR-GEMM kernel (§5.1 (3)).
+//!
+//! On each summation step one *column* of the stationary tensor slice and
+//! one *row* of the streamed square coefficient matrix update the whole
+//! slice: `Ẋ^{(n2)} += x(n3) ∘ c(n3)`. The output is stationary (stays in
+//! the cells); only the coefficient vector is injected — this is the
+//! “broadcast-broadcast-compute” schedule (d) of §4.
+
+use super::CoeffSet;
+use crate::tensor::{Mat, Scalar, Tensor3};
+
+/// Three-stage outer-product 3D-GEMT (summation order s = {3, 1, 2}).
+pub fn gemt_outer<T: Scalar>(x: &Tensor3<T>, cs: &CoeffSet<T>) -> Tensor3<T> {
+    let (n1, n2, n3) = x.shape();
+    assert_eq!(cs.input_shape(), (n1, n2, n3));
+    let (k1s, k2s, k3s) = cs.output_shape();
+
+    // Stage I (Eq. 6.1): rank-N3 update per horizontal slice:
+    // Ẋ^{(n2)} += Σ_{n3} x(n3)_{N1} ∘ c3(n3)_{K3}.
+    let mut s1 = Tensor3::<T>::zeros(n1, n2, k3s);
+    for step in 0..n3 {
+        let crow = cs.c3.row(step);
+        for j in 0..n2 {
+            for i in 0..n1 {
+                let xv = x.get(i, j, step); // element of column-vector x(n3)
+                if xv.is_zero() {
+                    continue;
+                }
+                let dst = s1.row_mut(i, j);
+                for (d, &cv) in dst.iter_mut().zip(crow) {
+                    *d += xv * cv;
+                }
+            }
+        }
+    }
+
+    // Stage II (Eq. 6.2): Ẍ^{(n2)} += Σ_{n1} c1(n1)_{K1} ∘ ẋ(n1)_{K3}.
+    // c1 column-vector (of C₁ᵀ) is row n1 of C₁ read down its columns.
+    let mut s2 = Tensor3::<T>::zeros(k1s, n2, k3s);
+    for step in 0..n1 {
+        for j in 0..n2 {
+            let xrow: &[T] = s1.row(step, j); // ẋ(n1)^{(n2)} along k3
+            for kk1 in 0..k1s {
+                let cv = cs.c1.get(step, kk1);
+                if cv.is_zero() {
+                    continue;
+                }
+                let dst = s2.row_mut(kk1, j);
+                for (d, &xv) in dst.iter_mut().zip(xrow) {
+                    *d += cv * xv;
+                }
+            }
+        }
+    }
+
+    // Stage III (Eq. 6.3): lateral re-slice (Eq. 5):
+    // X⃛^{(k3)} += Σ_{n2} ẍ(n2)_{K1} ∘ c2(n2)_{K2}.
+    // Loop order chosen so both source (kk1, step, :) and destination
+    // (kk1, kk2, :) rows are contiguous.
+    let mut out = Tensor3::<T>::zeros(k1s, k2s, k3s);
+    for step in 0..n2 {
+        let crow = cs.c2.row(step);
+        for kk1 in 0..k1s {
+            let src = s2.row(kk1, step);
+            for (kk2, &cv) in crow.iter().enumerate() {
+                if cv.is_zero() {
+                    continue;
+                }
+                let dst = out.row_mut(kk1, kk2);
+                for (d, &xv) in dst.iter_mut().zip(src) {
+                    *d += xv * cv;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// One output-stationary SR-GEMM (§5.1 kernel (3)): `out += x · c`, where
+/// the rectangular `x: M×N` is resident, the square `c: N×N` is streamed
+/// row-by-row, and the result is a rank-N sum of outer products
+/// `x(:,n) ∘ c(n,:)` accumulated in place.
+pub fn sr_gemm<T: Scalar>(x: &Mat<T>, c: &Mat<T>, out: &mut Mat<T>) {
+    assert_eq!(c.rows(), c.cols(), "SR-GEMM streams a square coefficient matrix");
+    assert_eq!(x.cols(), c.rows(), "inner dimension mismatch");
+    assert_eq!((out.rows(), out.cols()), (x.rows(), c.cols()));
+    for n in 0..c.rows() {
+        let crow = c.row(n);
+        for m in 0..x.rows() {
+            let xv = x.get(m, n);
+            if xv.is_zero() {
+                continue;
+            }
+            let base = m * out.cols();
+            let orow = &mut out.data_mut()[base..base + crow.len()];
+            for (d, &cv) in orow.iter_mut().zip(crow) {
+                *d += xv * cv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemt::gemt_naive;
+    use crate::util::Rng;
+
+    #[test]
+    fn matches_naive_square() {
+        let mut rng = Rng::new(50);
+        let x = Tensor3::random(4, 3, 5, &mut rng);
+        let cs = CoeffSet::new(
+            Mat::random(4, 4, &mut rng),
+            Mat::random(3, 3, &mut rng),
+            Mat::random(5, 5, &mut rng),
+        );
+        assert!(gemt_outer(&x, &cs).max_abs_diff(&gemt_naive(&x, &cs)) < 1e-10);
+    }
+
+    #[test]
+    fn matches_naive_rectangular() {
+        let mut rng = Rng::new(51);
+        let x = Tensor3::random(2, 5, 3, &mut rng);
+        let cs = CoeffSet::new(
+            Mat::random(2, 4, &mut rng),
+            Mat::random(5, 2, &mut rng),
+            Mat::random(3, 7, &mut rng),
+        );
+        let got = gemt_outer(&x, &cs);
+        assert_eq!(got.shape(), (4, 2, 7));
+        assert!(got.max_abs_diff(&gemt_naive(&x, &cs)) < 1e-10);
+    }
+
+    #[test]
+    fn sparse_input_skips_do_not_change_result() {
+        let mut rng = Rng::new(52);
+        let mut x = Tensor3::random(4, 4, 4, &mut rng);
+        crate::tensor::sparsify(&mut x, 0.6, &mut rng);
+        let cs = CoeffSet::new(
+            Mat::random(4, 4, &mut rng),
+            Mat::random(4, 4, &mut rng),
+            Mat::random(4, 4, &mut rng),
+        );
+        assert!(gemt_outer(&x, &cs).max_abs_diff(&gemt_naive(&x, &cs)) < 1e-10);
+    }
+
+    #[test]
+    fn sr_gemm_matches_matmul() {
+        let mut rng = Rng::new(53);
+        let x = Mat::random(4, 6, &mut rng);
+        let c = Mat::random(6, 6, &mut rng);
+        let mut out = Mat::zeros(4, 6);
+        sr_gemm(&x, &c, &mut out);
+        assert!(out.max_abs_diff(&x.matmul(&c)) < 1e-12);
+    }
+
+    #[test]
+    fn sr_gemm_accumulates() {
+        let mut rng = Rng::new(54);
+        let x = Mat::random(3, 3, &mut rng);
+        let c = Mat::random(3, 3, &mut rng);
+        let mut out = Mat::from_fn(3, 3, |_, _| 1.0);
+        sr_gemm(&x, &c, &mut out);
+        let want = x.matmul(&c).map(|v| v + 1.0);
+        assert!(out.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn sr_gemm_rejects_rectangular_coefficients() {
+        let x = Mat::<f64>::zeros(2, 3);
+        let c = Mat::<f64>::zeros(3, 4);
+        let mut out = Mat::<f64>::zeros(2, 4);
+        sr_gemm(&x, &c, &mut out);
+    }
+}

@@ -1,0 +1,140 @@
+//! Rectangular 3D-GEMT: tensor expansion (`Ks > Ns`), compression
+//! (`Ks < Ns`), and the Tucker reconstruction of §2.3.
+//!
+//! Tucker: a core `(K1×K2×K3)` tensor `G` and factor matrices
+//! `U_s: N_s×K_s` approximate `X ≈ G ×₁ U₁ᵀ ×₂ U₂ᵀ ×₃ U₃ᵀ`. With our
+//! row-contraction convention, *compression* applies `U_s` (rows = N_s) and
+//! *expansion* applies `U_sᵀ` (rows = K_s).
+
+use super::mode_product::{mode1_product, mode2_product, mode3_product};
+use super::CoeffSet;
+use crate::tensor::{Mat, Scalar, Tensor3};
+
+/// General rectangular 3D-GEMT via the cheapest-first greedy order.
+///
+/// All six orders agree in value (see [`super::parenthesize`]); when the
+/// coefficients are rectangular their costs differ, so pick the order that
+/// contracts compressing modes first (smallest resulting volume).
+pub fn gemt_rect<T: Scalar>(x: &Tensor3<T>, cs: &CoeffSet<T>) -> Tensor3<T> {
+    // Greedy: at each step contract the mode with the smallest K/N ratio.
+    let mut remaining = vec![1u8, 2, 3];
+    let mut cur = x.clone();
+    while !remaining.is_empty() {
+        let (n1, n2, n3) = cur.shape();
+        let dims = [n1 as f64, n2 as f64, n3 as f64];
+        let outs = [cs.c1.cols() as f64, cs.c2.cols() as f64, cs.c3.cols() as f64];
+        let (pos, &mode) = remaining
+            .iter()
+            .enumerate()
+            .min_by(|(_, &a), (_, &b)| {
+                let ra = outs[(a - 1) as usize] / dims[(a - 1) as usize];
+                let rb = outs[(b - 1) as usize] / dims[(b - 1) as usize];
+                ra.partial_cmp(&rb).unwrap()
+            })
+            .unwrap();
+        cur = match mode {
+            1 => mode1_product(&cur, &cs.c1),
+            2 => mode2_product(&cur, &cs.c2),
+            3 => mode3_product(&cur, &cs.c3),
+            _ => unreachable!(),
+        };
+        remaining.remove(pos);
+    }
+    cur
+}
+
+/// Compress `x: N1×N2×N3` into a core tensor `K1×K2×K3` using factor
+/// matrices `u_s: N_s×K_s` (applied by row contraction).
+pub fn tucker_compress<T: Scalar>(
+    x: &Tensor3<T>,
+    u1: &Mat<T>,
+    u2: &Mat<T>,
+    u3: &Mat<T>,
+) -> Tensor3<T> {
+    gemt_rect(x, &CoeffSet::new(u1.clone(), u2.clone(), u3.clone()))
+}
+
+/// Expand a core tensor back to `N1×N2×N3` with the transposed factors.
+pub fn tucker_expand<T: Scalar>(
+    core: &Tensor3<T>,
+    u1: &Mat<T>,
+    u2: &Mat<T>,
+    u3: &Mat<T>,
+) -> Tensor3<T> {
+    gemt_rect(
+        core,
+        &CoeffSet::new(u1.transpose(), u2.transpose(), u3.transpose()),
+    )
+}
+
+/// Build an orthonormal `n×k` factor (k ≤ n) from the DCT basis — a cheap
+/// deterministic stand-in for HOSVD factors in tests and benches (the
+/// leading DCT columns are the standard smooth-signal subspace).
+pub fn dct_factor(n: usize, k: usize) -> Mat<f64> {
+    assert!(k <= n);
+    let full = crate::transforms::dct::dct2_matrix(n);
+    Mat::from_fn(n, k, |r, c| full.get(r, c))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemt::gemt_naive;
+    use crate::util::Rng;
+
+    #[test]
+    fn rect_matches_naive() {
+        let mut rng = Rng::new(70);
+        let x = Tensor3::random(4, 5, 6, &mut rng);
+        let cs = CoeffSet::new(
+            Mat::random(4, 2, &mut rng),
+            Mat::random(5, 7, &mut rng),
+            Mat::random(6, 3, &mut rng),
+        );
+        let got = gemt_rect(&x, &cs);
+        assert_eq!(got.shape(), (2, 7, 3));
+        assert!(got.max_abs_diff(&gemt_naive(&x, &cs)) < 1e-10);
+    }
+
+    #[test]
+    fn compress_then_expand_projects() {
+        // With orthonormal factors, expand(compress(x)) is the projection of
+        // x onto the factor subspaces: idempotent, norm-non-increasing.
+        let mut rng = Rng::new(71);
+        let x = Tensor3::random(8, 8, 8, &mut rng);
+        let u1 = dct_factor(8, 4);
+        let u2 = dct_factor(8, 5);
+        let u3 = dct_factor(8, 3);
+        let core = tucker_compress(&x, &u1, &u2, &u3);
+        assert_eq!(core.shape(), (4, 5, 3));
+        let approx = tucker_expand(&core, &u1, &u2, &u3);
+        assert_eq!(approx.shape(), (8, 8, 8));
+        assert!(approx.frob_norm() <= x.frob_norm() + 1e-9);
+        // projection idempotence
+        let core2 = tucker_compress(&approx, &u1, &u2, &u3);
+        assert!(core.max_abs_diff(&core2) < 1e-9);
+    }
+
+    #[test]
+    fn full_rank_tucker_is_lossless() {
+        let mut rng = Rng::new(72);
+        let x = Tensor3::random(6, 4, 5, &mut rng);
+        let u1 = dct_factor(6, 6);
+        let u2 = dct_factor(4, 4);
+        let u3 = dct_factor(5, 5);
+        let back = tucker_expand(&tucker_compress(&x, &u1, &u2, &u3), &u1, &u2, &u3);
+        assert!(x.max_abs_diff(&back) < 1e-9);
+    }
+
+    #[test]
+    fn smooth_data_compresses_well() {
+        // A smooth (low-frequency) field should survive strong truncation.
+        let x = Tensor3::from_fn(16, 16, 16, |i, j, k| {
+            ((i as f64) / 16.0).sin() + ((j as f64) / 16.0).cos() + (k as f64) / 16.0
+        });
+        let u = dct_factor(16, 4);
+        let approx = tucker_expand(&tucker_compress(&x, &u, &u, &u), &u, &u, &u);
+        let rel = x.max_abs_diff(&approx) / x.frob_norm();
+        assert!(rel < 1e-2, "rel={rel}");
+    }
+}

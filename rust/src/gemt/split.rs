@@ -1,0 +1,149 @@
+//! The 3D DFT via the **split (re, im) representation** — the form the
+//! AOT/PJRT path executes (HLO artifacts stay real-typed), validated here
+//! against the complex reference.
+//!
+//! For a complex mode product `y = x·C` with `x = a+ib`, `C = R+iM`:
+//! `Re(y) = a·R − b·M`, `Im(y) = a·M + b·R` — four real mode products per
+//! complex one. A TriADA cell would hold a 2-component local element and do
+//! the same four MACs.
+
+use super::CoeffSet;
+use crate::tensor::{Complex64, Mat, Tensor3};
+use crate::transforms::dft::{dft_matrix, dft_split, idft_matrix};
+
+/// Complex 3D DFT reference via the outer-product chain on `Complex64`.
+pub fn dft3d_complex(x: &Tensor3<Complex64>, inverse: bool) -> Tensor3<Complex64> {
+    let (n1, n2, n3) = x.shape();
+    let m = |n| if inverse { idft_matrix(n) } else { dft_matrix(n) };
+    super::gemt_outer(x, &CoeffSet::new(m(n1), m(n2), m(n3)))
+}
+
+/// Split 3D DFT: input/output are (re, im) pairs of real tensors.
+pub fn dft3d_split(
+    re: &Tensor3<f64>,
+    im: &Tensor3<f64>,
+    inverse: bool,
+) -> (Tensor3<f64>, Tensor3<f64>) {
+    assert_eq!(re.shape(), im.shape());
+    let (n1, n2, n3) = re.shape();
+    let split = |n: usize| {
+        let (r, m) = dft_split(n);
+        if inverse {
+            // inverse = conjugate for the unitary DFT
+            (r, m.map(|v| -v))
+        } else {
+            (r, m)
+        }
+    };
+    let (mut a, mut b) = (re.clone(), im.clone());
+    for mode in [3u8, 1, 2] {
+        let n = match mode {
+            1 => n1,
+            2 => n2,
+            3 => n3,
+            _ => unreachable!(),
+        };
+        let (cr, ci) = split(n);
+        let (na, nb) = split_mode_product(&a, &b, &cr, &ci, mode);
+        a = na;
+        b = nb;
+    }
+    (a, b)
+}
+
+/// One split complex mode product: `(a+ib) ×ₘ (R+iM)`.
+fn split_mode_product(
+    a: &Tensor3<f64>,
+    b: &Tensor3<f64>,
+    cr: &Mat<f64>,
+    ci: &Mat<f64>,
+    mode: u8,
+) -> (Tensor3<f64>, Tensor3<f64>) {
+    use super::mode_product::{mode1_product, mode2_product, mode3_product};
+    let prod = |t: &Tensor3<f64>, c: &Mat<f64>| match mode {
+        1 => mode1_product(t, c),
+        2 => mode2_product(t, c),
+        3 => mode3_product(t, c),
+        _ => unreachable!(),
+    };
+    let ar = prod(a, cr);
+    let am = prod(a, ci);
+    let br = prod(b, cr);
+    let bm = prod(b, ci);
+    // Re = aR − bM ; Im = aM + bR
+    let re = ar.add(&bm.scale(-1.0));
+    let im = am.add(&br);
+    (re, im)
+}
+
+/// Pack (re, im) into a complex tensor.
+pub fn pack_complex(re: &Tensor3<f64>, im: &Tensor3<f64>) -> Tensor3<Complex64> {
+    assert_eq!(re.shape(), im.shape());
+    let (n1, n2, n3) = re.shape();
+    Tensor3::from_fn(n1, n2, n3, |i, j, k| Complex64::new(re.get(i, j, k), im.get(i, j, k)))
+}
+
+/// Unpack a complex tensor into (re, im).
+pub fn unpack_complex(x: &Tensor3<Complex64>) -> (Tensor3<f64>, Tensor3<f64>) {
+    let (n1, n2, n3) = x.shape();
+    let re = Tensor3::from_fn(n1, n2, n3, |i, j, k| x.get(i, j, k).re);
+    let im = Tensor3::from_fn(n1, n2, n3, |i, j, k| x.get(i, j, k).im);
+    (re, im)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn split_matches_complex_forward() {
+        let mut rng = Rng::new(80);
+        let re = Tensor3::random(3, 4, 5, &mut rng);
+        let im = Tensor3::random(3, 4, 5, &mut rng);
+        let (sr, si) = dft3d_split(&re, &im, false);
+        let z = dft3d_complex(&pack_complex(&re, &im), false);
+        let (zr, zi) = unpack_complex(&z);
+        assert!(sr.max_abs_diff(&zr) < 1e-10);
+        assert!(si.max_abs_diff(&zi) < 1e-10);
+    }
+
+    #[test]
+    fn forward_inverse_roundtrip() {
+        let mut rng = Rng::new(81);
+        let re = Tensor3::random(4, 3, 6, &mut rng);
+        let im = Tensor3::zeros(4, 3, 6);
+        let (fr, fi) = dft3d_split(&re, &im, false);
+        let (br, bi) = dft3d_split(&fr, &fi, true);
+        assert!(re.max_abs_diff(&br) < 1e-9);
+        assert!(bi.frob_norm() < 1e-9);
+    }
+
+    #[test]
+    fn parseval_energy_preserved() {
+        let mut rng = Rng::new(82);
+        let re = Tensor3::random(4, 4, 4, &mut rng);
+        let im = Tensor3::random(4, 4, 4, &mut rng);
+        let before = (re.frob_norm().powi(2) + im.frob_norm().powi(2)).sqrt();
+        let (fr, fi) = dft3d_split(&re, &im, false);
+        let after = (fr.frob_norm().powi(2) + fi.frob_norm().powi(2)).sqrt();
+        assert!((before - after).abs() < 1e-9);
+    }
+
+    #[test]
+    fn real_input_hermitian_symmetry() {
+        // Real input → X[k] = conj(X[−k]) (indices mod N).
+        let mut rng = Rng::new(83);
+        let re = Tensor3::random(4, 4, 4, &mut rng);
+        let z = dft3d_complex(&pack_complex(&re, &Tensor3::zeros(4, 4, 4)), false);
+        for i in 0..4 {
+            for j in 0..4 {
+                for k in 0..4 {
+                    let a = z.get(i, j, k);
+                    let b = z.get((4 - i) % 4, (4 - j) % 4, (4 - k) % 4).conj();
+                    assert!((a - b).abs() < 1e-9);
+                }
+            }
+        }
+    }
+}

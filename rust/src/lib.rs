@@ -1,0 +1,51 @@
+//! # TriADA — Trilinear Algorithm and Device Architecture
+//!
+//! A reproduction of *“TriADA: Massively Parallel Trilinear Matrix-by-Tensor
+//! Multiply-Add Algorithm and Device Architecture for the Acceleration of 3D
+//! Discrete Transformations”* (Sedukhin, Matsumoto, Tomioka, Okuyama, 2025).
+//!
+//! The crate is the Layer-3 (coordination + simulation) part of a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1** — Pallas outer-product (SR-GEMM) kernels, authored in
+//!   `python/compile/kernels/` and validated against a pure-`jnp` oracle.
+//! * **Layer 2** — JAX three-stage 3D-DXT / 3D-GEMT model in
+//!   `python/compile/model.py`, AOT-lowered once to HLO text artifacts.
+//! * **Layer 3** — this crate: a cycle-level simulator of the TriADA cellular
+//!   device ([`sim`]), exact CPU reference algorithms ([`gemt`]), transform
+//!   coefficient generators ([`transforms`]), an FFT baseline ([`fft`]), a
+//!   PJRT runtime that executes the AOT artifacts ([`runtime`]), and a
+//!   serving-style coordinator ([`coordinator`]) that batches and routes
+//!   transform jobs. Python never runs on the request path.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use triada::tensor::Tensor3;
+//! use triada::transforms::TransformKind;
+//! use triada::gemt::{dxt3d_forward, dxt3d_inverse};
+//!
+//! let x = Tensor3::from_fn(4, 6, 8, |i, j, k| (i + 2 * j + 3 * k) as f64);
+//! let fx = dxt3d_forward(&x, TransformKind::Dct2);
+//! let back = dxt3d_inverse(&fx, TransformKind::Dct2);
+//! assert!(x.max_abs_diff(&back) < 1e-9);
+//! ```
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod fft;
+pub mod gemt;
+pub mod proptest;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod transforms;
+pub mod util;
+
+pub use tensor::Tensor3;
+pub use transforms::TransformKind;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,30 @@
+//! `triada` — CLI entry point for the Layer-3 coordinator.
+//!
+//! See `triada help` for the command surface; the library documentation in
+//! `lib.rs` describes the three-layer architecture.
+
+use triada::cli;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match cli::parse_args(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            eprintln!("see `triada help`");
+            std::process::exit(2);
+        }
+    };
+    if args.flag("help") {
+        print!("{}", cli::commands::USAGE);
+        return;
+    }
+    if args.flag("version") {
+        println!("triada {}", env!("CARGO_PKG_VERSION"));
+        return;
+    }
+    if let Err(e) = cli::commands::run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,173 @@
+//! Property-based testing substrate (the offline image has no `proptest`
+//! crate; see DESIGN.md §Substitutions).
+//!
+//! A [`Gen`] wraps the deterministic [`crate::util::Rng`]; [`run_prop`]
+//! executes a property across many generated cases and reports the failing
+//! seed so any failure is replayable with `TRIADA_PROP_SEED=<seed>`.
+
+use crate::util::Rng;
+
+/// Random-input generator handed to properties.
+pub struct Gen {
+    rng: Rng,
+    /// Case index (0-based), useful for size scaling.
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, case: usize) -> Gen {
+        Gen { rng: Rng::new(seed), case }
+    }
+
+    /// Underlying RNG.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    /// usize in [lo, hi] inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.usize_range(lo, hi)
+    }
+
+    /// f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.f64_range(lo, hi)
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.usize(xs.len())]
+    }
+
+    /// A random cuboid shape with each side in [lo, hi]; occasionally
+    /// degenerate (side = lo) to probe edge cases.
+    pub fn shape_in(&mut self, lo: usize, hi: usize) -> (usize, usize, usize) {
+        (
+            self.usize_in(lo, hi),
+            self.usize_in(lo, hi),
+            self.usize_in(lo, hi),
+        )
+    }
+
+    /// Random power-of-two in [lo, hi].
+    pub fn pow2_in(&mut self, lo: usize, hi: usize) -> usize {
+        let mut opts = Vec::new();
+        let mut p = 1usize;
+        while p <= hi {
+            if p >= lo {
+                opts.push(p);
+            }
+            p <<= 1;
+        }
+        assert!(!opts.is_empty(), "no power of two in [{lo},{hi}]");
+        *self.choose(&opts)
+    }
+}
+
+/// Outcome of a single property case.
+pub type PropResult = Result<(), String>;
+
+/// Run `cases` instances of `prop`. Panics with the failing case + seed on
+/// the first failure. Base seed comes from `TRIADA_PROP_SEED` if set, so
+/// failures are replayable.
+pub fn run_prop(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen) -> PropResult) {
+    let base: u64 = std::env::var("TRIADA_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE);
+    for case in 0..cases {
+        let seed = base
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case as u64);
+        let mut g = Gen::new(seed, case);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case} (replay with TRIADA_PROP_SEED={base}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper producing `PropResult`.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Assert two f64s are within tolerance.
+#[macro_export]
+macro_rules! prop_assert_close {
+    ($a:expr, $b:expr, $tol:expr) => {{
+        let (a, b) = ($a, $b);
+        if (a - b).abs() > $tol {
+            return Err(format!(
+                "{} = {a} differs from {} = {b} by {} (tol {})",
+                stringify!($a),
+                stringify!($b),
+                (a - b).abs(),
+                $tol
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        run_prop("trivial", 25, |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_name() {
+        run_prop("fails", 10, |g| {
+            let v = g.usize_in(0, 100);
+            if v < 1000 {
+                Err("always".to_string())
+            } else {
+                let _ = v;
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        run_prop("bounds", 50, |g| {
+            let (a, b, c) = g.shape_in(1, 9);
+            prop_assert!((1..=9).contains(&a), "a={a}");
+            prop_assert!((1..=9).contains(&b), "b={b}");
+            prop_assert!((1..=9).contains(&c), "c={c}");
+            let p = g.pow2_in(2, 16);
+            prop_assert!(p.is_power_of_two() && (2..=16).contains(&p), "p={p}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first = Vec::new();
+        run_prop("det1", 5, |g| {
+            first.push(g.usize_in(0, 1_000_000));
+            Ok(())
+        });
+        let mut second = Vec::new();
+        run_prop("det2", 5, |g| {
+            second.push(g.usize_in(0, 1_000_000));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,204 @@
+//! AOT artifact manifest: what `python/compile/aot.py` produced and how to
+//! call it.
+//!
+//! The manifest is INI (parsed with [`crate::config`]) — one section per
+//! variant:
+//!
+//! ```ini
+//! [dct2_fwd_8x8x8]
+//! file = dct2_fwd_8x8x8.hlo.txt
+//! kind = dct2
+//! direction = forward
+//! n1 = 8
+//! n2 = 8
+//! n3 = 8
+//! inputs = 1
+//! outputs = 1
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context};
+
+use crate::config::Config;
+use crate::transforms::TransformKind;
+
+/// Forward or inverse transform.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Direction {
+    Forward,
+    Inverse,
+}
+
+impl Direction {
+    pub fn parse(s: &str) -> anyhow::Result<Direction> {
+        match s {
+            "forward" | "fwd" => Ok(Direction::Forward),
+            "inverse" | "inv" | "backward" => Ok(Direction::Inverse),
+            other => bail!("bad direction {other:?}"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Direction::Forward => "forward",
+            Direction::Inverse => "inverse",
+        }
+    }
+}
+
+/// One compiled-model variant.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    /// Manifest section name (cache key).
+    pub name: String,
+    /// HLO text file (absolute).
+    pub path: PathBuf,
+    pub kind: TransformKind,
+    pub direction: Direction,
+    pub shape: (usize, usize, usize),
+    /// Number of tensor inputs (1 real, 2 for DFT split (re, im)).
+    pub inputs: usize,
+    /// Number of tensor outputs.
+    pub outputs: usize,
+}
+
+impl ArtifactSpec {
+    /// Does this variant serve the given request?
+    pub fn matches(
+        &self,
+        kind: TransformKind,
+        direction: Direction,
+        shape: (usize, usize, usize),
+    ) -> bool {
+        self.kind == kind && self.direction == direction && self.shape == shape
+    }
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactManifest {
+    pub specs: Vec<ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.ini`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<ArtifactManifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.ini");
+        let cfg = Config::load(&path).with_context(|| format!("loading manifest {path:?}"))?;
+        Self::from_config(&cfg, &dir)
+    }
+
+    /// Parse from an already-loaded config (exposed for tests).
+    pub fn from_config(cfg: &Config, dir: &Path) -> anyhow::Result<ArtifactManifest> {
+        // Collect section names from a special index key, or scan: the
+        // config stores (section, key); sections with a `file` key are
+        // variants.
+        let mut sections: Vec<String> = Vec::new();
+        // Config has no section iterator; variants list their names under
+        // [manifest] variants = a,b,c
+        match cfg.get("manifest", "variants") {
+            Some(list) => {
+                sections.extend(list.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()))
+            }
+            None => bail!("manifest missing [manifest] variants = ... index"),
+        }
+        let mut specs = Vec::new();
+        for name in sections {
+            let get = |key: &str| -> anyhow::Result<&str> {
+                cfg.get(&name, key)
+                    .with_context(|| format!("variant {name:?} missing key {key:?}"))
+            };
+            let kind = TransformKind::parse(get("kind")?)
+                .with_context(|| format!("variant {name:?} has unknown kind"))?;
+            let spec = ArtifactSpec {
+                name: name.clone(),
+                path: dir.join(get("file")?),
+                kind,
+                direction: Direction::parse(get("direction")?)?,
+                shape: (
+                    cfg.get_usize(&name, "n1")?.context("n1")?,
+                    cfg.get_usize(&name, "n2")?.context("n2")?,
+                    cfg.get_usize(&name, "n3")?.context("n3")?,
+                ),
+                inputs: cfg.get_usize(&name, "inputs")?.unwrap_or(1),
+                outputs: cfg.get_usize(&name, "outputs")?.unwrap_or(1),
+            };
+            if !spec.path.exists() {
+                bail!("variant {name:?}: HLO file {:?} does not exist", spec.path);
+            }
+            specs.push(spec);
+        }
+        Ok(ArtifactManifest { specs, dir: dir.to_path_buf() })
+    }
+
+    /// Find the variant serving a request.
+    pub fn find(
+        &self,
+        kind: TransformKind,
+        direction: Direction,
+        shape: (usize, usize, usize),
+    ) -> Option<&ArtifactSpec> {
+        self.specs.iter().find(|s| s.matches(kind, direction, shape))
+    }
+
+    /// All distinct (kind, shape) pairs — what the batcher groups by.
+    pub fn variants(&self) -> &[ArtifactSpec] {
+        &self.specs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.ini"), body).unwrap();
+    }
+
+    #[test]
+    fn loads_and_finds_variants() {
+        let dir = std::env::temp_dir().join("triada_test_manifest_1");
+        write_manifest(
+            &dir,
+            "[manifest]\nvariants = dct2_fwd_2x3x4\n\n[dct2_fwd_2x3x4]\nfile = a.hlo.txt\nkind = dct2\ndirection = forward\nn1 = 2\nn2 = 3\nn3 = 4\ninputs = 1\noutputs = 1\n",
+        );
+        std::fs::write(dir.join("a.hlo.txt"), "HloModule dummy").unwrap();
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.specs.len(), 1);
+        let s = m.find(TransformKind::Dct2, Direction::Forward, (2, 3, 4)).unwrap();
+        assert_eq!(s.inputs, 1);
+        assert!(m.find(TransformKind::Dht, Direction::Forward, (2, 3, 4)).is_none());
+        assert!(m.find(TransformKind::Dct2, Direction::Inverse, (2, 3, 4)).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_hlo_file_is_error() {
+        let dir = std::env::temp_dir().join("triada_test_manifest_2");
+        write_manifest(
+            &dir,
+            "[manifest]\nvariants = v\n\n[v]\nfile = missing.hlo.txt\nkind = dht\ndirection = forward\nn1 = 2\nn2 = 2\nn3 = 2\n",
+        );
+        assert!(ArtifactManifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_index_is_error() {
+        let dir = std::env::temp_dir().join("triada_test_manifest_3");
+        write_manifest(&dir, "[v]\nfile = a\n");
+        assert!(ArtifactManifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn direction_parse() {
+        assert_eq!(Direction::parse("forward").unwrap(), Direction::Forward);
+        assert_eq!(Direction::parse("inv").unwrap(), Direction::Inverse);
+        assert!(Direction::parse("sideways").is_err());
+    }
+}

@@ -1,0 +1,178 @@
+//! The PJRT client wrapper and per-variant executable cache.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Compilation happens at most once per
+//! variant (the hot path only executes); the cache is the executable-reuse
+//! mechanism the coordinator's batcher exploits.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Context;
+
+use super::artifacts::{ArtifactManifest, ArtifactSpec, Direction};
+use super::{literal_to_tensor, tensor_to_literal};
+use crate::tensor::Tensor3;
+use crate::transforms::TransformKind;
+
+/// Execution statistics (monotone counters; cheap to read).
+#[derive(Debug, Default)]
+pub struct RuntimeStats {
+    pub compiles: AtomicU64,
+    pub executions: AtomicU64,
+    pub cache_hits: AtomicU64,
+}
+
+impl RuntimeStats {
+    pub fn snapshot(&self) -> (u64, u64, u64) {
+        (
+            self.compiles.load(Ordering::Relaxed),
+            self.executions.load(Ordering::Relaxed),
+            self.cache_hits.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// PJRT CPU runtime with a lazy executable cache.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    manifest: ArtifactManifest,
+    // name → compiled executable. PjRtLoadedExecutable is internally
+    // ref-counted; we guard the map, not execution.
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    pub stats: RuntimeStats,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU runtime over an artifact directory.
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> anyhow::Result<PjrtRuntime> {
+        let manifest = ArtifactManifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            stats: RuntimeStats::default(),
+        })
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Get (compiling if needed) the executable for a variant.
+    pub fn executable(&self, spec: &ArtifactSpec) -> anyhow::Result<Arc<xla::PjRtLoadedExecutable>> {
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(exe) = cache.get(&spec.name) {
+                self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(exe.clone());
+            }
+        }
+        // Compile outside the lock (slow); racing compiles are benign.
+        let path = spec
+            .path
+            .to_str()
+            .with_context(|| format!("non-UTF8 artifact path {:?}", spec.path))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling variant {}", spec.name))?,
+        );
+        self.stats.compiles.fetch_add(1, Ordering::Relaxed);
+        let mut cache = self.cache.lock().unwrap();
+        Ok(cache.entry(spec.name.clone()).or_insert(exe).clone())
+    }
+
+    /// Execute a variant on `inputs` (each shaped `spec.shape`), returning
+    /// `spec.outputs` tensors.
+    pub fn execute(
+        &self,
+        spec: &ArtifactSpec,
+        inputs: &[Tensor3<f32>],
+    ) -> anyhow::Result<Vec<Tensor3<f32>>> {
+        anyhow::ensure!(
+            inputs.len() == spec.inputs,
+            "variant {} expects {} inputs, got {}",
+            spec.name,
+            spec.inputs,
+            inputs.len()
+        );
+        for t in inputs {
+            anyhow::ensure!(
+                t.shape() == spec.shape,
+                "variant {} expects shape {:?}, got {:?}",
+                spec.name,
+                spec.shape,
+                t.shape()
+            );
+        }
+        let exe = self.executable(spec)?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(tensor_to_literal).collect::<anyhow::Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // aot.py lowers with return_tuple=True: unwrap the tuple.
+        let parts = result.to_tuple().context("untupling result")?;
+        anyhow::ensure!(
+            parts.len() == spec.outputs,
+            "variant {} produced {} outputs, manifest says {}",
+            spec.name,
+            parts.len(),
+            spec.outputs
+        );
+        self.stats.executions.fetch_add(1, Ordering::Relaxed);
+        parts
+            .iter()
+            .map(|lit| literal_to_tensor(lit, spec.shape))
+            .collect()
+    }
+
+    /// Find + execute in one call.
+    pub fn run(
+        &self,
+        kind: TransformKind,
+        direction: Direction,
+        inputs: &[Tensor3<f32>],
+    ) -> anyhow::Result<Vec<Tensor3<f32>>> {
+        let shape = inputs
+            .first()
+            .map(|t| t.shape())
+            .context("run() needs at least one input")?;
+        let spec = self
+            .manifest
+            .find(kind, direction, shape)
+            .with_context(|| {
+                format!(
+                    "no artifact for {} {} {:?} — run `make artifacts` with this shape",
+                    kind.name(),
+                    direction.name(),
+                    shape
+                )
+            })?
+            .clone();
+        self.execute(&spec, inputs)
+    }
+
+    /// Eagerly compile every manifest variant (server warmup).
+    pub fn warmup(&self) -> anyhow::Result<usize> {
+        let specs: Vec<ArtifactSpec> = self.manifest.specs.clone();
+        for spec in &specs {
+            self.executable(spec)?;
+        }
+        Ok(specs.len())
+    }
+}
+
+// PJRT integration tests live in rust/tests/pjrt_roundtrip.rs (they need
+// `make artifacts` to have produced real HLO files).

@@ -1,0 +1,62 @@
+//! PJRT runtime — Layer 3's bridge to the AOT-compiled Layer-1/2 compute.
+//!
+//! `python/compile/aot.py` lowers each model variant once to HLO **text**
+//! (xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id serialized protos, so
+//! text is the interchange format) plus an INI manifest. This module loads
+//! the manifest, compiles executables on the PJRT CPU client *lazily, once
+//! per variant* (the executable cache), and converts between [`Tensor3`]
+//! and XLA literals. Python never runs here.
+
+pub mod artifacts;
+pub mod client;
+pub mod service;
+
+pub use artifacts::{ArtifactManifest, ArtifactSpec, Direction};
+pub use client::{PjrtRuntime, RuntimeStats};
+pub use service::{PjrtHandle, PjrtService};
+
+use crate::tensor::Tensor3;
+
+/// Convert a row-major f32 tensor to an XLA literal of the same shape.
+pub fn tensor_to_literal(t: &Tensor3<f32>) -> anyhow::Result<xla::Literal> {
+    let (n1, n2, n3) = t.shape();
+    let lit = xla::Literal::vec1(t.data());
+    Ok(lit.reshape(&[n1 as i64, n2 as i64, n3 as i64])?)
+}
+
+/// Convert an XLA literal back to a row-major f32 tensor.
+pub fn literal_to_tensor(
+    lit: &xla::Literal,
+    shape: (usize, usize, usize),
+) -> anyhow::Result<Tensor3<f32>> {
+    let data = lit.to_vec::<f32>()?;
+    anyhow::ensure!(
+        data.len() == shape.0 * shape.1 * shape.2,
+        "literal has {} elements, expected {}x{}x{}",
+        data.len(),
+        shape.0,
+        shape.1,
+        shape.2
+    );
+    Ok(Tensor3::from_vec(shape.0, shape.1, shape.2, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_literal_roundtrip() {
+        let t = Tensor3::from_fn(2, 3, 4, |i, j, k| (i * 100 + j * 10 + k) as f32);
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit, (2, 3, 4)).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_is_error() {
+        let t = Tensor3::from_fn(2, 2, 2, |_, _, _| 1.0f32);
+        let lit = tensor_to_literal(&t).unwrap();
+        assert!(literal_to_tensor(&lit, (2, 2, 3)).is_err());
+    }
+}

@@ -1,0 +1,149 @@
+//! PJRT service thread.
+//!
+//! The `xla` crate's client/executable wrappers are `Rc`-based (not
+//! `Send`/`Sync`), so Layer 3 owns exactly one PJRT runtime on a dedicated
+//! OS thread and talks to it over channels. This also serializes device
+//! access — the right discipline for the CPU PJRT plugin — while the worker
+//! pool keeps doing validation, conversion, and reply fan-out in parallel.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+
+use anyhow::Context;
+
+use super::artifacts::Direction;
+use super::client::PjrtRuntime;
+use crate::tensor::Tensor3;
+use crate::transforms::TransformKind;
+
+enum Request {
+    Run {
+        kind: TransformKind,
+        direction: Direction,
+        inputs: Vec<Tensor3<f32>>,
+        reply: Sender<anyhow::Result<Vec<Tensor3<f32>>>>,
+    },
+    Warmup {
+        reply: Sender<anyhow::Result<usize>>,
+    },
+    Stats {
+        reply: Sender<(u64, u64, u64)>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, thread-safe handle to the PJRT service.
+pub struct PjrtHandle {
+    tx: Mutex<Sender<Request>>,
+}
+
+/// The running service (join on drop).
+pub struct PjrtService {
+    handle: PjrtHandle,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl PjrtService {
+    /// Spawn the service over an artifact directory. Fails fast if the
+    /// manifest or client cannot be created.
+    pub fn spawn(artifact_dir: impl AsRef<std::path::Path>) -> anyhow::Result<PjrtService> {
+        let dir = artifact_dir.as_ref().to_path_buf();
+        let (tx, rx) = channel::<Request>();
+        let (ready_tx, ready_rx) = channel::<anyhow::Result<()>>();
+        let thread = std::thread::Builder::new()
+            .name("triada-pjrt".into())
+            .spawn(move || service_loop(dir, rx, ready_tx))
+            .context("spawning pjrt service thread")?;
+        ready_rx
+            .recv()
+            .context("pjrt service thread died during startup")??;
+        Ok(PjrtService { handle: PjrtHandle { tx: Mutex::new(tx) }, thread: Some(thread) })
+    }
+
+    pub fn handle(&self) -> PjrtHandle {
+        PjrtHandle { tx: Mutex::new(self.handle.sender()) }
+    }
+}
+
+impl Drop for PjrtService {
+    fn drop(&mut self) {
+        let _ = self.handle.sender().send(Request::Shutdown);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl PjrtHandle {
+    fn sender(&self) -> Sender<Request> {
+        self.tx.lock().unwrap().clone()
+    }
+
+    /// Execute a transform on the AOT artifact matching (kind, direction,
+    /// input shape).
+    pub fn run(
+        &self,
+        kind: TransformKind,
+        direction: Direction,
+        inputs: Vec<Tensor3<f32>>,
+    ) -> anyhow::Result<Vec<Tensor3<f32>>> {
+        let (reply, rx) = channel();
+        self.sender()
+            .send(Request::Run { kind, direction, inputs, reply })
+            .map_err(|_| anyhow::anyhow!("pjrt service is down"))?;
+        rx.recv().context("pjrt service dropped the request")?
+    }
+
+    /// Compile all variants eagerly; returns how many.
+    pub fn warmup(&self) -> anyhow::Result<usize> {
+        let (reply, rx) = channel();
+        self.sender()
+            .send(Request::Warmup { reply })
+            .map_err(|_| anyhow::anyhow!("pjrt service is down"))?;
+        rx.recv().context("pjrt service dropped the request")?
+    }
+
+    /// (compiles, executions, cache_hits).
+    pub fn stats(&self) -> anyhow::Result<(u64, u64, u64)> {
+        let (reply, rx) = channel();
+        self.sender()
+            .send(Request::Stats { reply })
+            .map_err(|_| anyhow::anyhow!("pjrt service is down"))?;
+        rx.recv().context("pjrt service dropped the request")
+    }
+}
+
+fn service_loop(
+    dir: std::path::PathBuf,
+    rx: Receiver<Request>,
+    ready: Sender<anyhow::Result<()>>,
+) {
+    let runtime = match PjrtRuntime::new(&dir) {
+        Ok(rt) => {
+            let _ = ready.send(Ok(()));
+            rt
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Run { kind, direction, inputs, reply } => {
+                let _ = reply.send(runtime.run(kind, direction, &inputs));
+            }
+            Request::Warmup { reply } => {
+                let _ = reply.send(runtime.warmup());
+            }
+            Request::Stats { reply } => {
+                let _ = reply.send(runtime.stats.snapshot());
+            }
+            Request::Shutdown => break,
+        }
+    }
+}
+
+// Integration coverage lives in rust/tests/pjrt_roundtrip.rs (requires
+// `make artifacts`).

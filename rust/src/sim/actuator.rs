@@ -1,0 +1,205 @@
+//! Decoupled Active Streaming Memory (DASM) — the “actuator” of §5.
+//!
+//! Each actuator stores one square coefficient matrix and works as a
+//! multi-head drum memory: on each time-step it broadcasts one **tagged
+//! vector** (a row of the matrix, or a column for the transposed Stage-II
+//! use) to its face of the Tensor Core. The diagonal element carries
+//! `tag = 1` (the pivot marker that makes cell activity coordinate-free);
+//! under ESOP, zero-valued non-pivot elements are suppressed and all-zero
+//! vectors are skipped wholesale, saving the time-step.
+
+use crate::tensor::Mat;
+
+/// One streamed coefficient element with its synchronization tag.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TaggedElem {
+    pub value: f64,
+    /// `true` on the pivot (diagonal) position — activates the green cells.
+    pub tag: bool,
+    /// `false` when ESOP suppressed the element (zero non-pivot): the
+    /// actuator never drives that line.
+    pub sent: bool,
+}
+
+/// A full tagged vector for one time-step.
+#[derive(Clone, Debug)]
+pub struct TaggedVector {
+    /// Which summation index this vector belongs to (the pivot position).
+    pub pivot: usize,
+    pub elems: Vec<TaggedElem>,
+}
+
+impl TaggedVector {
+    /// Number of elements actually driven onto lines.
+    pub fn sent_count(&self) -> usize {
+        self.elems.iter().filter(|e| e.sent).count()
+    }
+
+    /// Number of suppressed (zero, unsent) elements.
+    pub fn suppressed_count(&self) -> usize {
+        self.elems.iter().filter(|e| !e.sent).count()
+    }
+}
+
+/// What the actuator does at a given step.
+#[derive(Clone, Debug)]
+pub enum Emission {
+    /// Stream this vector.
+    Vector(TaggedVector),
+    /// ESOP skipped an all-zero vector (saves the whole time-step).
+    SkippedZeroVector { pivot: usize },
+    /// Matrix exhausted; control passes to the next actuator.
+    Done,
+}
+
+/// The actuator itself.
+#[derive(Clone, Debug)]
+pub struct Actuator {
+    /// Coefficient matrix; row `n` is the vector for summation step `n`.
+    /// (For Stage II the caller passes the transposed matrix, matching the
+    /// paper's `C₁ᵀ` placement.)
+    matrix: Mat<f64>,
+    cursor: usize,
+    esop: bool,
+}
+
+impl Actuator {
+    /// Build an actuator over a square coefficient matrix.
+    pub fn new(matrix: Mat<f64>, esop: bool) -> Actuator {
+        assert_eq!(matrix.rows(), matrix.cols(), "actuators stream square matrices (§5.2)");
+        Actuator { matrix, cursor: 0, esop }
+    }
+
+    /// Vector length (= matrix order).
+    pub fn len(&self) -> usize {
+        self.matrix.rows()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.matrix.rows() == 0
+    }
+
+    /// Emit the next step's vector (or skip/done).
+    pub fn emit(&mut self) -> Emission {
+        if self.cursor >= self.matrix.rows() {
+            return Emission::Done;
+        }
+        let n = self.cursor;
+        self.cursor += 1;
+        let row = self.matrix.row(n);
+        if self.esop && row.iter().all(|&v| v == 0.0) {
+            return Emission::SkippedZeroVector { pivot: n };
+        }
+        let elems: Vec<TaggedElem> = row
+            .iter()
+            .enumerate()
+            .map(|(k, &value)| {
+                let tag = k == n;
+                // ESOP: zero non-pivot coefficients are never sent; the
+                // zero *pivot* is still sent (tag must reach the green
+                // cells so they form the x vector — Fig. 5 lists
+                // (c_in=0; tag_in=1) as a received case).
+                let sent = !self.esop || value != 0.0 || tag;
+                TaggedElem { value, tag, sent }
+            })
+            .collect();
+        Emission::Vector(TaggedVector { pivot: n, elems })
+    }
+
+    /// Remaining vectors (including skippable ones).
+    pub fn remaining(&self) -> usize {
+        self.matrix.rows() - self.cursor
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mat3() -> Mat<f64> {
+        Mat::from_vec(3, 3, vec![1.0, 0.0, 2.0, 0.0, 0.0, 0.0, 3.0, 4.0, 5.0])
+    }
+
+    #[test]
+    fn streams_rows_in_order_with_diagonal_tags() {
+        let mut a = Actuator::new(mat3(), false);
+        match a.emit() {
+            Emission::Vector(v) => {
+                assert_eq!(v.pivot, 0);
+                assert_eq!(v.elems[0].value, 1.0);
+                assert!(v.elems[0].tag);
+                assert!(!v.elems[1].tag);
+                assert_eq!(v.sent_count(), 3); // dense: everything sent
+            }
+            other => panic!("expected vector, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn esop_suppresses_zero_nonpivot() {
+        let mut a = Actuator::new(mat3(), true);
+        match a.emit() {
+            Emission::Vector(v) => {
+                // row 0 = [1, 0, 2]: the middle zero is suppressed
+                assert!(v.elems[0].sent);
+                assert!(!v.elems[1].sent);
+                assert!(v.elems[2].sent);
+                assert_eq!(v.suppressed_count(), 1);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn esop_skips_all_zero_vector() {
+        let mut a = Actuator::new(mat3(), true);
+        let _ = a.emit();
+        match a.emit() {
+            Emission::SkippedZeroVector { pivot } => assert_eq!(pivot, 1),
+            other => panic!("expected skip, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dense_mode_sends_zero_vector() {
+        let mut a = Actuator::new(mat3(), false);
+        let _ = a.emit();
+        match a.emit() {
+            Emission::Vector(v) => assert_eq!(v.sent_count(), 3),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn zero_pivot_still_sent_under_esop() {
+        // row 1 of this matrix is [0, 0, 7]: pivot (index 1) is zero but
+        // must still be sent to carry the tag.
+        let m = Mat::from_vec(3, 3, vec![1.0, 0.0, 0.0, 0.0, 0.0, 7.0, 0.0, 0.0, 1.0]);
+        let mut a = Actuator::new(m, true);
+        let _ = a.emit();
+        match a.emit() {
+            Emission::Vector(v) => {
+                assert!(v.elems[1].sent && v.elems[1].tag && v.elems[1].value == 0.0);
+                assert!(!v.elems[0].sent);
+                assert!(v.elems[2].sent);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn exhausts_to_done() {
+        let mut a = Actuator::new(mat3(), false);
+        for _ in 0..3 {
+            assert!(!matches!(a.emit(), Emission::Done));
+        }
+        assert!(matches!(a.emit(), Emission::Done));
+        assert_eq!(a.remaining(), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_rectangular_matrix() {
+        let _ = Actuator::new(Mat::zeros(2, 3), false);
+    }
+}

@@ -1,0 +1,177 @@
+//! Ablation baseline: the authors' *previous* Cannon-style design
+//! (Sedukhin 2012; Sedukhin et al. 2010) that TriADA §1 explicitly
+//! improves on — used by experiment E8.
+//!
+//! That design computes the same three-stage transform on a 3D **torus**
+//! by a “compute-roll-all” schedule: per time-step *two whole cubical
+//! tensors* cyclically shift between neighbouring cells (“this collective
+//! shift of two data tensors on each time-step of 3D communication
+//! introduces a certain overhead, which can be considered as the
+//! algorithm's drawback”), and the coefficient matrices must first be
+//! *replicated into cubes* across the torus. It also requires the problem
+//! to be square/cubical (Cannon's modular roll breaks on rectangles), so
+//! cuboid problems are padded to the enclosing cube.
+//!
+//! We model the schedule with the same counter vocabulary as the TriADA
+//! device, and include an executable 2D Cannon GEMM to validate the roll
+//! schedule's correctness on real data.
+
+use super::counters::Counters;
+use crate::tensor::Mat;
+
+/// Closed-form activity model of the prior Cannon-style 3-stage 3D-DXT on
+/// an `N×N×N` torus (cuboid problems padded up to `N = max(N1,N2,N3)`).
+#[derive(Clone, Copy, Debug)]
+pub struct CannonModel {
+    /// Torus side after padding.
+    pub n: u64,
+    /// Time-steps: N per stage, 3 stages (plus alignment skews).
+    pub time_steps: u64,
+    /// Elements moved cell-to-cell per time-step (two N³ tensors roll).
+    pub moves_per_step: u64,
+    /// Total element moves over the whole transform (incl. alignment).
+    pub total_moves: u64,
+    /// One-time setup: replicating the three N×N coefficient matrices into
+    /// N×N×N cubes (each element copied to N cells).
+    pub setup_moves: u64,
+    /// MACs (identical to TriADA: N³ cells × 3N steps on padded cube).
+    pub macs: u64,
+}
+
+impl CannonModel {
+    /// Build the model for a (possibly cuboid) problem.
+    pub fn for_problem(n1: usize, n2: usize, n3: usize) -> CannonModel {
+        let n = n1.max(n2).max(n3) as u64;
+        // Cannon alignment: initial skew of both operands ≈ N−1 shifts each
+        // stage; then N compute-roll steps per stage.
+        let align_steps = 3 * (n.saturating_sub(1));
+        let steps = 3 * n + align_steps;
+        let moves_per_step = 2 * n * n * n;
+        CannonModel {
+            n,
+            time_steps: steps,
+            moves_per_step,
+            total_moves: steps * moves_per_step,
+            setup_moves: 3 * n * n * (n - 1).max(0),
+            macs: 3 * n * n * n * n,
+        }
+    }
+
+    /// As TriADA-style counters (element moves ≡ line activations at
+    /// distance 1: on the torus every move is one hop, so a “line” is one
+    /// neighbour link).
+    pub fn as_counters(&self) -> Counters {
+        Counters {
+            time_steps: self.time_steps,
+            macs: self.macs,
+            line_activations: self.total_moves,
+            operand_receives: self.total_moves,
+            actuator_elements: self.setup_moves,
+            tiles: 1,
+            ..Counters::default()
+        }
+    }
+}
+
+/// Executable 2D Cannon GEMM on an `n×n` grid — validates the roll
+/// schedule the model counts. Returns `a·b`.
+///
+/// Schedule: skew row i of A left by i, column j of B up by j; then n
+/// steps of (multiply-accumulate; roll A left 1, roll B up 1).
+pub fn cannon_matmul(a: &Mat<f64>, b: &Mat<f64>) -> (Mat<f64>, u64) {
+    let n = a.rows();
+    assert!(a.rows() == a.cols() && b.rows() == b.cols() && b.rows() == n, "Cannon requires square matrices");
+    let mut ga = a.clone();
+    let mut gb = b.clone();
+    let mut moves: u64 = 0;
+
+    // initial alignment skews
+    let mut sa = Mat::zeros(n, n);
+    let mut sb = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            sa.set(i, j, ga.get(i, (j + i) % n));
+            sb.set(i, j, gb.get((i + j) % n, j));
+        }
+    }
+    moves += 2 * (n * n) as u64; // count skew as one collective move each
+    ga = sa;
+    gb = sb;
+
+    let mut c = Mat::zeros(n, n);
+    for _step in 0..n {
+        for i in 0..n {
+            for j in 0..n {
+                let v = c.get(i, j) + ga.get(i, j) * gb.get(i, j);
+                c.set(i, j, v);
+            }
+        }
+        // roll A left, B up
+        let mut na = Mat::zeros(n, n);
+        let mut nb = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                na.set(i, j, ga.get(i, (j + 1) % n));
+                nb.set(i, j, gb.get((i + 1) % n, j));
+            }
+        }
+        ga = na;
+        gb = nb;
+        moves += 2 * (n * n) as u64;
+    }
+    (c, moves)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn cannon_matmul_correct() {
+        let mut rng = Rng::new(130);
+        for n in [1usize, 2, 3, 5, 8] {
+            let a = Mat::random(n, n, &mut rng);
+            let b = Mat::random(n, n, &mut rng);
+            let (c, _) = cannon_matmul(&a, &b);
+            assert!(c.max_abs_diff(&a.matmul(&b)) < 1e-10, "n={n}");
+        }
+    }
+
+    #[test]
+    fn cannon_moves_two_matrices_per_step() {
+        let mut rng = Rng::new(131);
+        let n = 6;
+        let a = Mat::random(n, n, &mut rng);
+        let b = Mat::random(n, n, &mut rng);
+        let (_, moves) = cannon_matmul(&a, &b);
+        // skew (2n²) + n steps × 2n² rolls
+        assert_eq!(moves, (2 * n * n + n * 2 * n * n) as u64);
+    }
+
+    #[test]
+    fn model_scales_cubically_in_moves() {
+        let m8 = CannonModel::for_problem(8, 8, 8);
+        let m16 = CannonModel::for_problem(16, 16, 16);
+        assert_eq!(m8.moves_per_step, 2 * 512);
+        assert_eq!(m16.moves_per_step, 2 * 4096);
+        assert!(m16.total_moves > 8 * m8.total_moves);
+    }
+
+    #[test]
+    fn cuboid_problems_pad_to_cube() {
+        let m = CannonModel::for_problem(4, 16, 8);
+        assert_eq!(m.n, 16);
+        // padded macs exceed the true requirement 4·16·8·(4+16+8)
+        let true_macs = 4 * 16 * 8 * (4 + 16 + 8) as u64;
+        assert!(m.macs > true_macs);
+    }
+
+    #[test]
+    #[should_panic]
+    fn cannon_rejects_rectangular() {
+        let a = Mat::<f64>::zeros(2, 3);
+        let b = Mat::<f64>::zeros(3, 3);
+        let _ = cannon_matmul(&a, &b);
+    }
+}

@@ -1,0 +1,155 @@
+//! Activity counters — the measurable substance of the paper's claims.
+
+use super::Stage;
+
+/// Everything the device did during a run.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Counters {
+    /// Time-steps actually executed (the paper's headline `N1+N2+N3`).
+    pub time_steps: u64,
+    /// Time-steps skipped entirely because the streamed coefficient vector
+    /// was all-zero (ESOP, §6: “the actuator skips sending this all-zero
+    /// vector to X buses, saving one time-step”).
+    pub steps_skipped: u64,
+    /// MAC operations performed by cells.
+    pub macs: u64,
+    /// MACs avoided because an operand was zero (ESOP).
+    pub macs_skipped: u64,
+    /// Operand-line activations (a green cell or actuator driving a line).
+    pub line_activations: u64,
+    /// Line activations avoided (zero operand never sent).
+    pub lines_suppressed: u64,
+    /// Operand values latched by cells off a line.
+    pub operand_receives: u64,
+    /// Elements streamed out of the three actuators.
+    pub actuator_elements: u64,
+    /// Actuator elements suppressed (zero-valued non-pivot coefficients).
+    pub actuator_suppressed: u64,
+    /// Number of grid tiles executed (1 unless the problem exceeded P).
+    pub tiles: u64,
+}
+
+impl Counters {
+    /// Merge another run's counters into this one (tiling, multi-job).
+    pub fn merge(&mut self, other: &Counters) {
+        self.time_steps += other.time_steps;
+        self.steps_skipped += other.steps_skipped;
+        self.macs += other.macs;
+        self.macs_skipped += other.macs_skipped;
+        self.line_activations += other.line_activations;
+        self.lines_suppressed += other.lines_suppressed;
+        self.operand_receives += other.operand_receives;
+        self.actuator_elements += other.actuator_elements;
+        self.actuator_suppressed += other.actuator_suppressed;
+        self.tiles += other.tiles;
+    }
+
+    /// Cell-efficiency: fraction of (cells × steps) slots that performed a
+    /// MAC. 1.0 for the dense case — the paper's “100 % efficiency”.
+    pub fn efficiency(&self, cells: u64) -> f64 {
+        if self.time_steps == 0 || cells == 0 {
+            return 0.0;
+        }
+        self.macs as f64 / (cells * self.time_steps) as f64
+    }
+}
+
+/// Closed-form **dense** per-stage expectations for an `(n1,n2,n3)` problem
+/// with square coefficients — what the counters must equal with ESOP off.
+/// Used by unit tests and the E2 bench.
+#[derive(Clone, Copy, Debug)]
+pub struct DenseExpectation {
+    pub steps: u64,
+    pub macs: u64,
+    pub coeff_line_activations: u64,
+    pub x_line_activations: u64,
+    pub actuator_elements: u64,
+}
+
+/// Per-stage dense expectation (square coefficient matrices).
+pub fn dense_stage_expectation(stage: Stage, n1: u64, n2: u64, n3: u64) -> DenseExpectation {
+    match stage {
+        // Stage I: n3 steps; coeff vector length n3 on L lines (one line per
+        // (n2,n3) pair), x operands on H lines (one per (n1,n2)).
+        Stage::I => DenseExpectation {
+            steps: n3,
+            macs: n3 * n1 * n2 * n3,
+            coeff_line_activations: n3 * n2 * n3,
+            x_line_activations: n3 * n1 * n2,
+            actuator_elements: n3 * n3,
+        },
+        // Stage II: n1 steps; coeff on H lines (n1·n2), x on L lines (n2·n3).
+        Stage::II => DenseExpectation {
+            steps: n1,
+            macs: n1 * n1 * n2 * n3,
+            coeff_line_activations: n1 * n1 * n2,
+            x_line_activations: n1 * n2 * n3,
+            actuator_elements: n1 * n1,
+        },
+        // Stage III: n2 steps; coeff on L lines (n2·n3), x on F lines (n1·n3).
+        Stage::III => DenseExpectation {
+            steps: n2,
+            macs: n2 * n1 * n2 * n3,
+            coeff_line_activations: n2 * n2 * n3,
+            x_line_activations: n2 * n1 * n3,
+            actuator_elements: n2 * n2,
+        },
+    }
+}
+
+/// Total dense expectation over the three stages.
+pub fn dense_expectation(n1: u64, n2: u64, n3: u64) -> DenseExpectation {
+    let mut total = DenseExpectation {
+        steps: 0,
+        macs: 0,
+        coeff_line_activations: 0,
+        x_line_activations: 0,
+        actuator_elements: 0,
+    };
+    for s in Stage::ALL {
+        let e = dense_stage_expectation(s, n1, n2, n3);
+        total.steps += e.steps;
+        total.macs += e.macs;
+        total.coeff_line_activations += e.coeff_line_activations;
+        total.x_line_activations += e.x_line_activations;
+        total.actuator_elements += e.actuator_elements;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_totals_match_paper_formulas() {
+        let (n1, n2, n3) = (4u64, 5, 6);
+        let e = dense_expectation(n1, n2, n3);
+        assert_eq!(e.steps, n1 + n2 + n3);
+        assert_eq!(e.macs, n1 * n2 * n3 * (n1 + n2 + n3));
+    }
+
+    #[test]
+    fn efficiency_is_one_for_dense() {
+        let (n1, n2, n3) = (3u64, 4, 5);
+        let e = dense_expectation(n1, n2, n3);
+        let c = Counters { time_steps: e.steps, macs: e.macs, ..Counters::default() };
+        let cells = n1 * n2 * n3;
+        assert!((c.efficiency(cells) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = Counters { macs: 5, time_steps: 2, tiles: 1, ..Counters::default() };
+        let b = Counters { macs: 7, time_steps: 3, tiles: 1, ..Counters::default() };
+        a.merge(&b);
+        assert_eq!(a.macs, 12);
+        assert_eq!(a.time_steps, 5);
+        assert_eq!(a.tiles, 2);
+    }
+
+    #[test]
+    fn efficiency_handles_zero() {
+        assert_eq!(Counters::default().efficiency(10), 0.0);
+    }
+}

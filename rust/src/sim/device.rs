@@ -1,0 +1,432 @@
+//! The Tensor Core: the 3D grid of cells and the three-stage schedule.
+//!
+//! Each cell `(i,j,k)` holds four local scalars — the input element `x` and
+//! the stage results `ẋ`, `ẍ`, `x⃛` (paper §5.1) — stored here as four
+//! tensors in cell-major layout. One simulated time-step executes the
+//! paper's whole-device rank-1 update: the actuator streams a tagged
+//! coefficient vector onto the X buses, tagged (green) cells multicast
+//! their local operand onto the orthogonal Y buses, and every cell with
+//! both operands performs one MAC (Figs. 2–5). The loops below are the
+//! cell-level semantics flattened for speed; every counter increment maps
+//! one-to-one to a physical device activity.
+
+use super::actuator::{Actuator, Emission};
+use super::counters::Counters;
+use super::trace::StepTrace;
+use super::{SimConfig, Stage};
+use crate::gemt::CoeffSet;
+use crate::tensor::Tensor3;
+
+/// Result of a device run.
+#[derive(Clone, Debug)]
+pub struct SimOutcome {
+    /// The transformed tensor `x⃛` read back from the cells.
+    pub result: Tensor3<f64>,
+    /// Activity counters.
+    pub counters: Counters,
+    /// Dynamic energy under the run's [`super::EnergyModel`].
+    pub energy: f64,
+    /// Per-step activity traces (present iff `record_trace`).
+    pub traces: Vec<StepTrace>,
+}
+
+/// The TriADA device: configuration + run entry point.
+#[derive(Clone, Debug)]
+pub struct TriadaDevice {
+    config: SimConfig,
+}
+
+impl TriadaDevice {
+    pub fn new(config: SimConfig) -> TriadaDevice {
+        TriadaDevice { config }
+    }
+
+    pub fn config(&self) -> &SimConfig {
+        &self.config
+    }
+
+    /// Run the full three-stage 3D-GEMT. Coefficients must be square
+    /// (the tag-based synchronization of §5.2 requires it; rectangular
+    /// GEMT runs via ESOP zero-padding, see `sim::tiling::pad_square`).
+    pub fn run(&self, x: &Tensor3<f64>, cs: &CoeffSet<f64>) -> SimOutcome {
+        let (n1, n2, n3) = x.shape();
+        assert_eq!(cs.input_shape(), (n1, n2, n3), "coefficient shape mismatch");
+        assert_eq!(cs.output_shape(), (n1, n2, n3), "device streams square coefficient matrices");
+        let (p1, p2, p3) = self.config.grid;
+        assert!(
+            n1 <= p1 && n2 <= p2 && n3 <= p3,
+            "problem {n1}x{n2}x{n3} exceeds grid {p1}x{p2}x{p3}; use sim::tiling"
+        );
+
+        let esop = self.config.esop;
+        let mut counters = Counters { tiles: 1, ..Counters::default() };
+        let mut traces = Vec::new();
+
+        // Cell-local storage (one element of each per cell).
+        let mut s1 = Tensor3::<f64>::zeros(n1, n2, n3); // ẋ
+        let mut s2 = Tensor3::<f64>::zeros(n1, n2, n3); // ẍ
+        let mut s3 = Tensor3::<f64>::zeros(n1, n2, n3); // x⃛
+
+        // Stage I: Lateral actuator ⊗₃ streams rows of C₃.
+        let mut act3 = Actuator::new(cs.c3.clone(), esop);
+        loop {
+            match act3.emit() {
+                Emission::Done => break,
+                Emission::SkippedZeroVector { pivot } => {
+                    counters.steps_skipped += 1;
+                    if self.config.record_trace {
+                        traces.push(StepTrace::skipped(Stage::I, pivot));
+                    }
+                }
+                Emission::Vector(v) => {
+                    let tr = stage1_step(x, &mut s1, &v.elems, v.pivot, esop, &mut counters);
+                    counters.time_steps += 1;
+                    if self.config.record_trace {
+                        traces.push(tr);
+                    }
+                }
+            }
+        }
+
+        // Stage II: Horizontal actuator ⊗₁ streams columns of C₁ᵀ
+        // (= rows of C₁).
+        let mut act1 = Actuator::new(cs.c1.clone(), esop);
+        loop {
+            match act1.emit() {
+                Emission::Done => break,
+                Emission::SkippedZeroVector { pivot } => {
+                    counters.steps_skipped += 1;
+                    if self.config.record_trace {
+                        traces.push(StepTrace::skipped(Stage::II, pivot));
+                    }
+                }
+                Emission::Vector(v) => {
+                    let tr = stage2_step(&s1, &mut s2, &v.elems, v.pivot, esop, &mut counters);
+                    counters.time_steps += 1;
+                    if self.config.record_trace {
+                        traces.push(tr);
+                    }
+                }
+            }
+        }
+
+        // Stage III: Frontal actuator ⊗₂ streams rows of C₂.
+        let mut act2 = Actuator::new(cs.c2.clone(), esop);
+        loop {
+            match act2.emit() {
+                Emission::Done => break,
+                Emission::SkippedZeroVector { pivot } => {
+                    counters.steps_skipped += 1;
+                    if self.config.record_trace {
+                        traces.push(StepTrace::skipped(Stage::III, pivot));
+                    }
+                }
+                Emission::Vector(v) => {
+                    let tr = stage3_step(&s2, &mut s3, &v.elems, v.pivot, esop, &mut counters);
+                    counters.time_steps += 1;
+                    if self.config.record_trace {
+                        traces.push(tr);
+                    }
+                }
+            }
+        }
+
+        let energy = self.config.energy.total(&counters);
+        SimOutcome { result: s3, counters, energy, traces }
+    }
+}
+
+use super::actuator::TaggedElem;
+
+/// Account the actuator/coefficient side of one step.
+///
+/// `lines_per_channel` = how many physical operand lines each streamed
+/// element fans out to; `receivers_per_line` = cells latching per line.
+fn account_coeff_side(
+    elems: &[TaggedElem],
+    lines_per_channel: u64,
+    receivers_per_line: u64,
+    counters: &mut Counters,
+) -> (u64, u64) {
+    let sent = elems.iter().filter(|e| e.sent).count() as u64;
+    let suppressed = elems.len() as u64 - sent;
+    counters.actuator_elements += sent;
+    counters.actuator_suppressed += suppressed;
+    counters.line_activations += sent * lines_per_channel;
+    counters.lines_suppressed += suppressed * lines_per_channel;
+    counters.operand_receives += sent * lines_per_channel * receivers_per_line;
+    (sent, suppressed)
+}
+
+/// Stage I, step `n3 = pivot`: ∀(i,j,k): ẋ[i,j,k] += x[i,j,n3]·c₃[n3,k].
+/// Coefficients ride L lines (N2 per channel, N1 receivers each); operands
+/// ride H lines (N3−1 receivers).
+fn stage1_step(
+    x: &Tensor3<f64>,
+    s1: &mut Tensor3<f64>,
+    elems: &[TaggedElem],
+    pivot: usize,
+    esop: bool,
+    counters: &mut Counters,
+) -> StepTrace {
+    let (n1, n2, n3) = x.shape();
+    account_coeff_side(elems, n2 as u64, n1 as u64, counters);
+    let vals = coeff_values(elems);
+    let mut green_sent = 0u64;
+    // Branch-free whole-device rank-1 update; the xv == 0 fast-skip is
+    // kept because it is also the dominant *simulator* saving on sparse
+    // inputs (adding xv·c with xv = 0 is arithmetically identical, so the
+    // skip never changes the numbers).
+    for i in 0..n1 {
+        for j in 0..n2 {
+            let xv = x.get(i, j, pivot);
+            if xv == 0.0 && esop {
+                continue;
+            }
+            green_sent += 1;
+            let dst = s1.row_mut(i, j);
+            for (d, &cv) in dst.iter_mut().zip(&vals) {
+                *d += xv * cv;
+            }
+        }
+    }
+    let green_suppressed = (n1 * n2) as u64 - green_sent;
+    let macs = green_sent * active_coeffs(elems, esop);
+    counters.line_activations += green_sent;
+    counters.lines_suppressed += green_suppressed;
+    counters.operand_receives += green_sent * (n3 as u64 - 1);
+    counters.macs += macs;
+    counters.macs_skipped += (n1 * n2 * n3) as u64 - macs;
+    StepTrace::executed(Stage::I, pivot, green_sent, green_suppressed, elems, macs)
+}
+
+/// Count of coefficient elements that trigger a MAC this step: everything
+/// under the dense schedule; only sent non-zero values under ESOP (a zero
+/// pivot is sent for its tag but performs no update — Fig. 5).
+fn active_coeffs(elems: &[TaggedElem], esop: bool) -> u64 {
+    if esop {
+        elems.iter().filter(|e| e.sent && e.value != 0.0).count() as u64
+    } else {
+        elems.len() as u64
+    }
+}
+
+/// Dense per-channel value vector for the branch-free inner loops:
+/// suppressed (unsent zero) elements contribute 0.0, which is arithmetically
+/// identical to the cell skipping the MAC — the counters, not the adds,
+/// model the ESOP savings. Keeping the inner loop branch-free is what lets
+/// the compiler vectorize the whole-device update.
+fn coeff_values(elems: &[TaggedElem]) -> Vec<f64> {
+    elems.iter().map(|e| if e.sent { e.value } else { 0.0 }).collect()
+}
+
+/// Stage II, step `n1 = pivot`: ∀(i,j,k): ẍ[i,j,k] += c₁[n1,i]·ẋ[n1,j,k].
+/// Coefficients ride H lines (N2 per channel, N3 receivers each); operands
+/// ride L lines (N1−1 receivers).
+fn stage2_step(
+    s1: &Tensor3<f64>,
+    s2: &mut Tensor3<f64>,
+    elems: &[TaggedElem],
+    pivot: usize,
+    esop: bool,
+    counters: &mut Counters,
+) -> StepTrace {
+    let (n1, n2, n3) = s1.shape();
+    account_coeff_side(elems, n2 as u64, n3 as u64, counters);
+    // Green cells are the pivot plane (pivot, j, k); under ESOP the ones
+    // holding zeros leave their L lines idle.
+    let mut green_sent = 0u64;
+    if esop {
+        for j in 0..n2 {
+            green_sent += s1.row(pivot, j).iter().filter(|&&v| v != 0.0).count() as u64;
+        }
+    } else {
+        green_sent = (n2 * n3) as u64;
+    }
+    let vals = coeff_values(elems);
+    // Row-contiguous whole-device update: for each output channel i, the
+    // pivot row (pivot, j, :) streams into row (i, j, :).
+    for (i, &cv) in vals.iter().enumerate() {
+        for j in 0..n2 {
+            let src = s1.row(pivot, j);
+            let dst = s2.row_mut(i, j);
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d += cv * s;
+            }
+        }
+    }
+    let green_suppressed = (n2 * n3) as u64 - green_sent;
+    let macs = green_sent * active_coeffs(elems, esop);
+    counters.line_activations += green_sent;
+    counters.lines_suppressed += green_suppressed;
+    counters.operand_receives += green_sent * (n1 as u64 - 1);
+    counters.macs += macs;
+    counters.macs_skipped += (n1 * n2 * n3) as u64 - macs;
+    StepTrace::executed(Stage::II, pivot, green_sent, green_suppressed, elems, macs)
+}
+
+/// Stage III, step `n2 = pivot`: ∀(i,j,k): x⃛[i,j,k] += ẍ[i,n2,k]·c₂[n2,j].
+/// Coefficients ride L lines (N3 per channel, N1 receivers each); operands
+/// ride F lines (N2−1 receivers).
+fn stage3_step(
+    s2: &Tensor3<f64>,
+    s3: &mut Tensor3<f64>,
+    elems: &[TaggedElem],
+    pivot: usize,
+    esop: bool,
+    counters: &mut Counters,
+) -> StepTrace {
+    let (n1, n2, n3) = s2.shape();
+    account_coeff_side(elems, n3 as u64, n1 as u64, counters);
+    // Green cells are the plane (i, pivot, k).
+    let mut green_sent = 0u64;
+    if esop {
+        for i in 0..n1 {
+            green_sent += s2.row(i, pivot).iter().filter(|&&v| v != 0.0).count() as u64;
+        }
+    } else {
+        green_sent = (n1 * n3) as u64;
+    }
+    let vals = coeff_values(elems);
+    // Row-contiguous: source row (i, pivot, :) fans out to rows (i, j, :).
+    for i in 0..n1 {
+        let src = s2.row(i, pivot);
+        for (j, &cv) in vals.iter().enumerate() {
+            let dst = s3.row_mut(i, j);
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d += s * cv;
+            }
+        }
+    }
+    let green_suppressed = (n1 * n3) as u64 - green_sent;
+    let macs = green_sent * active_coeffs(elems, esop);
+    counters.line_activations += green_sent;
+    counters.lines_suppressed += green_suppressed;
+    counters.operand_receives += green_sent * (n2 as u64 - 1);
+    counters.macs += macs;
+    counters.macs_skipped += (n1 * n2 * n3) as u64 - macs;
+    StepTrace::executed(Stage::III, pivot, green_sent, green_suppressed, elems, macs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemt::{gemt_naive, gemt_outer};
+    use crate::sim::counters::dense_expectation;
+    use crate::tensor::{sparsify, Mat};
+    use crate::util::Rng;
+
+    fn random_case(
+        n1: usize,
+        n2: usize,
+        n3: usize,
+        seed: u64,
+    ) -> (Tensor3<f64>, CoeffSet<f64>) {
+        let mut rng = Rng::new(seed);
+        let x = Tensor3::random(n1, n2, n3, &mut rng);
+        let cs = CoeffSet::new(
+            Mat::random(n1, n1, &mut rng),
+            Mat::random(n2, n2, &mut rng),
+            Mat::random(n3, n3, &mut rng),
+        );
+        (x, cs)
+    }
+
+    #[test]
+    fn dense_result_matches_reference() {
+        let (x, cs) = random_case(4, 5, 6, 110);
+        let dev = TriadaDevice::new(SimConfig::dense((8, 8, 8)));
+        let out = dev.run(&x, &cs);
+        assert!(out.result.max_abs_diff(&gemt_naive(&x, &cs)) < 1e-10);
+    }
+
+    #[test]
+    fn dense_counters_match_closed_form() {
+        let (x, cs) = random_case(3, 4, 5, 111);
+        let dev = TriadaDevice::new(SimConfig::dense((8, 8, 8)));
+        let out = dev.run(&x, &cs);
+        let e = dense_expectation(3, 4, 5);
+        assert_eq!(out.counters.time_steps, e.steps);
+        assert_eq!(out.counters.macs, e.macs);
+        assert_eq!(out.counters.actuator_elements, e.actuator_elements);
+        assert_eq!(
+            out.counters.line_activations,
+            e.coeff_line_activations + e.x_line_activations
+        );
+        assert_eq!(out.counters.steps_skipped, 0);
+        assert_eq!(out.counters.macs_skipped, 0);
+        // the paper's 100 % efficiency claim
+        assert!((out.counters.efficiency(3 * 4 * 5) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn esop_result_identical_to_dense() {
+        let (mut x, cs) = random_case(5, 4, 6, 112);
+        let mut rng = Rng::new(7);
+        sparsify(&mut x, 0.6, &mut rng);
+        let dense = TriadaDevice::new(SimConfig::dense((8, 8, 8))).run(&x, &cs);
+        let esop = TriadaDevice::new(SimConfig::esop((8, 8, 8))).run(&x, &cs);
+        assert_eq!(dense.result.max_abs_diff(&esop.result), 0.0, "skipping zeros must not change sums");
+    }
+
+    #[test]
+    fn esop_saves_work_on_sparse_input() {
+        let (mut x, cs) = random_case(6, 6, 6, 113);
+        let mut rng = Rng::new(8);
+        sparsify(&mut x, 0.8, &mut rng);
+        let dense = TriadaDevice::new(SimConfig::dense((8, 8, 8))).run(&x, &cs);
+        let esop = TriadaDevice::new(SimConfig::esop((8, 8, 8))).run(&x, &cs);
+        assert!(esop.counters.macs < dense.counters.macs);
+        assert!(esop.counters.line_activations < dense.counters.line_activations);
+        assert!(esop.energy < dense.energy);
+        // Stage I skips scale with input sparsity.
+        assert!(esop.counters.macs_skipped > 0);
+    }
+
+    #[test]
+    fn esop_skips_zero_coefficient_vectors_saving_steps() {
+        let mut rng = Rng::new(114);
+        let x = Tensor3::random(3, 3, 4, &mut rng);
+        // C3 with an all-zero row → one Stage-I step skipped.
+        let mut c3 = Mat::random(4, 4, &mut rng);
+        for k in 0..4 {
+            c3.set(2, k, 0.0);
+        }
+        let cs = CoeffSet::new(
+            Mat::random(3, 3, &mut rng),
+            Mat::random(3, 3, &mut rng),
+            c3,
+        );
+        let out = TriadaDevice::new(SimConfig::esop((8, 8, 8))).run(&x, &cs);
+        assert_eq!(out.counters.steps_skipped, 1);
+        assert_eq!(out.counters.time_steps, (3 + 3 + 4) - 1);
+        // numerics still exact
+        assert!(out.result.max_abs_diff(&gemt_naive(&x, &cs)) < 1e-10);
+    }
+
+    #[test]
+    fn matches_outer_product_reference_bitwise_order() {
+        // The device executes the same summation order as gemt_outer, so
+        // agreement should be at full f64 precision, not just tolerance.
+        let (x, cs) = random_case(4, 4, 4, 115);
+        let out = TriadaDevice::new(SimConfig::dense((4, 4, 4))).run(&x, &cs);
+        let reference = gemt_outer(&x, &cs);
+        assert!(out.result.max_abs_diff(&reference) < 1e-13);
+    }
+
+    #[test]
+    fn trace_records_every_step() {
+        let (x, cs) = random_case(2, 3, 4, 116);
+        let cfg = SimConfig { record_trace: true, ..SimConfig::dense((4, 4, 4)) };
+        let out = TriadaDevice::new(cfg).run(&x, &cs);
+        assert_eq!(out.traces.len(), 2 + 3 + 4);
+        assert!(out.traces.iter().all(|t| !t.skipped));
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds grid")]
+    fn rejects_oversized_problem() {
+        let (x, cs) = random_case(5, 5, 5, 117);
+        let _ = TriadaDevice::new(SimConfig::dense((4, 8, 8))).run(&x, &cs);
+    }
+}

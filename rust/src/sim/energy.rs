@@ -1,0 +1,80 @@
+//! Dynamic-energy accounting model (paper §6: ESOP “collectively
+//! decreases the total dynamic energy consumption of parallel
+//! processing”).
+//!
+//! The paper gives no absolute energy numbers, so the model is a weighted
+//! count of the four dynamic activities the architecture performs, with
+//! weights in arbitrary “MAC-equivalent” units. Ratios between runs (the
+//! quantities E3 reports) are insensitive to the absolute scale; the
+//! defaults follow the usual ASIC rule of thumb that moving an operand on a
+//! long line costs more than the MAC itself (Horowitz, ISSCC'14 orders of
+//! magnitude: 8-bit add ≪ 32-bit FP MAC < wire traversal).
+
+use super::counters::Counters;
+
+/// Energy weights, in MAC-equivalent units.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EnergyModel {
+    /// One multiply-add in a cell.
+    pub e_mac: f64,
+    /// Driving one operand line (axon activation) once.
+    pub e_line: f64,
+    /// One cell latching an operand off a line.
+    pub e_recv: f64,
+    /// One element streamed out of an actuator (DASM read + drive).
+    pub e_actuator: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        // Long-line drive dominates; receives are cheap latches.
+        EnergyModel { e_mac: 1.0, e_line: 2.0, e_recv: 0.1, e_actuator: 1.5 }
+    }
+}
+
+impl EnergyModel {
+    /// Total dynamic energy of a run with the given activity counters.
+    pub fn total(&self, c: &Counters) -> f64 {
+        self.e_mac * c.macs as f64
+            + self.e_line * c.line_activations as f64
+            + self.e_recv * c.operand_receives as f64
+            + self.e_actuator * c.actuator_elements as f64
+    }
+
+    /// Energy with every weight equal — i.e. raw operation count — used as
+    /// a model-insensitivity check in E3.
+    pub fn uniform() -> EnergyModel {
+        EnergyModel { e_mac: 1.0, e_line: 1.0, e_recv: 1.0, e_actuator: 1.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counters(macs: u64, lines: u64, recvs: u64, act: u64) -> Counters {
+        Counters { macs, line_activations: lines, operand_receives: recvs, actuator_elements: act, ..Counters::default() }
+    }
+
+    #[test]
+    fn total_is_weighted_sum() {
+        let m = EnergyModel { e_mac: 1.0, e_line: 2.0, e_recv: 0.5, e_actuator: 3.0 };
+        let c = counters(10, 4, 8, 2);
+        assert!((m.total(&c) - (10.0 + 8.0 + 4.0 + 6.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_activity_zero_energy() {
+        assert_eq!(EnergyModel::default().total(&Counters::default()), 0.0);
+    }
+
+    #[test]
+    fn monotone_in_each_counter() {
+        let m = EnergyModel::default();
+        let base = m.total(&counters(10, 10, 10, 10));
+        assert!(m.total(&counters(11, 10, 10, 10)) > base);
+        assert!(m.total(&counters(10, 11, 10, 10)) > base);
+        assert!(m.total(&counters(10, 10, 11, 10)) > base);
+        assert!(m.total(&counters(10, 10, 10, 11)) > base);
+    }
+}

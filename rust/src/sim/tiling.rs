@@ -1,0 +1,209 @@
+//! Block tiling for problems larger than the physical grid (§5.1:
+//! “Otherwise, GEMM-like partitioning of the large problem into tiles or
+//! blocks should be considered”), plus the ESOP zero-padding trick that
+//! lets the square-streaming device execute rectangular coefficients.
+//!
+//! The decomposition is the block form of Eq. (1):
+//! `out[B] += Σ_A gemt(x[A], C1[A1,B1], C2[A2,B2], C3[A3,B3])` — each
+//! `(A,B)` block pair is one pass over the device, with the rectangular
+//! coefficient blocks zero-padded to square (ESOP suppresses the padding,
+//! so no extra MACs, sends, or energy are spent on it).
+
+use super::device::{SimOutcome, TriadaDevice};
+use super::{Counters, SimConfig};
+use crate::gemt::CoeffSet;
+use crate::tensor::{Mat, Tensor3};
+
+/// Zero-pad a rectangular matrix to `n×n` (n = max(rows, cols) or an
+/// explicit target).
+pub fn pad_square(m: &Mat<f64>, target: usize) -> Mat<f64> {
+    assert!(target >= m.rows() && target >= m.cols());
+    Mat::from_fn(target, target, |r, c| {
+        if r < m.rows() && c < m.cols() {
+            m.get(r, c)
+        } else {
+            0.0
+        }
+    })
+}
+
+/// Zero-pad a tensor to the given shape.
+pub fn pad_tensor(x: &Tensor3<f64>, shape: (usize, usize, usize)) -> Tensor3<f64> {
+    let (n1, n2, n3) = x.shape();
+    assert!(shape.0 >= n1 && shape.1 >= n2 && shape.2 >= n3);
+    Tensor3::from_fn(shape.0, shape.1, shape.2, |i, j, k| {
+        if i < n1 && j < n2 && k < n3 {
+            x.get(i, j, k)
+        } else {
+            0.0
+        }
+    })
+}
+
+/// Extract block `[lo, lo+len)` ranges from a tensor.
+fn tensor_block(
+    x: &Tensor3<f64>,
+    r1: (usize, usize),
+    r2: (usize, usize),
+    r3: (usize, usize),
+) -> Tensor3<f64> {
+    Tensor3::from_fn(r1.1, r2.1, r3.1, |i, j, k| x.get(r1.0 + i, r2.0 + j, r3.0 + k))
+}
+
+/// Extract block from a matrix: rows `[ra, ra+la)`, cols `[ca, ca+lc)`.
+fn mat_block(m: &Mat<f64>, rows: (usize, usize), cols: (usize, usize)) -> Mat<f64> {
+    Mat::from_fn(rows.1, cols.1, |r, c| m.get(rows.0 + r, cols.0 + c))
+}
+
+/// Split `0..n` into chunks of at most `cap`: (offset, len) pairs.
+fn chunks(n: usize, cap: usize) -> Vec<(usize, usize)> {
+    assert!(cap >= 1);
+    let mut out = Vec::new();
+    let mut off = 0;
+    while off < n {
+        let len = cap.min(n - off);
+        out.push((off, len));
+        off += len;
+    }
+    out
+}
+
+/// Run a problem that exceeds the grid by block decomposition. The result
+/// is exact; counters accumulate over every block pass.
+pub fn run_tiled(x: &Tensor3<f64>, cs: &CoeffSet<f64>, config: &SimConfig) -> SimOutcome {
+    let (n1, n2, n3) = x.shape();
+    let (k1, k2, k3) = cs.output_shape();
+    let (p1, p2, p3) = config.grid;
+
+    let a1 = chunks(n1, p1);
+    let a2 = chunks(n2, p2);
+    let a3 = chunks(n3, p3);
+    let b1 = chunks(k1, p1);
+    let b2 = chunks(k2, p2);
+    let b3 = chunks(k3, p3);
+
+    // Per-step traces explode combinatorially under tiling; drop them.
+    let device = TriadaDevice::new(SimConfig { record_trace: false, ..config.clone() });
+    let mut result = Tensor3::<f64>::zeros(k1, k2, k3);
+    let mut counters = Counters::default();
+    let mut energy = 0.0;
+    let mut traces = Vec::new();
+
+    for &ra1 in &a1 {
+        for &ra2 in &a2 {
+            for &ra3 in &a3 {
+                let xb = tensor_block(x, ra1, ra2, ra3);
+                for &rb1 in &b1 {
+                    for &rb2 in &b2 {
+                        for &rb3 in &b3 {
+                            // Square pad: each block's device pass is
+                            // (s1,s2,s3)-cubic per axis.
+                            let s1 = ra1.1.max(rb1.1);
+                            let s2 = ra2.1.max(rb2.1);
+                            let s3 = ra3.1.max(rb3.1);
+                            let xp = pad_tensor(&xb, (s1, s2, s3));
+                            let c1 = pad_square(&mat_block(&cs.c1, ra1, rb1), s1);
+                            let c2 = pad_square(&mat_block(&cs.c2, ra2, rb2), s2);
+                            let c3 = pad_square(&mat_block(&cs.c3, ra3, rb3), s3);
+                            let out = device.run(&xp, &CoeffSet::new(c1, c2, c3));
+                            counters.merge(&out.counters);
+                            energy += out.energy;
+                            traces.extend(out.traces);
+                            for i in 0..rb1.1 {
+                                for j in 0..rb2.1 {
+                                    for k in 0..rb3.1 {
+                                        result.add_assign_at(
+                                            rb1.0 + i,
+                                            rb2.0 + j,
+                                            rb3.0 + k,
+                                            out.result.get(i, j, k),
+                                        );
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    SimOutcome { result, counters, energy, traces }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemt::gemt_naive;
+    use crate::util::Rng;
+
+    #[test]
+    fn chunks_cover_range() {
+        assert_eq!(chunks(10, 4), vec![(0, 4), (4, 4), (8, 2)]);
+        assert_eq!(chunks(4, 8), vec![(0, 4)]);
+        assert_eq!(chunks(0, 3), vec![]);
+    }
+
+    #[test]
+    fn pad_square_embeds() {
+        let m = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let p = pad_square(&m, 4);
+        assert_eq!(p.get(1, 2), 6.0);
+        assert_eq!(p.get(3, 3), 0.0);
+        assert_eq!(p.get(2, 0), 0.0);
+    }
+
+    #[test]
+    fn tiled_square_matches_reference() {
+        let mut rng = Rng::new(120);
+        let x = Tensor3::random(7, 6, 9, &mut rng);
+        let cs = CoeffSet::new(
+            Mat::random(7, 7, &mut rng),
+            Mat::random(6, 6, &mut rng),
+            Mat::random(9, 9, &mut rng),
+        );
+        let cfg = SimConfig::dense((4, 4, 4));
+        let out = run_tiled(&x, &cs, &cfg);
+        assert!(out.result.max_abs_diff(&gemt_naive(&x, &cs)) < 1e-9);
+        assert!(out.counters.tiles > 1);
+    }
+
+    #[test]
+    fn tiled_rectangular_coefficients_match_reference() {
+        let mut rng = Rng::new(121);
+        let x = Tensor3::random(6, 5, 4, &mut rng);
+        let cs = CoeffSet::new(
+            Mat::random(6, 3, &mut rng), // compression
+            Mat::random(5, 8, &mut rng), // expansion
+            Mat::random(4, 4, &mut rng),
+        );
+        let cfg = SimConfig::esop((4, 4, 4));
+        let out = run_tiled(&x, &cs, &cfg);
+        assert_eq!(out.result.shape(), (3, 8, 4));
+        assert!(out.result.max_abs_diff(&gemt_naive(&x, &cs)) < 1e-9);
+    }
+
+    #[test]
+    fn esop_padding_is_free_of_macs() {
+        // A rectangular coefficient padded to square must not add MACs
+        // beyond the rectangular work (padding zeros are suppressed).
+        let mut rng = Rng::new(122);
+        let x = Tensor3::random(4, 4, 4, &mut rng);
+        let rect = CoeffSet::new(
+            Mat::random(4, 2, &mut rng),
+            Mat::random(4, 4, &mut rng),
+            Mat::random(4, 4, &mut rng),
+        );
+        let cfg = SimConfig::esop((4, 4, 4));
+        let out = run_tiled(&x, &rect, &cfg);
+        // Stage II macs with dense operands: n1 steps × (k1=2 sent coeffs)
+        // × n2·n3 = 4·2·16 = 128 instead of 4·4·16 = 256.
+        // Just check we beat the square-dense count overall:
+        let square = CoeffSet::new(
+            Mat::random(4, 4, &mut rng),
+            rect.c2.clone(),
+            rect.c3.clone(),
+        );
+        let square_out = run_tiled(&x, &square, &cfg);
+        assert!(out.counters.macs < square_out.counters.macs);
+    }
+}

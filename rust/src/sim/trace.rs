@@ -1,0 +1,130 @@
+//! Per-time-step activity traces — the executable form of paper
+//! Figures 2, 3, 4 (green/orange cell activity per step) and the input to
+//! experiment E9.
+
+use super::actuator::TaggedElem;
+use super::Stage;
+
+/// What happened in one time-step.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StepTrace {
+    pub stage: Stage,
+    /// Summation index (pivot position of the streamed vector).
+    pub pivot: usize,
+    /// Whether the step was skipped wholesale (all-zero vector, ESOP).
+    pub skipped: bool,
+    /// Green (pivot) cells that multicast their operand.
+    pub green_sent: u64,
+    /// Green cells whose zero operand was suppressed (connected orange
+    /// cells stayed waiting — Fig. 5).
+    pub green_suppressed: u64,
+    /// Coefficient elements driven by the actuator.
+    pub coeff_sent: u64,
+    /// Coefficient elements suppressed (zero non-pivot).
+    pub coeff_suppressed: u64,
+    /// MACs performed by cells this step.
+    pub macs: u64,
+}
+
+impl StepTrace {
+    pub fn skipped(stage: Stage, pivot: usize) -> StepTrace {
+        StepTrace {
+            stage,
+            pivot,
+            skipped: true,
+            green_sent: 0,
+            green_suppressed: 0,
+            coeff_sent: 0,
+            coeff_suppressed: 0,
+            macs: 0,
+        }
+    }
+
+    pub fn executed(
+        stage: Stage,
+        pivot: usize,
+        green_sent: u64,
+        green_suppressed: u64,
+        elems: &[TaggedElem],
+        macs: u64,
+    ) -> StepTrace {
+        let coeff_sent = elems.iter().filter(|e| e.sent).count() as u64;
+        StepTrace {
+            stage,
+            pivot,
+            skipped: false,
+            green_sent,
+            green_suppressed,
+            coeff_sent,
+            coeff_suppressed: elems.len() as u64 - coeff_sent,
+            macs,
+        }
+    }
+
+    /// Orange-cell updates = MACs not performed by the green pivot plane
+    /// itself. In the dense case every cell updates, so this is
+    /// `macs − green_sent` (each green cell also performs its own MAC).
+    pub fn orange_updates(&self) -> u64 {
+        self.macs.saturating_sub(self.green_sent)
+    }
+}
+
+/// Summarize a trace per stage: (executed steps, skipped steps, macs).
+pub fn stage_summary(traces: &[StepTrace]) -> Vec<(Stage, u64, u64, u64)> {
+    Stage::ALL
+        .iter()
+        .map(|&s| {
+            let executed = traces.iter().filter(|t| t.stage == s && !t.skipped).count() as u64;
+            let skipped = traces.iter().filter(|t| t.stage == s && t.skipped).count() as u64;
+            let macs = traces.iter().filter(|t| t.stage == s).map(|t| t.macs).sum();
+            (s, executed, skipped, macs)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn elems(sent: usize, suppressed: usize) -> Vec<TaggedElem> {
+        let mut v = Vec::new();
+        for i in 0..sent {
+            v.push(TaggedElem { value: 1.0, tag: i == 0, sent: true });
+        }
+        for _ in 0..suppressed {
+            v.push(TaggedElem { value: 0.0, tag: false, sent: false });
+        }
+        v
+    }
+
+    #[test]
+    fn executed_trace_counts_coefficients() {
+        let t = StepTrace::executed(Stage::I, 3, 10, 2, &elems(4, 2), 40);
+        assert_eq!(t.coeff_sent, 4);
+        assert_eq!(t.coeff_suppressed, 2);
+        assert_eq!(t.green_sent, 10);
+        assert_eq!(t.orange_updates(), 30);
+        assert!(!t.skipped);
+    }
+
+    #[test]
+    fn skipped_trace_is_empty() {
+        let t = StepTrace::skipped(Stage::II, 1);
+        assert!(t.skipped);
+        assert_eq!(t.macs, 0);
+        assert_eq!(t.orange_updates(), 0);
+    }
+
+    #[test]
+    fn stage_summary_partitions() {
+        let traces = vec![
+            StepTrace::executed(Stage::I, 0, 1, 0, &elems(2, 0), 4),
+            StepTrace::skipped(Stage::I, 1),
+            StepTrace::executed(Stage::II, 0, 1, 0, &elems(2, 0), 6),
+        ];
+        let s = stage_summary(&traces);
+        assert_eq!(s[0], (Stage::I, 1, 1, 4));
+        assert_eq!(s[1], (Stage::II, 1, 0, 6));
+        assert_eq!(s[2], (Stage::III, 0, 0, 0));
+    }
+}

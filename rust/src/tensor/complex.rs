@@ -1,0 +1,170 @@
+//! Minimal complex arithmetic for the DFT (`c_{n,k} = e^{-2πi nk/N}`).
+//!
+//! The AOT/PJRT interchange path carries the DFT as a **split (re, im)
+//! pair** of real tensors (see DESIGN.md §1), but the CPU reference
+//! algorithms and the FFT baseline use this type directly.
+
+use std::ops::{Add, AddAssign, Div, Mul, Neg, Sub};
+
+use super::scalar::Scalar;
+
+/// A complex number with f64 components.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct Complex64 {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl Complex64 {
+    pub const ZERO: Complex64 = Complex64 { re: 0.0, im: 0.0 };
+    pub const ONE: Complex64 = Complex64 { re: 1.0, im: 0.0 };
+    pub const I: Complex64 = Complex64 { re: 0.0, im: 1.0 };
+
+    #[inline]
+    pub fn new(re: f64, im: f64) -> Complex64 {
+        Complex64 { re, im }
+    }
+
+    /// e^{iθ} = cos θ + i sin θ.
+    #[inline]
+    pub fn cis(theta: f64) -> Complex64 {
+        Complex64 { re: theta.cos(), im: theta.sin() }
+    }
+
+    #[inline]
+    pub fn conj(self) -> Complex64 {
+        Complex64 { re: self.re, im: -self.im }
+    }
+
+    #[inline]
+    pub fn norm_sqr(self) -> f64 {
+        self.re * self.re + self.im * self.im
+    }
+
+    #[inline]
+    pub fn abs(self) -> f64 {
+        self.norm_sqr().sqrt()
+    }
+
+    #[inline]
+    pub fn scale(self, s: f64) -> Complex64 {
+        Complex64 { re: self.re * s, im: self.im * s }
+    }
+}
+
+impl Add for Complex64 {
+    type Output = Complex64;
+    #[inline]
+    fn add(self, o: Complex64) -> Complex64 {
+        Complex64::new(self.re + o.re, self.im + o.im)
+    }
+}
+
+impl AddAssign for Complex64 {
+    #[inline]
+    fn add_assign(&mut self, o: Complex64) {
+        self.re += o.re;
+        self.im += o.im;
+    }
+}
+
+impl Sub for Complex64 {
+    type Output = Complex64;
+    #[inline]
+    fn sub(self, o: Complex64) -> Complex64 {
+        Complex64::new(self.re - o.re, self.im - o.im)
+    }
+}
+
+impl Mul for Complex64 {
+    type Output = Complex64;
+    #[inline]
+    fn mul(self, o: Complex64) -> Complex64 {
+        Complex64::new(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+}
+
+impl Div for Complex64 {
+    type Output = Complex64;
+    #[inline]
+    fn div(self, o: Complex64) -> Complex64 {
+        let d = o.norm_sqr();
+        Complex64::new(
+            (self.re * o.re + self.im * o.im) / d,
+            (self.im * o.re - self.re * o.im) / d,
+        )
+    }
+}
+
+impl Neg for Complex64 {
+    type Output = Complex64;
+    #[inline]
+    fn neg(self) -> Complex64 {
+        Complex64::new(-self.re, -self.im)
+    }
+}
+
+impl Scalar for Complex64 {
+    #[inline]
+    fn zero() -> Self {
+        Complex64::ZERO
+    }
+    #[inline]
+    fn one() -> Self {
+        Complex64::ONE
+    }
+    #[inline]
+    fn from_f64(v: f64) -> Self {
+        Complex64::new(v, 0.0)
+    }
+    #[inline]
+    fn abs_f64(self) -> f64 {
+        self.abs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic() {
+        let a = Complex64::new(1.0, 2.0);
+        let b = Complex64::new(3.0, -1.0);
+        assert_eq!(a + b, Complex64::new(4.0, 1.0));
+        assert_eq!(a - b, Complex64::new(-2.0, 3.0));
+        assert_eq!(a * b, Complex64::new(5.0, 5.0));
+        let q = (a / b) * b;
+        assert!((q - a).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cis_on_unit_circle() {
+        for k in 0..8 {
+            let z = Complex64::cis(k as f64 * std::f64::consts::FRAC_PI_4);
+            assert!((z.abs() - 1.0).abs() < 1e-12);
+        }
+        let z = Complex64::cis(std::f64::consts::PI);
+        assert!((z - Complex64::new(-1.0, 0.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn conj_mul_is_norm() {
+        let a = Complex64::new(3.0, 4.0);
+        let n = a * a.conj();
+        assert!((n.re - 25.0).abs() < 1e-12);
+        assert!(n.im.abs() < 1e-12);
+        assert_eq!(a.abs(), 5.0);
+    }
+
+    #[test]
+    fn scalar_impl() {
+        let z = Complex64::zero();
+        assert!(z.is_zero());
+        let m = Complex64::one().mac(Complex64::I, Complex64::I);
+        assert!((m - Complex64::new(0.0, 0.0)).abs() < 1e-12);
+    }
+}

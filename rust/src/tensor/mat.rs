@@ -1,0 +1,233 @@
+//! Dense row-major matrix — used for the coefficient (change-of-basis)
+//! matrices `C_{N×K}` and for planar tensor slices.
+
+use super::scalar::Scalar;
+
+/// A dense row-major `rows × cols` matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat<T: Scalar = f64> {
+    rows: usize,
+    cols: usize,
+    data: Vec<T>,
+}
+
+impl<T: Scalar> Mat<T> {
+    /// All-zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Mat<T> {
+        Mat { rows, cols, data: vec![T::zero(); rows * cols] }
+    }
+
+    /// Identity (square or rectangular-diagonal).
+    pub fn identity(n: usize) -> Mat<T> {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.set(i, i, T::one());
+        }
+        m
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> T) -> Mat<T> {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<T>) -> Mat<T> {
+        assert_eq!(data.len(), rows * cols, "buffer length mismatch");
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> T {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: T) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Contiguous row slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[T] {
+        debug_assert!(r < self.rows);
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Column gathered into a Vec (rows are the contiguous axis).
+    pub fn col(&self, c: usize) -> Vec<T> {
+        debug_assert!(c < self.cols);
+        (0..self.rows).map(|r| self.get(r, c)).collect()
+    }
+
+    /// Raw data (row-major).
+    #[inline]
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Mat<T> {
+        Mat::from_fn(self.cols, self.rows, |r, c| self.get(c, r))
+    }
+
+    /// Matrix product `self * other`.
+    pub fn matmul(&self, other: &Mat<T>) -> Mat<T> {
+        assert_eq!(self.cols, other.rows, "inner dimension mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.get(i, k);
+                if a.is_zero() {
+                    continue;
+                }
+                let orow = other.row(k);
+                let base = i * out.cols;
+                for (j, &b) in orow.iter().enumerate() {
+                    out.data[base + j] += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Map every element (possibly changing the scalar type).
+    pub fn map<U: Scalar>(&self, mut f: impl FnMut(T) -> U) -> Mat<U> {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&v| f(v)).collect(),
+        }
+    }
+
+    /// max_{r,c} |self - other|.
+    pub fn max_abs_diff(&self, other: &Mat<T>) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| (a - b).abs_f64())
+            .fold(0.0, f64::max)
+    }
+
+    /// Frobenius norm.
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|&v| v.abs_f64().powi(2)).sum::<f64>().sqrt()
+    }
+
+    /// Is `self * selfᵀ ≈ I` within `tol`? (orthogonality, paper §2.3)
+    pub fn is_orthogonal(&self, tol: f64) -> bool {
+        if self.rows != self.cols {
+            return false;
+        }
+        let p = self.matmul(&self.transpose());
+        p.max_abs_diff(&Mat::identity(self.rows)) < tol
+    }
+}
+
+impl Mat<f64> {
+    /// Fill with uniform random values in [-1, 1).
+    pub fn random(rows: usize, cols: usize, rng: &mut crate::util::Rng) -> Mat<f64> {
+        Mat::from_fn(rows, cols, |_, _| rng.f64_range(-1.0, 1.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn identity_matmul() {
+        let mut rng = Rng::new(1);
+        let a = Mat::random(4, 7, &mut rng);
+        let i4 = Mat::<f64>::identity(4);
+        let i7 = Mat::<f64>::identity(7);
+        assert!(i4.matmul(&a).max_abs_diff(&a) < 1e-15);
+        assert!(a.matmul(&i7).max_abs_diff(&a) < 1e-15);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(2);
+        let a = Mat::random(3, 5, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_rectangular_shapes() {
+        let mut rng = Rng::new(3);
+        let a = Mat::random(2, 3, &mut rng);
+        let b = Mat::random(3, 5, &mut rng);
+        let c = a.matmul(&b);
+        assert_eq!((c.rows(), c.cols()), (2, 5));
+        // spot-check one element against the definition
+        let mut s = 0.0;
+        for k in 0..3 {
+            s += a.get(1, k) * b.get(k, 4);
+        }
+        assert!((c.get(1, 4) - s).abs() < 1e-14);
+    }
+
+    #[test]
+    fn row_col_access() {
+        let m = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(m.row(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(m.col(2), vec![3.0, 6.0]);
+    }
+
+    #[test]
+    fn orthogonality_check() {
+        // Rotation matrix is orthogonal.
+        let th = 0.7f64;
+        let r = Mat::from_vec(2, 2, vec![th.cos(), -th.sin(), th.sin(), th.cos()]);
+        assert!(r.is_orthogonal(1e-12));
+        let not = Mat::from_vec(2, 2, vec![1.0, 1.0, 0.0, 1.0]);
+        assert!(!not.is_orthogonal(1e-12));
+    }
+
+    #[test]
+    fn frob_norm_known() {
+        let m = Mat::from_vec(1, 2, vec![3.0, 4.0]);
+        assert!((m.frob_norm() - 5.0).abs() < 1e-14);
+    }
+
+    #[test]
+    #[should_panic]
+    fn matmul_shape_mismatch_panics() {
+        let a = Mat::<f64>::zeros(2, 3);
+        let b = Mat::<f64>::zeros(2, 3);
+        let _ = a.matmul(&b);
+    }
+}

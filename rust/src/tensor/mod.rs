@@ -1,0 +1,19 @@
+//! Dense 3-mode tensors, 2D matrices, complex scalars, and sparsity tools.
+//!
+//! The paper operates on an `N1×N2×N3` Cartesian grid of elements
+//! (a 3-mode tensor, Kolda & Bader 2009) partitioned into *horizontal*,
+//! *lateral*, and *frontal* planar slices (paper Fig. 1). [`Tensor3`]
+//! implements exactly those three partitions; [`Mat`] holds the square (or,
+//! for general GEMT, rectangular) change-of-basis coefficient matrices.
+
+pub mod complex;
+pub mod mat;
+pub mod scalar;
+pub mod sparse;
+pub mod tensor3;
+
+pub use complex::Complex64;
+pub use mat::Mat;
+pub use scalar::Scalar;
+pub use sparse::{relu_sparsify, sparsify, sparsity_of, SparsityPattern};
+pub use tensor3::Tensor3;

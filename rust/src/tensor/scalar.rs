@@ -1,0 +1,100 @@
+//! The scalar abstraction shared by tensors, matrices, and the simulator.
+//!
+//! Everything TriADA computes is a sum of products (MAC/FMA chains), so the
+//! trait surface is deliberately tiny: ring ops + a handful of conversions.
+//! `f64` is the reference precision, `f32` exists for the roundoff
+//! experiments (E4), and [`super::Complex64`] for the DFT.
+
+use std::fmt::Debug;
+use std::ops::{Add, AddAssign, Div, Mul, Neg, Sub};
+
+/// Scalar element type usable in tensors and the TriADA simulator.
+pub trait Scalar:
+    Copy
+    + Debug
+    + PartialEq
+    + Add<Output = Self>
+    + AddAssign
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Neg<Output = Self>
+    + Send
+    + Sync
+    + 'static
+{
+    /// Additive identity.
+    fn zero() -> Self;
+    /// Multiplicative identity.
+    fn one() -> Self;
+    /// Construct from f64 (real part; imaginary zero for complex).
+    fn from_f64(v: f64) -> Self;
+    /// Magnitude (absolute value / modulus) as f64.
+    fn abs_f64(self) -> f64;
+    /// True if exactly zero — the ESOP skip predicate (paper §6).
+    fn is_zero(self) -> bool {
+        self == Self::zero()
+    }
+    /// Fused-ish multiply-add: self + a*b. The simulator's atomic MAC.
+    #[inline]
+    fn mac(self, a: Self, b: Self) -> Self {
+        self + a * b
+    }
+}
+
+impl Scalar for f64 {
+    #[inline]
+    fn zero() -> Self {
+        0.0
+    }
+    #[inline]
+    fn one() -> Self {
+        1.0
+    }
+    #[inline]
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+    #[inline]
+    fn abs_f64(self) -> f64 {
+        self.abs()
+    }
+}
+
+impl Scalar for f32 {
+    #[inline]
+    fn zero() -> Self {
+        0.0
+    }
+    #[inline]
+    fn one() -> Self {
+        1.0
+    }
+    #[inline]
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+    #[inline]
+    fn abs_f64(self) -> f64 {
+        self.abs() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_ring() {
+        assert_eq!(f64::zero() + f64::one(), 1.0);
+        assert_eq!(2.0f64.mac(3.0, 4.0), 14.0);
+        assert!(0.0f64.is_zero());
+        assert!(!1e-300f64.is_zero());
+    }
+
+    #[test]
+    fn f32_conversions() {
+        assert_eq!(f32::from_f64(1.5), 1.5f32);
+        assert_eq!((-2.0f32).abs_f64(), 2.0);
+    }
+}

@@ -1,0 +1,125 @@
+//! Unstructured-sparsity tooling (paper §6).
+//!
+//! “Unstructured sparsity refers to the case in which zero-valued elements
+//! are randomly scattered across structured data sets.” We generate such
+//! patterns deterministically so every ESOP experiment is reproducible, and
+//! we measure what the simulator then skips.
+
+use super::scalar::Scalar;
+use super::tensor3::Tensor3;
+use crate::util::Rng;
+
+/// Where the zeros are, plus the realized sparsity fraction.
+#[derive(Clone, Debug)]
+pub struct SparsityPattern {
+    /// Requested fraction of zeros in [0, 1).
+    pub requested: f64,
+    /// Realized fraction of zeros.
+    pub realized: f64,
+    /// Number of zeroed elements.
+    pub zeros: usize,
+    /// Total elements.
+    pub total: usize,
+}
+
+/// Zero out a uniformly-random `fraction` of tensor elements in place.
+///
+/// Uses exact-count sampling (a random permutation prefix) so the realized
+/// sparsity equals the request up to rounding — important for the E3 sweep.
+pub fn sparsify<T: Scalar>(t: &mut Tensor3<T>, fraction: f64, rng: &mut Rng) -> SparsityPattern {
+    assert!((0.0..=1.0).contains(&fraction), "fraction must be in [0,1]");
+    let total = t.len();
+    let zeros = ((total as f64) * fraction).round() as usize;
+    let mut order: Vec<usize> = (0..total).collect();
+    rng.shuffle(&mut order);
+    for &i in order.iter().take(zeros) {
+        t.data_mut()[i] = T::zero();
+    }
+    let realized_zeros = t.zero_count();
+    SparsityPattern {
+        requested: fraction,
+        realized: realized_zeros as f64 / total.max(1) as f64,
+        zeros: realized_zeros,
+        total,
+    }
+}
+
+/// Fraction of exactly-zero elements.
+pub fn sparsity_of<T: Scalar>(t: &Tensor3<T>) -> f64 {
+    if t.is_empty() {
+        return 0.0;
+    }
+    t.zero_count() as f64 / t.len() as f64
+}
+
+/// ReLU-like sparsification: zero all negative elements (the paper's AI
+/// motivation — activations after ReLU/SquaredReLU are sparse).
+pub fn relu_sparsify(t: &mut Tensor3<f64>) -> SparsityPattern {
+    let total = t.len();
+    for v in t.data_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+    let zeros = t.zero_count();
+    SparsityPattern {
+        requested: f64::NAN,
+        realized: zeros as f64 / total.max(1) as f64,
+        zeros,
+        total,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparsify_hits_requested_fraction() {
+        let mut rng = Rng::new(10);
+        let mut t = Tensor3::from_fn(8, 8, 8, |_, _, _| 1.0);
+        let p = sparsify(&mut t, 0.75, &mut rng);
+        assert_eq!(p.zeros, 384);
+        assert!((p.realized - 0.75).abs() < 1e-12);
+        assert!((sparsity_of(&t) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sparsify_zero_fraction_noop() {
+        let mut rng = Rng::new(11);
+        let mut t = Tensor3::random(4, 4, 4, &mut rng);
+        let orig = t.clone();
+        let p = sparsify(&mut t, 0.0, &mut rng);
+        assert_eq!(p.zeros, 0);
+        assert_eq!(t, orig);
+    }
+
+    #[test]
+    fn sparsify_full() {
+        let mut rng = Rng::new(12);
+        let mut t = Tensor3::random(3, 3, 3, &mut rng);
+        sparsify(&mut t, 1.0, &mut rng);
+        assert_eq!(t.zero_count(), 27);
+    }
+
+    #[test]
+    fn relu_halves_random_data() {
+        let mut rng = Rng::new(13);
+        let mut t = Tensor3::random(10, 10, 10, &mut rng);
+        let p = relu_sparsify(&mut t);
+        // uniform[-1,1) → about half negative
+        assert!((p.realized - 0.5).abs() < 0.1, "realized={}", p.realized);
+        assert!(t.data().iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut r1 = Rng::new(99);
+        let mut r2 = Rng::new(99);
+        let mut a = Tensor3::from_fn(5, 5, 5, |i, j, k| (i + j + k) as f64 + 1.0);
+        let mut b = a.clone();
+        sparsify(&mut a, 0.4, &mut r1);
+        sparsify(&mut b, 0.4, &mut r2);
+        assert_eq!(a, b);
+    }
+}

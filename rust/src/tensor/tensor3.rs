@@ -1,0 +1,332 @@
+//! The 3-mode tensor and its three planar partitions (paper Fig. 1).
+//!
+//! Layout is row-major over `(n1, n2, n3)`: index `((n1*N2)+n2)*N3+n3`, so a
+//! *horizontal-slice row* along `n3` is contiguous. The three partitions:
+//!
+//! * **horizontal** — fix `n2`: slice `X^{(n2)}_{N1×N3}` (Stage I/II of Eq. 4/6);
+//! * **lateral**    — fix `n3`: slice `X^{(n3)}_{N1×N2}` (Stage III);
+//! * **frontal**    — fix `n1`: slice `X^{(n1)}_{N2×N3}`.
+
+use super::mat::Mat;
+use super::scalar::Scalar;
+
+/// Dense `N1 × N2 × N3` tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor3<T: Scalar = f64> {
+    n1: usize,
+    n2: usize,
+    n3: usize,
+    data: Vec<T>,
+}
+
+impl<T: Scalar> Tensor3<T> {
+    /// All-zero tensor.
+    pub fn zeros(n1: usize, n2: usize, n3: usize) -> Tensor3<T> {
+        Tensor3 { n1, n2, n3, data: vec![T::zero(); n1 * n2 * n3] }
+    }
+
+    /// Build from a function of (n1, n2, n3).
+    pub fn from_fn(
+        n1: usize,
+        n2: usize,
+        n3: usize,
+        mut f: impl FnMut(usize, usize, usize) -> T,
+    ) -> Tensor3<T> {
+        let mut data = Vec::with_capacity(n1 * n2 * n3);
+        for i in 0..n1 {
+            for j in 0..n2 {
+                for k in 0..n3 {
+                    data.push(f(i, j, k));
+                }
+            }
+        }
+        Tensor3 { n1, n2, n3, data }
+    }
+
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(n1: usize, n2: usize, n3: usize, data: Vec<T>) -> Tensor3<T> {
+        assert_eq!(data.len(), n1 * n2 * n3, "buffer length mismatch");
+        Tensor3 { n1, n2, n3, data }
+    }
+
+    /// Shape `(N1, N2, N3)`.
+    #[inline]
+    pub fn shape(&self) -> (usize, usize, usize) {
+        (self.n1, self.n2, self.n3)
+    }
+
+    /// Total element count `N1·N2·N3`.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    fn idx(&self, i: usize, j: usize, k: usize) -> usize {
+        debug_assert!(i < self.n1 && j < self.n2 && k < self.n3);
+        (i * self.n2 + j) * self.n3 + k
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize, k: usize) -> T {
+        self.data[self.idx(i, j, k)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, k: usize, v: T) {
+        let x = self.idx(i, j, k);
+        self.data[x] = v;
+    }
+
+    #[inline]
+    pub fn add_assign_at(&mut self, i: usize, j: usize, k: usize, v: T) {
+        let x = self.idx(i, j, k);
+        self.data[x] += v;
+    }
+
+    /// Raw data, row-major `(n1, n2, n3)`.
+    #[inline]
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    /// Contiguous `n3`-row at fixed `(n1, n2)`.
+    #[inline]
+    pub fn row(&self, i: usize, j: usize) -> &[T] {
+        let base = (i * self.n2 + j) * self.n3;
+        &self.data[base..base + self.n3]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize, j: usize) -> &mut [T] {
+        let base = (i * self.n2 + j) * self.n3;
+        &mut self.data[base..base + self.n3]
+    }
+
+    // ---- the three partitions of Fig. 1 --------------------------------
+
+    /// Horizontal slice (fix `n2 = j`): `N1 × N3` matrix.
+    pub fn horizontal_slice(&self, j: usize) -> Mat<T> {
+        Mat::from_fn(self.n1, self.n3, |i, k| self.get(i, j, k))
+    }
+
+    /// Lateral slice (fix `n3 = k`): `N1 × N2` matrix.
+    pub fn lateral_slice(&self, k: usize) -> Mat<T> {
+        Mat::from_fn(self.n1, self.n2, |i, j| self.get(i, j, k))
+    }
+
+    /// Frontal slice (fix `n1 = i`): `N2 × N3` matrix.
+    pub fn frontal_slice(&self, i: usize) -> Mat<T> {
+        Mat::from_fn(self.n2, self.n3, |j, k| self.get(i, j, k))
+    }
+
+    /// Write a horizontal slice back.
+    pub fn set_horizontal_slice(&mut self, j: usize, m: &Mat<T>) {
+        assert_eq!((m.rows(), m.cols()), (self.n1, self.n3));
+        for i in 0..self.n1 {
+            for k in 0..self.n3 {
+                self.set(i, j, k, m.get(i, k));
+            }
+        }
+    }
+
+    /// Write a lateral slice back.
+    pub fn set_lateral_slice(&mut self, k: usize, m: &Mat<T>) {
+        assert_eq!((m.rows(), m.cols()), (self.n1, self.n2));
+        for i in 0..self.n1 {
+            for j in 0..self.n2 {
+                self.set(i, j, k, m.get(i, j));
+            }
+        }
+    }
+
+    /// Write a frontal slice back.
+    pub fn set_frontal_slice(&mut self, i: usize, m: &Mat<T>) {
+        assert_eq!((m.rows(), m.cols()), (self.n2, self.n3));
+        for j in 0..self.n2 {
+            for k in 0..self.n3 {
+                self.set(i, j, k, m.get(j, k));
+            }
+        }
+    }
+
+    // ---- elementwise helpers -------------------------------------------
+
+    /// Map every element.
+    pub fn map<U: Scalar>(&self, mut f: impl FnMut(T) -> U) -> Tensor3<U> {
+        Tensor3 {
+            n1: self.n1,
+            n2: self.n2,
+            n3: self.n3,
+            data: self.data.iter().map(|&v| f(v)).collect(),
+        }
+    }
+
+    /// max |self - other| over all elements.
+    pub fn max_abs_diff(&self, other: &Tensor3<T>) -> f64 {
+        assert_eq!(self.shape(), other.shape(), "shape mismatch");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| (a - b).abs_f64())
+            .fold(0.0, f64::max)
+    }
+
+    /// Frobenius (L2) norm.
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|&v| v.abs_f64().powi(2)).sum::<f64>().sqrt()
+    }
+
+    /// Number of exactly-zero elements.
+    pub fn zero_count(&self) -> usize {
+        self.data.iter().filter(|v| v.is_zero()).count()
+    }
+
+    /// Scale every element by s.
+    pub fn scale(&self, s: T) -> Tensor3<T> {
+        self.map(|v| v * s)
+    }
+
+    /// Elementwise sum.
+    pub fn add(&self, other: &Tensor3<T>) -> Tensor3<T> {
+        assert_eq!(self.shape(), other.shape());
+        Tensor3 {
+            n1: self.n1,
+            n2: self.n2,
+            n3: self.n3,
+            data: self.data.iter().zip(&other.data).map(|(&a, &b)| a + b).collect(),
+        }
+    }
+}
+
+impl Tensor3<f64> {
+    /// Uniform random tensor in [-1, 1).
+    pub fn random(n1: usize, n2: usize, n3: usize, rng: &mut crate::util::Rng) -> Tensor3<f64> {
+        Tensor3::from_fn(n1, n2, n3, |_, _, _| rng.f64_range(-1.0, 1.0))
+    }
+
+    /// Cast to f32 and back — the precision-loss model for E4.
+    pub fn to_f32(&self) -> Tensor3<f32> {
+        self.map(|v| v as f32)
+    }
+}
+
+impl Tensor3<f32> {
+    pub fn to_f64(&self) -> Tensor3<f64> {
+        self.map(|v| v as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn shape_and_index() {
+        let t = Tensor3::from_fn(2, 3, 4, |i, j, k| (i * 100 + j * 10 + k) as f64);
+        assert_eq!(t.shape(), (2, 3, 4));
+        assert_eq!(t.len(), 24);
+        assert_eq!(t.get(1, 2, 3), 123.0);
+        assert_eq!(t.row(1, 2), &[120.0, 121.0, 122.0, 123.0]);
+    }
+
+    #[test]
+    fn slices_match_definition() {
+        let t = Tensor3::from_fn(3, 4, 5, |i, j, k| (i * 100 + j * 10 + k) as f64);
+        let h = t.horizontal_slice(2);
+        assert_eq!((h.rows(), h.cols()), (3, 5));
+        assert_eq!(h.get(1, 3), t.get(1, 2, 3));
+        let l = t.lateral_slice(4);
+        assert_eq!((l.rows(), l.cols()), (3, 4));
+        assert_eq!(l.get(2, 1), t.get(2, 1, 4));
+        let f = t.frontal_slice(0);
+        assert_eq!((f.rows(), f.cols()), (4, 5));
+        assert_eq!(f.get(3, 2), t.get(0, 3, 2));
+    }
+
+    #[test]
+    fn slice_roundtrip() {
+        let mut rng = Rng::new(4);
+        let t = Tensor3::random(3, 4, 5, &mut rng);
+        let mut u = Tensor3::zeros(3, 4, 5);
+        for j in 0..4 {
+            u.set_horizontal_slice(j, &t.horizontal_slice(j));
+        }
+        assert_eq!(t, u);
+        let mut v = Tensor3::zeros(3, 4, 5);
+        for k in 0..5 {
+            v.set_lateral_slice(k, &t.lateral_slice(k));
+        }
+        assert_eq!(t, v);
+        let mut w = Tensor3::zeros(3, 4, 5);
+        for i in 0..3 {
+            w.set_frontal_slice(i, &t.frontal_slice(i));
+        }
+        assert_eq!(t, w);
+    }
+
+    #[test]
+    fn slice_equality_eq5() {
+        // Paper Eq. (5): element (k1,k3) of horizontal slice n2 equals
+        // element (k1,n2) of lateral slice k3.
+        let mut rng = Rng::new(5);
+        let t = Tensor3::random(4, 3, 6, &mut rng);
+        for n2 in 0..3 {
+            for k1 in 0..4 {
+                for k3 in 0..6 {
+                    assert_eq!(
+                        t.horizontal_slice(n2).get(k1, k3),
+                        t.lateral_slice(k3).get(k1, n2)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn norms_and_diff() {
+        let a = Tensor3::from_vec(1, 1, 2, vec![3.0, 4.0]);
+        assert!((a.frob_norm() - 5.0).abs() < 1e-14);
+        let b = Tensor3::from_vec(1, 1, 2, vec![3.0, 4.5]);
+        assert!((a.max_abs_diff(&b) - 0.5).abs() < 1e-14);
+    }
+
+    #[test]
+    fn zero_count_works() {
+        let t = Tensor3::from_vec(1, 2, 2, vec![0.0, 1.0, 0.0, 2.0]);
+        assert_eq!(t.zero_count(), 2);
+    }
+
+    #[test]
+    fn add_and_scale() {
+        let a = Tensor3::from_vec(1, 1, 2, vec![1.0, 2.0]);
+        let b = Tensor3::from_vec(1, 1, 2, vec![10.0, 20.0]);
+        assert_eq!(a.add(&b).data(), &[11.0, 22.0]);
+        assert_eq!(a.scale(3.0).data(), &[3.0, 6.0]);
+    }
+
+    #[test]
+    fn f32_roundtrip_close() {
+        let mut rng = Rng::new(6);
+        let t = Tensor3::random(2, 2, 2, &mut rng);
+        let back = t.to_f32().to_f64();
+        assert!(t.max_abs_diff(&back) < 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_wrong_len_panics() {
+        let _ = Tensor3::from_vec(2, 2, 2, vec![0.0; 7]);
+    }
+}

@@ -1,0 +1,69 @@
+//! Orthonormal DCT-II coefficient matrix (paper §2.2: “unitary and real,
+//! i.e. orthogonal, like in the Discrete Cosine Transform”).
+//!
+//! `c_{n,k} = s_k · cos(π(2n+1)k / 2N)`, with `s_0 = √(1/N)` and
+//! `s_k = √(2/N)` for `k > 0`. With this scaling `Cᵀ C = I`, so the inverse
+//! (DCT-III) is just the transpose — the property the whole forward/inverse
+//! chain relies on. Note the paper omits the normalization; we fold it in so
+//! forward∘inverse is exactly identity (the paper's `C⁻¹ = Cᵀ` requirement).
+
+use crate::tensor::Mat;
+
+/// Forward DCT-II matrix, indexed `[n][k] = c_{n,k}`.
+pub fn dct2_matrix(n: usize) -> Mat<f64> {
+    assert!(n >= 1);
+    let nf = n as f64;
+    let s0 = (1.0 / nf).sqrt();
+    let sk = (2.0 / nf).sqrt();
+    Mat::from_fn(n, n, |row, col| {
+        let scale = if col == 0 { s0 } else { sk };
+        scale * (std::f64::consts::PI * (2.0 * row as f64 + 1.0) * col as f64 / (2.0 * nf)).cos()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Mat;
+
+    #[test]
+    fn orthonormal_for_various_sizes() {
+        for n in [1usize, 2, 3, 5, 8, 16, 33] {
+            let c = dct2_matrix(n);
+            assert!(c.is_orthogonal(1e-10), "N={n}");
+        }
+    }
+
+    #[test]
+    fn dc_column_is_constant() {
+        let c = dct2_matrix(8);
+        let expect = (1.0f64 / 8.0).sqrt();
+        for r in 0..8 {
+            assert!((c.get(r, 0) - expect).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn known_2x2() {
+        // N=2: c_{n,0} = 1/√2; c_{n,1} = cos(π(2n+1)/4) = ±1/√2.
+        let c = dct2_matrix(2);
+        let h = 1.0 / 2f64.sqrt();
+        let expect = Mat::from_vec(2, 2, vec![h, h, h, -h]);
+        assert!(c.max_abs_diff(&expect) < 1e-14);
+    }
+
+    #[test]
+    fn transform_of_constant_has_single_dc() {
+        // y = Cᵀ x with x = ones → only k=0 nonzero.
+        let n = 16;
+        let c = dct2_matrix(n);
+        for k in 0..n {
+            let y: f64 = (0..n).map(|r| c.get(r, k)).sum();
+            if k == 0 {
+                assert!((y - (n as f64).sqrt()).abs() < 1e-10);
+            } else {
+                assert!(y.abs() < 1e-10, "k={k} leak={y}");
+            }
+        }
+    }
+}

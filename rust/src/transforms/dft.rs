@@ -1,0 +1,105 @@
+//! Discrete Fourier Transform coefficients (paper §2.2): the unitary
+//! `c_{n,k} = e^{-2πi·nk/N}/√N`, plus the **split representation** used on
+//! the AOT/PJRT path (real cos/−sin matrices so HLO artifacts stay real).
+
+use crate::tensor::{Complex64, Mat};
+
+/// Unitary complex DFT matrix `[n][k] = e^{-2πi·nk/N}/√N`.
+pub fn dft_matrix(n: usize) -> Mat<Complex64> {
+    assert!(n >= 1);
+    let nf = n as f64;
+    let scale = 1.0 / nf.sqrt();
+    Mat::from_fn(n, n, |row, col| {
+        let theta = -2.0 * std::f64::consts::PI * (row * col) as f64 / nf;
+        Complex64::cis(theta).scale(scale)
+    })
+}
+
+/// Inverse (= conjugate, for the unitary normalization) DFT matrix.
+pub fn idft_matrix(n: usize) -> Mat<Complex64> {
+    dft_matrix(n).map(|z| z.conj())
+}
+
+/// Split DFT: `(re, im)` with `re[n][k] = cos(2πnk/N)/√N`,
+/// `im[n][k] = −sin(2πnk/N)/√N`, so `C = re + i·im`.
+///
+/// A complex mode product `y = Cᵀ(a + ib)` then decomposes into four real
+/// mode products — exactly what `python/compile/model.py` lowers and what
+/// the TriADA cells would compute with a 2-component local element.
+pub fn dft_split(n: usize) -> (Mat<f64>, Mat<f64>) {
+    assert!(n >= 1);
+    let nf = n as f64;
+    let scale = 1.0 / nf.sqrt();
+    let re = Mat::from_fn(n, n, |row, col| {
+        scale * (2.0 * std::f64::consts::PI * (row * col) as f64 / nf).cos()
+    });
+    let im = Mat::from_fn(n, n, |row, col| {
+        -scale * (2.0 * std::f64::consts::PI * (row * col) as f64 / nf).sin()
+    });
+    (re, im)
+}
+
+/// Check unitarity: `C·C^H = I`.
+pub fn is_unitary(c: &Mat<Complex64>, tol: f64) -> bool {
+    if c.rows() != c.cols() {
+        return false;
+    }
+    let ch = Mat::from_fn(c.cols(), c.rows(), |r, col| c.get(col, r).conj());
+    let p = c.matmul(&ch);
+    p.max_abs_diff(&Mat::identity(c.rows())) < tol
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unitary_various_sizes() {
+        for n in [1usize, 2, 3, 5, 8, 12] {
+            assert!(is_unitary(&dft_matrix(n), 1e-10), "N={n}");
+        }
+    }
+
+    #[test]
+    fn symmetric() {
+        let c = dft_matrix(7);
+        for r in 0..7 {
+            for k in 0..7 {
+                assert!((c.get(r, k) - c.get(k, r)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn forward_inverse_identity() {
+        let n = 6;
+        let p = dft_matrix(n).matmul(&idft_matrix(n));
+        assert!(p.max_abs_diff(&Mat::identity(n)) < 1e-10);
+    }
+
+    #[test]
+    fn split_matches_complex() {
+        let n = 9;
+        let c = dft_matrix(n);
+        let (re, im) = dft_split(n);
+        for r in 0..n {
+            for k in 0..n {
+                assert!((c.get(r, k).re - re.get(r, k)).abs() < 1e-12);
+                assert!((c.get(r, k).im - im.get(r, k)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn dft_of_impulse_is_flat() {
+        // x = e_0 → X_k = 1/√N for all k.
+        let n = 8;
+        let c = dft_matrix(n);
+        let expect = 1.0 / (n as f64).sqrt();
+        for k in 0..n {
+            // y_k = Σ_n x_n c_{n,k} = c_{0,k}
+            let y = c.get(0, k);
+            assert!((y.re - expect).abs() < 1e-12 && y.im.abs() < 1e-12);
+        }
+    }
+}

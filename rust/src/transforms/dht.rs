@@ -1,0 +1,60 @@
+//! Discrete Hartley Transform coefficients (paper §2.2):
+//! `c_{n,k} = cas(2πnk/N)/√N = [cos + sin](2πnk/N)/√N`.
+//!
+//! With the symmetric `1/√N` normalization the DHT matrix is real,
+//! symmetric, orthonormal, and **involutory** (`H·H = I`), so the forward
+//! and inverse transforms share one matrix — the strongest version of the
+//! paper's “symmetric and unitary” case.
+
+use crate::tensor::Mat;
+
+/// Orthonormal DHT matrix, indexed `[n][k] = cas(2πnk/N)/√N`.
+pub fn dht_matrix(n: usize) -> Mat<f64> {
+    assert!(n >= 1);
+    let nf = n as f64;
+    let scale = 1.0 / nf.sqrt();
+    Mat::from_fn(n, n, |row, col| {
+        let theta = 2.0 * std::f64::consts::PI * (row * col) as f64 / nf;
+        scale * (theta.cos() + theta.sin())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Mat;
+
+    #[test]
+    fn symmetric() {
+        for n in [2usize, 5, 8, 13] {
+            let h = dht_matrix(n);
+            assert!(h.max_abs_diff(&h.transpose()) < 1e-12, "N={n}");
+        }
+    }
+
+    #[test]
+    fn involutory() {
+        for n in [1usize, 3, 4, 7, 16] {
+            let h = dht_matrix(n);
+            let p = h.matmul(&h);
+            assert!(p.max_abs_diff(&Mat::identity(n)) < 1e-10, "N={n}");
+        }
+    }
+
+    #[test]
+    fn orthonormal() {
+        for n in [2usize, 6, 9] {
+            assert!(dht_matrix(n).is_orthogonal(1e-10), "N={n}");
+        }
+    }
+
+    #[test]
+    fn known_values_n4() {
+        // cas(0)=1, cas(π/2)=1, cas(π)=-1, cas(3π/2)=-1; scale=1/2.
+        let h = dht_matrix(4);
+        assert!((h.get(0, 0) - 0.5).abs() < 1e-14);
+        assert!((h.get(1, 1) - 0.5).abs() < 1e-14);
+        assert!((h.get(1, 2) + 0.5).abs() < 1e-14);
+        assert!((h.get(1, 3) + 0.5).abs() < 1e-14);
+    }
+}

@@ -1,0 +1,73 @@
+//! Discrete Sine Transform (DST-I) coefficients — the remaining member of
+//! the Fourier-like family the paper's framework covers (“a family of
+//! trilinear discrete orthogonal transformations”, §2.2): real, symmetric,
+//! orthonormal, and involutory.
+//!
+//! `c_{n,k} = √(2/(N+1)) · sin(π(n+1)(k+1)/(N+1))`.
+//!
+//! DST-I is the change of basis that diagonalizes the Dirichlet Laplacian —
+//! the non-periodic counterpart of the Poisson example.
+
+use crate::tensor::Mat;
+
+/// Orthonormal DST-I matrix, indexed `[n][k]`.
+pub fn dst1_matrix(n: usize) -> Mat<f64> {
+    assert!(n >= 1);
+    let m = (n + 1) as f64;
+    let scale = (2.0 / m).sqrt();
+    Mat::from_fn(n, n, |row, col| {
+        scale * (std::f64::consts::PI * (row + 1) as f64 * (col + 1) as f64 / m).sin()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Mat;
+
+    #[test]
+    fn symmetric() {
+        for n in [1usize, 2, 5, 8, 13] {
+            let s = dst1_matrix(n);
+            assert!(s.max_abs_diff(&s.transpose()) < 1e-12, "N={n}");
+        }
+    }
+
+    #[test]
+    fn involutory_and_orthonormal() {
+        for n in [1usize, 3, 4, 7, 16] {
+            let s = dst1_matrix(n);
+            let p = s.matmul(&s);
+            assert!(p.max_abs_diff(&Mat::identity(n)) < 1e-10, "N={n}");
+            assert!(s.is_orthogonal(1e-10), "N={n}");
+        }
+    }
+
+    #[test]
+    fn diagonalizes_dirichlet_laplacian() {
+        // L = tridiag(-1, 2, -1); S L Sᵀ must be diagonal with
+        // eigenvalues 2 − 2cos(πk/(N+1)).
+        let n = 8;
+        let s = dst1_matrix(n);
+        let l = Mat::from_fn(n, n, |r, c| {
+            if r == c {
+                2.0
+            } else if r.abs_diff(c) == 1 {
+                -1.0
+            } else {
+                0.0
+            }
+        });
+        let d = s.matmul(&l).matmul(&s.transpose());
+        for r in 0..n {
+            for c in 0..n {
+                if r == c {
+                    let eig = 2.0 - 2.0 * (std::f64::consts::PI * (r + 1) as f64 / (n + 1) as f64).cos();
+                    assert!((d.get(r, c) - eig).abs() < 1e-10);
+                } else {
+                    assert!(d.get(r, c).abs() < 1e-10);
+                }
+            }
+        }
+    }
+}

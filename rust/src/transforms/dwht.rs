@@ -1,0 +1,82 @@
+//! Discrete Walsh–Hadamard Transform coefficients (paper §2.2: “consists
+//! only ±1 and be symmetric and orthogonal”).
+//!
+//! Natural (Hadamard) order: `H[n][k] = (−1)^{popcount(n & k)} / √N`,
+//! N a power of two. Symmetric, orthonormal, involutory.
+
+use crate::tensor::Mat;
+
+/// Orthonormal natural-order Walsh–Hadamard matrix; `n` must be 2^m.
+pub fn dwht_matrix(n: usize) -> Mat<f64> {
+    assert!(n >= 1 && n.is_power_of_two(), "DWHT requires power-of-two N, got {n}");
+    let scale = 1.0 / (n as f64).sqrt();
+    Mat::from_fn(n, n, |row, col| {
+        if (row & col).count_ones() % 2 == 0 {
+            scale
+        } else {
+            -scale
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Mat;
+
+    #[test]
+    fn entries_are_pm_inv_sqrt_n() {
+        let h = dwht_matrix(8);
+        let s = 1.0 / 8f64.sqrt();
+        for r in 0..8 {
+            for c in 0..8 {
+                assert!((h.get(r, c).abs() - s).abs() < 1e-14);
+            }
+        }
+    }
+
+    #[test]
+    fn symmetric_and_involutory() {
+        for n in [1usize, 2, 4, 8, 16, 32] {
+            let h = dwht_matrix(n);
+            assert!(h.max_abs_diff(&h.transpose()) < 1e-14, "N={n} not symmetric");
+            let p = h.matmul(&h);
+            assert!(p.max_abs_diff(&Mat::identity(n)) < 1e-10, "N={n} not involutory");
+        }
+    }
+
+    #[test]
+    fn h2_structure() {
+        // H2 = [[1,1],[1,-1]]/√2 — the Sylvester construction base.
+        let h = dwht_matrix(2);
+        let s = 1.0 / 2f64.sqrt();
+        assert!((h.get(0, 0) - s).abs() < 1e-14);
+        assert!((h.get(0, 1) - s).abs() < 1e-14);
+        assert!((h.get(1, 0) - s).abs() < 1e-14);
+        assert!((h.get(1, 1) + s).abs() < 1e-14);
+    }
+
+    #[test]
+    fn sylvester_recursion_holds() {
+        // H_{2N}[r][c] relates to H_N via the Kronecker structure.
+        let h4 = dwht_matrix(4);
+        let h8 = dwht_matrix(8);
+        let ratio = (4f64).sqrt() / (8f64).sqrt();
+        for r in 0..4 {
+            for c in 0..4 {
+                // top-left block of H8 equals H4 scaled.
+                assert!((h8.get(r, c) - h4.get(r, c) * ratio).abs() < 1e-14);
+                // bottom-right block: (r+4)&(c+4) = (r&c)|4, so the parity
+                // flips → −H4 scaled (Sylvester's [[H,H],[H,−H]]).
+                let expect = -h4.get(r, c) * ratio;
+                assert!((h8.get(r + 4, c + 4) - expect).abs() < 1e-14);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_power_of_two() {
+        let _ = dwht_matrix(6);
+    }
+}

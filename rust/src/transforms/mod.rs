@@ -1,0 +1,175 @@
+//! Coefficient (change-of-basis) matrix generators for the 3D-DXT family
+//! (paper §2.2): DFT, DHT, DCT, DWHT — plus identity for testing.
+//!
+//! ## Convention
+//!
+//! Following paper Eq. (1), the forward transform along one mode is
+//! `y_k += Σ_n x_n · c_{n,k}`: the coefficient matrix is indexed
+//! `C[n][k] = c_{n,k}` (row = input index, column = output index). The
+//! inverse matrix `D` satisfies `C · D = I`; for the orthonormal real kinds
+//! `D = Cᵀ`, and all generators here are normalized to be orthonormal so
+//! that forward ∘ inverse is exactly the identity and Parseval holds.
+
+pub mod dct;
+pub mod dft;
+pub mod dht;
+pub mod dst;
+pub mod dwht;
+
+use crate::tensor::{Complex64, Mat};
+
+/// The family of real separable trilinear orthogonal transforms supported
+/// end-to-end (the complex DFT goes through [`dft`] or the split
+/// representation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TransformKind {
+    /// Identity (for testing and calibration).
+    Identity,
+    /// Orthonormal DCT-II (forward) / DCT-III (inverse).
+    Dct2,
+    /// Discrete Hartley Transform, symmetric orthonormal (involutory).
+    Dht,
+    /// Discrete Sine Transform (DST-I), symmetric orthonormal (involutory).
+    Dst1,
+    /// Discrete Walsh–Hadamard Transform (natural order), N = 2^m.
+    Dwht,
+    /// Discrete Fourier Transform carried as split (re, im) real pair.
+    DftSplit,
+}
+
+impl TransformKind {
+    /// All kinds, for sweep-style tests and benches.
+    pub const ALL: [TransformKind; 6] = [
+        TransformKind::Identity,
+        TransformKind::Dct2,
+        TransformKind::Dht,
+        TransformKind::Dst1,
+        TransformKind::Dwht,
+        TransformKind::DftSplit,
+    ];
+
+    /// Real kinds representable by a single real coefficient matrix.
+    pub const REAL: [TransformKind; 5] = [
+        TransformKind::Identity,
+        TransformKind::Dct2,
+        TransformKind::Dht,
+        TransformKind::Dst1,
+        TransformKind::Dwht,
+    ];
+
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> Option<TransformKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "identity" | "id" => Some(TransformKind::Identity),
+            "dct" | "dct2" => Some(TransformKind::Dct2),
+            "dht" | "hartley" => Some(TransformKind::Dht),
+            "dst" | "dst1" | "sine" => Some(TransformKind::Dst1),
+            "dwht" | "hadamard" | "walsh" => Some(TransformKind::Dwht),
+            "dft" | "fourier" | "dft-split" => Some(TransformKind::DftSplit),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TransformKind::Identity => "identity",
+            TransformKind::Dct2 => "dct2",
+            TransformKind::Dht => "dht",
+            TransformKind::Dst1 => "dst1",
+            TransformKind::Dwht => "dwht",
+            TransformKind::DftSplit => "dft-split",
+        }
+    }
+
+    /// Does this kind constrain N? (DWHT needs a power of two.)
+    pub fn supports_size(self, n: usize) -> bool {
+        match self {
+            TransformKind::Dwht => n.is_power_of_two(),
+            _ => n >= 1,
+        }
+    }
+}
+
+/// Forward coefficient matrix `C[n][k] = c_{n,k}` of size `n × n` for a real
+/// kind. Panics for [`TransformKind::DftSplit`] — use [`dft::dft_split`].
+pub fn forward_matrix(kind: TransformKind, n: usize) -> Mat<f64> {
+    assert!(kind.supports_size(n), "{} does not support N={}", kind.name(), n);
+    match kind {
+        TransformKind::Identity => Mat::identity(n),
+        TransformKind::Dct2 => dct::dct2_matrix(n),
+        TransformKind::Dht => dht::dht_matrix(n),
+        TransformKind::Dst1 => dst::dst1_matrix(n),
+        TransformKind::Dwht => dwht::dwht_matrix(n),
+        TransformKind::DftSplit => panic!("DFT has no single real coefficient matrix; use dft::dft_split"),
+    }
+}
+
+/// Inverse coefficient matrix: `forward · inverse = I`.
+pub fn inverse_matrix(kind: TransformKind, n: usize) -> Mat<f64> {
+    // All real kinds here are orthonormal ⇒ inverse = transpose.
+    forward_matrix(kind, n).transpose()
+}
+
+/// Complex unitary DFT matrix `C[n][k] = e^{-2πi·nk/N}/√N`.
+pub fn dft_matrix(n: usize) -> Mat<Complex64> {
+    dft::dft_matrix(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_real_kinds_are_orthonormal() {
+        for kind in TransformKind::REAL {
+            for n in [1usize, 2, 4, 8, 16] {
+                if !kind.supports_size(n) {
+                    continue;
+                }
+                let c = forward_matrix(kind, n);
+                assert!(
+                    c.is_orthogonal(1e-10),
+                    "{} N={} not orthogonal",
+                    kind.name(),
+                    n
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn non_power_of_two_sizes() {
+        for kind in [TransformKind::Dct2, TransformKind::Dht] {
+            for n in [3usize, 5, 6, 7, 12, 33] {
+                let c = forward_matrix(kind, n);
+                assert!(c.is_orthogonal(1e-10), "{} N={}", kind.name(), n);
+            }
+        }
+    }
+
+    #[test]
+    fn forward_times_inverse_is_identity() {
+        for kind in TransformKind::REAL {
+            let n = if kind == TransformKind::Dwht { 8 } else { 7 };
+            let c = forward_matrix(kind, n);
+            let d = inverse_matrix(kind, n);
+            let p = c.matmul(&d);
+            assert!(p.max_abs_diff(&Mat::identity(n)) < 1e-10, "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn dwht_rejects_non_power_of_two() {
+        assert!(!TransformKind::Dwht.supports_size(6));
+        assert!(TransformKind::Dwht.supports_size(8));
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for kind in TransformKind::ALL {
+            assert_eq!(TransformKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(TransformKind::parse("nope"), None);
+        assert_eq!(TransformKind::parse("DCT"), Some(TransformKind::Dct2));
+    }
+}

@@ -1,0 +1,88 @@
+//! Human-readable formatting for counts, durations, and rates.
+
+/// Format a duration in seconds with an adaptive unit (ns/µs/ms/s).
+pub fn duration(s: f64) -> String {
+    if s < 0.0 {
+        return format!("-{}", duration(-s));
+    }
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// Format a count with SI suffix (k/M/G/T).
+pub fn count(n: f64) -> String {
+    let a = n.abs();
+    if a >= 1e12 {
+        format!("{:.2}T", n / 1e12)
+    } else if a >= 1e9 {
+        format!("{:.2}G", n / 1e9)
+    } else if a >= 1e6 {
+        format!("{:.2}M", n / 1e6)
+    } else if a >= 1e3 {
+        format!("{:.2}k", n / 1e3)
+    } else if n.fract() == 0.0 {
+        format!("{}", n as i64)
+    } else {
+        format!("{:.2}", n)
+    }
+}
+
+/// Format a rate as ops/s with SI suffix.
+pub fn rate(ops_per_s: f64) -> String {
+    format!("{}/s", count(ops_per_s))
+}
+
+/// Format bytes with binary suffix.
+pub fn bytes(b: f64) -> String {
+    let a = b.abs();
+    if a >= 1024.0 * 1024.0 * 1024.0 {
+        format!("{:.2}GiB", b / (1024.0 * 1024.0 * 1024.0))
+    } else if a >= 1024.0 * 1024.0 {
+        format!("{:.2}MiB", b / (1024.0 * 1024.0))
+    } else if a >= 1024.0 {
+        format!("{:.2}KiB", b / 1024.0)
+    } else {
+        format!("{}B", b as i64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn durations() {
+        assert_eq!(duration(2.5), "2.500s");
+        assert_eq!(duration(0.0025), "2.50ms");
+        assert_eq!(duration(2.5e-6), "2.50µs");
+        assert_eq!(duration(2.5e-9), "2.5ns");
+    }
+
+    #[test]
+    fn counts() {
+        assert_eq!(count(999.0), "999");
+        assert_eq!(count(1500.0), "1.50k");
+        assert_eq!(count(2.5e6), "2.50M");
+        assert_eq!(count(3e9), "3.00G");
+        assert_eq!(count(4e12), "4.00T");
+    }
+
+    #[test]
+    fn byte_fmt() {
+        assert_eq!(bytes(512.0), "512B");
+        assert_eq!(bytes(2048.0), "2.00KiB");
+        assert_eq!(bytes(3.0 * 1024.0 * 1024.0), "3.00MiB");
+    }
+
+    #[test]
+    fn rate_fmt() {
+        assert_eq!(rate(1.5e6), "1.50M/s");
+    }
+}

@@ -1,0 +1,12 @@
+//! Small shared utilities: deterministic PRNG, statistics, timing, and
+//! human-readable formatting. These exist because the offline build has no
+//! `rand`/`criterion`; see DESIGN.md §Substitutions.
+
+pub mod human;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Rng;
+pub use stats::Summary;
+pub use timer::Timer;

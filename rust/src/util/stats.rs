@@ -1,0 +1,214 @@
+//! Summary statistics used by the bench harness and coordinator metrics.
+
+/// Summary of a sample: robust order statistics plus mean/stddev.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub stddev: f64,
+    pub p10: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    /// Compute a summary; returns None for an empty sample.
+    pub fn of(sample: &[f64]) -> Option<Summary> {
+        if sample.is_empty() {
+            return None;
+        }
+        let mut xs: Vec<f64> = sample.to_vec();
+        xs.sort_by(|a, b| a.partial_cmp(b).expect("NaN in sample"));
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        Some(Summary {
+            n,
+            min: xs[0],
+            max: xs[n - 1],
+            mean,
+            stddev: var.sqrt(),
+            p10: percentile(&xs, 0.10),
+            p50: percentile(&xs, 0.50),
+            p90: percentile(&xs, 0.90),
+            p95: percentile(&xs, 0.95),
+            p99: percentile(&xs, 0.99),
+        })
+    }
+}
+
+/// Linear-interpolated percentile of a pre-sorted slice, `q` in `[0, 1]`.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Streaming histogram with fixed log-spaced buckets, for latency metrics.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// Bucket upper bounds (seconds); last bucket is +inf.
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Histogram {
+    /// Log-spaced buckets from `lo` to `hi` (seconds), `n` buckets + overflow.
+    pub fn log_spaced(lo: f64, hi: f64, n: usize) -> Histogram {
+        assert!(lo > 0.0 && hi > lo && n >= 2);
+        let ratio = (hi / lo).powf(1.0 / (n - 1) as f64);
+        let bounds: Vec<f64> = (0..n).map(|i| lo * ratio.powi(i as i32)).collect();
+        let len = bounds.len() + 1;
+        Histogram { bounds, counts: vec![0; len], total: 0, sum: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    /// Default latency histogram: 1 µs .. 100 s, 120 buckets.
+    pub fn latency() -> Histogram {
+        Histogram::log_spaced(1e-6, 100.0, 120)
+    }
+
+    pub fn record(&mut self, v: f64) {
+        let idx = self.bounds.partition_point(|&b| b < v);
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 { 0.0 } else { self.sum / self.total as f64 }
+    }
+
+    /// Approximate quantile from bucket boundaries.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q * self.total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target.max(1) {
+                return if i == 0 {
+                    self.bounds[0]
+                } else if i >= self.bounds.len() {
+                    self.max
+                } else {
+                    self.bounds[i]
+                };
+            }
+        }
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.bounds.len(), other.bounds.len(), "histogram shape mismatch");
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        assert_eq!(s.n, 5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_empty_is_none() {
+        assert!(Summary::of(&[]).is_none());
+    }
+
+    #[test]
+    fn summary_single() {
+        let s = Summary::of(&[7.5]).unwrap();
+        assert_eq!(s.p50, 7.5);
+        assert_eq!(s.stddev, 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile(&xs, 0.5) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile(&xs, 0.0), 0.0);
+        assert_eq!(percentile(&xs, 1.0), 10.0);
+    }
+
+    #[test]
+    fn histogram_quantiles_monotone() {
+        let mut h = Histogram::latency();
+        let mut v = 1e-5;
+        for _ in 0..1000 {
+            h.record(v);
+            v *= 1.005;
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.5);
+        let p95 = h.quantile(0.95);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+    }
+
+    #[test]
+    fn histogram_mean() {
+        let mut h = Histogram::latency();
+        h.record(0.001);
+        h.record(0.003);
+        assert!((h.mean() - 0.002).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = Histogram::latency();
+        let mut b = Histogram::latency();
+        a.record(0.01);
+        b.record(0.02);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+    }
+
+    #[test]
+    fn histogram_overflow_bucket() {
+        let mut h = Histogram::log_spaced(1e-3, 1.0, 10);
+        h.record(50.0); // way past hi
+        assert_eq!(h.count(), 1);
+        assert!(h.quantile(0.99) >= 1.0);
+    }
+}

@@ -1,0 +1,67 @@
+//! Wall-clock timing helper.
+
+use std::time::Instant;
+
+/// A simple monotonic timer.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer { start: Instant::now() }
+    }
+
+    /// Elapsed seconds since start.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed nanoseconds since start.
+    pub fn elapsed_ns(&self) -> u128 {
+        self.start.elapsed().as_nanos()
+    }
+
+    /// Restart and return the elapsed seconds of the previous lap.
+    pub fn lap_s(&mut self) -> f64 {
+        let e = self.elapsed_s();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let r = f();
+    (r, t.elapsed_s())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_advances() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.elapsed_s() >= 0.004);
+    }
+
+    #[test]
+    fn time_it_returns_result() {
+        let (v, s) = time_it(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+
+    #[test]
+    fn lap_resets() {
+        let mut t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let lap = t.lap_s();
+        assert!(lap > 0.0);
+        assert!(t.elapsed_s() < lap + 0.5);
+    }
+}

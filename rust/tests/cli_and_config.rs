@@ -1,0 +1,104 @@
+//! CLI + config integration: the `triada` command surface drives the same
+//! library paths users script against, so exercise it end to end
+//! (no subprocess needed — `cli::commands::run` is a library call).
+
+use triada::cli::{self, commands};
+use triada::config::Config;
+use triada::coordinator::CoordinatorConfig;
+
+fn args(v: &[&str]) -> cli::Args {
+    cli::parse_args(&v.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+}
+
+#[test]
+fn transform_command_runs_every_kind() {
+    for kind in ["dct", "dht", "dst1", "dwht", "identity"] {
+        let shape = if kind == "dwht" { "8x4x2" } else { "5x6x7" };
+        let a = args(&["transform", "--kind", kind, "--shape", shape]);
+        commands::run(&a).unwrap_or_else(|e| panic!("{kind}: {e:#}"));
+    }
+}
+
+#[test]
+fn simulate_command_dense_sparse_trace() {
+    commands::run(&args(&["simulate", "--shape", "6x5x4", "--sparsity", "0.5", "--trace"])).unwrap();
+    commands::run(&args(&["simulate", "--shape", "4x4x4", "--no-esop"])).unwrap();
+    commands::run(&args(&["simulate", "--kind", "dwht", "--shape", "8x8x8"])).unwrap();
+}
+
+#[test]
+fn simulate_rejects_bad_kind_and_shape() {
+    assert!(commands::run(&args(&["simulate", "--kind", "nope"])).is_err());
+    assert!(cli::parse_args(&["simulate".into(), "--shape".into()]).is_err());
+    assert!(args(&["simulate", "--shape", "0x1x1"]).opt_shape("shape", (1, 1, 1)).is_err());
+}
+
+#[test]
+fn unknown_command_is_error_help_is_not() {
+    assert!(commands::run(&args(&["frobnicate"])).is_err());
+    commands::run(&args(&["help"])).unwrap();
+    commands::run(&args(&[])).unwrap();
+}
+
+#[test]
+fn info_command_reports_without_artifacts() {
+    // Point at a nonexistent dir: must degrade gracefully, not error.
+    commands::run(&args(&["info", "--artifacts", "/nonexistent/definitely"])).unwrap();
+}
+
+#[test]
+fn serve_command_reference_backend_smoke() {
+    commands::run(&args(&[
+        "serve", "--backend", "reference", "--jobs", "12", "--workers", "2",
+    ]))
+    .unwrap();
+}
+
+#[test]
+fn serve_with_config_file() {
+    let dir = std::env::temp_dir().join("triada_cli_cfg_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("serve.ini");
+    std::fs::write(
+        &path,
+        "[coordinator]\nworkers = 2\nqueue_depth = 16\nmax_batch = 4\nbatch_window_ms = 1\n",
+    )
+    .unwrap();
+    commands::run(&args(&[
+        "serve",
+        "--backend",
+        "sim",
+        "--jobs",
+        "6",
+        "--config",
+        path.to_str().unwrap(),
+    ]))
+    .unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn coordinator_config_defaults_and_overrides() {
+    let empty = Config::parse("").unwrap();
+    let c = CoordinatorConfig::from_config(&empty).unwrap();
+    assert!(c.workers >= 1);
+    assert!(c.queue_depth >= 1);
+
+    let full = Config::parse(
+        "[coordinator]\nworkers = 7\nqueue_depth = 99\nmax_batch = 3\nbatch_window_ms = 0.5\n",
+    )
+    .unwrap();
+    let c = CoordinatorConfig::from_config(&full).unwrap();
+    assert_eq!(c.workers, 7);
+    assert_eq!(c.queue_depth, 99);
+    assert_eq!(c.batch.max_batch, 3);
+    assert_eq!(c.batch.window, std::time::Duration::from_micros(500));
+}
+
+#[test]
+fn config_rejects_malformed_values() {
+    let bad = Config::parse("[coordinator]\nqueue_depth = many\n").unwrap();
+    assert!(CoordinatorConfig::from_config(&bad).is_err());
+    let zero = Config::parse("[coordinator]\nmax_batch = 0\n").unwrap();
+    assert!(CoordinatorConfig::from_config(&zero).is_err());
+}

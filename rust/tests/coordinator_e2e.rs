@@ -1,0 +1,196 @@
+//! Coordinator integration: correctness under concurrency, batching
+//! behaviour, backpressure/load-shedding, failure injection, shutdown.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use triada::coordinator::backend::{Backend, ReferenceBackend, SimBackend};
+use triada::coordinator::batcher::BatchPolicy;
+use triada::coordinator::{Coordinator, CoordinatorConfig, TransformJob};
+use triada::gemt;
+use triada::runtime::Direction;
+use triada::sim::SimConfig;
+use triada::tensor::Tensor3;
+use triada::transforms::TransformKind;
+use triada::util::Rng;
+
+fn config(workers: usize, queue: usize, max_batch: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        workers,
+        queue_depth: queue,
+        batch: BatchPolicy { max_batch, window: Duration::from_millis(1) },
+    }
+}
+
+#[test]
+fn mixed_load_all_verified() {
+    let c = Coordinator::start(config(4, 128, 8), Arc::new(ReferenceBackend));
+    let mut rng = Rng::new(1);
+    let mut cases = Vec::new();
+    for i in 0..60 {
+        let shape = [(4usize, 5usize, 6usize), (8, 8, 8), (3, 3, 3)][i % 3];
+        let kind = [TransformKind::Dct2, TransformKind::Dht][i % 2];
+        let dir = if i % 5 == 0 { Direction::Inverse } else { Direction::Forward };
+        let x = Tensor3::random(shape.0, shape.1, shape.2, &mut rng);
+        let h = c
+            .submit(TransformJob::new(kind, dir, vec![x.to_f32()]))
+            .unwrap();
+        cases.push((x, kind, dir, h));
+    }
+    for (x, kind, dir, h) in cases {
+        let res = h.wait().unwrap();
+        let out = res.outputs.unwrap();
+        let x32 = x.to_f32().to_f64();
+        let want = match dir {
+            Direction::Forward => gemt::dxt3d_forward(&x32, kind),
+            Direction::Inverse => gemt::dxt3d_inverse(&x32, kind),
+        };
+        assert!(out[0].to_f64().max_abs_diff(&want) < 1e-3);
+    }
+    let snap = c.metrics();
+    assert_eq!(snap.completed, 60);
+    assert_eq!(snap.failed, 0);
+    c.shutdown();
+}
+
+#[test]
+fn sim_backend_serves_and_counts() {
+    let sim = Arc::new(SimBackend::new(SimConfig::esop((16, 16, 16))));
+    let c = Coordinator::start(config(2, 32, 4), sim.clone());
+    let mut rng = Rng::new(2);
+    let handles: Vec<_> = (0..10)
+        .map(|_| {
+            let x = Tensor3::random(6, 6, 6, &mut rng).to_f32();
+            c.submit(TransformJob::new(TransformKind::Dht, Direction::Forward, vec![x]))
+                .unwrap()
+        })
+        .collect();
+    for h in handles {
+        assert!(h.wait().unwrap().outputs.is_ok());
+    }
+    let counters = sim.counters();
+    assert_eq!(counters.time_steps, 10 * 18, "10 jobs × (6+6+6) steps");
+    c.shutdown();
+}
+
+#[test]
+fn failure_injection_does_not_poison_the_pool() {
+    let c = Coordinator::start(config(2, 64, 4), Arc::new(ReferenceBackend));
+    let mut rng = Rng::new(3);
+    let mut handles = Vec::new();
+    for i in 0..30 {
+        let job = if i % 3 == 0 {
+            // invalid: DWHT on non-power-of-two
+            TransformJob::new(TransformKind::Dwht, Direction::Forward, vec![Tensor3::zeros(3, 3, 3)])
+        } else {
+            let x = Tensor3::random(4, 4, 4, &mut rng).to_f32();
+            TransformJob::new(TransformKind::Dct2, Direction::Forward, vec![x])
+        };
+        handles.push((i, c.submit(job).unwrap()));
+    }
+    let mut ok = 0;
+    let mut failed = 0;
+    for (i, h) in handles {
+        let res = h.wait().unwrap();
+        if i % 3 == 0 {
+            assert!(res.outputs.is_err(), "job {i} should fail");
+            failed += 1;
+        } else {
+            assert!(res.outputs.is_ok(), "job {i} should succeed");
+            ok += 1;
+        }
+    }
+    assert_eq!((ok, failed), (20, 10));
+    let snap = c.metrics();
+    assert_eq!(snap.completed, 20);
+    assert_eq!(snap.failed, 10);
+    c.shutdown();
+}
+
+#[test]
+fn try_submit_sheds_load_when_full() {
+    // One slow-ish worker, tiny queue: try_submit must eventually reject.
+    let c = Coordinator::start(config(1, 2, 1), Arc::new(ReferenceBackend));
+    let mut rng = Rng::new(4);
+    let mut accepted = Vec::new();
+    let mut rejected = 0;
+    for _ in 0..200 {
+        let x = Tensor3::random(12, 12, 12, &mut rng).to_f32();
+        match c.try_submit(TransformJob::new(TransformKind::Dht, Direction::Forward, vec![x])) {
+            Some(h) => accepted.push(h),
+            None => rejected += 1,
+        }
+    }
+    for h in accepted {
+        let _ = h.wait().unwrap();
+    }
+    assert!(rejected > 0, "backpressure never engaged");
+    assert_eq!(c.metrics().rejected, rejected);
+    c.shutdown();
+}
+
+#[test]
+fn batches_share_key_only() {
+    // All jobs same key → batches up to max_batch; result batch_size > 1.
+    let c = Coordinator::start(config(1, 64, 8), Arc::new(ReferenceBackend));
+    let mut rng = Rng::new(5);
+    let handles: Vec<_> = (0..32)
+        .map(|_| {
+            let x = Tensor3::random(4, 4, 4, &mut rng).to_f32();
+            c.submit(TransformJob::new(TransformKind::Dct2, Direction::Forward, vec![x]))
+                .unwrap()
+        })
+        .collect();
+    let mut saw_batched = false;
+    for h in handles {
+        if h.wait().unwrap().batch_size > 1 {
+            saw_batched = true;
+        }
+    }
+    assert!(saw_batched, "no executable-reuse batches formed");
+    c.shutdown();
+}
+
+#[test]
+fn shutdown_is_graceful_and_final() {
+    let c = Coordinator::start(config(2, 8, 2), Arc::new(ReferenceBackend));
+    let mut rng = Rng::new(6);
+    let x = Tensor3::random(4, 4, 4, &mut rng).to_f32();
+    let h = c
+        .submit(TransformJob::new(TransformKind::Dht, Direction::Forward, vec![x]))
+        .unwrap();
+    assert!(h.wait().unwrap().outputs.is_ok());
+    c.shutdown(); // must not hang, drops queues, joins threads
+}
+
+#[test]
+fn dft_split_jobs_roundtrip_through_coordinator() {
+    let c = Coordinator::start(config(2, 32, 4), Arc::new(ReferenceBackend));
+    let mut rng = Rng::new(7);
+    let re = Tensor3::random(4, 4, 4, &mut rng).to_f32();
+    let im = Tensor3::random(4, 4, 4, &mut rng).to_f32();
+    let fwd = c
+        .transform(TransformJob::new(
+            TransformKind::DftSplit,
+            Direction::Forward,
+            vec![re.clone(), im.clone()],
+        ))
+        .unwrap()
+        .outputs
+        .unwrap();
+    let back = c
+        .transform(TransformJob::new(TransformKind::DftSplit, Direction::Inverse, fwd))
+        .unwrap()
+        .outputs
+        .unwrap();
+    assert!(back[0].to_f64().max_abs_diff(&re.to_f64()) < 1e-3);
+    assert!(back[1].to_f64().max_abs_diff(&im.to_f64()) < 1e-3);
+    c.shutdown();
+}
+
+#[test]
+fn backend_names_are_stable() {
+    // the metrics/report layer keys on these
+    assert_eq!(ReferenceBackend.name(), "cpu-reference");
+    assert_eq!(SimBackend::new(SimConfig::default()).name(), "triada-sim");
+}

@@ -1,0 +1,146 @@
+//! PJRT integration: every AOT artifact variant must agree with the exact
+//! CPU reference — the cross-layer correctness proof (L1/L2 python ⇄ L3
+//! rust). Skips (with a loud message) when `make artifacts` hasn't run.
+
+use triada::gemt;
+use triada::runtime::{ArtifactManifest, Direction, PjrtService};
+use triada::tensor::Tensor3;
+use triada::transforms::TransformKind;
+use triada::util::Rng;
+
+fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/manifest.ini").exists()
+}
+
+fn service() -> PjrtService {
+    PjrtService::spawn("artifacts").expect("spawning pjrt service")
+}
+
+#[test]
+fn every_variant_matches_cpu_reference() {
+    if !artifacts_available() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let manifest = ArtifactManifest::load("artifacts").unwrap();
+    let svc = service();
+    let handle = svc.handle();
+    let mut rng = Rng::new(42);
+    assert!(!manifest.specs.is_empty());
+    for spec in &manifest.specs {
+        let (n1, n2, n3) = spec.shape;
+        let inputs: Vec<Tensor3<f32>> = (0..spec.inputs)
+            .map(|_| Tensor3::random(n1, n2, n3, &mut rng).to_f32())
+            .collect();
+        let got = handle
+            .run(spec.kind, spec.direction, inputs.clone())
+            .unwrap_or_else(|e| panic!("{}: {e:#}", spec.name));
+        let want = triada::coordinator::backend::reference_execute(spec.kind, spec.direction, &inputs)
+            .unwrap();
+        assert_eq!(got.len(), want.len(), "{}", spec.name);
+        for (g, w) in got.iter().zip(&want) {
+            let diff = g.to_f64().max_abs_diff(&w.to_f64());
+            assert!(diff < 5e-3, "{}: max |Δ| = {diff}", spec.name);
+        }
+    }
+}
+
+#[test]
+fn forward_then_inverse_artifact_roundtrip() {
+    if !artifacts_available() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let svc = service();
+    let handle = svc.handle();
+    let mut rng = Rng::new(7);
+    let x = Tensor3::random(8, 8, 8, &mut rng).to_f32();
+    for kind in [TransformKind::Dct2, TransformKind::Dht, TransformKind::Dwht] {
+        let y = handle.run(kind, Direction::Forward, vec![x.clone()]).unwrap();
+        let back = handle.run(kind, Direction::Inverse, y).unwrap();
+        let diff = back[0].to_f64().max_abs_diff(&x.to_f64());
+        assert!(diff < 1e-3, "{} roundtrip through artifacts: {diff}", kind.name());
+    }
+}
+
+#[test]
+fn dft_split_artifact_matches_fft_baseline() {
+    if !artifacts_available() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    use triada::fft::fft3d;
+    use triada::gemt::split::{pack_complex, unpack_complex};
+    let svc = service();
+    let handle = svc.handle();
+    let mut rng = Rng::new(8);
+    let re = Tensor3::random(8, 8, 8, &mut rng);
+    let im = Tensor3::random(8, 8, 8, &mut rng);
+    let got = handle
+        .run(
+            TransformKind::DftSplit,
+            Direction::Forward,
+            vec![re.to_f32(), im.to_f32()],
+        )
+        .unwrap();
+    let want = fft3d(&pack_complex(&re, &im));
+    let (wr, wi) = unpack_complex(&want);
+    assert!(got[0].to_f64().max_abs_diff(&wr) < 1e-3);
+    assert!(got[1].to_f64().max_abs_diff(&wi) < 1e-3);
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    if !artifacts_available() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let svc = service();
+    let handle = svc.handle();
+    let mut rng = Rng::new(9);
+    for _ in 0..5 {
+        let x = Tensor3::random(8, 8, 8, &mut rng).to_f32();
+        handle.run(TransformKind::Dct2, Direction::Forward, vec![x]).unwrap();
+    }
+    let (compiles, execs, hits) = handle.stats().unwrap();
+    assert_eq!(compiles, 1, "should compile once");
+    assert_eq!(execs, 5);
+    assert_eq!(hits, 4, "subsequent runs must hit the cache");
+}
+
+#[test]
+fn missing_variant_is_clean_error() {
+    if !artifacts_available() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let svc = service();
+    let handle = svc.handle();
+    // 7x7x7 is not in the default variant set
+    let x = Tensor3::<f32>::zeros(7, 7, 7);
+    let err = handle
+        .run(TransformKind::Dct2, Direction::Forward, vec![x])
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("no artifact"), "unexpected error: {msg}");
+}
+
+#[test]
+fn pjrt_agrees_with_simulator() {
+    if !artifacts_available() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    use triada::sim::{self, SimConfig};
+    let svc = service();
+    let handle = svc.handle();
+    let mut rng = Rng::new(10);
+    let x = Tensor3::random(16, 16, 16, &mut rng);
+    let cs = gemt::CoeffSet::forward(TransformKind::Dht, 16, 16, 16);
+    let sim_out = sim::simulate(&x, &cs, &SimConfig::esop((32, 32, 32)));
+    let pjrt_out = handle
+        .run(TransformKind::Dht, Direction::Forward, vec![x.to_f32()])
+        .unwrap();
+    let diff = pjrt_out[0].to_f64().max_abs_diff(&sim_out.result);
+    assert!(diff < 1e-3, "device sim vs AOT artifact: {diff}");
+}

@@ -1,0 +1,314 @@
+//! Property-based integration tests over the whole algorithm stack
+//! (DESIGN.md §5 invariants), using the in-tree `proptest` substrate.
+
+use triada::gemt::parenthesize::{gemt_ordered, ParenOrder};
+use triada::gemt::{self, gemt_inner, gemt_naive, gemt_outer, CoeffSet};
+use triada::proptest::run_prop;
+use triada::sim::{self, SimConfig};
+use triada::tensor::{sparsify, Mat, Tensor3};
+use triada::transforms::TransformKind;
+use triada::{prop_assert, prop_assert_close};
+
+fn random_cs(g: &mut triada::proptest::Gen, n1: usize, n2: usize, n3: usize) -> CoeffSet<f64> {
+    CoeffSet::new(
+        Mat::random(n1, n1, g.rng()),
+        Mat::random(n2, n2, g.rng()),
+        Mat::random(n3, n3, g.rng()),
+    )
+}
+
+#[test]
+fn prop_forward_inverse_identity_all_kinds() {
+    run_prop("forward∘inverse = id", 40, |g| {
+        let kind = *g.choose(&TransformKind::REAL);
+        let shape = if kind == TransformKind::Dwht {
+            (g.pow2_in(1, 8), g.pow2_in(1, 8), g.pow2_in(1, 8))
+        } else {
+            g.shape_in(1, 9)
+        };
+        let x = Tensor3::random(shape.0, shape.1, shape.2, g.rng());
+        let y = gemt::dxt3d_forward(&x, kind);
+        let back = gemt::dxt3d_inverse(&y, kind);
+        prop_assert!(
+            x.max_abs_diff(&back) < 1e-8,
+            "{} roundtrip failed at {shape:?}: {}",
+            kind.name(),
+            x.max_abs_diff(&back)
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parseval_isometry() {
+    run_prop("Parseval", 30, |g| {
+        let kind = *g.choose(&[TransformKind::Dct2, TransformKind::Dht]);
+        let (n1, n2, n3) = g.shape_in(1, 10);
+        let x = Tensor3::random(n1, n2, n3, g.rng());
+        let y = gemt::dxt3d_forward(&x, kind);
+        prop_assert_close!(x.frob_norm(), y.frob_norm(), 1e-8);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_three_formulations_agree() {
+    run_prop("naive == inner == outer", 30, |g| {
+        let (n1, n2, n3) = g.shape_in(1, 8);
+        let x = Tensor3::random(n1, n2, n3, g.rng());
+        let cs = random_cs(g, n1, n2, n3);
+        let a = gemt_naive(&x, &cs);
+        let b = gemt_inner(&x, &cs);
+        let c = gemt_outer(&x, &cs);
+        prop_assert!(a.max_abs_diff(&b) < 1e-9, "inner diverged");
+        prop_assert!(a.max_abs_diff(&c) < 1e-9, "outer diverged");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_all_six_parenthesizations_agree() {
+    run_prop("6 parenthesizations", 25, |g| {
+        let (n1, n2, n3) = g.shape_in(1, 7);
+        // rectangular outputs too
+        let (k1, k2, k3) = g.shape_in(1, 7);
+        let x = Tensor3::random(n1, n2, n3, g.rng());
+        let cs = CoeffSet::new(
+            Mat::random(n1, k1, g.rng()),
+            Mat::random(n2, k2, g.rng()),
+            Mat::random(n3, k3, g.rng()),
+        );
+        let reference = gemt_naive(&x, &cs);
+        for order in ParenOrder::ALL {
+            let got = gemt_ordered(&x, &cs, order);
+            prop_assert!(got.max_abs_diff(&reference) < 1e-9, "{order:?} diverged");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_matches_reference_and_step_count() {
+    run_prop("sim == ref, steps == ΣN", 25, |g| {
+        let (n1, n2, n3) = g.shape_in(1, 8);
+        let x = Tensor3::random(n1, n2, n3, g.rng());
+        let cs = random_cs(g, n1, n2, n3);
+        let out = sim::simulate(&x, &cs, &SimConfig::dense((8, 8, 8)));
+        prop_assert!(
+            out.result.max_abs_diff(&gemt_naive(&x, &cs)) < 1e-9,
+            "sim result diverged"
+        );
+        prop_assert!(
+            out.counters.time_steps == (n1 + n2 + n3) as u64,
+            "steps {} != {}",
+            out.counters.time_steps,
+            n1 + n2 + n3
+        );
+        // dense closed-form MACs
+        prop_assert!(
+            out.counters.macs == gemt::three_stage_macs(n1, n2, n3, n1, n2, n3),
+            "mac counter mismatch"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_esop_exactness_and_savings() {
+    run_prop("esop == dense result; work monotone in sparsity", 20, |g| {
+        let (n1, n2, n3) = g.shape_in(2, 8);
+        let mut x = Tensor3::random(n1, n2, n3, g.rng());
+        let s = g.f64_in(0.0, 0.95);
+        sparsify(&mut x, s, g.rng());
+        let cs = random_cs(g, n1, n2, n3);
+        let dense = sim::simulate(&x, &cs, &SimConfig::dense((8, 8, 8)));
+        let esop = sim::simulate(&x, &cs, &SimConfig::esop((8, 8, 8)));
+        prop_assert!(
+            esop.result.max_abs_diff(&dense.result) == 0.0,
+            "ESOP changed numerics"
+        );
+        prop_assert!(esop.counters.macs <= dense.counters.macs, "macs grew");
+        prop_assert!(esop.energy <= dense.energy + 1e-9, "energy grew");
+        prop_assert!(
+            esop.counters.macs + esop.counters.macs_skipped
+                == dense.counters.macs + dense.counters.macs_skipped,
+            "mac accounting leak"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tiling_matches_untiled() {
+    run_prop("tiled == untiled", 15, |g| {
+        let (n1, n2, n3) = g.shape_in(3, 9);
+        let x = Tensor3::random(n1, n2, n3, g.rng());
+        let cs = random_cs(g, n1, n2, n3);
+        let small_grid = (g.usize_in(2, 4), g.usize_in(2, 4), g.usize_in(2, 4));
+        let tiled = sim::simulate(&x, &cs, &SimConfig::dense(small_grid));
+        let want = gemt_naive(&x, &cs);
+        prop_assert!(
+            tiled.result.max_abs_diff(&want) < 1e-8,
+            "tiled result diverged (grid {small_grid:?})"
+        );
+        prop_assert!(tiled.counters.tiles >= 1, "tile counter");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fft_matches_gemt_dft() {
+    use triada::fft::fft3d;
+    use triada::gemt::split::{dft3d_complex, pack_complex};
+    run_prop("fft3d == gemt dft", 15, |g| {
+        let (n1, n2, n3) = g.shape_in(1, 9);
+        let re = Tensor3::random(n1, n2, n3, g.rng());
+        let im = Tensor3::random(n1, n2, n3, g.rng());
+        let z = pack_complex(&re, &im);
+        let a = fft3d(&z);
+        let b = dft3d_complex(&z, false);
+        prop_assert!(a.max_abs_diff(&b) < 1e-8, "fft diverged from gemt dft");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_affine_accumulation_semantics() {
+    // Eq. (1)'s `+=` form: out initialized nonzero must shift the result.
+    run_prop("affine +=", 15, |g| {
+        let (n1, n2, n3) = g.shape_in(1, 6);
+        let x = Tensor3::random(n1, n2, n3, g.rng());
+        let cs = random_cs(g, n1, n2, n3);
+        let bias = g.f64_in(-2.0, 2.0);
+        let mut out = Tensor3::from_fn(n1, n2, n3, |_, _, _| bias);
+        gemt::naive::gemt_naive_into(&x, &cs, &mut out);
+        let plain = gemt_naive(&x, &cs);
+        for i in 0..n1 {
+            for j in 0..n2 {
+                for k in 0..n3 {
+                    prop_assert_close!(out.get(i, j, k), plain.get(i, j, k) + bias, 1e-9);
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dft_shift_theorem() {
+    // Circularly shifting the input multiplies spectrum magnitudes by 1
+    // (|X_k| invariant) — a classic DFT identity, checked through the
+    // split-complex GEMT path.
+    use triada::gemt::split::{dft3d_split, pack_complex};
+    run_prop("DFT shift theorem", 15, |g| {
+        let (n1, n2, n3) = g.shape_in(2, 7);
+        let x = Tensor3::random(n1, n2, n3, g.rng());
+        let (s1, s2, s3) = (
+            g.usize_in(0, n1 - 1),
+            g.usize_in(0, n2 - 1),
+            g.usize_in(0, n3 - 1),
+        );
+        let shifted = Tensor3::from_fn(n1, n2, n3, |i, j, k| {
+            x.get((i + s1) % n1, (j + s2) % n2, (k + s3) % n3)
+        });
+        let zero = Tensor3::zeros(n1, n2, n3);
+        let (ar, ai) = dft3d_split(&x, &zero, false);
+        let (br, bi) = dft3d_split(&shifted, &zero, false);
+        let a = pack_complex(&ar, &ai);
+        let b = pack_complex(&br, &bi);
+        for i in 0..n1 {
+            for j in 0..n2 {
+                for k in 0..n3 {
+                    prop_assert_close!(a.get(i, j, k).abs(), b.get(i, j, k).abs(), 1e-8);
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fft_linearity() {
+    use triada::fft::fft;
+    use triada::tensor::Complex64;
+    run_prop("FFT linearity", 20, |g| {
+        let n = g.usize_in(1, 40);
+        let a: Vec<Complex64> = (0..n)
+            .map(|_| Complex64::new(g.f64_in(-1.0, 1.0), g.f64_in(-1.0, 1.0)))
+            .collect();
+        let b: Vec<Complex64> = (0..n)
+            .map(|_| Complex64::new(g.f64_in(-1.0, 1.0), g.f64_in(-1.0, 1.0)))
+            .collect();
+        let alpha = Complex64::new(g.f64_in(-2.0, 2.0), g.f64_in(-2.0, 2.0));
+        let combo: Vec<Complex64> =
+            a.iter().zip(&b).map(|(&x, &y)| x * alpha + y).collect();
+        let fa = fft(&a);
+        let fb = fft(&b);
+        let fc = fft(&combo);
+        for i in 0..n {
+            let want = fa[i] * alpha + fb[i];
+            prop_assert!((fc[i] - want).abs() < 1e-9, "linearity broke at bin {i}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_transform_linearity() {
+    // The whole 3D transform is linear: T(αx + y) = αT(x) + T(y).
+    run_prop("3D-DXT linearity", 20, |g| {
+        let kind = *g.choose(&[TransformKind::Dct2, TransformKind::Dht, TransformKind::Dst1]);
+        let (n1, n2, n3) = g.shape_in(1, 8);
+        let x = Tensor3::random(n1, n2, n3, g.rng());
+        let y = Tensor3::random(n1, n2, n3, g.rng());
+        let alpha = g.f64_in(-3.0, 3.0);
+        let combo = x.scale(alpha).add(&y);
+        let t_combo = gemt::dxt3d_forward(&combo, kind);
+        let want = gemt::dxt3d_forward(&x, kind)
+            .scale(alpha)
+            .add(&gemt::dxt3d_forward(&y, kind));
+        prop_assert!(t_combo.max_abs_diff(&want) < 1e-8, "{} not linear", kind.name());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lower_dim_transforms_embed() {
+    // 2D/1D convenience wrappers equal the 3D machinery on degenerate axes.
+    use triada::gemt::{dxt1d_forward, dxt2d_forward};
+    run_prop("1D/2D embedding", 20, |g| {
+        let kind = *g.choose(&[TransformKind::Dct2, TransformKind::Dht, TransformKind::Dst1]);
+        let (r, c) = (g.usize_in(1, 9), g.usize_in(1, 9));
+        let m = Mat::random(r, c, g.rng());
+        let got = dxt2d_forward(&m, kind);
+        // brute force: y = C1ᵀ m C3
+        let c1 = triada::transforms::forward_matrix(kind, r);
+        let c3 = triada::transforms::forward_matrix(kind, c);
+        let want = c1.transpose().matmul(&m).matmul(&c3);
+        prop_assert!(got.max_abs_diff(&want) < 1e-9, "2D mismatch");
+        let v: Vec<f64> = (0..r).map(|_| g.f64_in(-1.0, 1.0)).collect();
+        let got1 = dxt1d_forward(&v, kind);
+        for (k, gv) in got1.iter().enumerate() {
+            let want: f64 = (0..r).map(|n| v[n] * c1.get(n, k)).sum();
+            prop_assert_close!(*gv, want, 1e-9);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dwht_transform_is_involutory_in_3d() {
+    // DWHT (and DHT) forward twice = identity, end-to-end in 3D.
+    run_prop("involutory kinds", 15, |g| {
+        let kind = *g.choose(&[TransformKind::Dht, TransformKind::Dwht]);
+        let shape = if kind == TransformKind::Dwht {
+            (g.pow2_in(1, 8), g.pow2_in(1, 8), g.pow2_in(1, 8))
+        } else {
+            g.shape_in(1, 8)
+        };
+        let x = Tensor3::random(shape.0, shape.1, shape.2, g.rng());
+        let twice = gemt::dxt3d_forward(&gemt::dxt3d_forward(&x, kind), kind);
+        prop_assert!(x.max_abs_diff(&twice) < 1e-8, "{} not involutory", kind.name());
+        Ok(())
+    });
+}

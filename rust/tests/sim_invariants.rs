@@ -1,0 +1,177 @@
+//! Deeper simulator invariants: counter accounting identities, trace
+//! consistency, energy monotonicity, Cannon-model sanity, and the
+//! orthogonal-transform behaviour of the device end to end.
+
+use triada::gemt::{self, CoeffSet};
+use triada::sim::counters::{dense_expectation, dense_stage_expectation};
+use triada::sim::{self, Stage, SimConfig};
+use triada::tensor::{sparsify, Mat, Tensor3};
+use triada::transforms::TransformKind;
+use triada::util::Rng;
+
+#[test]
+fn dense_counters_equal_closed_forms_across_shapes() {
+    let mut rng = Rng::new(1);
+    for &(n1, n2, n3) in &[(1, 1, 1), (2, 3, 4), (5, 5, 5), (7, 2, 9), (8, 8, 8)] {
+        let x = Tensor3::random(n1, n2, n3, &mut rng);
+        let cs = CoeffSet::new(
+            Mat::random(n1, n1, &mut rng),
+            Mat::random(n2, n2, &mut rng),
+            Mat::random(n3, n3, &mut rng),
+        );
+        let out = sim::simulate(&x, &cs, &SimConfig::dense((16, 16, 16)));
+        let e = dense_expectation(n1 as u64, n2 as u64, n3 as u64);
+        assert_eq!(out.counters.time_steps, e.steps);
+        assert_eq!(out.counters.macs, e.macs);
+        assert_eq!(out.counters.actuator_elements, e.actuator_elements);
+        assert_eq!(
+            out.counters.line_activations,
+            e.coeff_line_activations + e.x_line_activations,
+            "{n1}x{n2}x{n3}"
+        );
+    }
+}
+
+#[test]
+fn per_stage_expectations_sum_to_paper_totals() {
+    let (n1, n2, n3) = (6u64, 7, 8);
+    let total = dense_expectation(n1, n2, n3);
+    let per: Vec<_> = Stage::ALL
+        .iter()
+        .map(|&s| dense_stage_expectation(s, n1, n2, n3))
+        .collect();
+    assert_eq!(per.iter().map(|e| e.steps).sum::<u64>(), n1 + n2 + n3);
+    assert_eq!(
+        per.iter().map(|e| e.macs).sum::<u64>(),
+        n1 * n2 * n3 * (n1 + n2 + n3)
+    );
+    assert_eq!(total.macs, n1 * n2 * n3 * (n1 + n2 + n3));
+}
+
+#[test]
+fn energy_monotone_decreasing_in_sparsity() {
+    let mut rng = Rng::new(2);
+    let n = 12;
+    let cs = CoeffSet::new(
+        Mat::random(n, n, &mut rng),
+        Mat::random(n, n, &mut rng),
+        Mat::random(n, n, &mut rng),
+    );
+    let mut last = f64::INFINITY;
+    for s in [0.0, 0.3, 0.6, 0.9] {
+        let mut x = Tensor3::random(n, n, n, &mut Rng::new(42));
+        let mut srng = Rng::new(43);
+        sparsify(&mut x, s, &mut srng);
+        let e = sim::simulate(&x, &cs, &SimConfig::esop((16, 16, 16))).energy;
+        assert!(e <= last + 1e-9, "energy increased at sparsity {s}");
+        last = e;
+    }
+}
+
+#[test]
+fn trace_macs_sum_to_counter() {
+    let mut rng = Rng::new(3);
+    let x = Tensor3::random(4, 5, 6, &mut rng);
+    let cs = CoeffSet::new(
+        Mat::random(4, 4, &mut rng),
+        Mat::random(5, 5, &mut rng),
+        Mat::random(6, 6, &mut rng),
+    );
+    let cfg = SimConfig { record_trace: true, ..SimConfig::esop((8, 8, 8)) };
+    let out = sim::simulate(&x, &cs, &cfg);
+    let from_traces: u64 = out.traces.iter().map(|t| t.macs).sum();
+    assert_eq!(from_traces, out.counters.macs);
+    let executed = out.traces.iter().filter(|t| !t.skipped).count() as u64;
+    assert_eq!(executed, out.counters.time_steps);
+}
+
+#[test]
+fn orthogonal_device_roundtrip_via_two_passes() {
+    // run forward on the device, then inverse on the device: identity.
+    let mut rng = Rng::new(4);
+    for kind in [TransformKind::Dct2, TransformKind::Dht] {
+        let (n1, n2, n3) = (5, 6, 4);
+        let x = Tensor3::random(n1, n2, n3, &mut rng);
+        let fwd = sim::simulate(
+            &x,
+            &CoeffSet::forward(kind, n1, n2, n3),
+            &SimConfig::esop((8, 8, 8)),
+        );
+        let back = sim::simulate(
+            &fwd.result,
+            &CoeffSet::inverse(kind, n1, n2, n3),
+            &SimConfig::esop((8, 8, 8)),
+        );
+        assert!(back.result.max_abs_diff(&x) < 1e-9, "{}", kind.name());
+    }
+}
+
+#[test]
+fn identity_transform_streams_maximum_esop_savings() {
+    // Identity coefficient matrices are maximally sparse (N zeros per row
+    // except the pivot): ESOP should reduce MACs to the pivot-only work.
+    let n = 8;
+    let mut rng = Rng::new(5);
+    let x = Tensor3::random(n, n, n, &mut rng);
+    let cs = CoeffSet::forward(TransformKind::Identity, n, n, n);
+    let esop = sim::simulate(&x, &cs, &SimConfig::esop((16, 16, 16)));
+    let dense = sim::simulate(&x, &cs, &SimConfig::dense((16, 16, 16)));
+    assert_eq!(esop.result.max_abs_diff(&x), 0.0, "identity must be exact");
+    assert_eq!(dense.counters.macs, 3 * (n as u64).pow(4));
+    // ESOP: only the diagonal coefficient is nonzero → N³ MACs per stage.
+    assert_eq!(esop.counters.macs, 3 * (n as u64).pow(3));
+}
+
+#[test]
+fn oversized_problem_tiles_and_matches() {
+    let mut rng = Rng::new(6);
+    let x = Tensor3::random(10, 11, 9, &mut rng);
+    let cs = CoeffSet::new(
+        Mat::random(10, 10, &mut rng),
+        Mat::random(11, 11, &mut rng),
+        Mat::random(9, 9, &mut rng),
+    );
+    let out = sim::simulate(&x, &cs, &SimConfig::dense((4, 4, 4)));
+    assert!(out.result.max_abs_diff(&gemt::gemt_naive(&x, &cs)) < 1e-9);
+    assert!(out.counters.tiles > 1);
+}
+
+#[test]
+fn cannon_model_vs_triada_movement_ratio_is_order_n() {
+    use triada::sim::cannon::CannonModel;
+    for n in [8usize, 16, 32] {
+        let mut rng = Rng::new(7);
+        let x = Tensor3::random(n, n, n, &mut rng);
+        let cs = CoeffSet::new(
+            Mat::random(n, n, &mut rng),
+            Mat::random(n, n, &mut rng),
+            Mat::random(n, n, &mut rng),
+        );
+        let triada = sim::simulate(&x, &cs, &SimConfig::dense((32, 32, 32)));
+        let cannon = CannonModel::for_problem(n, n, n);
+        let triada_per_step =
+            triada.counters.line_activations as f64 / triada.counters.time_steps as f64;
+        let ratio = cannon.moves_per_step as f64 / triada_per_step;
+        // two cubes per step vs two planes per step → ratio = N
+        assert!(
+            (ratio - n as f64).abs() < 1e-9,
+            "movement ratio {ratio} != N={n}"
+        );
+    }
+}
+
+#[test]
+fn device_rejects_nothing_it_should_accept() {
+    // Smallest possible problems and grid-exact fits must work.
+    let mut rng = Rng::new(8);
+    for shape in [(1usize, 1usize, 1usize), (1, 8, 1), (4, 4, 4)] {
+        let x = Tensor3::random(shape.0, shape.1, shape.2, &mut rng);
+        let cs = CoeffSet::new(
+            Mat::random(shape.0, shape.0, &mut rng),
+            Mat::random(shape.1, shape.1, &mut rng),
+            Mat::random(shape.2, shape.2, &mut rng),
+        );
+        let out = sim::simulate(&x, &cs, &SimConfig::dense((4, 8, 4)));
+        assert!(out.result.max_abs_diff(&gemt::gemt_naive(&x, &cs)) < 1e-10);
+    }
+}
