@@ -14,9 +14,10 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use triada::bench::Table;
-use triada::coordinator::backend::{Backend, PjrtBackend, ReferenceBackend};
+use triada::coordinator::backend::{Backend, EngineBackend, PjrtBackend, ReferenceBackend};
 use triada::coordinator::batcher::BatchPolicy;
 use triada::coordinator::{Coordinator, CoordinatorConfig, TransformJob};
+use triada::gemt::engine::EngineConfig;
 use triada::runtime::{Direction, PjrtService};
 use triada::tensor::Tensor3;
 use triada::transforms::TransformKind;
@@ -65,6 +66,23 @@ fn main() {
         let (thrpt, p50, p99, mb) = drive(Arc::new(ReferenceBackend), policy, jobs);
         t.row(&[
             "cpu-reference".into(),
+            max_batch.to_string(),
+            format!("{window_ms}ms"),
+            human::rate(thrpt),
+            human::duration(p50),
+            human::duration(p99),
+            format!("{mb:.1}"),
+        ]);
+    }
+
+    // The blocked multi-threaded engine behind the same coordinator —
+    // quantifies the scalar-vs-engine serving gap on identical load.
+    for &(max_batch, window_ms) in &policies {
+        let policy = BatchPolicy { max_batch, window: Duration::from_millis(window_ms) };
+        let backend = Arc::new(EngineBackend::new(EngineConfig::with_threads(2)));
+        let (thrpt, p50, p99, mb) = drive(backend, policy, jobs);
+        t.row(&[
+            "engine (2 threads)".into(),
             max_batch.to_string(),
             format!("{window_ms}ms"),
             human::rate(thrpt),

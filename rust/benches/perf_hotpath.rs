@@ -4,7 +4,8 @@
 //! Run: `cargo bench --bench perf_hotpath`
 
 use triada::bench::{bench, black_box, BenchConfig, Table};
-use triada::gemt::{gemt_outer, mode3_product, CoeffSet};
+use triada::gemt::engine::{gemt_engine_with, EngineConfig};
+use triada::gemt::{gemt_naive, gemt_outer, mode3_product, CoeffSet};
 use triada::sim::{self, SimConfig};
 use triada::tensor::{sparsify, Mat, Tensor3};
 use triada::util::{human, Rng};
@@ -98,4 +99,75 @@ fn main() {
     ]);
 
     t.print();
+
+    // ---- scalar gemt_outer vs gemt::engine, dense 64³ (the tentpole
+    // comparison: measured, not asserted) --------------------------------
+    let n = 64;
+    let xb = Tensor3::random(n, n, n, &mut rng);
+    let cb = CoeffSet::new(
+        Mat::random(n, n, &mut rng),
+        Mat::random(n, n, &mut rng),
+        Mat::random(n, n, &mut rng),
+    );
+    let macs64 = (n as f64).powi(3) * (3 * n) as f64;
+    let mut te = Table::new(
+        "perf: scalar gemt_outer vs gemt::engine, dense 64³",
+        &["path", "median", "p90", "rate", "speedup vs scalar"],
+    );
+    let scalar = bench(&cfg, || {
+        black_box(gemt_outer(black_box(&xb), black_box(&cb)));
+    });
+    te.row(&[
+        "gemt_outer (1 thread)".into(),
+        human::duration(scalar.median_s()),
+        human::duration(scalar.summary.p90),
+        format!("{} MAC/s", human::count(macs64 / scalar.median_s())),
+        "1.00x".into(),
+    ]);
+    for threads in [1usize, 2, 4, 8] {
+        let ecfg = EngineConfig { threads, block: 64 };
+        let m = bench(&cfg, || {
+            black_box(gemt_engine_with(black_box(&xb), black_box(&cb), &ecfg));
+        });
+        te.row(&[
+            format!("engine ({threads} thread{})", if threads == 1 { "" } else { "s" }),
+            human::duration(m.median_s()),
+            human::duration(m.summary.p90),
+            format!("{} MAC/s", human::count(macs64 / m.median_s())),
+            format!("{:.2}x", scalar.median_s() / m.median_s()),
+        ]);
+    }
+    te.print();
+
+    // Numeric parity of the engine against the gemt_naive oracle on dense,
+    // sparse (60 % zeros), and rectangular-coefficient inputs.
+    let ecfg = EngineConfig { threads: 4, block: 64 };
+    let (pn, po) = (16usize, 12usize);
+    let xd = Tensor3::random(pn, pn, pn, &mut rng);
+    let cs_sq = CoeffSet::new(
+        Mat::random(pn, pn, &mut rng),
+        Mat::random(pn, pn, &mut rng),
+        Mat::random(pn, pn, &mut rng),
+    );
+    let mut xs60 = xd.clone();
+    sparsify(&mut xs60, 0.6, &mut rng);
+    let cs_rect = CoeffSet::new(
+        Mat::random(pn, po, &mut rng),
+        Mat::random(pn, po, &mut rng),
+        Mat::random(pn, po, &mut rng),
+    );
+    let cases: [(&str, &Tensor3<f64>, &CoeffSet<f64>); 3] = [
+        ("dense 16³", &xd, &cs_sq),
+        ("sparse 16³ @60%", &xs60, &cs_sq),
+        ("rectangular 16³→12³", &xd, &cs_rect),
+    ];
+    println!("\nengine vs gemt_naive parity (gate: < 1e-10):");
+    for (label, xin, csin) in cases {
+        let diff = gemt_engine_with(xin, csin, &ecfg).max_abs_diff(&gemt_naive(xin, csin));
+        println!("  {label:<22}: max |Δ| = {diff:.3e}");
+        assert!(diff < 1e-10, "{label}: engine diverged from gemt_naive ({diff:.3e})");
+    }
+    let diff64 = gemt_engine_with(&xb, &cb, &ecfg).max_abs_diff(&gemt_outer(&xb, &cb));
+    println!("engine vs scalar 64³ (same summation order): max |Δ| = {diff64:.3e}");
+    assert!(diff64 < 1e-12, "engine diverged from gemt_outer at 64³ ({diff64:.3e})");
 }

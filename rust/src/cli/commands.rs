@@ -5,7 +5,9 @@ use std::sync::Arc;
 use anyhow::{bail, Context};
 
 use super::Args;
-use crate::coordinator::{Coordinator, CoordinatorConfig, ReferenceBackend, SimBackend, TransformJob};
+use crate::coordinator::{
+    Coordinator, CoordinatorConfig, EngineBackend, ReferenceBackend, SimBackend, TransformJob,
+};
 use crate::gemt::{self, CoeffSet};
 use crate::runtime::{Direction, PjrtService};
 use crate::sim::{self, SimConfig};
@@ -25,6 +27,9 @@ COMMANDS:
         --kind dct|dht|dwht|dft  transform family        [dct]
         --shape N1xN2xN3         problem shape           [8x8x8]
         --inverse                inverse transform
+        --engine                 use the blocked multi-threaded engine
+        --threads N              engine worker threads   [auto]
+        --block N                engine panel block size [64]
     simulate                     run the TriADA device simulator
         --kind, --shape          as above
         --sparsity F             zero-fraction of the input [0]
@@ -35,8 +40,11 @@ COMMANDS:
         --artifacts DIR          artifact dir            [artifacts]
         --jobs N                 demo jobs to submit     [64]
         --workers N              worker threads
-        --backend pjrt|reference|sim
-        --config FILE            INI config (section [coordinator])
+        --backend pjrt|reference|sim|engine
+        --engine                 shorthand for --backend engine
+        --threads N              engine worker threads   [auto]
+        --block N                engine panel block size [64]
+        --config FILE            INI config (sections [coordinator], [engine])
     help                         this text
 ";
 
@@ -88,14 +96,44 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Build an [`gemt::engine::EngineConfig`] from CLI overrides on top of a
+/// base (file-derived or default) configuration.
+fn engine_config_from_args(
+    args: &Args,
+    base: gemt::engine::EngineConfig,
+) -> anyhow::Result<gemt::engine::EngineConfig> {
+    let mut cfg = base;
+    cfg.threads = args.opt_usize("threads", cfg.threads)?;
+    cfg.block = args.opt_usize("block", cfg.block)?;
+    anyhow::ensure!(cfg.block > 0, "--block must be positive");
+    Ok(cfg)
+}
+
 fn cmd_transform(args: &Args) -> anyhow::Result<()> {
     let kind = parse_kind(args)?;
     let shape = args.opt_shape("shape", (8, 8, 8))?;
     let inverse = args.flag("inverse");
+    let use_engine = args.flag("engine");
+    if !use_engine {
+        anyhow::ensure!(
+            args.opt("threads").is_none() && args.opt("block").is_none(),
+            "--threads/--block configure the engine path; add --engine"
+        );
+    }
     let mut rng = Rng::new(args.opt_usize("seed", 42)? as u64);
     let x = Tensor3::random(shape.0, shape.1, shape.2, &mut rng);
     let t = Timer::start();
-    let y = if inverse {
+    let y = if use_engine {
+        let engine = gemt::Engine::new(engine_config_from_args(
+            args,
+            gemt::EngineConfig::default(),
+        )?);
+        if inverse {
+            engine.dxt3d_inverse(&x, kind)
+        } else {
+            engine.dxt3d_forward(&x, kind)
+        }
+    } else if inverse {
         gemt::dxt3d_inverse(&x, kind)
     } else {
         gemt::dxt3d_forward(&x, kind)
@@ -103,10 +141,11 @@ fn cmd_transform(args: &Args) -> anyhow::Result<()> {
     let dt = t.elapsed_s();
     let macs = gemt::three_stage_macs(shape.0, shape.1, shape.2, shape.0, shape.1, shape.2);
     println!(
-        "{} {} {:?}: {} | {} MACs | {} | ‖X‖={:.6} ‖Y‖={:.6}",
+        "{} {} {:?} [{}]: {} | {} MACs | {} | ‖X‖={:.6} ‖Y‖={:.6}",
         kind.name(),
         if inverse { "inverse" } else { "forward" },
         shape,
+        if use_engine { "engine" } else { "scalar" },
         human::duration(dt),
         human::count(macs as f64),
         human::rate(macs as f64 / dt),
@@ -117,6 +156,10 @@ fn cmd_transform(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        !args.flag("engine"),
+        "--engine selects the CPU engine for `transform`/`serve`; simulate always runs the device model"
+    );
     let kind = parse_kind(args)?;
     let shape = args.opt_shape("shape", (8, 8, 8))?;
     let grid = args.opt_shape("grid", (128, 128, 128))?;
@@ -163,17 +206,42 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
-    let mut cfg = match args.opt("config") {
-        Some(path) => CoordinatorConfig::from_config(&crate::config::Config::load(path)?)?,
+    let file_cfg = match args.opt("config") {
+        Some(path) => Some(crate::config::Config::load(path)?),
+        None => None,
+    };
+    let mut cfg = match &file_cfg {
+        Some(c) => CoordinatorConfig::from_config(c)?,
         None => CoordinatorConfig::default(),
     };
     if let Some(w) = args.opt("workers") {
         cfg.workers = w.parse().context("--workers")?;
     }
-    let backend_name = args.opt_or("backend", "pjrt");
+    // `--engine` is shorthand for `--backend engine`; reject contradictions
+    // instead of silently picking one.
+    let backend_name = match (args.flag("engine"), args.opt("backend")) {
+        (true, Some(other)) if other != "engine" => {
+            bail!("--engine conflicts with --backend {other}");
+        }
+        (true, _) => "engine",
+        (false, _) => args.opt_or("backend", "pjrt"),
+    };
+    if backend_name != "engine" {
+        anyhow::ensure!(
+            args.opt("threads").is_none() && args.opt("block").is_none(),
+            "--threads/--block configure the engine backend; add --backend engine"
+        );
+    }
     let backend: Arc<dyn crate::coordinator::Backend> = match backend_name {
         "reference" => Arc::new(ReferenceBackend),
         "sim" => Arc::new(SimBackend::new(SimConfig::default())),
+        "engine" => {
+            let base = match &file_cfg {
+                Some(c) => gemt::EngineConfig::from_config(c)?,
+                None => gemt::EngineConfig::default(),
+            };
+            Arc::new(EngineBackend::new(engine_config_from_args(args, base)?))
+        }
         "pjrt" => {
             let dir = args.opt_or("artifacts", "artifacts");
             let service = PjrtService::spawn(dir).with_context(|| {

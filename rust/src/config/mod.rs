@@ -104,6 +104,27 @@ impl Config {
             .map(|(_, k)| k.as_str())
             .collect()
     }
+
+    /// Typed view of the `[engine]` section (the blocked multi-threaded
+    /// 3D-GEMT engine, `gemt::engine`). Validates `block > 0`; `threads = 0`
+    /// is allowed and means auto-detect.
+    pub fn engine_settings(&self) -> anyhow::Result<EngineSettings> {
+        let threads = self.get_usize("engine", "threads")?;
+        let block = self.get_usize("engine", "block")?;
+        if let Some(b) = block {
+            anyhow::ensure!(b > 0, "engine.block must be positive");
+        }
+        Ok(EngineSettings { threads, block })
+    }
+}
+
+/// Parsed `[engine]` keys; `None` means "not set, use the engine default".
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EngineSettings {
+    /// Worker threads (`Some(0)` = explicit auto-detect).
+    pub threads: Option<usize>,
+    /// Summation-step panel height.
+    pub block: Option<usize>,
 }
 
 #[cfg(test)]
@@ -168,5 +189,24 @@ p1 = 64
         c.set("s", "a", "1");
         c.set("s", "b", "2");
         assert_eq!(c.section_keys("s"), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn engine_settings_parse_and_default() {
+        let c = Config::parse("[engine]\nthreads = 4\nblock = 32\n").unwrap();
+        let s = c.engine_settings().unwrap();
+        assert_eq!(s, EngineSettings { threads: Some(4), block: Some(32) });
+        let empty = Config::parse("").unwrap();
+        assert_eq!(empty.engine_settings().unwrap(), EngineSettings::default());
+    }
+
+    #[test]
+    fn engine_settings_validate() {
+        let zero_block = Config::parse("[engine]\nblock = 0\n").unwrap();
+        assert!(zero_block.engine_settings().is_err());
+        let auto_threads = Config::parse("[engine]\nthreads = 0\n").unwrap();
+        assert_eq!(auto_threads.engine_settings().unwrap().threads, Some(0));
+        let junk = Config::parse("[engine]\nthreads = lots\n").unwrap();
+        assert!(junk.engine_settings().is_err());
     }
 }

@@ -21,7 +21,7 @@ pub mod queue;
 pub mod server;
 pub mod worker;
 
-pub use backend::{Backend, ReferenceBackend, SimBackend};
+pub use backend::{Backend, EngineBackend, ReferenceBackend, SimBackend};
 pub use job::{JobId, JobResult, TransformJob};
 pub use metrics::MetricsSnapshot;
-pub use server::{Coordinator, CoordinatorConfig};
+pub use server::{Coordinator, CoordinatorConfig, JobHandle, WaitOutcome};

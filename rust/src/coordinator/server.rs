@@ -52,6 +52,12 @@ impl CoordinatorConfig {
             c.batch.max_batch = b;
         }
         if let Some(ms) = cfg.get_f64("coordinator", "batch_window_ms")? {
+            // Duration::from_secs_f64 panics on negative/NaN/overflowing
+            // input; reject those as config errors instead.
+            anyhow::ensure!(
+                ms.is_finite() && ms >= 0.0,
+                "coordinator.batch_window_ms must be finite and non-negative, got {ms}"
+            );
             c.batch.window = Duration::from_secs_f64(ms / 1000.0);
         }
         Ok(c)
@@ -64,15 +70,33 @@ pub struct JobHandle {
     rx: Receiver<JobResult>,
 }
 
+/// Outcome of a timed wait on a [`JobHandle`] — distinguishes "not done
+/// yet" from "will never be done" so callers can retry vs. give up.
+#[derive(Debug)]
+pub enum WaitOutcome {
+    /// The job completed (successfully or not — see [`JobResult::outputs`]).
+    Ready(JobResult),
+    /// The timeout elapsed; the job is still in flight — wait again.
+    TimedOut,
+    /// The coordinator dropped the job (worker died or shutdown); no result
+    /// will ever arrive.
+    Disconnected,
+}
+
 impl JobHandle {
     /// Block for the result.
     pub fn wait(self) -> anyhow::Result<JobResult> {
         self.rx.recv().context("coordinator dropped the job (shutdown?)")
     }
 
-    /// Block with a timeout.
-    pub fn wait_timeout(&self, timeout: Duration) -> Option<JobResult> {
-        self.rx.recv_timeout(timeout).ok()
+    /// Block with a timeout, reporting *why* no result was returned.
+    pub fn wait_timeout(&self, timeout: Duration) -> WaitOutcome {
+        use std::sync::mpsc::RecvTimeoutError;
+        match self.rx.recv_timeout(timeout) {
+            Ok(res) => WaitOutcome::Ready(res),
+            Err(RecvTimeoutError::Timeout) => WaitOutcome::TimedOut,
+            Err(RecvTimeoutError::Disconnected) => WaitOutcome::Disconnected,
+        }
     }
 }
 
@@ -335,5 +359,45 @@ mod tests {
     fn config_rejects_zero_workers() {
         let cfg = crate::config::Config::parse("[coordinator]\nworkers = 0\n").unwrap();
         assert!(CoordinatorConfig::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn config_rejects_negative_or_nonfinite_batch_window() {
+        for bad in ["-1", "-0.25", "nan", "inf", "-inf"] {
+            let cfg = crate::config::Config::parse(&format!(
+                "[coordinator]\nbatch_window_ms = {bad}\n"
+            ))
+            .unwrap();
+            assert!(
+                CoordinatorConfig::from_config(&cfg).is_err(),
+                "batch_window_ms = {bad} must be rejected"
+            );
+        }
+        // Zero is a legal "flush immediately" window, not a panic.
+        let zero = crate::config::Config::parse("[coordinator]\nbatch_window_ms = 0\n").unwrap();
+        let c = CoordinatorConfig::from_config(&zero).unwrap();
+        assert_eq!(c.batch.window, Duration::ZERO);
+    }
+
+    #[test]
+    fn wait_timeout_times_out_then_delivers() {
+        let c = coordinator(1);
+        let h = c.submit(job(11)).unwrap();
+        // Eventually the result arrives; every pre-delivery poll must be
+        // TimedOut (never Disconnected — the worker pool is healthy).
+        let mut delivered = false;
+        for _ in 0..2000 {
+            match h.wait_timeout(Duration::from_millis(5)) {
+                WaitOutcome::Ready(res) => {
+                    assert!(res.outputs.is_ok());
+                    delivered = true;
+                    break;
+                }
+                WaitOutcome::TimedOut => continue,
+                WaitOutcome::Disconnected => panic!("healthy pool must not disconnect"),
+            }
+        }
+        assert!(delivered, "job never completed");
+        c.shutdown();
     }
 }

@@ -8,11 +8,14 @@
 //! * [`inner`] — the three-stage inner-product chain, Eq. (4.1)–(4.3).
 //! * [`outer`] — the three-stage outer-product (rank-1 update) chain,
 //!   Eq. (6.1)–(6.3) — the formulation TriADA's schedule is isomorphic to.
+//! * [`engine`] — the same chain as a blocked, multi-threaded execution
+//!   engine (the coordinator's serving hot path).
 //!
 //! Plus [`mode_product`] (single rectangular mode-s products, the building
 //! block of Tucker compression/expansion §2.3) and the [`parenthesize`]
 //! module enumerating all six orders of §3.
 
+pub mod engine;
 pub mod inner;
 pub mod lower_dims;
 pub mod mode_product;
@@ -22,6 +25,7 @@ pub mod parenthesize;
 pub mod rect;
 pub mod split;
 
+pub use engine::{gemt_engine, Engine, EngineConfig};
 pub use inner::gemt_inner;
 pub use lower_dims::{dxt1d_forward, dxt1d_inverse, dxt2d_forward, dxt2d_inverse};
 pub use mode_product::{mode1_product, mode2_product, mode3_product};

@@ -55,6 +55,75 @@ fn serve_command_reference_backend_smoke() {
 }
 
 #[test]
+fn transform_command_engine_path() {
+    commands::run(&args(&[
+        "transform", "--kind", "dht", "--shape", "6x5x4", "--engine", "--threads", "2",
+        "--block", "8",
+    ]))
+    .unwrap();
+    // Engine path validates its own knobs.
+    assert!(commands::run(&args(&[
+        "transform", "--engine", "--block", "0",
+    ]))
+    .is_err());
+}
+
+#[test]
+fn serve_command_engine_backend_smoke() {
+    commands::run(&args(&[
+        "serve", "--backend", "engine", "--jobs", "8", "--workers", "2", "--threads", "2",
+    ]))
+    .unwrap();
+}
+
+#[test]
+fn engine_flag_is_serve_backend_shorthand_and_rejected_elsewhere() {
+    // `serve --engine` == `serve --backend engine`.
+    commands::run(&args(&["serve", "--engine", "--jobs", "4", "--workers", "1"])).unwrap();
+    // Contradictory backend selection is an error, not a silent pick.
+    assert!(commands::run(&args(&[
+        "serve", "--engine", "--backend", "sim", "--jobs", "1",
+    ]))
+    .is_err());
+    // Redundant but consistent selection is fine.
+    commands::run(&args(&[
+        "serve", "--engine", "--backend", "engine", "--jobs", "2", "--workers", "1",
+    ]))
+    .unwrap();
+    // simulate never uses the CPU engine; reject instead of ignoring.
+    assert!(commands::run(&args(&["simulate", "--engine"])).is_err());
+    // Engine knobs without the engine path are rejected, never ignored.
+    assert!(commands::run(&args(&["transform", "--threads", "4"])).is_err());
+    assert!(commands::run(&args(&[
+        "serve", "--backend", "reference", "--threads", "4", "--jobs", "1",
+    ]))
+    .is_err());
+}
+
+#[test]
+fn serve_engine_reads_engine_section_from_config() {
+    let dir = std::env::temp_dir().join("triada_cli_engine_cfg_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("engine.ini");
+    std::fs::write(
+        &path,
+        "[coordinator]\nworkers = 2\nqueue_depth = 16\n\n[engine]\nthreads = 2\nblock = 8\n",
+    )
+    .unwrap();
+    commands::run(&args(&[
+        "serve",
+        "--backend",
+        "engine",
+        "--jobs",
+        "6",
+        "--config",
+        path.to_str().unwrap(),
+    ]))
+    .unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn serve_with_config_file() {
     let dir = std::env::temp_dir().join("triada_cli_cfg_test");
     std::fs::create_dir_all(&dir).unwrap();

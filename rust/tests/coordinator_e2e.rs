@@ -1,12 +1,13 @@
 //! Coordinator integration: correctness under concurrency, batching
 //! behaviour, backpressure/load-shedding, failure injection, shutdown.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use triada::coordinator::backend::{Backend, ReferenceBackend, SimBackend};
+use triada::coordinator::backend::{reference_execute, Backend, ReferenceBackend, SimBackend};
 use triada::coordinator::batcher::BatchPolicy;
-use triada::coordinator::{Coordinator, CoordinatorConfig, TransformJob};
+use triada::coordinator::{Coordinator, CoordinatorConfig, TransformJob, WaitOutcome};
 use triada::gemt;
 use triada::runtime::Direction;
 use triada::sim::SimConfig;
@@ -193,4 +194,109 @@ fn backend_names_are_stable() {
     // the metrics/report layer keys on these
     assert_eq!(ReferenceBackend.name(), "cpu-reference");
     assert_eq!(SimBackend::new(SimConfig::default()).name(), "triada-sim");
+}
+
+/// Backend that blocks every job until the gate opens — makes timeout
+/// behaviour deterministic instead of racing a fast reference transform.
+struct GatedBackend {
+    open: Arc<AtomicBool>,
+}
+
+impl Backend for GatedBackend {
+    fn name(&self) -> &'static str {
+        "gated"
+    }
+
+    fn execute(
+        &self,
+        kind: TransformKind,
+        direction: Direction,
+        inputs: &[Tensor3<f32>],
+    ) -> anyhow::Result<Vec<Tensor3<f32>>> {
+        while !self.open.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        reference_execute(kind, direction, inputs)
+    }
+}
+
+/// Backend whose worker dies mid-job — the "coordinator dropped the job"
+/// case `wait_timeout` must distinguish from an ordinary timeout.
+struct PanickingBackend;
+
+impl Backend for PanickingBackend {
+    fn name(&self) -> &'static str {
+        "panicking"
+    }
+
+    fn execute(
+        &self,
+        _kind: TransformKind,
+        _direction: Direction,
+        _inputs: &[Tensor3<f32>],
+    ) -> anyhow::Result<Vec<Tensor3<f32>>> {
+        panic!("injected backend crash (coordinator_e2e)");
+    }
+}
+
+#[test]
+fn wait_timeout_reports_in_flight_jobs_as_timed_out() {
+    let gate = Arc::new(AtomicBool::new(false));
+    let c = Coordinator::start(
+        config(1, 8, 1),
+        Arc::new(GatedBackend { open: gate.clone() }),
+    );
+    let mut rng = Rng::new(40);
+    let x = Tensor3::random(4, 4, 4, &mut rng).to_f32();
+    let h = c
+        .submit(TransformJob::new(TransformKind::Dct2, Direction::Forward, vec![x]))
+        .unwrap();
+    // Gate closed: the job cannot finish, so a short wait must time out —
+    // and must NOT be conflated with a dropped job.
+    match h.wait_timeout(Duration::from_millis(20)) {
+        WaitOutcome::TimedOut => {}
+        other => panic!("expected TimedOut while gated, got {other:?}"),
+    }
+    // Open the gate: the same handle now delivers the result.
+    gate.store(true, Ordering::SeqCst);
+    let mut delivered = false;
+    for _ in 0..2000 {
+        match h.wait_timeout(Duration::from_millis(10)) {
+            WaitOutcome::Ready(res) => {
+                assert!(res.outputs.is_ok());
+                delivered = true;
+                break;
+            }
+            WaitOutcome::TimedOut => continue,
+            WaitOutcome::Disconnected => panic!("job was dropped after gate opened"),
+        }
+    }
+    assert!(delivered, "gated job never completed");
+    c.shutdown();
+}
+
+#[test]
+fn wait_timeout_reports_dropped_jobs_as_disconnected() {
+    let c = Coordinator::start(config(1, 8, 1), Arc::new(PanickingBackend));
+    let mut rng = Rng::new(41);
+    let x = Tensor3::random(4, 4, 4, &mut rng).to_f32();
+    let h = c
+        .submit(TransformJob::new(TransformKind::Dct2, Direction::Forward, vec![x]))
+        .unwrap();
+    // The worker crashes on this job, dropping the reply channel: the
+    // handle must surface Disconnected (never Ready, never an eternal
+    // TimedOut loop).
+    let mut disconnected = false;
+    for _ in 0..2000 {
+        match h.wait_timeout(Duration::from_millis(10)) {
+            WaitOutcome::Disconnected => {
+                disconnected = true;
+                break;
+            }
+            WaitOutcome::TimedOut => continue,
+            WaitOutcome::Ready(res) => panic!("crashed worker produced result {}", res.id),
+        }
+    }
+    assert!(disconnected, "dropped job never reported Disconnected");
+    c.shutdown();
 }

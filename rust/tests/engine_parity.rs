@@ -1,0 +1,145 @@
+//! Engine ↔ scalar parity and end-to-end wiring of the blocked
+//! multi-threaded 3D-GEMT engine: numerics against the `gemt_naive` oracle
+//! on dense / sparse / rectangular inputs, determinism across thread
+//! counts, the coordinator backend, and the `[engine]` config path.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use triada::config::Config;
+use triada::coordinator::batcher::BatchPolicy;
+use triada::coordinator::{Coordinator, CoordinatorConfig, EngineBackend, TransformJob};
+use triada::gemt::engine::{gemt_engine_with, Engine, EngineConfig};
+use triada::gemt::{self, gemt_naive, gemt_outer, CoeffSet};
+use triada::runtime::Direction;
+use triada::tensor::{sparsify, Mat, Tensor3};
+use triada::transforms::TransformKind;
+use triada::util::Rng;
+
+fn square_case(n: usize, seed: u64) -> (Tensor3<f64>, CoeffSet<f64>) {
+    let mut rng = Rng::new(seed);
+    let x = Tensor3::random(n, n, n, &mut rng);
+    let cs = CoeffSet::new(
+        Mat::random(n, n, &mut rng),
+        Mat::random(n, n, &mut rng),
+        Mat::random(n, n, &mut rng),
+    );
+    (x, cs)
+}
+
+#[test]
+fn dense_parity_with_naive() {
+    let (x, cs) = square_case(10, 600);
+    for threads in [1usize, 2, 4] {
+        let got = gemt_engine_with(&x, &cs, &EngineConfig::with_threads(threads));
+        assert!(
+            got.max_abs_diff(&gemt_naive(&x, &cs)) < 1e-10,
+            "dense parity failed at {threads} threads"
+        );
+    }
+}
+
+#[test]
+fn sparse_60pct_parity_with_naive() {
+    let (mut x, cs) = square_case(10, 601);
+    let mut rng = Rng::new(42);
+    sparsify(&mut x, 0.6, &mut rng);
+    let got = gemt_engine_with(&x, &cs, &EngineConfig::with_threads(4));
+    assert!(got.max_abs_diff(&gemt_naive(&x, &cs)) < 1e-10);
+}
+
+#[test]
+fn rectangular_parity_with_naive() {
+    let mut rng = Rng::new(602);
+    let x = Tensor3::random(6, 9, 4, &mut rng);
+    let cs = CoeffSet::new(
+        Mat::random(6, 3, &mut rng),  // compression
+        Mat::random(9, 12, &mut rng), // expansion
+        Mat::random(4, 4, &mut rng),
+    );
+    let got = gemt_engine_with(&x, &cs, &EngineConfig::with_threads(3));
+    assert_eq!(got.shape(), (3, 12, 4));
+    assert!(got.max_abs_diff(&gemt_naive(&x, &cs)) < 1e-10);
+}
+
+#[test]
+fn bitwise_deterministic_across_parallelism() {
+    // The engine fixes the per-row summation order, so thread count and
+    // block size must not change a single bit of the result.
+    let (x, cs) = square_case(12, 603);
+    let reference = gemt_engine_with(&x, &cs, &EngineConfig { threads: 1, block: 1 });
+    for threads in [2usize, 3, 8] {
+        for block in [1usize, 5, 64, 1024] {
+            let got = gemt_engine_with(&x, &cs, &EngineConfig { threads, block });
+            assert_eq!(
+                got.max_abs_diff(&reference),
+                0.0,
+                "nondeterminism at threads={threads} block={block}"
+            );
+        }
+    }
+    // ... and matches the scalar outer-product chain to full precision.
+    assert!(reference.max_abs_diff(&gemt_outer(&x, &cs)) < 1e-12);
+}
+
+#[test]
+fn engine_dxt_agrees_with_scalar_dxt() {
+    let mut rng = Rng::new(604);
+    let x = Tensor3::random(7, 5, 6, &mut rng);
+    let engine = Engine::new(EngineConfig::with_threads(2));
+    for kind in [TransformKind::Dct2, TransformKind::Dht, TransformKind::Dst1] {
+        let a = engine.dxt3d_forward(&x, kind);
+        let b = gemt::dxt3d_forward(&x, kind);
+        assert!(a.max_abs_diff(&b) < 1e-12, "{}", kind.name());
+        let back = engine.dxt3d_inverse(&a, kind);
+        assert!(back.max_abs_diff(&x) < 1e-9, "{} roundtrip", kind.name());
+    }
+}
+
+#[test]
+fn engine_backend_serves_through_coordinator() {
+    let cfg = CoordinatorConfig {
+        workers: 2,
+        queue_depth: 32,
+        batch: BatchPolicy { max_batch: 4, window: Duration::from_millis(1) },
+    };
+    let c = Coordinator::start(cfg, Arc::new(EngineBackend::new(EngineConfig::with_threads(2))));
+    assert_eq!(c.backend_name(), "engine");
+    let mut rng = Rng::new(605);
+    let mut cases = Vec::new();
+    for i in 0..12 {
+        let x = Tensor3::random(5, 4, 6, &mut rng);
+        let dir = if i % 3 == 0 { Direction::Inverse } else { Direction::Forward };
+        let h = c
+            .submit(TransformJob::new(TransformKind::Dht, dir, vec![x.to_f32()]))
+            .unwrap();
+        cases.push((x, dir, h));
+    }
+    for (x, dir, h) in cases {
+        let out = h.wait().unwrap().outputs.unwrap();
+        let x32 = x.to_f32().to_f64();
+        let want = match dir {
+            Direction::Forward => gemt::dxt3d_forward(&x32, TransformKind::Dht),
+            Direction::Inverse => gemt::dxt3d_inverse(&x32, TransformKind::Dht),
+        };
+        assert!(out[0].to_f64().max_abs_diff(&want) < 1e-3);
+    }
+    c.shutdown();
+}
+
+#[test]
+fn engine_config_loads_from_ini_with_defaults_and_validation() {
+    let cfg = Config::parse("[engine]\nthreads = 3\nblock = 16\n").unwrap();
+    assert_eq!(
+        EngineConfig::from_config(&cfg).unwrap(),
+        EngineConfig { threads: 3, block: 16 }
+    );
+    // Partial sections keep engine defaults for unset keys.
+    let partial = Config::parse("[engine]\nthreads = 2\n").unwrap();
+    let e = EngineConfig::from_config(&partial).unwrap();
+    assert_eq!(e.threads, 2);
+    assert_eq!(e.block, EngineConfig::default().block);
+    // Invalid block rejected at parse time, not deep in the hot path.
+    let bad = Config::parse("[engine]\nblock = 0\n").unwrap();
+    assert!(EngineConfig::from_config(&bad).is_err());
+}

@@ -1,6 +1,12 @@
 //! Property-based integration tests over the whole algorithm stack
 //! (DESIGN.md §5 invariants), using the in-tree `proptest` substrate.
 
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use triada::coordinator::queue::BoundedQueue;
+use triada::gemt::engine::{gemt_engine_with, EngineConfig};
 use triada::gemt::parenthesize::{gemt_ordered, ParenOrder};
 use triada::gemt::{self, gemt_inner, gemt_naive, gemt_outer, CoeffSet};
 use triada::proptest::run_prop;
@@ -62,6 +68,75 @@ fn prop_three_formulations_agree() {
         let c = gemt_outer(&x, &cs);
         prop_assert!(a.max_abs_diff(&b) < 1e-9, "inner diverged");
         prop_assert!(a.max_abs_diff(&c) < 1e-9, "outer diverged");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_engine_matches_outer_for_any_threads_and_blocks() {
+    run_prop("engine == outer", 25, |g| {
+        let (n1, n2, n3) = g.shape_in(1, 8);
+        let (k1, k2, k3) = g.shape_in(1, 8);
+        let mut x = Tensor3::random(n1, n2, n3, g.rng());
+        if g.rng().bool(0.5) {
+            let s = g.f64_in(0.0, 0.9);
+            sparsify(&mut x, s, g.rng());
+        }
+        let cs = CoeffSet::new(
+            Mat::random(n1, k1, g.rng()),
+            Mat::random(n2, k2, g.rng()),
+            Mat::random(n3, k3, g.rng()),
+        );
+        let want = gemt_outer(&x, &cs);
+        let threads = g.usize_in(1, 4);
+        let block = *g.choose(&[1usize, 2, 3, 16, 64]);
+        let got = gemt_engine_with(&x, &cs, &EngineConfig { threads, block });
+        prop_assert!(
+            got.max_abs_diff(&want) < 1e-12,
+            "engine diverged (threads={threads}, block={block})"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bounded_queue_close_rejects_blocked_pushers_and_drains() {
+    // Satellite invariant: concurrent pushers blocked on a FULL queue must
+    // all receive Err(item) back after close(), while every item already
+    // accepted still drains, in order, before pops report closure.
+    run_prop("queue close/drain", 10, |g| {
+        let cap = g.usize_in(1, 4);
+        let pushers = g.usize_in(2, 6);
+        let q = Arc::new(BoundedQueue::new(cap));
+        for i in 0..cap {
+            q.push(i).map_err(|_| "push on open queue failed".to_string())?;
+        }
+        let handles: Vec<_> = (0..pushers)
+            .map(|p| {
+                let q = q.clone();
+                // Queue is at capacity: this blocks (or observes the close).
+                thread::spawn(move || q.push(1000 + p))
+            })
+            .collect();
+        // Give the pushers time to park on the not_full condvar.
+        thread::sleep(Duration::from_millis(20));
+        q.close();
+        for h in handles {
+            match h.join().expect("pusher panicked") {
+                Err(item) => prop_assert!(item >= 1000, "stranger item {item} bounced"),
+                Ok(()) => return Err("blocked pusher succeeded after close".to_string()),
+            }
+        }
+        let mut drained = Vec::new();
+        while let Some(v) = q.pop() {
+            drained.push(v);
+        }
+        prop_assert!(
+            drained == (0..cap).collect::<Vec<_>>(),
+            "accepted items lost or reordered: {drained:?} (cap {cap})"
+        );
+        prop_assert!(q.pop().is_none(), "closed+drained queue must stay closed");
+        prop_assert!(q.push(7).is_err(), "closed queue must reject new pushes");
         Ok(())
     });
 }

@@ -1,0 +1,210 @@
+//! Offline stand-in for the `xla` PJRT bindings.
+//!
+//! The production image links the real `xla` crate (PJRT CPU plugin); this
+//! stub keeps the workspace compiling — and every PJRT-*optional* code path
+//! testable — when the bindings are absent. The contract:
+//!
+//! * [`PjRtClient::cpu`] always fails with a clear "unavailable" error, so
+//!   callers take their documented fallback (`serve --backend reference`,
+//!   artifact-gated tests skip, `info` prints "pjrt: unavailable").
+//! * [`Literal`] is a real host-side container: `vec1`/`reshape`/`to_vec`
+//!   round-trip tensor data exactly, so conversion code stays covered.
+//! * Device-side entry points ([`PjRtLoadedExecutable::execute`],
+//!   [`PjRtBuffer::to_literal_sync`]) are unreachable without a client and
+//!   error defensively if called.
+
+use std::fmt;
+
+/// Error type mirroring the real crate's: displayable, `std::error::Error`,
+/// `Send + Sync` so it threads through `anyhow` context chains.
+#[derive(Clone, Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Error {
+        Error(format!(
+            "{what}: xla PJRT bindings are not available in this build (offline stub)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types a [`Literal`] can expose its buffer as.
+pub trait NativeType: Copy {
+    fn from_f32(v: f32) -> Self;
+    fn to_f32(self) -> f32;
+}
+
+impl NativeType for f32 {
+    fn from_f32(v: f32) -> f32 {
+        v
+    }
+    fn to_f32(self) -> f32 {
+        self
+    }
+}
+
+impl NativeType for f64 {
+    fn from_f32(v: f32) -> f64 {
+        v as f64
+    }
+    fn to_f32(self) -> f32 {
+        self as f32
+    }
+}
+
+/// Host-side typed array (f32 storage — the only dtype the artifacts use).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            data: data.iter().map(|v| v.to_f32()).collect(),
+            dims: vec![data.len() as i64],
+        }
+    }
+
+    /// Reshape without copying semantics; element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.data.len() {
+            return Err(Error(format!(
+                "cannot reshape {} elements to {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy the buffer out as `T`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+
+    /// Destructure a tuple literal. Stub literals are never tuples (they
+    /// only arise from device execution, which the stub cannot perform).
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable("Literal::to_tuple"))
+    }
+
+    /// Dimensions of the literal.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module. The stub validates that the file exists and is
+/// readable so missing-artifact errors surface with the real message shape.
+#[derive(Clone, Debug)]
+pub struct HloModuleProto {
+    _text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        match std::fs::read_to_string(path) {
+            Ok(text) => Ok(HloModuleProto { _text: text }),
+            Err(e) => Err(Error(format!("reading HLO text {path}: {e}"))),
+        }
+    }
+}
+
+/// A computation wrapping a parsed module.
+#[derive(Clone, Debug)]
+pub struct XlaComputation {
+    _proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _proto: proto.clone() }
+    }
+}
+
+/// Device-resident buffer handle. Unreachable without a client.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle. Unreachable without a client.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client. [`PjRtClient::cpu`] is the only constructor and always
+/// fails in the stub, which is what gates every downstream path.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "offline-stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let shaped = lit.reshape(&[2, 3]).unwrap();
+        assert_eq!(shaped.dims(), &[2, 3]);
+        assert_eq!(shaped.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(lit.reshape(&[7]).is_err());
+    }
+
+    #[test]
+    fn client_is_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("offline stub"));
+    }
+
+    #[test]
+    fn missing_hlo_file_is_error() {
+        assert!(HloModuleProto::from_text_file("/nonexistent/never.hlo.txt").is_err());
+    }
+}
