@@ -14,10 +14,13 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use triada::bench::Table;
-use triada::coordinator::backend::{Backend, EngineBackend, PjrtBackend, ReferenceBackend};
+use triada::coordinator::backend::{
+    Backend, EngineBackend, PjrtBackend, ReferenceBackend, ShardedEngineBackend,
+};
 use triada::coordinator::batcher::BatchPolicy;
 use triada::coordinator::{Coordinator, CoordinatorConfig, TransformJob};
 use triada::gemt::engine::EngineConfig;
+use triada::gemt::shard::ShardConfig;
 use triada::runtime::{Direction, PjrtService};
 use triada::tensor::Tensor3;
 use triada::transforms::TransformKind;
@@ -83,6 +86,28 @@ fn main() {
         let (thrpt, p50, p99, mb) = drive(backend, policy, jobs);
         t.row(&[
             "engine (2 threads)".into(),
+            max_batch.to_string(),
+            format!("{window_ms}ms"),
+            human::rate(thrpt),
+            human::duration(p50),
+            human::duration(p99),
+            format!("{mb:.1}"),
+        ]);
+    }
+
+    // The sharding layer under the same load with a tile bound below the
+    // job shape (8³, tile 4): every request block-decomposes across engine
+    // tile passes — quantifies the decomposition overhead at serving time
+    // against both the scalar reference and the fused engine.
+    for &(max_batch, window_ms) in &policies {
+        let policy = BatchPolicy { max_batch, window: Duration::from_millis(window_ms) };
+        let backend = Arc::new(ShardedEngineBackend::new(ShardConfig {
+            max_tile: 4,
+            engine: EngineConfig::with_threads(2),
+        }));
+        let (thrpt, p50, p99, mb) = drive(backend, policy, jobs);
+        t.row(&[
+            "sharded (2 threads, tile 4)".into(),
             max_batch.to_string(),
             format!("{window_ms}ms"),
             human::rate(thrpt),

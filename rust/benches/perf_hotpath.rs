@@ -5,6 +5,7 @@
 
 use triada::bench::{bench, black_box, BenchConfig, Table};
 use triada::gemt::engine::{gemt_engine_with, EngineConfig};
+use triada::gemt::shard::{gemt_sharded_with, ShardConfig};
 use triada::gemt::{gemt_naive, gemt_outer, mode3_product, CoeffSet};
 use triada::sim::{self, SimConfig};
 use triada::tensor::{sparsify, Mat, Tensor3};
@@ -137,6 +138,23 @@ fn main() {
             format!("{:.2}x", scalar.median_s() / m.median_s()),
         ]);
     }
+    // The sharding layer on the same 64³ problem with max_tile = 32: every
+    // dimension is oversized, so all three stages run as repeated engine
+    // tile passes — quantifies the decomposition overhead vs the fused
+    // engine and the speedup vs the scalar chain.
+    for threads in [4usize, 8] {
+        let scfg = ShardConfig { max_tile: 32, engine: EngineConfig { threads, block: 64 } };
+        let m = bench(&cfg, || {
+            black_box(gemt_sharded_with(black_box(&xb), black_box(&cb), &scfg));
+        });
+        te.row(&[
+            format!("sharded ({threads} threads, tile 32)"),
+            human::duration(m.median_s()),
+            human::duration(m.summary.p90),
+            format!("{} MAC/s", human::count(macs64 / m.median_s())),
+            format!("{:.2}x", scalar.median_s() / m.median_s()),
+        ]);
+    }
     te.print();
 
     // Numeric parity of the engine against the gemt_naive oracle on dense,
@@ -167,7 +185,12 @@ fn main() {
         println!("  {label:<22}: max |Δ| = {diff:.3e}");
         assert!(diff < 1e-10, "{label}: engine diverged from gemt_naive ({diff:.3e})");
     }
-    let diff64 = gemt_engine_with(&xb, &cb, &ecfg).max_abs_diff(&gemt_outer(&xb, &cb));
+    let outer64 = gemt_outer(&xb, &cb);
+    let diff64 = gemt_engine_with(&xb, &cb, &ecfg).max_abs_diff(&outer64);
     println!("engine vs scalar 64³ (same summation order): max |Δ| = {diff64:.3e}");
     assert!(diff64 < 1e-12, "engine diverged from gemt_outer at 64³ ({diff64:.3e})");
+    let scfg = ShardConfig { max_tile: 32, engine: ecfg };
+    let diff_shard = gemt_sharded_with(&xb, &cb, &scfg).max_abs_diff(&outer64);
+    println!("sharded (tile 32) vs scalar 64³: max |Δ| = {diff_shard:.3e}");
+    assert_eq!(diff_shard, 0.0, "sharded path must be bit-identical to gemt_outer");
 }

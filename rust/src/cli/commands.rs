@@ -6,7 +6,8 @@ use anyhow::{bail, Context};
 
 use super::Args;
 use crate::coordinator::{
-    Coordinator, CoordinatorConfig, EngineBackend, ReferenceBackend, SimBackend, TransformJob,
+    Coordinator, CoordinatorConfig, EngineBackend, ReferenceBackend, ShardedEngineBackend,
+    SimBackend, TransformJob,
 };
 use crate::gemt::{self, CoeffSet};
 use crate::runtime::{Direction, PjrtService};
@@ -23,13 +24,16 @@ USAGE:
 
 COMMANDS:
     info                         platform, artifact, and build information
-    transform                    run one 3D transform on the CPU reference
-        --kind dct|dht|dwht|dft  transform family        [dct]
+    transform                    run one 3D transform (any shape)
+        --kind dct|dht|dst1|dwht|dft  transform family   [dct]
         --shape N1xN2xN3         problem shape           [8x8x8]
         --inverse                inverse transform
-        --engine                 use the blocked multi-threaded engine
+        --engine                 use the blocked multi-threaded engine;
+                                 oversized shapes shard across tile passes
         --threads N              engine worker threads   [auto]
         --block N                engine panel block size [64]
+        --max-tile N             shard tile bound: dims beyond it run as
+                                 repeated engine tile passes [128]
     simulate                     run the TriADA device simulator
         --kind, --shape          as above
         --sparsity F             zero-fraction of the input [0]
@@ -40,10 +44,11 @@ COMMANDS:
         --artifacts DIR          artifact dir            [artifacts]
         --jobs N                 demo jobs to submit     [64]
         --workers N              worker threads
-        --backend pjrt|reference|sim|engine
+        --backend pjrt|reference|sim|engine|sharded
         --engine                 shorthand for --backend engine
         --threads N              engine worker threads   [auto]
         --block N                engine panel block size [64]
+        --max-tile N             sharded backend tile bound [128]
         --config FILE            INI config (sections [coordinator], [engine])
     help                         this text
 ";
@@ -109,6 +114,19 @@ fn engine_config_from_args(
     Ok(cfg)
 }
 
+/// Build a [`gemt::ShardConfig`] from CLI overrides (`--threads`,
+/// `--block`, `--max-tile`) on top of a base configuration.
+fn shard_config_from_args(
+    args: &Args,
+    base: gemt::ShardConfig,
+) -> anyhow::Result<gemt::ShardConfig> {
+    let mut cfg = base;
+    cfg.engine = engine_config_from_args(args, cfg.engine)?;
+    cfg.max_tile = args.opt_usize("max-tile", cfg.max_tile)?;
+    anyhow::ensure!(cfg.max_tile > 0, "--max-tile must be positive");
+    Ok(cfg)
+}
+
 fn cmd_transform(args: &Args) -> anyhow::Result<()> {
     let kind = parse_kind(args)?;
     let shape = args.opt_shape("shape", (8, 8, 8))?;
@@ -116,41 +134,71 @@ fn cmd_transform(args: &Args) -> anyhow::Result<()> {
     let use_engine = args.flag("engine");
     if !use_engine {
         anyhow::ensure!(
-            args.opt("threads").is_none() && args.opt("block").is_none(),
-            "--threads/--block configure the engine path; add --engine"
+            args.opt("threads").is_none()
+                && args.opt("block").is_none()
+                && args.opt("max-tile").is_none(),
+            "--threads/--block/--max-tile configure the engine path; add --engine"
         );
     }
+    // The engine path always goes through the sharding layer: shapes within
+    // the tile bound run one fused engine pass, oversized shapes are block
+    // decomposed — either way bit-identical to the scalar chain.
+    let sharder = if use_engine {
+        Some(gemt::Sharder::new(shard_config_from_args(args, gemt::ShardConfig::default())?))
+    } else {
+        None
+    };
+    let path = match &sharder {
+        None => "scalar".to_string(),
+        // The split DFT never takes the fused single-pass engine: it always
+        // runs 4 tiled real mode products per mode, so report those passes
+        // rather than the (inapplicable) three-stage plan.
+        Some(s) if kind == TransformKind::DftSplit => {
+            format!("engine, {} tiled mode-product passes", s.split_total_passes(shape))
+        }
+        Some(s) => match s.plan(shape, shape).total_passes() {
+            1 => "engine".to_string(),
+            p => format!("engine, {p} tile passes"),
+        },
+    };
     let mut rng = Rng::new(args.opt_usize("seed", 42)? as u64);
     let x = Tensor3::random(shape.0, shape.1, shape.2, &mut rng);
-    let t = Timer::start();
-    let y = if use_engine {
-        let engine = gemt::Engine::new(engine_config_from_args(
-            args,
-            gemt::EngineConfig::default(),
-        )?);
-        if inverse {
-            engine.dxt3d_inverse(&x, kind)
-        } else {
-            engine.dxt3d_forward(&x, kind)
-        }
-    } else if inverse {
-        gemt::dxt3d_inverse(&x, kind)
+    let square_macs =
+        gemt::three_stage_macs(shape.0, shape.1, shape.2, shape.0, shape.1, shape.2);
+
+    let (dt, macs, in_norm, out_norm) = if kind == TransformKind::DftSplit {
+        // Split complex pair: four real mode products per mode.
+        let im = Tensor3::random(shape.0, shape.1, shape.2, &mut rng);
+        let t = Timer::start();
+        let (yr, yi) = match &sharder {
+            Some(s) => s.dft3d_split(&x, &im, inverse),
+            None => gemt::split::dft3d_split(&x, &im, inverse),
+        };
+        let dt = t.elapsed_s();
+        let in_norm = (x.frob_norm().powi(2) + im.frob_norm().powi(2)).sqrt();
+        let out_norm = (yr.frob_norm().powi(2) + yi.frob_norm().powi(2)).sqrt();
+        (dt, 4 * square_macs, in_norm, out_norm)
     } else {
-        gemt::dxt3d_forward(&x, kind)
+        let t = Timer::start();
+        let y = match (&sharder, inverse) {
+            (Some(s), false) => s.dxt3d_forward(&x, kind),
+            (Some(s), true) => s.dxt3d_inverse(&x, kind),
+            (None, false) => gemt::dxt3d_forward(&x, kind),
+            (None, true) => gemt::dxt3d_inverse(&x, kind),
+        };
+        (t.elapsed_s(), square_macs, x.frob_norm(), y.frob_norm())
     };
-    let dt = t.elapsed_s();
-    let macs = gemt::three_stage_macs(shape.0, shape.1, shape.2, shape.0, shape.1, shape.2);
     println!(
         "{} {} {:?} [{}]: {} | {} MACs | {} | ‖X‖={:.6} ‖Y‖={:.6}",
         kind.name(),
         if inverse { "inverse" } else { "forward" },
         shape,
-        if use_engine { "engine" } else { "scalar" },
+        path,
         human::duration(dt),
         human::count(macs as f64),
         human::rate(macs as f64 / dt),
-        x.frob_norm(),
-        y.frob_norm()
+        in_norm,
+        out_norm
     );
     Ok(())
 }
@@ -226,10 +274,17 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         (true, _) => "engine",
         (false, _) => args.opt_or("backend", "pjrt"),
     };
-    if backend_name != "engine" {
+    let engine_family = matches!(backend_name, "engine" | "sharded" | "sharded-engine");
+    if !engine_family {
         anyhow::ensure!(
             args.opt("threads").is_none() && args.opt("block").is_none(),
-            "--threads/--block configure the engine backend; add --backend engine"
+            "--threads/--block configure the engine backends; add --backend engine"
+        );
+    }
+    if !matches!(backend_name, "sharded" | "sharded-engine") {
+        anyhow::ensure!(
+            args.opt("max-tile").is_none(),
+            "--max-tile configures the sharded backend; add --backend sharded"
         );
     }
     let backend: Arc<dyn crate::coordinator::Backend> = match backend_name {
@@ -241,6 +296,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 None => gemt::EngineConfig::default(),
             };
             Arc::new(EngineBackend::new(engine_config_from_args(args, base)?))
+        }
+        "sharded" | "sharded-engine" => {
+            let base = match &file_cfg {
+                Some(c) => gemt::ShardConfig::from_config(c)?,
+                None => gemt::ShardConfig::default(),
+            };
+            Arc::new(ShardedEngineBackend::new(shard_config_from_args(args, base)?))
         }
         "pjrt" => {
             let dir = args.opt_or("artifacts", "artifacts");

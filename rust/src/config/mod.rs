@@ -106,15 +106,20 @@ impl Config {
     }
 
     /// Typed view of the `[engine]` section (the blocked multi-threaded
-    /// 3D-GEMT engine, `gemt::engine`). Validates `block > 0`; `threads = 0`
-    /// is allowed and means auto-detect.
+    /// 3D-GEMT engine, `gemt::engine`, and its sharding layer,
+    /// `gemt::shard`). Validates `block > 0` and `max_tile > 0`;
+    /// `threads = 0` is allowed and means auto-detect.
     pub fn engine_settings(&self) -> anyhow::Result<EngineSettings> {
         let threads = self.get_usize("engine", "threads")?;
         let block = self.get_usize("engine", "block")?;
+        let max_tile = self.get_usize("engine", "max_tile")?;
         if let Some(b) = block {
             anyhow::ensure!(b > 0, "engine.block must be positive");
         }
-        Ok(EngineSettings { threads, block })
+        if let Some(mt) = max_tile {
+            anyhow::ensure!(mt > 0, "engine.max_tile must be positive");
+        }
+        Ok(EngineSettings { threads, block, max_tile })
     }
 }
 
@@ -125,6 +130,32 @@ pub struct EngineSettings {
     pub threads: Option<usize>,
     /// Summation-step panel height.
     pub block: Option<usize>,
+    /// Sharding tile bound: any problem dimension exceeding this is block
+    /// decomposed across engine passes (`gemt::shard`).
+    pub max_tile: Option<usize>,
+}
+
+/// Every supported config key as `(section, key, documented default)` —
+/// the source of truth `docs/CONFIG.md` is checked against by the
+/// `config_md_documents_every_key_and_default` test. Defaults are rendered
+/// from the live `Default` impls so the documentation cannot drift.
+pub fn documented_keys() -> Vec<(&'static str, &'static str, String)> {
+    let coord = crate::coordinator::CoordinatorConfig::default();
+    let engine = crate::gemt::EngineConfig::default();
+    let shard = crate::gemt::ShardConfig::default();
+    vec![
+        ("coordinator", "workers", "auto".to_string()),
+        ("coordinator", "queue_depth", coord.queue_depth.to_string()),
+        ("coordinator", "max_batch", coord.batch.max_batch.to_string()),
+        (
+            "coordinator",
+            "batch_window_ms",
+            format!("{}", coord.batch.window.as_secs_f64() * 1000.0),
+        ),
+        ("engine", "threads", engine.threads.to_string()),
+        ("engine", "block", engine.block.to_string()),
+        ("engine", "max_tile", shard.max_tile.to_string()),
+    ]
 }
 
 #[cfg(test)]
@@ -193,9 +224,12 @@ p1 = 64
 
     #[test]
     fn engine_settings_parse_and_default() {
-        let c = Config::parse("[engine]\nthreads = 4\nblock = 32\n").unwrap();
+        let c = Config::parse("[engine]\nthreads = 4\nblock = 32\nmax_tile = 96\n").unwrap();
         let s = c.engine_settings().unwrap();
-        assert_eq!(s, EngineSettings { threads: Some(4), block: Some(32) });
+        assert_eq!(
+            s,
+            EngineSettings { threads: Some(4), block: Some(32), max_tile: Some(96) }
+        );
         let empty = Config::parse("").unwrap();
         assert_eq!(empty.engine_settings().unwrap(), EngineSettings::default());
     }
@@ -204,9 +238,25 @@ p1 = 64
     fn engine_settings_validate() {
         let zero_block = Config::parse("[engine]\nblock = 0\n").unwrap();
         assert!(zero_block.engine_settings().is_err());
+        let zero_tile = Config::parse("[engine]\nmax_tile = 0\n").unwrap();
+        assert!(zero_tile.engine_settings().is_err());
         let auto_threads = Config::parse("[engine]\nthreads = 0\n").unwrap();
         assert_eq!(auto_threads.engine_settings().unwrap().threads, Some(0));
         let junk = Config::parse("[engine]\nthreads = lots\n").unwrap();
         assert!(junk.engine_settings().is_err());
+    }
+
+    #[test]
+    fn documented_keys_cover_both_sections() {
+        let keys = documented_keys();
+        assert!(keys.iter().any(|(s, k, _)| *s == "coordinator" && *k == "workers"));
+        assert!(keys.iter().any(|(s, k, _)| *s == "engine" && *k == "max_tile"));
+        // Every key the typed accessors read must be documented.
+        for key in ["workers", "queue_depth", "max_batch", "batch_window_ms"] {
+            assert!(keys.iter().any(|(s, k, _)| *s == "coordinator" && *k == key), "{key}");
+        }
+        for key in ["threads", "block", "max_tile"] {
+            assert!(keys.iter().any(|(s, k, _)| *s == "engine" && *k == key), "{key}");
+        }
     }
 }

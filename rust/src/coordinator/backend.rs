@@ -4,11 +4,20 @@
 //!   CPU client (Python never runs here).
 //! * [`EngineBackend`] — the blocked multi-threaded CPU engine
 //!   ([`crate::gemt::engine`]); the fast native path when PJRT artifacts
-//!   are absent.
+//!   are absent. Serves every [`TransformKind`], including `DftSplit` as
+//!   four real mode products per mode on the engine's tiled kernels.
+//! * [`ShardedEngineBackend`] — the engine behind
+//!   [`crate::gemt::shard`]: problems whose dimensions exceed the
+//!   configured `max_tile` are block decomposed across engine passes
+//!   instead of degrading to the scalar reference.
 //! * [`ReferenceBackend`] — exact CPU implementation via `gemt` (used for
 //!   response cross-checking and when no artifact matches).
 //! * [`SimBackend`] — the TriADA device simulator (returns the same
 //!   numerics and additionally accumulates architecture counters).
+//!
+//! A backend that cannot serve a request on its primary path never degrades
+//! silently: every reference fallback is recorded in a [`FallbackNotice`]
+//! and logged once per distinct reason.
 
 use std::sync::Mutex;
 
@@ -20,13 +29,57 @@ use crate::transforms::TransformKind;
 
 /// A way to execute one transform request.
 pub trait Backend: Send + Sync {
+    /// Stable identifier shown in CLI output and metrics.
     fn name(&self) -> &'static str;
+    /// Execute one transform request (one tensor for real kinds, an
+    /// (re, im) pair for [`TransformKind::DftSplit`]).
     fn execute(
         &self,
         kind: TransformKind,
         direction: Direction,
         inputs: &[Tensor3<f32>],
     ) -> anyhow::Result<Vec<Tensor3<f32>>>;
+}
+
+// ---------------------------------------------------------------------------
+
+/// Warn-once tracker for backend degradation: records every distinct
+/// fallback reason and logs each to stderr exactly once, so a serving path
+/// quietly running on the scalar reference is visible in the logs without
+/// flooding them per request.
+#[derive(Debug, Default)]
+pub struct FallbackNotice {
+    reasons: Mutex<Vec<String>>,
+}
+
+impl FallbackNotice {
+    /// Most distinct reasons kept and logged. Callers like the PJRT miss
+    /// path embed per-request detail in the reason text, so without a cap a
+    /// long-running server would grow the list (and re-warn) without bound;
+    /// past the cap a single suppression notice is recorded instead.
+    const MAX_REASONS: usize = 32;
+
+    /// Record a fallback; logs the reason the first time it is seen.
+    pub fn record(&self, backend: &str, reason: &str) {
+        let mut seen = self.reasons.lock().unwrap();
+        if seen.iter().any(|r| r == reason) {
+            return;
+        }
+        if seen.len() >= Self::MAX_REASONS {
+            if seen.len() == Self::MAX_REASONS {
+                eprintln!("warning: backend {backend}: further fallback reasons suppressed");
+                seen.push("(further fallback reasons suppressed)".to_string());
+            }
+            return;
+        }
+        eprintln!("warning: backend {backend}: {reason}; serving via cpu reference");
+        seen.push(reason.to_string());
+    }
+
+    /// Every distinct reason recorded so far (empty = no degradation).
+    pub fn reasons(&self) -> Vec<String> {
+        self.reasons.lock().unwrap().clone()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -79,17 +132,41 @@ impl Backend for ReferenceBackend {
 
 // ---------------------------------------------------------------------------
 
+/// Shared by the engine-family backends: run the split complex DFT as four
+/// real mode products per mode on the tiled engine kernels.
+fn engine_dft_split(
+    sharder: &gemt::Sharder,
+    direction: Direction,
+    inputs: &[Tensor3<f32>],
+) -> anyhow::Result<Vec<Tensor3<f32>>> {
+    anyhow::ensure!(inputs.len() == 2, "dft-split expects (re, im)");
+    let re = inputs[0].to_f64();
+    let im = inputs[1].to_f64();
+    let (or, oi) = sharder.dft3d_split(&re, &im, direction == Direction::Inverse);
+    Ok(vec![or.to_f32(), oi.to_f32()])
+}
+
 /// The blocked multi-threaded 3D-GEMT engine as a backend (f64 internally,
-/// like the reference — same numerics, parallel hot path).
+/// like the reference — same numerics, parallel hot path). `DftSplit`
+/// requests run as four real mode products per mode on the engine's tiled
+/// kernels — no scalar fallback.
 pub struct EngineBackend {
     engine: gemt::engine::Engine,
+    sharder: gemt::Sharder,
 }
 
 impl EngineBackend {
+    /// Build over an engine configuration (`DftSplit` mode products reuse
+    /// the same threads/block knobs with the default tile bound).
     pub fn new(config: gemt::engine::EngineConfig) -> EngineBackend {
-        EngineBackend { engine: gemt::engine::Engine::new(config) }
+        let shard = gemt::ShardConfig { engine: config, ..gemt::ShardConfig::default() };
+        EngineBackend {
+            engine: gemt::engine::Engine::new(config),
+            sharder: gemt::Sharder::new(shard),
+        }
     }
 
+    /// The engine this backend executes with.
     pub fn engine(&self) -> &gemt::engine::Engine {
         &self.engine
     }
@@ -107,11 +184,7 @@ impl Backend for EngineBackend {
         inputs: &[Tensor3<f32>],
     ) -> anyhow::Result<Vec<Tensor3<f32>>> {
         match kind {
-            TransformKind::DftSplit => {
-                // The split complex pair runs four real mode products per
-                // mode; keep it on the scalar reference path for now.
-                reference_execute(kind, direction, inputs)
-            }
+            TransformKind::DftSplit => engine_dft_split(&self.sharder, direction, inputs),
             real => {
                 anyhow::ensure!(inputs.len() == 1, "{} expects one tensor", real.name());
                 let x = inputs[0].to_f64();
@@ -127,20 +200,82 @@ impl Backend for EngineBackend {
 
 // ---------------------------------------------------------------------------
 
+/// The sharding layer ([`crate::gemt::shard`]) as a backend: requests whose
+/// dimensions fit `max_tile` run one fused engine pass; oversized or
+/// rectangular requests are block decomposed across engine tile passes —
+/// bit-identical to the scalar reference either way, so arbitrarily large
+/// problems stay on the parallel path.
+pub struct ShardedEngineBackend {
+    sharder: gemt::Sharder,
+}
+
+impl ShardedEngineBackend {
+    /// Build over sharding knobs (`[engine] threads / block / max_tile`).
+    pub fn new(config: gemt::ShardConfig) -> ShardedEngineBackend {
+        ShardedEngineBackend { sharder: gemt::Sharder::new(config) }
+    }
+
+    /// The sharder this backend executes with.
+    pub fn sharder(&self) -> &gemt::Sharder {
+        &self.sharder
+    }
+}
+
+impl Backend for ShardedEngineBackend {
+    fn name(&self) -> &'static str {
+        "sharded-engine"
+    }
+
+    fn execute(
+        &self,
+        kind: TransformKind,
+        direction: Direction,
+        inputs: &[Tensor3<f32>],
+    ) -> anyhow::Result<Vec<Tensor3<f32>>> {
+        match kind {
+            TransformKind::DftSplit => engine_dft_split(&self.sharder, direction, inputs),
+            real => {
+                anyhow::ensure!(inputs.len() == 1, "{} expects one tensor", real.name());
+                let x = inputs[0].to_f64();
+                let y = match direction {
+                    Direction::Forward => self.sharder.dxt3d_forward(&x, real),
+                    Direction::Inverse => self.sharder.dxt3d_inverse(&x, real),
+                };
+                Ok(vec![y.to_f32()])
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
 /// The TriADA device simulator as a backend; accumulates counters across
 /// requests (read them with [`SimBackend::counters`]).
 pub struct SimBackend {
     config: SimConfig,
     counters: Mutex<Counters>,
+    fallbacks: FallbackNotice,
 }
 
 impl SimBackend {
+    /// Build over a device configuration.
     pub fn new(config: SimConfig) -> SimBackend {
-        SimBackend { config, counters: Mutex::new(Counters::default()) }
+        SimBackend {
+            config,
+            counters: Mutex::new(Counters::default()),
+            fallbacks: FallbackNotice::default(),
+        }
     }
 
+    /// Accumulated architecture counters across every request served.
     pub fn counters(&self) -> Counters {
         self.counters.lock().unwrap().clone()
+    }
+
+    /// Reference-fallback reasons recorded so far (empty = every request
+    /// ran on the device model).
+    pub fn fallback_reasons(&self) -> Vec<String> {
+        self.fallbacks.reasons()
     }
 
     fn run_real(
@@ -173,11 +308,15 @@ impl Backend for SimBackend {
     ) -> anyhow::Result<Vec<Tensor3<f32>>> {
         match kind {
             TransformKind::DftSplit => {
-                // Complex transform = four real device passes per mode; we
-                // model it as two passes over the split pair with cos/−sin
-                // handled by the reference (device counters still meaningful
-                // for the real-arithmetic workload).
+                // The device model streams one real coefficient matrix per
+                // mode and cannot yet carry the split (cos, −sin) pair, so
+                // this backend serves DftSplit via the reference — loudly,
+                // once, instead of degrading silently.
                 anyhow::ensure!(inputs.len() == 2, "dft-split expects (re, im)");
+                self.fallbacks.record(
+                    self.name(),
+                    "device model cannot stream split complex coefficients (dft-split)",
+                );
                 reference_execute(kind, direction, inputs)
             }
             real => {
@@ -198,19 +337,30 @@ pub struct PjrtBackend {
     /// Fall back to the CPU reference when no artifact matches (dev mode);
     /// off in production so missing artifacts surface as errors.
     pub fallback_to_reference: bool,
+    fallbacks: FallbackNotice,
 }
 
 impl PjrtBackend {
+    /// Strict mode: a missing artifact is an error.
     pub fn new(handle: PjrtHandle) -> PjrtBackend {
-        PjrtBackend { handle, fallback_to_reference: false }
+        PjrtBackend { handle, fallback_to_reference: false, fallbacks: FallbackNotice::default() }
     }
 
+    /// Dev mode: a missing artifact degrades to the CPU reference (logged
+    /// once per distinct reason).
     pub fn with_fallback(handle: PjrtHandle) -> PjrtBackend {
-        PjrtBackend { handle, fallback_to_reference: true }
+        PjrtBackend { handle, fallback_to_reference: true, fallbacks: FallbackNotice::default() }
     }
 
+    /// The service handle this backend executes through.
     pub fn handle(&self) -> &PjrtHandle {
         &self.handle
+    }
+
+    /// Reference-fallback reasons recorded so far (empty = every request
+    /// ran on a compiled artifact).
+    pub fn fallback_reasons(&self) -> Vec<String> {
+        self.fallbacks.reasons()
     }
 }
 
@@ -228,7 +378,7 @@ impl Backend for PjrtBackend {
         match self.handle.run(kind, direction, inputs.to_vec()) {
             Ok(out) => Ok(out),
             Err(e) if self.fallback_to_reference => {
-                eprintln!("warning: pjrt miss ({e:#}); falling back to cpu reference");
+                self.fallbacks.record(self.name(), &format!("pjrt miss ({e:#})"));
                 reference_execute(kind, direction, inputs)
             }
             Err(e) => Err(e),
@@ -337,5 +487,77 @@ mod tests {
         let after_one = sim.counters().time_steps;
         sim.execute(TransformKind::Dct2, Direction::Forward, &[x]).unwrap();
         assert_eq!(sim.counters().time_steps, 2 * after_one);
+    }
+
+    #[test]
+    fn engine_dft_split_matches_reference_bit_exactly() {
+        // The engine no longer degrades DftSplit to the scalar reference —
+        // it runs four real mode products per mode on the tiled kernels,
+        // which are bit-identical to the scalar ones.
+        let engine = EngineBackend::new(gemt::engine::EngineConfig::with_threads(3));
+        let re = rand32(4, 5, 3, 150);
+        let im = rand32(4, 5, 3, 151);
+        let want = ReferenceBackend
+            .execute(TransformKind::DftSplit, Direction::Forward, &[re.clone(), im.clone()])
+            .unwrap();
+        let got = engine
+            .execute(TransformKind::DftSplit, Direction::Forward, &[re, im])
+            .unwrap();
+        for (w, g) in want.iter().zip(&got) {
+            assert_eq!(w.to_f64().max_abs_diff(&g.to_f64()), 0.0);
+        }
+    }
+
+    #[test]
+    fn sharded_backend_serves_oversized_bit_identical() {
+        let backend = ShardedEngineBackend::new(gemt::ShardConfig {
+            max_tile: 4,
+            engine: gemt::engine::EngineConfig::with_threads(2),
+        });
+        assert_eq!(backend.name(), "sharded-engine");
+        let x = rand32(11, 9, 13, 152); // every dim oversized for max_tile=4
+        let plan = backend.sharder().plan((11, 9, 13), (11, 9, 13));
+        assert!(plan.needs_sharding());
+        let want = ReferenceBackend
+            .execute(TransformKind::Dht, Direction::Forward, &[x.clone()])
+            .unwrap();
+        let got = backend.execute(TransformKind::Dht, Direction::Forward, &[x]).unwrap();
+        assert_eq!(want[0].to_f64().max_abs_diff(&got[0].to_f64()), 0.0);
+    }
+
+    #[test]
+    fn fallback_notice_dedups_and_caps() {
+        let n = FallbackNotice::default();
+        n.record("b", "same reason");
+        n.record("b", "same reason");
+        assert_eq!(n.reasons().len(), 1);
+        // Distinct per-request variants stop accumulating at the cap, with
+        // one suppression marker recorded in their place.
+        for i in 0..100 {
+            n.record("b", &format!("variant {i}"));
+        }
+        let reasons = n.reasons();
+        assert_eq!(reasons.len(), FallbackNotice::MAX_REASONS + 1);
+        assert!(reasons.last().unwrap().contains("suppressed"));
+    }
+
+    #[test]
+    fn sim_dft_split_fallback_warns_once() {
+        let sim = SimBackend::new(SimConfig::esop((8, 8, 8)));
+        assert!(sim.fallback_reasons().is_empty());
+        let re = rand32(3, 3, 3, 153);
+        let im = rand32(3, 3, 3, 154);
+        sim.execute(TransformKind::DftSplit, Direction::Forward, &[re.clone(), im.clone()])
+            .unwrap();
+        let reasons = sim.fallback_reasons();
+        assert_eq!(reasons.len(), 1, "fallback must be recorded");
+        assert!(reasons[0].contains("dft-split"), "reason names the transform: {reasons:?}");
+        // A second identical request must not duplicate the notice.
+        sim.execute(TransformKind::DftSplit, Direction::Forward, &[re, im]).unwrap();
+        assert_eq!(sim.fallback_reasons().len(), 1);
+        // ...and real kinds never record one.
+        let x = rand32(4, 4, 4, 155);
+        sim.execute(TransformKind::Dct2, Direction::Forward, &[x]).unwrap();
+        assert_eq!(sim.fallback_reasons().len(), 1);
     }
 }

@@ -12,6 +12,21 @@
 //!     ↑ backpressure (bounded)                    │
 //!     └────────────── JobHandle ←─ per-job channel┘
 //! ```
+//!
+//! ```
+//! use std::sync::Arc;
+//! use triada::coordinator::{Coordinator, CoordinatorConfig, ReferenceBackend, TransformJob};
+//! use triada::runtime::Direction;
+//! use triada::tensor::Tensor3;
+//! use triada::transforms::TransformKind;
+//!
+//! let c = Coordinator::start(CoordinatorConfig::default(), Arc::new(ReferenceBackend));
+//! let x = Tensor3::from_fn(4, 4, 4, |i, j, k| (i + j + k) as f64).to_f32();
+//! let job = TransformJob::new(TransformKind::Dct2, Direction::Forward, vec![x]);
+//! let result = c.transform(job).unwrap();
+//! assert_eq!(result.outputs.unwrap()[0].shape(), (4, 4, 4));
+//! c.shutdown();
+//! ```
 
 pub mod backend;
 pub mod batcher;
@@ -21,7 +36,9 @@ pub mod queue;
 pub mod server;
 pub mod worker;
 
-pub use backend::{Backend, EngineBackend, ReferenceBackend, SimBackend};
+pub use backend::{
+    Backend, EngineBackend, FallbackNotice, ReferenceBackend, ShardedEngineBackend, SimBackend,
+};
 pub use job::{JobId, JobResult, TransformJob};
 pub use metrics::MetricsSnapshot;
 pub use server::{Coordinator, CoordinatorConfig, JobHandle, WaitOutcome};

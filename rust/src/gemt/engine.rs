@@ -27,6 +27,21 @@
 //!   every output row accumulates its summation steps in the same ascending
 //!   order as `gemt_outer`, the engine's floating-point result is
 //!   bit-identical to the scalar path for any thread count or block size.
+//!
+//! Problems with dimensions beyond one grid pass are block decomposed by
+//! [`super::shard`] on top of this module.
+//!
+//! ```
+//! use triada::gemt::engine::{Engine, EngineConfig};
+//! use triada::tensor::Tensor3;
+//! use triada::transforms::TransformKind;
+//!
+//! let engine = Engine::new(EngineConfig::with_threads(2));
+//! let x = Tensor3::from_fn(4, 5, 6, |i, j, k| (i + j * k) as f64);
+//! let y = engine.dxt3d_forward(&x, TransformKind::Dct2);
+//! let back = engine.dxt3d_inverse(&y, TransformKind::Dct2);
+//! assert!(x.max_abs_diff(&back) < 1e-9);
+//! ```
 
 use std::thread;
 
@@ -188,7 +203,10 @@ fn split_row_blocks<T>(
 /// `block`-row slabs so a slab is reused across the whole row-block while
 /// each destination row stays resident. Summation-step order per row is
 /// ascending — identical to the scalar path.
-fn stage1_panel<T: Scalar>(
+///
+/// Shared with [`super::shard`], where the same kernel doubles as the
+/// mode-3 product tile pass.
+pub(crate) fn stage1_panel<T: Scalar>(
     x: &Tensor3<T>,
     c3: &Mat<T>,
     first_row: usize,

@@ -4,6 +4,21 @@
 //! `n2`), then the frontal/lateral re-slicing of Eq. (5) for Stage III.
 //! Implemented literally as row-by-column dot products so it doubles as a
 //! readable specification of the paper's chain.
+//!
+//! ```
+//! use triada::gemt::{gemt_inner, gemt_naive, CoeffSet};
+//! use triada::tensor::{Mat, Tensor3};
+//! use triada::util::Rng;
+//!
+//! let mut rng = Rng::new(3);
+//! let x = Tensor3::random(3, 4, 2, &mut rng);
+//! let cs = CoeffSet::new(
+//!     Mat::random(3, 3, &mut rng),
+//!     Mat::random(4, 4, &mut rng),
+//!     Mat::random(2, 2, &mut rng),
+//! );
+//! assert!(gemt_inner(&x, &cs).max_abs_diff(&gemt_naive(&x, &cs)) < 1e-10);
+//! ```
 
 use super::CoeffSet;
 use crate::tensor::{Mat, Scalar, Tensor3};

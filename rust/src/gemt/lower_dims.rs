@@ -6,6 +6,18 @@
 //! degenerate axes simply carry extent 1 with an identity coefficient, so
 //! vectors and matrices ride the same three-stage machinery (and the same
 //! device) with `N+1+1`- or `N1+1+N3`-step schedules.
+//!
+//! ```
+//! use triada::gemt::{dxt1d_forward, dxt1d_inverse};
+//! use triada::transforms::TransformKind;
+//!
+//! let v = vec![1.0, 2.0, 3.0, 4.0];
+//! let f = dxt1d_forward(&v, TransformKind::Dct2);
+//! let back = dxt1d_inverse(&f, TransformKind::Dct2);
+//! for (a, b) in v.iter().zip(&back) {
+//!     assert!((a - b).abs() < 1e-9);
+//! }
+//! ```
 
 use super::{gemt_outer, CoeffSet};
 use crate::tensor::{Mat, Tensor3};

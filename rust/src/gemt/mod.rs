@@ -10,10 +10,23 @@
 //!   Eq. (6.1)–(6.3) — the formulation TriADA's schedule is isomorphic to.
 //! * [`engine`] — the same chain as a blocked, multi-threaded execution
 //!   engine (the coordinator's serving hot path).
+//! * [`shard`] — block decomposition of oversized/rectangular problems
+//!   across repeated engine tile passes (the CPU analog of the device's
+//!   grid tiling), bit-identical to [`outer`].
 //!
 //! Plus [`mode_product`] (single rectangular mode-s products, the building
 //! block of Tucker compression/expansion §2.3) and the [`parenthesize`]
 //! module enumerating all six orders of §3.
+//!
+//! ```
+//! use triada::gemt::{dxt3d_forward, dxt3d_inverse};
+//! use triada::tensor::Tensor3;
+//! use triada::transforms::TransformKind;
+//!
+//! let x = Tensor3::from_fn(3, 4, 5, |i, j, k| (i * j + k) as f64);
+//! let y = dxt3d_forward(&x, TransformKind::Dht);
+//! assert!(x.max_abs_diff(&dxt3d_inverse(&y, TransformKind::Dht)) < 1e-9);
+//! ```
 
 pub mod engine;
 pub mod inner;
@@ -23,6 +36,7 @@ pub mod naive;
 pub mod outer;
 pub mod parenthesize;
 pub mod rect;
+pub mod shard;
 pub mod split;
 
 pub use engine::{gemt_engine, Engine, EngineConfig};
@@ -32,6 +46,7 @@ pub use mode_product::{mode1_product, mode2_product, mode3_product};
 pub use naive::gemt_naive;
 pub use outer::gemt_outer;
 pub use rect::{gemt_rect, tucker_compress, tucker_expand};
+pub use shard::{gemt_sharded, ShardConfig, ShardPlan, Sharder};
 
 use crate::tensor::{Mat, Scalar, Tensor3};
 use crate::transforms::{forward_matrix, inverse_matrix, TransformKind};

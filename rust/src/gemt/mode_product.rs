@@ -4,6 +4,16 @@
 //! Convention (see `transforms`): `y_k = Σ_n x_n · c[n][k]`, i.e. the
 //! coefficient matrix is applied with its *rows* contracted against the
 //! tensor mode.
+//!
+//! ```
+//! use triada::gemt::mode2_product;
+//! use triada::tensor::{Mat, Tensor3};
+//!
+//! let x = Tensor3::from_fn(2, 3, 2, |i, j, k| (i * 6 + j * 2 + k) as f64);
+//! // An identity along mode 2 is a no-op; a rectangular matrix reshapes it.
+//! assert_eq!(mode2_product(&x, &Mat::identity(3)).max_abs_diff(&x), 0.0);
+//! assert_eq!(mode2_product(&x, &Mat::zeros(3, 5)).shape(), (2, 5, 2));
+//! ```
 
 use crate::tensor::{Mat, Scalar, Tensor3};
 

@@ -2,6 +2,15 @@
 //! space with `(N1N2N3)·(K1K2K3)` MACs. This is the complexity *baseline*
 //! the paper's three-stage algorithm is measured against (E2), and the
 //! ground-truth oracle for the fast paths.
+//!
+//! ```
+//! use triada::gemt::{gemt_naive, CoeffSet};
+//! use triada::tensor::{Mat, Tensor3};
+//!
+//! let x = Tensor3::from_fn(2, 2, 2, |i, j, k| (i + j + k) as f64);
+//! let id = CoeffSet::new(Mat::identity(2), Mat::identity(2), Mat::identity(2));
+//! assert_eq!(gemt_naive(&x, &id).max_abs_diff(&x), 0.0);
+//! ```
 
 use super::CoeffSet;
 use crate::tensor::{Scalar, Tensor3};

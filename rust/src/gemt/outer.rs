@@ -7,6 +7,25 @@
 //! slice: `Ẋ^{(n2)} += x(n3) ∘ c(n3)`. The output is stationary (stays in
 //! the cells); only the coefficient vector is injected — this is the
 //! “broadcast-broadcast-compute” schedule (d) of §4.
+//!
+//! Every output element accumulates its summation steps in ascending order,
+//! which is the per-row order the parallel [`super::engine`] and the
+//! sharded [`super::shard`] paths reproduce bit-for-bit.
+//!
+//! ```
+//! use triada::gemt::{gemt_naive, gemt_outer, CoeffSet};
+//! use triada::tensor::{Mat, Tensor3};
+//! use triada::util::Rng;
+//!
+//! let mut rng = Rng::new(4);
+//! let x = Tensor3::random(4, 3, 2, &mut rng);
+//! let cs = CoeffSet::new(
+//!     Mat::random(4, 4, &mut rng),
+//!     Mat::random(3, 3, &mut rng),
+//!     Mat::random(2, 2, &mut rng),
+//! );
+//! assert!(gemt_outer(&x, &cs).max_abs_diff(&gemt_naive(&x, &cs)) < 1e-10);
+//! ```
 
 use super::CoeffSet;
 use crate::tensor::{Mat, Scalar, Tensor3};

@@ -3,6 +3,24 @@
 //! Each initial tensor partition (horizontal / lateral / frontal) admits two
 //! summation orders; all six must agree (multilinearity). The enum order
 //! follows the paper's bullet list.
+//!
+//! ```
+//! use triada::gemt::parenthesize::{gemt_ordered, ParenOrder};
+//! use triada::gemt::{gemt_naive, CoeffSet};
+//! use triada::tensor::{Mat, Tensor3};
+//! use triada::util::Rng;
+//!
+//! let mut rng = Rng::new(6);
+//! let x = Tensor3::random(3, 2, 4, &mut rng);
+//! let cs = CoeffSet::new(
+//!     Mat::random(3, 3, &mut rng),
+//!     Mat::random(2, 2, &mut rng),
+//!     Mat::random(4, 4, &mut rng),
+//! );
+//! let want = gemt_naive(&x, &cs);
+//! assert!(gemt_ordered(&x, &cs, ParenOrder::H312).max_abs_diff(&want) < 1e-10);
+//! assert!(gemt_ordered(&x, &cs, ParenOrder::F231).max_abs_diff(&want) < 1e-10);
+//! ```
 
 use super::mode_product::{mode1_product, mode2_product, mode3_product};
 use super::CoeffSet;

@@ -5,6 +5,23 @@
 //! `U_s: N_s×K_s` approximate `X ≈ G ×₁ U₁ᵀ ×₂ U₂ᵀ ×₃ U₃ᵀ`. With our
 //! row-contraction convention, *compression* applies `U_s` (rows = N_s) and
 //! *expansion* applies `U_sᵀ` (rows = K_s).
+//!
+//! ```
+//! use triada::gemt::{gemt_rect, gemt_naive, CoeffSet};
+//! use triada::tensor::{Mat, Tensor3};
+//! use triada::util::Rng;
+//!
+//! let mut rng = Rng::new(5);
+//! let x = Tensor3::random(4, 3, 5, &mut rng);
+//! let cs = CoeffSet::new(
+//!     Mat::random(4, 2, &mut rng), // compress mode 1
+//!     Mat::random(3, 6, &mut rng), // expand mode 2
+//!     Mat::random(5, 5, &mut rng),
+//! );
+//! let y = gemt_rect(&x, &cs);
+//! assert_eq!(y.shape(), (2, 6, 5));
+//! assert!(y.max_abs_diff(&gemt_naive(&x, &cs)) < 1e-10);
+//! ```
 
 use super::mode_product::{mode1_product, mode2_product, mode3_product};
 use super::CoeffSet;

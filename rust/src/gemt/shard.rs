@@ -1,0 +1,645 @@
+//! Block decomposition of **oversized** 3D-GEMT problems across repeated
+//! engine passes — the serving-path analog of [`crate::sim::tiling`] for
+//! the simulated device (paper §5.1: “GEMM-like partitioning of the large
+//! problem into tiles or blocks should be considered”).
+//!
+//! A TriADA device executes any problem whose dimensions fit its N×N×N cell
+//! grid in one linear-time pass; larger or rectangular problems are block
+//! decomposed onto repeated grid passes. [`gemt_sharded_with`] does the
+//! same for the CPU serving path: each of the three outer-product stages of
+//! Eq. (6.1)–(6.3) is a single-mode product contracting exactly one input
+//! dimension, and every stage is tiled into row bands of at most
+//! [`ShardConfig::max_tile`] output rows — one engine tile pass per band.
+//!
+//! Two properties make the decomposition exact *to the bit* against
+//! [`super::outer::gemt_outer`] and [`super::engine::gemt_engine`]:
+//!
+//! * **Contraction stays whole within a tile.** Tiles partition the rows a
+//!   stage *produces*, never the dimension it sums over, so every output
+//!   element accumulates its full summation chain inside one tile in
+//!   ascending step order — the same floating-point sequence as the scalar
+//!   path. (Splitting the contraction would regroup the sum, which IEEE
+//!   addition does not forgive.) The contraction dimension is instead
+//!   streamed through the cache in `block`-row slabs, exactly like the
+//!   engine's panels.
+//! * **One worker pool per stage, not per tile.** All tile passes of a
+//!   stage drain from a shared queue into one `std::thread::scope` pool
+//!   (three pool spawns per sharded run, independent of the tile count),
+//!   rather than re-spawning a scope for each tile the way calling
+//!   [`super::engine::gemt_engine_with`] per tile would.
+//!
+//! The same three tile kernels are exactly the three single-mode products,
+//! so this module also provides [`mode1_sharded`] / [`mode2_sharded`] /
+//! [`mode3_sharded`] — the parallel building blocks the split-complex DFT
+//! ([`super::split`]) rides on: four real mode products per mode, on the
+//! engine path instead of the scalar reference.
+//!
+//! ```
+//! use triada::gemt::shard::{gemt_sharded_with, ShardConfig};
+//! use triada::gemt::{gemt_outer, CoeffSet};
+//! use triada::tensor::{Mat, Tensor3};
+//! use triada::util::Rng;
+//!
+//! let mut rng = Rng::new(1);
+//! // 12×12×12 with max_tile = 4: every dimension is oversized, so the
+//! // problem is block-decomposed across engine passes...
+//! let x = Tensor3::random(12, 12, 12, &mut rng);
+//! let cs = CoeffSet::new(
+//!     Mat::random(12, 12, &mut rng),
+//!     Mat::random(12, 12, &mut rng),
+//!     Mat::random(12, 12, &mut rng),
+//! );
+//! let cfg = ShardConfig { max_tile: 4, ..ShardConfig::default() };
+//! let sharded = gemt_sharded_with(&x, &cs, &cfg);
+//! // ...and the result is bit-identical to the scalar outer-product chain.
+//! assert_eq!(sharded.max_abs_diff(&gemt_outer(&x, &cs)), 0.0);
+//! ```
+
+use std::sync::Mutex;
+use std::thread;
+
+use super::engine::{gemt_engine_with, stage1_panel, EngineConfig};
+use super::CoeffSet;
+use crate::tensor::{Mat, Scalar, Tensor3};
+use crate::transforms::TransformKind;
+
+/// Default row/column bound of one engine tile pass — the serving-path
+/// analog of the device grid edge (a problem with every dimension at most
+/// this runs in a single fused engine pass).
+pub const DEFAULT_MAX_TILE: usize = 128;
+
+/// Sharding knobs (file form: `[engine] max_tile` on top of the
+/// `[engine] threads / block` keys, see
+/// [`crate::config::Config::engine_settings`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardConfig {
+    /// Maximum rows a single tile pass may own along any output axis; any
+    /// problem dimension exceeding this triggers block decomposition.
+    pub max_tile: usize,
+    /// The engine configuration every tile pass runs with.
+    pub engine: EngineConfig,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig { max_tile: DEFAULT_MAX_TILE, engine: EngineConfig::default() }
+    }
+}
+
+impl ShardConfig {
+    /// Default config pinned to an explicit tile bound.
+    pub fn with_max_tile(max_tile: usize) -> ShardConfig {
+        ShardConfig { max_tile, ..ShardConfig::default() }
+    }
+
+    /// Build from a parsed [`crate::config::Config`] `[engine]` section
+    /// (`threads`, `block`, and `max_tile`).
+    pub fn from_config(cfg: &crate::config::Config) -> anyhow::Result<ShardConfig> {
+        let engine = EngineConfig::from_config(cfg)?;
+        let settings = cfg.engine_settings()?;
+        let mut s = ShardConfig { engine, ..ShardConfig::default() };
+        if let Some(mt) = settings.max_tile {
+            s.max_tile = mt;
+        }
+        Ok(s)
+    }
+}
+
+/// How one 3D-GEMT decomposes into per-stage tile passes. Purely
+/// descriptive — numerics never depend on the plan (tile boundaries do not
+/// change any per-element accumulation order).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Input shape `(N1, N2, N3)`.
+    pub input: (usize, usize, usize),
+    /// Output shape `(K1, K2, K3)`.
+    pub output: (usize, usize, usize),
+    /// The tile bound the plan was built for.
+    pub max_tile: usize,
+    /// Row-band height per stage (I, II, III).
+    pub band: [usize; 3],
+    /// Tile passes per stage (I, II, III).
+    pub tiles: [usize; 3],
+}
+
+impl ShardPlan {
+    /// Plan the decomposition of an `input → output` problem for a given
+    /// tile bound and worker count.
+    pub fn new(
+        input: (usize, usize, usize),
+        output: (usize, usize, usize),
+        max_tile: usize,
+        threads: usize,
+    ) -> ShardPlan {
+        let max_tile = max_tile.max(1);
+        let threads = threads.max(1);
+        // Flat output-row counts of the three stages: ẋ is (N1,N2,K3),
+        // ẍ is (K1,N2,K3), and the final tensor is (K1,K2,K3).
+        let rows = [input.0 * input.1, output.0 * input.1, output.0 * output.1];
+        let band = rows.map(|r| band_rows(r, threads, max_tile));
+        let mut tiles = [0usize; 3];
+        for s in 0..3 {
+            tiles[s] = if rows[s] == 0 { 0 } else { (rows[s] + band[s] - 1) / band[s] };
+        }
+        ShardPlan { input, output, max_tile, band, tiles }
+    }
+
+    /// Does any dimension exceed the tile bound? When `false` the problem
+    /// fits a single fused engine pass and no decomposition happens.
+    pub fn needs_sharding(&self) -> bool {
+        let (n1, n2, n3) = self.input;
+        let (k1, k2, k3) = self.output;
+        [n1, n2, n3, k1, k2, k3].iter().any(|&d| d > self.max_tile)
+    }
+
+    /// Total engine passes this plan executes (1 when the problem fits the
+    /// fused engine).
+    pub fn total_passes(&self) -> usize {
+        if self.needs_sharding() {
+            self.tiles.iter().sum()
+        } else {
+            1
+        }
+    }
+}
+
+/// Row-band height: split `rows` across `threads` workers but never exceed
+/// the tile bound.
+fn band_rows(rows: usize, threads: usize, max_tile: usize) -> usize {
+    if rows == 0 {
+        return 1;
+    }
+    ((rows + threads - 1) / threads).clamp(1, max_tile)
+}
+
+/// One tile pass: a disjoint row band of a stage's output.
+struct Tile<'a, T> {
+    first_row: usize,
+    panel: &'a mut [T],
+}
+
+/// Split a row-major `rows × width` buffer into disjoint `band`-row tiles.
+fn row_tiles<T>(data: &mut [T], width: usize, band: usize) -> Vec<Tile<'_, T>> {
+    if data.is_empty() || width == 0 {
+        return Vec::new();
+    }
+    debug_assert_eq!(data.len() % width, 0);
+    data.chunks_mut(band * width)
+        .enumerate()
+        .map(|(i, panel)| Tile { first_row: i * band, panel })
+        .collect()
+}
+
+/// Drain every tile of one stage through a single scoped worker pool: the
+/// pool is spawned once per stage and reused across all of the stage's tile
+/// passes (the shared-queue alternative to re-entering `thread::scope` per
+/// tile).
+fn run_tiles<T: Scalar>(
+    threads: usize,
+    tiles: Vec<Tile<'_, T>>,
+    job: impl Fn(usize, &mut [T]) + Sync,
+) {
+    if tiles.is_empty() {
+        return;
+    }
+    let workers = threads.clamp(1, tiles.len());
+    if workers == 1 {
+        for t in tiles {
+            job(t.first_row, t.panel);
+        }
+        return;
+    }
+    let queue = Mutex::new(tiles);
+    let queue = &queue;
+    let job = &job;
+    thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(move || loop {
+                let Some(t) = queue.lock().unwrap().pop() else {
+                    break;
+                };
+                job(t.first_row, t.panel);
+            });
+        }
+    });
+}
+
+/// Stage II tile kernel — also the **mode-1 product**: each owned flat
+/// `(k1, j)` row accumulates `Σ_step c[step, k1] · src[step, j, :]` with
+/// steps ascending (the scalar path's order), the streamed coefficient
+/// column walked in `block`-step slabs.
+fn stage2_panel<T: Scalar>(
+    src: &Tensor3<T>,
+    c: &Mat<T>,
+    first_row: usize,
+    panel: &mut [T],
+    n2: usize,
+    block: usize,
+) {
+    let (n1, _, w) = src.shape();
+    if w == 0 {
+        return;
+    }
+    for step0 in (0..n1).step_by(block) {
+        let step1 = (step0 + block).min(n1);
+        for (r, dst) in panel.chunks_mut(w).enumerate() {
+            let flat = first_row + r;
+            let (kk1, j) = (flat / n2, flat % n2);
+            for step in step0..step1 {
+                let cv = c.get(step, kk1);
+                if cv.is_zero() {
+                    continue; // ESOP skip (§6) — same predicate as gemt_outer
+                }
+                let srow = src.row(step, j);
+                for (d, &sv) in dst.iter_mut().zip(srow) {
+                    *d += cv * sv;
+                }
+            }
+        }
+    }
+}
+
+/// Stage III tile kernel — also the **mode-2 product**: each owned flat
+/// `(i, k2)` row accumulates `Σ_step src[i, step, :] · c[step, k2]` with
+/// steps ascending, matching `gemt_outer`'s lateral re-slice order.
+fn stage3_panel<T: Scalar>(
+    src: &Tensor3<T>,
+    c: &Mat<T>,
+    first_row: usize,
+    panel: &mut [T],
+    k2: usize,
+    block: usize,
+) {
+    let (_, n2, w) = src.shape();
+    if w == 0 {
+        return;
+    }
+    for step0 in (0..n2).step_by(block) {
+        let step1 = (step0 + block).min(n2);
+        for (r, dst) in panel.chunks_mut(w).enumerate() {
+            let flat = first_row + r;
+            let (i, kk2) = (flat / k2, flat % k2);
+            for step in step0..step1 {
+                let cv = c.get(step, kk2);
+                if cv.is_zero() {
+                    continue; // ESOP skip
+                }
+                let srow = src.row(i, step);
+                for (d, &sv) in dst.iter_mut().zip(srow) {
+                    *d += sv * cv;
+                }
+            }
+        }
+    }
+}
+
+/// Three-stage 3D-GEMT sharded across engine tile passes, default config.
+pub fn gemt_sharded<T: Scalar>(x: &Tensor3<T>, cs: &CoeffSet<T>) -> Tensor3<T> {
+    gemt_sharded_with(x, cs, &ShardConfig::default())
+}
+
+/// Three-stage 3D-GEMT sharded across engine tile passes.
+///
+/// Problems with every dimension at most [`ShardConfig::max_tile`] delegate
+/// to the fused two-phase engine; oversized or rectangular problems run the
+/// three stages as tiled mode products. Either way the result is
+/// bit-identical to [`super::outer::gemt_outer`] for any thread count,
+/// block size, or tile bound.
+pub fn gemt_sharded_with<T: Scalar>(
+    x: &Tensor3<T>,
+    cs: &CoeffSet<T>,
+    config: &ShardConfig,
+) -> Tensor3<T> {
+    let (n1, n2, n3) = x.shape();
+    assert_eq!(cs.input_shape(), (n1, n2, n3));
+    let (k1s, k2s, k3s) = cs.output_shape();
+    let threads = config.engine.effective_threads().max(1);
+    let plan = ShardPlan::new((n1, n2, n3), (k1s, k2s, k3s), config.max_tile, threads);
+    if !plan.needs_sharding() {
+        return gemt_engine_with(x, cs, &config.engine);
+    }
+    let block = config.engine.block.max(1);
+
+    // Stage I (Eq. 6.1) = mode-3 product with C₃: ẋ (N1,N2,K3).
+    let mut s1 = Tensor3::<T>::zeros(n1, n2, k3s);
+    {
+        let tiles = row_tiles(s1.data_mut(), k3s, plan.band[0]);
+        run_tiles(threads, tiles, |first, panel| {
+            stage1_panel(x, &cs.c3, first, panel, n2, block)
+        });
+    }
+
+    // Stage II (Eq. 6.2) = mode-1 product with C₁: ẍ (K1,N2,K3).
+    let mut s2 = Tensor3::<T>::zeros(k1s, n2, k3s);
+    {
+        let s1_ref = &s1;
+        let tiles = row_tiles(s2.data_mut(), k3s, plan.band[1]);
+        run_tiles(threads, tiles, |first, panel| {
+            stage2_panel(s1_ref, &cs.c1, first, panel, n2, block)
+        });
+    }
+
+    // Stage III (Eq. 6.3) = mode-2 product with C₂: final (K1,K2,K3).
+    let mut out = Tensor3::<T>::zeros(k1s, k2s, k3s);
+    {
+        let s2_ref = &s2;
+        let tiles = row_tiles(out.data_mut(), k3s, plan.band[2]);
+        run_tiles(threads, tiles, |first, panel| {
+            stage3_panel(s2_ref, &cs.c2, first, panel, k2s, block)
+        });
+    }
+    out
+}
+
+/// Tiled parallel mode-1 product, bit-identical to
+/// [`super::mode_product::mode1_product`].
+pub fn mode1_sharded<T: Scalar>(x: &Tensor3<T>, c: &Mat<T>, config: &ShardConfig) -> Tensor3<T> {
+    let (n1, n2, n3) = x.shape();
+    assert_eq!(c.rows(), n1, "mode-1 coefficient rows must equal N1");
+    let k1 = c.cols();
+    let mut out = Tensor3::<T>::zeros(k1, n2, n3);
+    let threads = config.engine.effective_threads().max(1);
+    let block = config.engine.block.max(1);
+    let band = band_rows(k1 * n2, threads, config.max_tile);
+    let tiles = row_tiles(out.data_mut(), n3, band);
+    run_tiles(threads, tiles, |first, panel| stage2_panel(x, c, first, panel, n2, block));
+    out
+}
+
+/// Tiled parallel mode-2 product, bit-identical to
+/// [`super::mode_product::mode2_product`].
+pub fn mode2_sharded<T: Scalar>(x: &Tensor3<T>, c: &Mat<T>, config: &ShardConfig) -> Tensor3<T> {
+    let (n1, n2, n3) = x.shape();
+    assert_eq!(c.rows(), n2, "mode-2 coefficient rows must equal N2");
+    let k2 = c.cols();
+    let mut out = Tensor3::<T>::zeros(n1, k2, n3);
+    let threads = config.engine.effective_threads().max(1);
+    let block = config.engine.block.max(1);
+    let band = band_rows(n1 * k2, threads, config.max_tile);
+    let tiles = row_tiles(out.data_mut(), n3, band);
+    run_tiles(threads, tiles, |first, panel| stage3_panel(x, c, first, panel, k2, block));
+    out
+}
+
+/// Tiled parallel mode-3 product, bit-identical to
+/// [`super::mode_product::mode3_product`].
+pub fn mode3_sharded<T: Scalar>(x: &Tensor3<T>, c: &Mat<T>, config: &ShardConfig) -> Tensor3<T> {
+    let (n1, n2, n3) = x.shape();
+    assert_eq!(c.rows(), n3, "mode-3 coefficient rows must equal N3");
+    let k3 = c.cols();
+    let mut out = Tensor3::<T>::zeros(n1, n2, k3);
+    let threads = config.engine.effective_threads().max(1);
+    let block = config.engine.block.max(1);
+    let band = band_rows(n1 * n2, threads, config.max_tile);
+    let tiles = row_tiles(out.data_mut(), k3, band);
+    run_tiles(threads, tiles, |first, panel| stage1_panel(x, c, first, panel, n2, block));
+    out
+}
+
+/// A configured sharding instance — what [`ShardedEngineBackend`] and the
+/// CLI hold. Owns nothing but the knobs; every call plans and pools fresh.
+///
+/// [`ShardedEngineBackend`]: crate::coordinator::backend::ShardedEngineBackend
+#[derive(Clone, Debug, Default)]
+pub struct Sharder {
+    config: ShardConfig,
+}
+
+impl Sharder {
+    /// Build from explicit knobs.
+    pub fn new(config: ShardConfig) -> Sharder {
+        Sharder { config }
+    }
+
+    /// The knobs this sharder runs with.
+    pub fn config(&self) -> &ShardConfig {
+        &self.config
+    }
+
+    /// The decomposition an `input → output` problem would use.
+    pub fn plan(
+        &self,
+        input: (usize, usize, usize),
+        output: (usize, usize, usize),
+    ) -> ShardPlan {
+        ShardPlan::new(input, output, self.config.max_tile, self.config.engine.effective_threads())
+    }
+
+    /// Run one 3D-GEMT, sharding if any dimension exceeds the tile bound.
+    pub fn run<T: Scalar>(&self, x: &Tensor3<T>, cs: &CoeffSet<T>) -> Tensor3<T> {
+        gemt_sharded_with(x, cs, &self.config)
+    }
+
+    /// Forward 3D-DXT on the sharded engine path.
+    pub fn dxt3d_forward(&self, x: &Tensor3<f64>, kind: TransformKind) -> Tensor3<f64> {
+        let (n1, n2, n3) = x.shape();
+        self.run(x, &CoeffSet::forward(kind, n1, n2, n3))
+    }
+
+    /// Inverse 3D-DXT on the sharded engine path.
+    pub fn dxt3d_inverse(&self, x: &Tensor3<f64>, kind: TransformKind) -> Tensor3<f64> {
+        let (n1, n2, n3) = x.shape();
+        self.run(x, &CoeffSet::inverse(kind, n1, n2, n3))
+    }
+
+    /// Tile passes [`Sharder::dft3d_split`] executes for an `(n1, n2, n3)`
+    /// problem: four real mode products per mode, each tiled into row
+    /// bands. The split path always runs tiled products — there is no
+    /// fused single-pass shortcut — and because the DFT matrices are
+    /// square, every product tiles the same `n1·n2` output rows.
+    pub fn split_total_passes(&self, shape: (usize, usize, usize)) -> usize {
+        let (n1, n2, _) = shape;
+        let rows = n1 * n2;
+        if rows == 0 {
+            return 0;
+        }
+        let threads = self.config.engine.effective_threads().max(1);
+        let band = band_rows(rows, threads, self.config.max_tile);
+        12 * ((rows + band - 1) / band)
+    }
+
+    /// Split 3D DFT on the engine path: four real mode products per mode,
+    /// each a tiled parallel pass — bit-identical to the scalar
+    /// [`super::split::dft3d_split`].
+    pub fn dft3d_split(
+        &self,
+        re: &Tensor3<f64>,
+        im: &Tensor3<f64>,
+        inverse: bool,
+    ) -> (Tensor3<f64>, Tensor3<f64>) {
+        let prod = |t: &Tensor3<f64>, c: &Mat<f64>, mode: u8| match mode {
+            1 => mode1_sharded(t, c, &self.config),
+            2 => mode2_sharded(t, c, &self.config),
+            3 => mode3_sharded(t, c, &self.config),
+            _ => unreachable!("mode must be 1, 2, or 3"),
+        };
+        super::split::dft3d_split_with(re, im, inverse, &prod)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemt::{gemt_naive, gemt_outer, mode1_product, mode2_product, mode3_product};
+    use crate::tensor::sparsify;
+    use crate::util::Rng;
+
+    fn case(
+        shape: (usize, usize, usize),
+        out: (usize, usize, usize),
+        seed: u64,
+    ) -> (Tensor3<f64>, CoeffSet<f64>) {
+        let mut rng = Rng::new(seed);
+        let x = Tensor3::random(shape.0, shape.1, shape.2, &mut rng);
+        let cs = CoeffSet::new(
+            Mat::random(shape.0, out.0, &mut rng),
+            Mat::random(shape.1, out.1, &mut rng),
+            Mat::random(shape.2, out.2, &mut rng),
+        );
+        (x, cs)
+    }
+
+    fn cfg(max_tile: usize, threads: usize) -> ShardConfig {
+        ShardConfig { max_tile, engine: EngineConfig::with_threads(threads) }
+    }
+
+    #[test]
+    fn oversized_square_bit_identical_to_outer() {
+        let (x, cs) = case((12, 12, 12), (12, 12, 12), 700);
+        for threads in [1usize, 3, 8] {
+            let got = gemt_sharded_with(&x, &cs, &cfg(4, threads));
+            assert_eq!(
+                got.max_abs_diff(&gemt_outer(&x, &cs)),
+                0.0,
+                "sharded diverged at {threads} threads"
+            );
+        }
+    }
+
+    #[test]
+    fn rectangular_oversized_matches_naive() {
+        let (x, cs) = case((9, 5, 7), (4, 11, 6), 701);
+        let got = gemt_sharded_with(&x, &cs, &cfg(3, 4));
+        assert_eq!(got.shape(), (4, 11, 6));
+        assert!(got.max_abs_diff(&gemt_naive(&x, &cs)) < 1e-10);
+        assert_eq!(got.max_abs_diff(&gemt_outer(&x, &cs)), 0.0);
+    }
+
+    #[test]
+    fn sparse_input_bit_identical_to_outer() {
+        let (mut x, cs) = case((10, 10, 10), (10, 10, 10), 702);
+        let mut rng = Rng::new(7);
+        sparsify(&mut x, 0.7, &mut rng);
+        let got = gemt_sharded_with(&x, &cs, &cfg(4, 2));
+        assert_eq!(got.max_abs_diff(&gemt_outer(&x, &cs)), 0.0);
+    }
+
+    #[test]
+    fn fitting_problems_delegate_to_fused_engine() {
+        let (x, cs) = case((6, 6, 6), (6, 6, 6), 703);
+        let plan = ShardPlan::new((6, 6, 6), (6, 6, 6), 8, 4);
+        assert!(!plan.needs_sharding());
+        assert_eq!(plan.total_passes(), 1);
+        let got = gemt_sharded_with(&x, &cs, &cfg(8, 2));
+        assert_eq!(got.max_abs_diff(&gemt_outer(&x, &cs)), 0.0);
+    }
+
+    #[test]
+    fn plan_counts_tiles_per_stage() {
+        // 192³ with max_tile = 64, 8 threads: stage rows are 192·192 =
+        // 36864 flat rows → band 64 → 576 tiles per stage.
+        let plan = ShardPlan::new((192, 192, 192), (192, 192, 192), 64, 8);
+        assert!(plan.needs_sharding());
+        assert_eq!(plan.band, [64, 64, 64]);
+        assert_eq!(plan.tiles, [576, 576, 576]);
+        assert_eq!(plan.total_passes(), 3 * 576);
+    }
+
+    #[test]
+    fn band_respects_threads_and_cap() {
+        assert_eq!(band_rows(64, 8, 128), 8); // split across workers
+        assert_eq!(band_rows(36864, 8, 64), 64); // capped by the tile bound
+        assert_eq!(band_rows(3, 8, 64), 1); // never zero
+        assert_eq!(band_rows(0, 8, 64), 1);
+    }
+
+    #[test]
+    fn mode_products_bit_identical_to_scalar() {
+        let mut rng = Rng::new(704);
+        let x = Tensor3::random(7, 6, 5, &mut rng);
+        let c1 = Mat::random(7, 9, &mut rng);
+        let c2 = Mat::random(6, 3, &mut rng);
+        let c3 = Mat::random(5, 8, &mut rng);
+        for threads in [1usize, 2, 8] {
+            let c = cfg(2, threads);
+            assert_eq!(
+                mode1_sharded(&x, &c1, &c).max_abs_diff(&mode1_product(&x, &c1)),
+                0.0
+            );
+            assert_eq!(
+                mode2_sharded(&x, &c2, &c).max_abs_diff(&mode2_product(&x, &c2)),
+                0.0
+            );
+            assert_eq!(
+                mode3_sharded(&x, &c3, &c).max_abs_diff(&mode3_product(&x, &c3)),
+                0.0
+            );
+        }
+    }
+
+    #[test]
+    fn sharder_dft_split_bit_identical_to_scalar_split() {
+        let mut rng = Rng::new(705);
+        let re = Tensor3::random(6, 5, 7, &mut rng);
+        let im = Tensor3::random(6, 5, 7, &mut rng);
+        let sharder = Sharder::new(cfg(3, 4));
+        for inverse in [false, true] {
+            let (er, ei) = sharder.dft3d_split(&re, &im, inverse);
+            let (sr, si) = crate::gemt::split::dft3d_split(&re, &im, inverse);
+            assert_eq!(er.max_abs_diff(&sr), 0.0, "re diverged (inverse={inverse})");
+            assert_eq!(ei.max_abs_diff(&si), 0.0, "im diverged (inverse={inverse})");
+        }
+    }
+
+    #[test]
+    fn split_total_passes_counts_all_tiled_products() {
+        // 6·5 = 30 output rows per mode product, band capped at 4 → 8
+        // tiles each; 4 real products per mode × 3 modes = 12 products.
+        let sharder = Sharder::new(cfg(4, 1));
+        assert_eq!(sharder.split_total_passes((6, 5, 7)), 12 * 8);
+        assert_eq!(sharder.split_total_passes((0, 5, 7)), 0);
+    }
+
+    #[test]
+    fn sharder_dxt_roundtrip_oversized() {
+        let mut rng = Rng::new(706);
+        let x = Tensor3::random(10, 9, 11, &mut rng);
+        let sharder = Sharder::new(cfg(4, 2));
+        let y = sharder.dxt3d_forward(&x, TransformKind::Dct2);
+        assert_eq!(
+            y.max_abs_diff(&crate::gemt::dxt3d_forward(&x, TransformKind::Dct2)),
+            0.0
+        );
+        let back = sharder.dxt3d_inverse(&y, TransformKind::Dct2);
+        assert!(x.max_abs_diff(&back) < 1e-9);
+    }
+
+    #[test]
+    fn config_from_ini_section() {
+        let cfg = crate::config::Config::parse("[engine]\nthreads = 2\nmax_tile = 48\n").unwrap();
+        let s = ShardConfig::from_config(&cfg).unwrap();
+        assert_eq!(s.max_tile, 48);
+        assert_eq!(s.engine.threads, 2);
+        let empty = crate::config::Config::parse("").unwrap();
+        assert_eq!(ShardConfig::from_config(&empty).unwrap(), ShardConfig::default());
+        let bad = crate::config::Config::parse("[engine]\nmax_tile = 0\n").unwrap();
+        assert!(ShardConfig::from_config(&bad).is_err());
+    }
+
+    #[test]
+    fn degenerate_single_element() {
+        let (x, cs) = case((1, 1, 1), (1, 1, 1), 707);
+        let got = gemt_sharded_with(&x, &cs, &cfg(1, 4));
+        assert!(got.max_abs_diff(&gemt_naive(&x, &cs)) < 1e-12);
+    }
+}

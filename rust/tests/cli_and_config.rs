@@ -12,11 +12,31 @@ fn args(v: &[&str]) -> cli::Args {
 
 #[test]
 fn transform_command_runs_every_kind() {
-    for kind in ["dct", "dht", "dst1", "dwht", "identity"] {
+    for kind in ["dct", "dht", "dst1", "dwht", "identity", "dft"] {
         let shape = if kind == "dwht" { "8x4x2" } else { "5x6x7" };
         let a = args(&["transform", "--kind", kind, "--shape", shape]);
         commands::run(&a).unwrap_or_else(|e| panic!("{kind}: {e:#}"));
     }
+}
+
+#[test]
+fn transform_engine_accepts_arbitrary_and_oversized_shapes() {
+    // Shapes beyond --max-tile shard across engine tile passes; prime and
+    // rectangular shapes are fine too.
+    commands::run(&args(&[
+        "transform", "--kind", "dct", "--shape", "13x7x11", "--engine", "--max-tile", "4",
+        "--threads", "2",
+    ]))
+    .unwrap();
+    // The split DFT rides the engine path as well.
+    commands::run(&args(&[
+        "transform", "--kind", "dft", "--shape", "9x5x6", "--engine", "--max-tile", "3",
+    ]))
+    .unwrap();
+    // Engine knobs validate.
+    assert!(commands::run(&args(&["transform", "--engine", "--max-tile", "0"])).is_err());
+    // ...and are rejected without --engine.
+    assert!(commands::run(&args(&["transform", "--max-tile", "4"])).is_err());
 }
 
 #[test]
@@ -170,4 +190,66 @@ fn config_rejects_malformed_values() {
     assert!(CoordinatorConfig::from_config(&bad).is_err());
     let zero = Config::parse("[coordinator]\nmax_batch = 0\n").unwrap();
     assert!(CoordinatorConfig::from_config(&zero).is_err());
+}
+
+#[test]
+fn serve_sharded_backend_smoke_and_flag_validation() {
+    // Tile bound far below the demo shape: every job shards.
+    commands::run(&args(&[
+        "serve", "--backend", "sharded", "--jobs", "6", "--workers", "2", "--max-tile", "4",
+        "--threads", "2",
+    ]))
+    .unwrap();
+    // --max-tile belongs to the sharded backend only.
+    assert!(commands::run(&args(&[
+        "serve", "--backend", "engine", "--max-tile", "4", "--jobs", "1",
+    ]))
+    .is_err());
+    assert!(commands::run(&args(&[
+        "serve", "--backend", "reference", "--max-tile", "4", "--jobs", "1",
+    ]))
+    .is_err());
+}
+
+#[test]
+fn serve_sharded_reads_max_tile_from_config() {
+    let dir = std::env::temp_dir().join("triada_cli_shard_cfg_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("shard.ini");
+    std::fs::write(
+        &path,
+        "[coordinator]\nworkers = 2\nqueue_depth = 16\n\n[engine]\nthreads = 2\nmax_tile = 4\n",
+    )
+    .unwrap();
+    commands::run(&args(&[
+        "serve",
+        "--backend",
+        "sharded",
+        "--jobs",
+        "4",
+        "--config",
+        path.to_str().unwrap(),
+    ]))
+    .unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn config_md_documents_every_key_and_default() {
+    // docs/CONFIG.md is generated-checked: every supported key must appear
+    // as `section.key` on a table line that also carries the live default.
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/CONFIG.md");
+    let text = std::fs::read_to_string(path).expect("docs/CONFIG.md must exist");
+    for (section, key, default) in triada::config::documented_keys() {
+        let needle = format!("`{section}.{key}`");
+        let line = text
+            .lines()
+            .find(|l| l.contains(&needle))
+            .unwrap_or_else(|| panic!("docs/CONFIG.md does not document {needle}"));
+        let rendered = format!("`{default}`");
+        assert!(
+            line.contains(&rendered),
+            "docs/CONFIG.md documents {needle} but not its default {rendered}: {line}"
+        );
+    }
 }

@@ -1,0 +1,226 @@
+//! Shard ↔ engine ↔ scalar parity: the block-decomposition layer must be
+//! bit-identical to `gemt_outer` for any shape (rectangular, oversized,
+//! prime, smaller than the block size) at any thread count, and the
+//! `DftSplit` engine routing must match the scalar split reference exactly.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use triada::coordinator::batcher::BatchPolicy;
+use triada::coordinator::{
+    Backend, Coordinator, CoordinatorConfig, ReferenceBackend, ShardedEngineBackend, SimBackend,
+    TransformJob,
+};
+use triada::gemt::shard::{gemt_sharded_with, ShardConfig, ShardPlan, Sharder};
+use triada::gemt::{self, gemt_outer, CoeffSet, EngineConfig};
+use triada::prop_assert;
+use triada::proptest::run_prop;
+use triada::runtime::Direction;
+use triada::sim::SimConfig;
+use triada::tensor::{sparsify, Mat, Tensor3};
+use triada::transforms::TransformKind;
+use triada::util::Rng;
+
+fn shard_cfg(max_tile: usize, threads: usize, block: usize) -> ShardConfig {
+    ShardConfig { max_tile, engine: EngineConfig { threads, block } }
+}
+
+#[test]
+fn prop_sharded_bit_identical_on_rectangular_and_oversized_shapes() {
+    // Dims drawn from a pool of primes, dims smaller than the block size,
+    // and dims several times the tile bound — the whole satellite surface.
+    const DIMS: [usize; 8] = [1, 2, 3, 5, 7, 11, 13, 17];
+    run_prop("sharded ≡ gemt_outer (bitwise)", 24, |g| {
+        let dim = |g: &mut triada::proptest::Gen| *g.choose(&DIMS);
+        let (n1, n2, n3) = (dim(g), dim(g), dim(g));
+        let (k1, k2, k3) = (dim(g), dim(g), dim(g));
+        let x = Tensor3::random(n1, n2, n3, g.rng());
+        let cs = CoeffSet::new(
+            Mat::random(n1, k1, g.rng()),
+            Mat::random(n2, k2, g.rng()),
+            Mat::random(n3, k3, g.rng()),
+        );
+        let want = gemt_outer(&x, &cs);
+        let max_tile = g.usize_in(1, 6);
+        let block = *g.choose(&[1usize, 2, 64]);
+        for threads in [1usize, 2, 8] {
+            let got = gemt_sharded_with(&x, &cs, &shard_cfg(max_tile, threads, block));
+            prop_assert!(
+                got.max_abs_diff(&want) == 0.0,
+                "diverged: in=({n1},{n2},{n3}) out=({k1},{k2},{k3}) \
+                 max_tile={max_tile} block={block} threads={threads}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sharded_mode_products_bit_identical() {
+    run_prop("sharded mode products ≡ scalar", 20, |g| {
+        let (n1, n2, n3) = g.shape_in(1, 9);
+        let x = Tensor3::random(n1, n2, n3, g.rng());
+        let k = g.usize_in(1, 9);
+        let cfg = shard_cfg(g.usize_in(1, 4), *g.choose(&[1usize, 2, 8]), 2);
+        let c1 = Mat::random(n1, k, g.rng());
+        let c2 = Mat::random(n2, k, g.rng());
+        let c3 = Mat::random(n3, k, g.rng());
+        prop_assert!(
+            gemt::shard::mode1_sharded(&x, &c1, &cfg)
+                .max_abs_diff(&gemt::mode1_product(&x, &c1))
+                == 0.0,
+            "mode 1 diverged at ({n1},{n2},{n3})→k={k}"
+        );
+        prop_assert!(
+            gemt::shard::mode2_sharded(&x, &c2, &cfg)
+                .max_abs_diff(&gemt::mode2_product(&x, &c2))
+                == 0.0,
+            "mode 2 diverged at ({n1},{n2},{n3})→k={k}"
+        );
+        prop_assert!(
+            gemt::shard::mode3_sharded(&x, &c3, &cfg)
+                .max_abs_diff(&gemt::mode3_product(&x, &c3))
+                == 0.0,
+            "mode 3 diverged at ({n1},{n2},{n3})→k={k}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn oversized_cube_every_dim_beyond_tile_bound() {
+    // Structural twin of the 192³/max_tile=64 acceptance case at a
+    // test-budget size: every dimension is 3× the tile bound, so every
+    // stage runs multiple tile passes.
+    let mut rng = Rng::new(900);
+    let x = Tensor3::random(48, 48, 48, &mut rng);
+    let cs = CoeffSet::new(
+        Mat::random(48, 48, &mut rng),
+        Mat::random(48, 48, &mut rng),
+        Mat::random(48, 48, &mut rng),
+    );
+    let plan = ShardPlan::new((48, 48, 48), (48, 48, 48), 16, 4);
+    assert!(plan.needs_sharding());
+    assert!(plan.tiles.iter().all(|&t| t > 1), "expected multiple tiles per stage: {plan:?}");
+    let want = gemt_outer(&x, &cs);
+    for threads in [1usize, 4] {
+        let got = gemt_sharded_with(&x, &cs, &shard_cfg(16, threads, 8));
+        assert_eq!(got.max_abs_diff(&want), 0.0, "diverged at {threads} threads");
+    }
+}
+
+#[test]
+fn sparse_oversized_keeps_esop_and_parity() {
+    let mut rng = Rng::new(901);
+    let mut x = Tensor3::random(20, 20, 20, &mut rng);
+    sparsify(&mut x, 0.8, &mut rng);
+    let cs = CoeffSet::new(
+        Mat::random(20, 20, &mut rng),
+        Mat::random(20, 20, &mut rng),
+        Mat::random(20, 20, &mut rng),
+    );
+    let got = gemt_sharded_with(&x, &cs, &shard_cfg(8, 2, 4));
+    assert_eq!(got.max_abs_diff(&gemt_outer(&x, &cs)), 0.0);
+}
+
+#[test]
+fn dft_split_engine_routing_is_bit_identical_and_roundtrips() {
+    let mut rng = Rng::new(902);
+    let re = Tensor3::random(9, 7, 10, &mut rng);
+    let im = Tensor3::random(9, 7, 10, &mut rng);
+    let sharder = Sharder::new(shard_cfg(4, 3, 8));
+    let (fr, fi) = sharder.dft3d_split(&re, &im, false);
+    let (sr, si) = gemt::split::dft3d_split(&re, &im, false);
+    assert_eq!(fr.max_abs_diff(&sr), 0.0);
+    assert_eq!(fi.max_abs_diff(&si), 0.0);
+    let (br, bi) = sharder.dft3d_split(&fr, &fi, true);
+    assert!(re.max_abs_diff(&br) < 1e-9);
+    assert!(im.max_abs_diff(&bi) < 1e-9);
+}
+
+#[test]
+fn sharded_backend_serves_oversized_and_dft_split_through_coordinator() {
+    let cfg = CoordinatorConfig {
+        workers: 2,
+        queue_depth: 32,
+        batch: BatchPolicy { max_batch: 4, window: Duration::from_millis(1) },
+    };
+    let backend = ShardedEngineBackend::new(shard_cfg(8, 2, 8));
+    let c = Coordinator::start(cfg, Arc::new(backend));
+    assert_eq!(c.backend_name(), "sharded-engine");
+    let mut rng = Rng::new(903);
+
+    // Oversized real transform: every dim is 3× the tile bound.
+    let x = Tensor3::random(24, 24, 24, &mut rng).to_f32();
+    let h = c
+        .submit(TransformJob::new(TransformKind::Dht, Direction::Forward, vec![x.clone()]))
+        .unwrap();
+    let out = h.wait().unwrap().outputs.unwrap();
+    // The backend computes in f64 and rounds to f32 at the edge; rounding
+    // the bit-identical f64 reference the same way must match exactly.
+    let want = gemt::dxt3d_forward(&x.to_f64(), TransformKind::Dht).to_f32();
+    assert_eq!(
+        out[0].to_f64().max_abs_diff(&want.to_f64()),
+        0.0,
+        "served result must be bit-identical"
+    );
+
+    // DftSplit rides the engine path end-to-end.
+    let re = Tensor3::random(6, 6, 6, &mut rng).to_f32();
+    let im = Tensor3::random(6, 6, 6, &mut rng).to_f32();
+    let h = c
+        .submit(TransformJob::new(
+            TransformKind::DftSplit,
+            Direction::Forward,
+            vec![re.clone(), im.clone()],
+        ))
+        .unwrap();
+    let out = h.wait().unwrap().outputs.unwrap();
+    let (wr, wi) = gemt::split::dft3d_split(&re.to_f64(), &im.to_f64(), false);
+    assert_eq!(out[0].to_f64().max_abs_diff(&wr.to_f32().to_f64()), 0.0);
+    assert_eq!(out[1].to_f64().max_abs_diff(&wi.to_f32().to_f64()), 0.0);
+    c.shutdown();
+}
+
+#[test]
+fn engine_backend_no_longer_falls_back_for_dft_split() {
+    // The engine serves DftSplit itself (four real mode products per mode);
+    // the sim backend still cannot, and must say so — once.
+    let reference = ReferenceBackend;
+    let engine = triada::coordinator::EngineBackend::new(EngineConfig::with_threads(2));
+    let sim = SimBackend::new(SimConfig::esop((8, 8, 8)));
+    let mut rng = Rng::new(904);
+    let re = Tensor3::random(5, 4, 3, &mut rng).to_f32();
+    let im = Tensor3::random(5, 4, 3, &mut rng).to_f32();
+    let inputs = vec![re, im];
+
+    let want = reference
+        .execute(TransformKind::DftSplit, Direction::Forward, &inputs)
+        .unwrap();
+    let got = engine
+        .execute(TransformKind::DftSplit, Direction::Forward, &inputs)
+        .unwrap();
+    for (w, g) in want.iter().zip(&got) {
+        assert_eq!(w.to_f64().max_abs_diff(&g.to_f64()), 0.0);
+    }
+
+    assert!(sim.fallback_reasons().is_empty());
+    sim.execute(TransformKind::DftSplit, Direction::Forward, &inputs).unwrap();
+    sim.execute(TransformKind::DftSplit, Direction::Inverse, &inputs).unwrap();
+    let reasons = sim.fallback_reasons();
+    assert_eq!(reasons.len(), 1, "fallback warning must fire exactly once: {reasons:?}");
+    assert!(reasons[0].contains("dft-split"));
+}
+
+#[test]
+fn shard_config_round_trips_through_ini() {
+    let cfg = triada::config::Config::parse(
+        "[engine]\nthreads = 2\nblock = 16\nmax_tile = 24\n",
+    )
+    .unwrap();
+    let s = ShardConfig::from_config(&cfg).unwrap();
+    assert_eq!(s, shard_cfg(24, 2, 16));
+    // max_tile is validated like the other engine knobs.
+    let bad = triada::config::Config::parse("[engine]\nmax_tile = 0\n").unwrap();
+    assert!(ShardConfig::from_config(&bad).is_err());
+}
