@@ -44,6 +44,7 @@ fn main() -> anyhow::Result<()> {
         workers: 4,
         queue_depth: 128,
         batch: BatchPolicy { max_batch: 16, window: std::time::Duration::from_millis(2) },
+        ..CoordinatorConfig::default()
     };
     println!(
         "coordinator: backend={label} workers={} queue={} batch≤{} window={:?}\n",
@@ -109,6 +110,7 @@ fn main() -> anyhow::Result<()> {
         "batching: {} batches, mean {:.1} jobs/batch (executable reuse)",
         snap.batches, snap.mean_batch_size
     );
+    println!("plan cache: {}", snap.plans.summary());
     println!("{}", snap.summary());
     coordinator.shutdown();
     println!("\nserve_e2e OK");

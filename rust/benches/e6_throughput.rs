@@ -27,7 +27,12 @@ use triada::transforms::TransformKind;
 use triada::util::{human, Rng, Timer};
 
 fn drive(backend: Arc<dyn Backend>, policy: BatchPolicy, jobs: usize) -> (f64, f64, f64, f64) {
-    let config = CoordinatorConfig { workers: 4, queue_depth: 256, batch: policy };
+    let config = CoordinatorConfig {
+        workers: 4,
+        queue_depth: 256,
+        batch: policy,
+        ..CoordinatorConfig::default()
+    };
     let c = Coordinator::start(config, backend);
     let mut rng = Rng::new(6);
     let t = Timer::start();
@@ -44,6 +49,9 @@ fn drive(backend: Arc<dyn Backend>, policy: BatchPolicy, jobs: usize) -> (f64, f
     }
     let wall = t.elapsed_s();
     let snap = c.metrics();
+    // Two kinds at one shape/direction: the shared plan cache must have
+    // built exactly two stationary plans for the whole run.
+    assert_eq!(snap.plans.builds, 2, "expected one plan build per (kind, direction, shape)");
     c.shutdown();
     (jobs as f64 / wall, snap.latency_p50_s, snap.latency_p99_s, snap.mean_batch_size)
 }

@@ -49,7 +49,9 @@ COMMANDS:
         --threads N              engine worker threads   [auto]
         --block N                engine panel block size [64]
         --max-tile N             sharded backend tile bound [128]
-        --config FILE            INI config (sections [coordinator], [engine])
+        --plan-cache N           stationary plans kept resident (LRU) [32]
+        --config FILE            INI config (sections [coordinator],
+                                 [engine], [plan_cache])
     help                         this text
 ";
 
@@ -69,8 +71,8 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
 }
 
 fn parse_kind(args: &Args) -> anyhow::Result<TransformKind> {
-    let s = args.opt_or("kind", "dct");
-    TransformKind::parse(s).with_context(|| format!("unknown transform kind {s:?}"))
+    // The FromStr error already lists every valid kind name.
+    Ok(args.opt_or("kind", "dct").parse::<TransformKind>()?)
 }
 
 fn cmd_info(args: &Args) -> anyhow::Result<()> {
@@ -265,6 +267,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     if let Some(w) = args.opt("workers") {
         cfg.workers = w.parse().context("--workers")?;
     }
+    if let Some(p) = args.opt("plan-cache") {
+        cfg.plan_capacity = p.parse().context("--plan-cache")?;
+        anyhow::ensure!(cfg.plan_capacity > 0, "--plan-cache must be positive");
+    }
     // `--engine` is shorthand for `--backend engine`; reject contradictions
     // instead of silently picking one.
     let backend_name = match (args.flag("engine"), args.opt("backend")) {
@@ -320,12 +326,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let jobs = args.opt_usize("jobs", 64)?;
     let shape = args.opt_shape("shape", (8, 8, 8))?;
     println!(
-        "coordinator: backend={} workers={} queue={} batch={}x/{:?}",
+        "coordinator: backend={} workers={} queue={} batch={}x/{:?} plan-cache={}",
         backend.name(),
         cfg.workers,
         cfg.queue_depth,
         cfg.batch.max_batch,
-        cfg.batch.window
+        cfg.batch.window,
+        cfg.plan_capacity
     );
     let coordinator = Coordinator::start(cfg, backend);
 
@@ -350,6 +357,15 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let snap = coordinator.metrics();
     println!("served {ok}/{jobs} jobs in {} ({})", human::duration(dt), human::rate(jobs as f64 / dt));
     println!("{}", snap.summary());
+    println!("plan cache: {}", snap.plans.summary());
+    if snap.fallback_reasons.is_empty() {
+        println!("degraded paths: none");
+    } else {
+        println!("degraded paths ({}):", snap.fallback_reasons.len());
+        for reason in &snap.fallback_reasons {
+            println!("  - {reason}");
+        }
+    }
     coordinator.shutdown();
     Ok(())
 }

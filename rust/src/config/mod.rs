@@ -155,6 +155,7 @@ pub fn documented_keys() -> Vec<(&'static str, &'static str, String)> {
         ("engine", "threads", engine.threads.to_string()),
         ("engine", "block", engine.block.to_string()),
         ("engine", "max_tile", shard.max_tile.to_string()),
+        ("plan_cache", "capacity", coord.plan_capacity.to_string()),
     ]
 }
 
@@ -251,6 +252,7 @@ p1 = 64
         let keys = documented_keys();
         assert!(keys.iter().any(|(s, k, _)| *s == "coordinator" && *k == "workers"));
         assert!(keys.iter().any(|(s, k, _)| *s == "engine" && *k == "max_tile"));
+        assert!(keys.iter().any(|(s, k, _)| *s == "plan_cache" && *k == "capacity"));
         // Every key the typed accessors read must be documented.
         for key in ["workers", "queue_depth", "max_batch", "batch_window_ms"] {
             assert!(keys.iter().any(|(s, k, _)| *s == "coordinator" && *k == key), "{key}");

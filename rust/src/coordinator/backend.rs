@@ -15,30 +15,58 @@
 //! * [`SimBackend`] — the TriADA device simulator (returns the same
 //!   numerics and additionally accumulates architecture counters).
 //!
+//! Every backend serves through the **plan/execute** split of
+//! [`super::plan`]: [`Backend::prepare`] builds a stationary [`Plan`] for a
+//! `(kind, direction, shape)` spec once — typed coefficient matrices, tile
+//! layout, shard decomposition, artifact handle — and [`Plan::execute`]
+//! only streams data tensors through it. The one-shot [`Backend::execute`]
+//! remains as a thin `prepare` + `execute` wrapper.
+//!
 //! A backend that cannot serve a request on its primary path never degrades
 //! silently: every reference fallback is recorded in a [`FallbackNotice`]
-//! and logged once per distinct reason.
+//! and logged once per distinct reason, and the recorded reasons surface in
+//! [`super::metrics::MetricsSnapshot::fallback_reasons`].
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, OnceLock};
 
-use crate::gemt::{self, CoeffSet};
+use crate::gemt::{self, CoeffSet, SplitCoeffs};
 use crate::runtime::{Direction, PjrtHandle};
 use crate::sim::{self, Counters, SimConfig};
 use crate::tensor::Tensor3;
 use crate::transforms::TransformKind;
 
-/// A way to execute one transform request.
+use super::plan::{Plan, PlanSpec};
+
+/// A way to execute transform requests. The required method is
+/// [`Backend::prepare`]: build the stationary state for one spec; execution
+/// then streams data through the returned [`Plan`].
 pub trait Backend: Send + Sync {
     /// Stable identifier shown in CLI output and metrics.
     fn name(&self) -> &'static str;
-    /// Execute one transform request (one tensor for real kinds, an
-    /// (re, im) pair for [`TransformKind::DftSplit`]).
+
+    /// Build everything shape-dependent for `spec` once — the prepared
+    /// plan is immutable, shareable, and reusable across any number of
+    /// requests of that spec.
+    fn prepare(&self, spec: PlanSpec) -> anyhow::Result<Arc<dyn Plan>>;
+
+    /// One-shot convenience: `prepare` + `execute` for a single request
+    /// (one tensor for real kinds, an `(re, im)` pair for
+    /// [`TransformKind::DftSplit`]). Callers with repeated shapes should
+    /// prepare once (or go through a [`super::plan::PlanCache`]) instead.
     fn execute(
         &self,
         kind: TransformKind,
         direction: Direction,
         inputs: &[Tensor3<f32>],
-    ) -> anyhow::Result<Vec<Tensor3<f32>>>;
+    ) -> anyhow::Result<Vec<Tensor3<f32>>> {
+        let spec = PlanSpec::for_inputs(kind, direction, inputs)?;
+        self.prepare(spec)?.execute(inputs)
+    }
+
+    /// Reference-fallback reasons recorded so far (empty = no degradation).
+    fn fallback_reasons(&self) -> Vec<String> {
+        Vec::new()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -84,34 +112,80 @@ impl FallbackNotice {
 
 // ---------------------------------------------------------------------------
 
+/// The stationary coefficient state of one plan: typed per-mode matrices
+/// for a real kind, or the per-mode split `(cos, ±sin)` pairs for the
+/// split complex DFT. Built exactly once per plan.
+enum Stationary {
+    Real(CoeffSet<f64>),
+    Split(SplitCoeffs),
+}
+
+impl Stationary {
+    fn build(spec: PlanSpec) -> Stationary {
+        let (n1, n2, n3) = spec.shape;
+        match spec.kind {
+            TransformKind::DftSplit => Stationary::Split(SplitCoeffs::new(
+                spec.shape,
+                spec.direction == Direction::Inverse,
+            )),
+            real => Stationary::Real(match spec.direction {
+                Direction::Forward => CoeffSet::forward(real, n1, n2, n3),
+                Direction::Inverse => CoeffSet::inverse(real, n1, n2, n3),
+            }),
+        }
+    }
+}
+
+/// Stream one request through the scalar f64 reference on precomputed
+/// stationary state (shared by the reference plan and every fallback path).
+fn stationary_reference_execute(
+    stationary: &Stationary,
+    inputs: &[Tensor3<f32>],
+) -> anyhow::Result<Vec<Tensor3<f32>>> {
+    match stationary {
+        Stationary::Split(coeffs) => {
+            let (or, oi) = coeffs.run_scalar(&inputs[0].to_f64(), &inputs[1].to_f64());
+            Ok(vec![or.to_f32(), oi.to_f32()])
+        }
+        Stationary::Real(cs) => Ok(vec![gemt::gemt_outer(&inputs[0].to_f64(), cs).to_f32()]),
+    }
+}
+
 /// Exact CPU reference (f64 internally).
 pub struct ReferenceBackend;
 
-/// Shared helper: run a request through the f64 CPU reference.
+/// Shared helper: run a one-shot request through the f64 CPU reference
+/// (builds the coefficients in place; plan-path callers should prepare a
+/// [`ReferenceBackend`] plan instead).
 pub fn reference_execute(
     kind: TransformKind,
     direction: Direction,
     inputs: &[Tensor3<f32>],
 ) -> anyhow::Result<Vec<Tensor3<f32>>> {
-    let inverse = direction == Direction::Inverse;
-    match kind {
-        TransformKind::DftSplit => {
-            anyhow::ensure!(inputs.len() == 2, "dft-split expects (re, im)");
-            let re = inputs[0].to_f64();
-            let im = inputs[1].to_f64();
-            let (or, oi) = gemt::split::dft3d_split(&re, &im, inverse);
-            Ok(vec![or.to_f32(), oi.to_f32()])
-        }
-        real => {
-            anyhow::ensure!(inputs.len() == 1, "{} expects one tensor", real.name());
-            let x = inputs[0].to_f64();
-            let y = if inverse {
-                gemt::dxt3d_inverse(&x, real)
-            } else {
-                gemt::dxt3d_forward(&x, real)
-            };
-            Ok(vec![y.to_f32()])
-        }
+    let spec = PlanSpec::for_inputs(kind, direction, inputs)?;
+    spec.check_inputs(inputs)?;
+    stationary_reference_execute(&Stationary::build(spec), inputs)
+}
+
+/// Stationary plan of [`ReferenceBackend`]: precomputed f64 coefficients,
+/// scalar outer-product chain.
+struct ReferencePlan {
+    spec: PlanSpec,
+    stationary: Stationary,
+}
+
+impl Plan for ReferencePlan {
+    fn spec(&self) -> PlanSpec {
+        self.spec
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "cpu-reference"
+    }
+
+    fn execute(&self, inputs: &[Tensor3<f32>]) -> anyhow::Result<Vec<Tensor3<f32>>> {
+        self.spec.check_inputs(inputs)?;
+        stationary_reference_execute(&self.stationary, inputs)
     }
 }
 
@@ -120,29 +194,22 @@ impl Backend for ReferenceBackend {
         "cpu-reference"
     }
 
-    fn execute(
-        &self,
-        kind: TransformKind,
-        direction: Direction,
-        inputs: &[Tensor3<f32>],
-    ) -> anyhow::Result<Vec<Tensor3<f32>>> {
-        reference_execute(kind, direction, inputs)
+    fn prepare(&self, spec: PlanSpec) -> anyhow::Result<Arc<dyn Plan>> {
+        spec.validate()?;
+        Ok(Arc::new(ReferencePlan { spec, stationary: Stationary::build(spec) }))
     }
 }
 
 // ---------------------------------------------------------------------------
 
-/// Shared by the engine-family backends: run the split complex DFT as four
-/// real mode products per mode on the tiled engine kernels.
-fn engine_dft_split(
+/// Shared by the engine-family plans: stream one split `(re, im)` pair
+/// through precomputed coefficients on the tiled parallel mode products.
+fn engine_split_execute(
     sharder: &gemt::Sharder,
-    direction: Direction,
+    coeffs: &SplitCoeffs,
     inputs: &[Tensor3<f32>],
 ) -> anyhow::Result<Vec<Tensor3<f32>>> {
-    anyhow::ensure!(inputs.len() == 2, "dft-split expects (re, im)");
-    let re = inputs[0].to_f64();
-    let im = inputs[1].to_f64();
-    let (or, oi) = sharder.dft3d_split(&re, &im, direction == Direction::Inverse);
+    let (or, oi) = sharder.dft3d_split_planned(&inputs[0].to_f64(), &inputs[1].to_f64(), coeffs);
     Ok(vec![or.to_f32(), oi.to_f32()])
 }
 
@@ -172,29 +239,47 @@ impl EngineBackend {
     }
 }
 
+/// Stationary plan of [`EngineBackend`]: precomputed coefficients streamed
+/// through the fused two-phase engine (real kinds) or the tiled parallel
+/// mode products (split DFT).
+struct EnginePlan {
+    spec: PlanSpec,
+    stationary: Stationary,
+    engine: gemt::engine::Engine,
+    sharder: gemt::Sharder,
+}
+
+impl Plan for EnginePlan {
+    fn spec(&self) -> PlanSpec {
+        self.spec
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "engine"
+    }
+
+    fn execute(&self, inputs: &[Tensor3<f32>]) -> anyhow::Result<Vec<Tensor3<f32>>> {
+        self.spec.check_inputs(inputs)?;
+        match &self.stationary {
+            Stationary::Split(coeffs) => engine_split_execute(&self.sharder, coeffs, inputs),
+            Stationary::Real(cs) => Ok(vec![self.engine.run(&inputs[0].to_f64(), cs).to_f32()]),
+        }
+    }
+}
+
 impl Backend for EngineBackend {
     fn name(&self) -> &'static str {
         "engine"
     }
 
-    fn execute(
-        &self,
-        kind: TransformKind,
-        direction: Direction,
-        inputs: &[Tensor3<f32>],
-    ) -> anyhow::Result<Vec<Tensor3<f32>>> {
-        match kind {
-            TransformKind::DftSplit => engine_dft_split(&self.sharder, direction, inputs),
-            real => {
-                anyhow::ensure!(inputs.len() == 1, "{} expects one tensor", real.name());
-                let x = inputs[0].to_f64();
-                let y = match direction {
-                    Direction::Forward => self.engine.dxt3d_forward(&x, real),
-                    Direction::Inverse => self.engine.dxt3d_inverse(&x, real),
-                };
-                Ok(vec![y.to_f32()])
-            }
-        }
+    fn prepare(&self, spec: PlanSpec) -> anyhow::Result<Arc<dyn Plan>> {
+        spec.validate()?;
+        Ok(Arc::new(EnginePlan {
+            spec,
+            stationary: Stationary::build(spec),
+            engine: self.engine.clone(),
+            sharder: self.sharder.clone(),
+        }))
     }
 }
 
@@ -221,29 +306,51 @@ impl ShardedEngineBackend {
     }
 }
 
+/// Stationary plan of [`ShardedEngineBackend`]: precomputed coefficients
+/// plus the tile decomposition, planned once per shape.
+struct ShardedPlan {
+    spec: PlanSpec,
+    stationary: Stationary,
+    sharder: gemt::Sharder,
+    /// The decomposition real-kind requests stream through (the split DFT's
+    /// tiled mode products band their own rows per product).
+    shard_plan: gemt::ShardPlan,
+}
+
+impl Plan for ShardedPlan {
+    fn spec(&self) -> PlanSpec {
+        self.spec
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "sharded-engine"
+    }
+
+    fn execute(&self, inputs: &[Tensor3<f32>]) -> anyhow::Result<Vec<Tensor3<f32>>> {
+        self.spec.check_inputs(inputs)?;
+        match &self.stationary {
+            Stationary::Split(coeffs) => engine_split_execute(&self.sharder, coeffs, inputs),
+            Stationary::Real(cs) => Ok(vec![self
+                .sharder
+                .run_planned(&inputs[0].to_f64(), cs, &self.shard_plan)
+                .to_f32()]),
+        }
+    }
+}
+
 impl Backend for ShardedEngineBackend {
     fn name(&self) -> &'static str {
         "sharded-engine"
     }
 
-    fn execute(
-        &self,
-        kind: TransformKind,
-        direction: Direction,
-        inputs: &[Tensor3<f32>],
-    ) -> anyhow::Result<Vec<Tensor3<f32>>> {
-        match kind {
-            TransformKind::DftSplit => engine_dft_split(&self.sharder, direction, inputs),
-            real => {
-                anyhow::ensure!(inputs.len() == 1, "{} expects one tensor", real.name());
-                let x = inputs[0].to_f64();
-                let y = match direction {
-                    Direction::Forward => self.sharder.dxt3d_forward(&x, real),
-                    Direction::Inverse => self.sharder.dxt3d_inverse(&x, real),
-                };
-                Ok(vec![y.to_f32()])
-            }
-        }
+    fn prepare(&self, spec: PlanSpec) -> anyhow::Result<Arc<dyn Plan>> {
+        spec.validate()?;
+        Ok(Arc::new(ShardedPlan {
+            spec,
+            stationary: Stationary::build(spec),
+            sharder: self.sharder.clone(),
+            shard_plan: self.sharder.plan(spec.shape, spec.shape),
+        }))
     }
 }
 
@@ -253,8 +360,8 @@ impl Backend for ShardedEngineBackend {
 /// requests (read them with [`SimBackend::counters`]).
 pub struct SimBackend {
     config: SimConfig,
-    counters: Mutex<Counters>,
-    fallbacks: FallbackNotice,
+    counters: Arc<Mutex<Counters>>,
+    fallbacks: Arc<FallbackNotice>,
 }
 
 impl SimBackend {
@@ -262,36 +369,57 @@ impl SimBackend {
     pub fn new(config: SimConfig) -> SimBackend {
         SimBackend {
             config,
-            counters: Mutex::new(Counters::default()),
-            fallbacks: FallbackNotice::default(),
+            counters: Arc::new(Mutex::new(Counters::default())),
+            fallbacks: Arc::new(FallbackNotice::default()),
         }
     }
 
-    /// Accumulated architecture counters across every request served.
+    /// Accumulated architecture counters across every request served
+    /// (plans share this sink, so prepared plans count here too).
     pub fn counters(&self) -> Counters {
         self.counters.lock().unwrap().clone()
     }
+}
 
-    /// Reference-fallback reasons recorded so far (empty = every request
-    /// ran on the device model).
-    pub fn fallback_reasons(&self) -> Vec<String> {
-        self.fallbacks.reasons()
+/// Stationary plan of [`SimBackend`]: precomputed coefficients streamed
+/// through the device model; counters merge into the owning backend's sink.
+struct SimPlan {
+    spec: PlanSpec,
+    stationary: Stationary,
+    config: SimConfig,
+    counters: Arc<Mutex<Counters>>,
+    fallbacks: Arc<FallbackNotice>,
+}
+
+impl Plan for SimPlan {
+    fn spec(&self) -> PlanSpec {
+        self.spec
     }
 
-    fn run_real(
-        &self,
-        x: &Tensor3<f64>,
-        kind: TransformKind,
-        direction: Direction,
-    ) -> Tensor3<f64> {
-        let (n1, n2, n3) = x.shape();
-        let cs = match direction {
-            Direction::Forward => CoeffSet::forward(kind, n1, n2, n3),
-            Direction::Inverse => CoeffSet::inverse(kind, n1, n2, n3),
-        };
-        let out = sim::simulate(x, &cs, &self.config);
-        self.counters.lock().unwrap().merge(&out.counters);
-        out.result
+    fn backend_name(&self) -> &'static str {
+        "triada-sim"
+    }
+
+    fn execute(&self, inputs: &[Tensor3<f32>]) -> anyhow::Result<Vec<Tensor3<f32>>> {
+        self.spec.check_inputs(inputs)?;
+        match &self.stationary {
+            Stationary::Split(_) => {
+                // The device model streams one real coefficient matrix per
+                // mode and cannot yet carry the split (cos, −sin) pair, so
+                // this plan serves DftSplit via the reference — loudly,
+                // once, instead of degrading silently.
+                self.fallbacks.record(
+                    "triada-sim",
+                    "device model cannot stream split complex coefficients (dft-split)",
+                );
+                stationary_reference_execute(&self.stationary, inputs)
+            }
+            Stationary::Real(cs) => {
+                let out = sim::simulate(&inputs[0].to_f64(), cs, &self.config);
+                self.counters.lock().unwrap().merge(&out.counters);
+                Ok(vec![out.result.to_f32()])
+            }
+        }
     }
 }
 
@@ -300,31 +428,19 @@ impl Backend for SimBackend {
         "triada-sim"
     }
 
-    fn execute(
-        &self,
-        kind: TransformKind,
-        direction: Direction,
-        inputs: &[Tensor3<f32>],
-    ) -> anyhow::Result<Vec<Tensor3<f32>>> {
-        match kind {
-            TransformKind::DftSplit => {
-                // The device model streams one real coefficient matrix per
-                // mode and cannot yet carry the split (cos, −sin) pair, so
-                // this backend serves DftSplit via the reference — loudly,
-                // once, instead of degrading silently.
-                anyhow::ensure!(inputs.len() == 2, "dft-split expects (re, im)");
-                self.fallbacks.record(
-                    self.name(),
-                    "device model cannot stream split complex coefficients (dft-split)",
-                );
-                reference_execute(kind, direction, inputs)
-            }
-            real => {
-                anyhow::ensure!(inputs.len() == 1, "{} expects one tensor", real.name());
-                let y = self.run_real(&inputs[0].to_f64(), real, direction);
-                Ok(vec![y.to_f32()])
-            }
-        }
+    fn prepare(&self, spec: PlanSpec) -> anyhow::Result<Arc<dyn Plan>> {
+        spec.validate()?;
+        Ok(Arc::new(SimPlan {
+            spec,
+            stationary: Stationary::build(spec),
+            config: self.config.clone(),
+            counters: self.counters.clone(),
+            fallbacks: self.fallbacks.clone(),
+        }))
+    }
+
+    fn fallback_reasons(&self) -> Vec<String> {
+        self.fallbacks.reasons()
     }
 }
 
@@ -337,30 +453,73 @@ pub struct PjrtBackend {
     /// Fall back to the CPU reference when no artifact matches (dev mode);
     /// off in production so missing artifacts surface as errors.
     pub fallback_to_reference: bool,
-    fallbacks: FallbackNotice,
+    fallbacks: Arc<FallbackNotice>,
 }
 
 impl PjrtBackend {
     /// Strict mode: a missing artifact is an error.
     pub fn new(handle: PjrtHandle) -> PjrtBackend {
-        PjrtBackend { handle, fallback_to_reference: false, fallbacks: FallbackNotice::default() }
+        PjrtBackend {
+            handle,
+            fallback_to_reference: false,
+            fallbacks: Arc::new(FallbackNotice::default()),
+        }
     }
 
     /// Dev mode: a missing artifact degrades to the CPU reference (logged
     /// once per distinct reason).
     pub fn with_fallback(handle: PjrtHandle) -> PjrtBackend {
-        PjrtBackend { handle, fallback_to_reference: true, fallbacks: FallbackNotice::default() }
+        PjrtBackend {
+            handle,
+            fallback_to_reference: true,
+            fallbacks: Arc::new(FallbackNotice::default()),
+        }
     }
 
     /// The service handle this backend executes through.
     pub fn handle(&self) -> &PjrtHandle {
         &self.handle
     }
+}
 
-    /// Reference-fallback reasons recorded so far (empty = every request
-    /// ran on a compiled artifact).
-    pub fn fallback_reasons(&self) -> Vec<String> {
-        self.fallbacks.reasons()
+/// Stationary plan of [`PjrtBackend`]: the artifact handle for this spec,
+/// plus (dev mode only) reference fallback coefficients so a PJRT miss
+/// streams through stationary state instead of rebuilding per request.
+struct PjrtPlan {
+    spec: PlanSpec,
+    handle: PjrtHandle,
+    /// `Some` in dev mode. The fallback's stationary state is built lazily
+    /// on the first PJRT miss — a plan whose artifacts always hit never
+    /// pays the coefficient build or holds the matrices.
+    fallback: Option<OnceLock<Stationary>>,
+    fallbacks: Arc<FallbackNotice>,
+}
+
+impl Plan for PjrtPlan {
+    fn spec(&self) -> PlanSpec {
+        self.spec
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn execute(&self, inputs: &[Tensor3<f32>]) -> anyhow::Result<Vec<Tensor3<f32>>> {
+        self.spec.check_inputs(inputs)?;
+        match self
+            .handle
+            .run(self.spec.kind, self.spec.direction, inputs.to_vec())
+        {
+            Ok(out) => Ok(out),
+            Err(e) => match &self.fallback {
+                Some(cell) => {
+                    self.fallbacks.record("pjrt", &format!("pjrt miss ({e:#})"));
+                    let stationary = cell.get_or_init(|| Stationary::build(self.spec));
+                    stationary_reference_execute(stationary, inputs)
+                }
+                None => Err(e),
+            },
+        }
     }
 }
 
@@ -369,20 +528,18 @@ impl Backend for PjrtBackend {
         "pjrt"
     }
 
-    fn execute(
-        &self,
-        kind: TransformKind,
-        direction: Direction,
-        inputs: &[Tensor3<f32>],
-    ) -> anyhow::Result<Vec<Tensor3<f32>>> {
-        match self.handle.run(kind, direction, inputs.to_vec()) {
-            Ok(out) => Ok(out),
-            Err(e) if self.fallback_to_reference => {
-                self.fallbacks.record(self.name(), &format!("pjrt miss ({e:#})"));
-                reference_execute(kind, direction, inputs)
-            }
-            Err(e) => Err(e),
-        }
+    fn prepare(&self, spec: PlanSpec) -> anyhow::Result<Arc<dyn Plan>> {
+        spec.validate()?;
+        Ok(Arc::new(PjrtPlan {
+            spec,
+            handle: self.handle.clone(),
+            fallback: self.fallback_to_reference.then(OnceLock::new),
+            fallbacks: self.fallbacks.clone(),
+        }))
+    }
+
+    fn fallback_reasons(&self) -> Vec<String> {
+        self.fallbacks.reasons()
     }
 }
 
@@ -490,6 +647,21 @@ mod tests {
     }
 
     #[test]
+    fn sim_counters_accumulate_through_prepared_plan() {
+        // A plan outlives its prepare() call but still reports into the
+        // owning backend's counter sink.
+        let sim = SimBackend::new(SimConfig::esop((8, 8, 8)));
+        let spec = PlanSpec::new(TransformKind::Dct2, Direction::Forward, (2, 2, 2));
+        let plan = sim.prepare(spec).unwrap();
+        let x = rand32(2, 2, 2, 156);
+        plan.execute(&[x.clone()]).unwrap();
+        let after_one = sim.counters().time_steps;
+        assert!(after_one > 0);
+        plan.execute(&[x]).unwrap();
+        assert_eq!(sim.counters().time_steps, 2 * after_one);
+    }
+
+    #[test]
     fn engine_dft_split_matches_reference_bit_exactly() {
         // The engine no longer degrades DftSplit to the scalar reference —
         // it runs four real mode products per mode on the tiled kernels,
@@ -523,6 +695,74 @@ mod tests {
             .unwrap();
         let got = backend.execute(TransformKind::Dht, Direction::Forward, &[x]).unwrap();
         assert_eq!(want[0].to_f64().max_abs_diff(&got[0].to_f64()), 0.0);
+    }
+
+    #[test]
+    fn prepared_plans_match_one_shot_execute() {
+        // prepare() + execute() must be indistinguishable from the one-shot
+        // wrapper, for every backend family.
+        let x = rand32(6, 5, 4, 157);
+        let spec = PlanSpec::new(TransformKind::Dct2, Direction::Forward, (6, 5, 4));
+        let backends: Vec<Box<dyn Backend>> = vec![
+            Box::new(ReferenceBackend),
+            Box::new(EngineBackend::new(gemt::engine::EngineConfig::with_threads(2))),
+            Box::new(ShardedEngineBackend::new(gemt::ShardConfig {
+                max_tile: 3,
+                engine: gemt::engine::EngineConfig::with_threads(2),
+            })),
+            Box::new(SimBackend::new(SimConfig::esop((8, 8, 8)))),
+        ];
+        for backend in &backends {
+            let plan = backend.prepare(spec).unwrap();
+            assert_eq!(plan.spec(), spec);
+            assert_eq!(plan.backend_name(), backend.name());
+            let via_plan = plan.execute(&[x.clone()]).unwrap();
+            let one_shot = backend
+                .execute(TransformKind::Dct2, Direction::Forward, &[x.clone()])
+                .unwrap();
+            assert_eq!(
+                via_plan[0], one_shot[0],
+                "{}: plan and one-shot paths diverged",
+                backend.name()
+            );
+        }
+    }
+
+    #[test]
+    fn plan_rejects_wrong_shape_and_arity() {
+        let plan = ReferenceBackend
+            .prepare(PlanSpec::new(TransformKind::Dct2, Direction::Forward, (4, 4, 4)))
+            .unwrap();
+        assert!(plan.execute(&[rand32(5, 4, 4, 158)]).is_err());
+        assert!(plan.execute(&[]).is_err());
+        assert!(plan
+            .execute(&[rand32(4, 4, 4, 159), rand32(4, 4, 4, 160)])
+            .is_err());
+    }
+
+    #[test]
+    fn prepare_rejects_unsupported_spec() {
+        // DWHT on a non-power-of-two must fail at prepare, not panic inside
+        // the coefficient generator.
+        let spec = PlanSpec::new(TransformKind::Dwht, Direction::Forward, (3, 4, 4));
+        assert!(ReferenceBackend.prepare(spec).is_err());
+        let degenerate = PlanSpec::new(TransformKind::Dct2, Direction::Forward, (0, 1, 1));
+        assert!(ReferenceBackend.prepare(degenerate).is_err());
+    }
+
+    #[test]
+    fn execute_batch_matches_per_request_execute() {
+        let plan = ReferenceBackend
+            .prepare(PlanSpec::new(TransformKind::Dht, Direction::Forward, (3, 4, 5)))
+            .unwrap();
+        let requests: Vec<Vec<Tensor3<f32>>> =
+            (0..4).map(|i| vec![rand32(3, 4, 5, 161 + i)]).collect();
+        let batched = plan.execute_batch(&requests).unwrap();
+        assert_eq!(batched.len(), 4);
+        for (req, out) in requests.iter().zip(&batched) {
+            let direct = plan.execute(req).unwrap();
+            assert_eq!(direct[0], out[0]);
+        }
     }
 
     #[test]

@@ -5,6 +5,8 @@ use std::time::Instant;
 
 use crate::util::stats::Histogram;
 
+use super::plan::PlanCacheStats;
+
 /// Shared metrics sink (one per coordinator).
 pub struct Metrics {
     inner: Mutex<Inner>,
@@ -37,6 +39,13 @@ pub struct MetricsSnapshot {
     pub latency_mean_s: f64,
     pub queue_wait_p50_s: f64,
     pub uptime_s: f64,
+    /// Shared plan-cache counters (filled by
+    /// [`super::server::Coordinator::metrics`]; zero for a bare `Metrics`).
+    pub plans: PlanCacheStats,
+    /// Backend degradation reasons ([`super::backend::FallbackNotice`];
+    /// empty = every request ran on the backend's primary path). Filled by
+    /// [`super::server::Coordinator::metrics`].
+    pub fallback_reasons: Vec<String>,
 }
 
 impl Default for Metrics {
@@ -102,6 +111,8 @@ impl Metrics {
             latency_mean_s: g.latency.mean(),
             queue_wait_p50_s: g.queue_wait.quantile(0.50),
             uptime_s: uptime,
+            plans: PlanCacheStats::default(),
+            fallback_reasons: Vec::new(),
         }
     }
 }
@@ -110,7 +121,7 @@ impl MetricsSnapshot {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         use crate::util::human;
-        format!(
+        let mut s = format!(
             "jobs={} ok / {} failed / {} rejected | batches={} (mean {:.1} jobs) | thrpt={} | p50={} p95={} p99={}",
             self.completed,
             self.failed,
@@ -121,7 +132,17 @@ impl MetricsSnapshot {
             human::duration(self.latency_p50_s),
             human::duration(self.latency_p95_s),
             human::duration(self.latency_p99_s),
-        )
+        );
+        if self.plans.hits + self.plans.misses > 0 {
+            s.push_str(&format!(
+                " | plans={} ({} hits / {} builds)",
+                self.plans.entries, self.plans.hits, self.plans.builds
+            ));
+        }
+        if !self.fallback_reasons.is_empty() {
+            s.push_str(&format!(" | DEGRADED ({} reason(s))", self.fallback_reasons.len()));
+        }
+        s
     }
 }
 
@@ -153,5 +174,21 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.completed, 0);
         assert_eq!(s.mean_batch_size, 0.0);
+        assert_eq!(s.plans, PlanCacheStats::default());
+        assert!(s.fallback_reasons.is_empty());
+    }
+
+    #[test]
+    fn summary_surfaces_plans_and_degradation() {
+        let m = Metrics::new();
+        m.record_completion(0.010, 0.001, true);
+        let mut s = m.snapshot();
+        assert!(!s.summary().contains("plans="), "no plan traffic yet");
+        assert!(!s.summary().contains("DEGRADED"));
+        s.plans = PlanCacheStats { hits: 9, misses: 1, builds: 1, evictions: 0, entries: 1 };
+        s.fallback_reasons = vec!["pjrt miss (no artifact)".to_string()];
+        let line = s.summary();
+        assert!(line.contains("plans=1 (9 hits / 1 builds)"), "{line}");
+        assert!(line.contains("DEGRADED (1 reason(s))"), "{line}");
     }
 }

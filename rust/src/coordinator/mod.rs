@@ -1,16 +1,21 @@
 //! The serving coordinator — Layer 3's request path.
 //!
 //! Clients submit [`job::TransformJob`]s; the [`batcher`] groups them by
-//! `(kind, direction, shape)` so every job in a batch reuses the same
-//! compiled PJRT executable; a [`worker`] pool executes batches on a
-//! [`backend`]; [`metrics`] records latency histograms and throughput.
+//! `(kind, direction, shape)`; a [`worker`] pool resolves each batch's
+//! [`plan::PlanSpec`] through the shared [`plan::PlanCache`] and streams
+//! every job of the batch through one stationary [`plan::Plan`] prepared by
+//! the [`backend`] (prepare-once / stream-many — the serving analog of the
+//! device's stationary coefficient matrices); [`metrics`] records latency
+//! histograms, throughput, plan-cache counters, and degradation notices.
 //! Everything is std-threads + condvars (no tokio offline — the work is
 //! CPU-bound, so thread-per-worker is the right shape anyway).
 //!
 //! ```text
 //! submit() ─→ JobQueue ─→ batcher thread ─→ BatchQueue ─→ worker × W
-//!     ↑ backpressure (bounded)                    │
-//!     └────────────── JobHandle ←─ per-job channel┘
+//!     ↑ backpressure (bounded)                    │            │
+//!     └────────────── JobHandle ←─ per-job channel┘      PlanCache (shared)
+//!                                                              │
+//!                                                  Backend::prepare → Plan
 //! ```
 //!
 //! ```
@@ -32,13 +37,16 @@ pub mod backend;
 pub mod batcher;
 pub mod job;
 pub mod metrics;
+pub mod plan;
 pub mod queue;
 pub mod server;
 pub mod worker;
 
 pub use backend::{
-    Backend, EngineBackend, FallbackNotice, ReferenceBackend, ShardedEngineBackend, SimBackend,
+    Backend, EngineBackend, FallbackNotice, PjrtBackend, ReferenceBackend, ShardedEngineBackend,
+    SimBackend,
 };
 pub use job::{JobId, JobResult, TransformJob};
 pub use metrics::MetricsSnapshot;
+pub use plan::{Plan, PlanCache, PlanCacheStats, PlanSpec};
 pub use server::{Coordinator, CoordinatorConfig, JobHandle, WaitOutcome};

@@ -1,0 +1,493 @@
+//! Stationary transform **plans** — the prepare-once / stream-many
+//! execution API (FFTW-style plan/execute) and the shared, capacity-bounded
+//! [`PlanCache`] the coordinator's workers route every batch through.
+//!
+//! TriADA's central idea is the decoupling of *stationary* coefficient
+//! matrices (loaded into the cell array once) from *streamed* data tensors.
+//! A [`PlanSpec`] names everything shape-dependent about a request —
+//! `(kind, direction, shape)`, the same key the batcher groups by — and
+//! [`super::backend::Backend::prepare`] builds a [`Plan`] owning all of the
+//! stationary state for that spec once: typed coefficient matrices, the
+//! engine tile layout, the shard decomposition, the split-DFT `(cos, ±sin)`
+//! pairs, the PJRT artifact handle. [`Plan::execute`] then only *streams*
+//! data tensors through that state, and [`Plan::execute_batch`] streams a
+//! whole batch.
+//!
+//! The [`PlanCache`] is shared by all workers: concurrent misses of one
+//! spec coalesce into a single build (waiters block on a condvar, never
+//! duplicate the work), and the cache evicts least-recently-used plans
+//! beyond its capacity so a server sweeping many shapes cannot grow without
+//! bound.
+//!
+//! ```
+//! use triada::coordinator::{Backend, PlanSpec, ReferenceBackend};
+//! use triada::runtime::Direction;
+//! use triada::tensor::Tensor3;
+//! use triada::transforms::TransformKind;
+//!
+//! let spec = PlanSpec::new(TransformKind::Dct2, Direction::Forward, (4, 4, 4));
+//! let plan = ReferenceBackend.prepare(spec).unwrap();
+//! let x = Tensor3::from_fn(4, 4, 4, |i, j, k| (i + j + k) as f64).to_f32();
+//! // The plan's stationary state is built; now only data streams through.
+//! let y1 = plan.execute(&[x.clone()]).unwrap();
+//! let y2 = plan.execute(&[x]).unwrap();
+//! assert_eq!(y1[0], y2[0]);
+//! ```
+
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::Context;
+
+use crate::runtime::Direction;
+use crate::tensor::Tensor3;
+use crate::transforms::TransformKind;
+
+use super::backend::Backend;
+use super::job::BatchKey;
+
+/// Everything shape-dependent about a transform request — the key a
+/// stationary [`Plan`] is prepared for and cached under.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PlanSpec {
+    pub kind: TransformKind,
+    pub direction: Direction,
+    /// Input shape `(n1, n2, n3)` (all supported transforms are square, so
+    /// this is the output shape too).
+    pub shape: (usize, usize, usize),
+}
+
+impl PlanSpec {
+    pub fn new(
+        kind: TransformKind,
+        direction: Direction,
+        shape: (usize, usize, usize),
+    ) -> PlanSpec {
+        PlanSpec { kind, direction, shape }
+    }
+
+    /// Derive (and validate) the spec of a one-shot request from its input
+    /// tensors.
+    pub fn for_inputs(
+        kind: TransformKind,
+        direction: Direction,
+        inputs: &[Tensor3<f32>],
+    ) -> anyhow::Result<PlanSpec> {
+        let first = inputs.first().context("request has no input tensors")?;
+        let spec = PlanSpec::new(kind, direction, first.shape());
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Input tensors per request (2 for the split DFT's `(re, im)` pair).
+    pub fn input_arity(&self) -> usize {
+        if self.kind == TransformKind::DftSplit {
+            2
+        } else {
+            1
+        }
+    }
+
+    /// Is this spec executable at all (nonzero dimensions the kind
+    /// supports)? Called before any stationary state is built, so an
+    /// unsupported request fails cleanly instead of panicking inside a
+    /// coefficient generator.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let (n1, n2, n3) = self.shape;
+        anyhow::ensure!(
+            n1 > 0 && n2 > 0 && n3 > 0,
+            "degenerate plan shape {:?}",
+            self.shape
+        );
+        for n in [n1, n2, n3] {
+            anyhow::ensure!(
+                self.kind.supports_size(n),
+                "{} does not support size {n}",
+                self.kind.name()
+            );
+        }
+        Ok(())
+    }
+
+    /// Check one request's input tensors against this spec (arity and
+    /// shape) — every [`Plan::execute`] impl calls this first.
+    pub fn check_inputs(&self, inputs: &[Tensor3<f32>]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            inputs.len() == self.input_arity(),
+            "{} plan expects {} input tensor(s), got {}",
+            self.kind.name(),
+            self.input_arity(),
+            inputs.len()
+        );
+        for t in inputs {
+            anyhow::ensure!(
+                t.shape() == self.shape,
+                "plan prepared for shape {:?} cannot execute input of shape {:?}",
+                self.shape,
+                t.shape()
+            );
+        }
+        Ok(())
+    }
+}
+
+impl From<BatchKey> for PlanSpec {
+    fn from(key: BatchKey) -> PlanSpec {
+        PlanSpec { kind: key.kind, direction: key.direction, shape: key.shape }
+    }
+}
+
+impl std::fmt::Display for PlanSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let (n1, n2, n3) = self.shape;
+        write!(f, "{} {} {n1}x{n2}x{n3}", self.kind.name(), self.direction.name())
+    }
+}
+
+/// A prepared, stationary transform plan: everything shape-dependent was
+/// built at [`super::backend::Backend::prepare`] time; executing only
+/// streams data tensors through it. Plans are immutable and shared
+/// (`Arc<dyn Plan>`), so any number of workers can execute one plan
+/// concurrently.
+pub trait Plan: Send + Sync {
+    /// The spec this plan was prepared for.
+    fn spec(&self) -> PlanSpec;
+
+    /// The backend that prepared this plan (stable identifier, the same
+    /// string [`super::backend::Backend::name`] returns).
+    fn backend_name(&self) -> &'static str;
+
+    /// Stream one request's data tensors through the stationary state (one
+    /// tensor for real kinds, an `(re, im)` pair for the split DFT).
+    fn execute(&self, inputs: &[Tensor3<f32>]) -> anyhow::Result<Vec<Tensor3<f32>>>;
+
+    /// Stream a batch of requests through the same stationary state. The
+    /// default executes them in order; backends with a cheaper batched path
+    /// may override.
+    fn execute_batch(
+        &self,
+        requests: &[Vec<Tensor3<f32>>],
+    ) -> anyhow::Result<Vec<Vec<Tensor3<f32>>>> {
+        requests.iter().map(|inputs| self.execute(inputs)).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Default number of plans a [`PlanCache`] keeps resident.
+pub const DEFAULT_PLAN_CAPACITY: usize = 32;
+
+/// Point-in-time [`PlanCache`] counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlanCacheStats {
+    /// Lookups served by a resident plan.
+    pub hits: u64,
+    /// Lookups that found no resident plan (concurrent misses of one spec
+    /// coalesce, so `builds ≤ misses`).
+    pub misses: u64,
+    /// Plans actually built.
+    pub builds: u64,
+    /// Plans evicted to stay within capacity.
+    pub evictions: u64,
+    /// Plans currently resident.
+    pub entries: usize,
+}
+
+impl PlanCacheStats {
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} resident | {} hits / {} misses / {} builds / {} evictions",
+            self.entries, self.hits, self.misses, self.builds, self.evictions
+        )
+    }
+}
+
+struct CachedPlan {
+    plan: Arc<dyn Plan>,
+    /// Logical timestamp of the last lookup that returned this plan.
+    last_used: u64,
+}
+
+struct CacheState {
+    entries: HashMap<PlanSpec, CachedPlan>,
+    /// Specs some thread is currently building (misses of these wait
+    /// instead of duplicating the build).
+    building: HashSet<PlanSpec>,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    builds: u64,
+    evictions: u64,
+}
+
+/// A concurrent, capacity-bounded (LRU) cache of prepared plans, shared by
+/// every worker of a coordinator: all jobs of a [`BatchKey`] group hit one
+/// plan, and repeated requests for the same `(kind, direction, shape)`
+/// build their stationary state exactly once.
+pub struct PlanCache {
+    capacity: usize,
+    state: Mutex<CacheState>,
+    /// Signalled whenever a build finishes (successfully or not) so waiting
+    /// misses can re-check.
+    built: Condvar,
+}
+
+impl PlanCache {
+    /// An empty cache holding at most `capacity` plans (minimum 1).
+    pub fn new(capacity: usize) -> PlanCache {
+        PlanCache {
+            capacity: capacity.max(1),
+            state: Mutex::new(CacheState {
+                entries: HashMap::new(),
+                building: HashSet::new(),
+                tick: 0,
+                hits: 0,
+                misses: 0,
+                builds: 0,
+                evictions: 0,
+            }),
+            built: Condvar::new(),
+        }
+    }
+
+    /// Most plans kept resident.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Fetch the plan for `spec`, building it on `backend` at most once no
+    /// matter how many threads ask concurrently: the first miss builds
+    /// (outside the cache lock), later misses of the same spec block until
+    /// that build finishes and then share the result. A failed build is
+    /// not cached; the next caller retries.
+    pub fn prepare(&self, backend: &dyn Backend, spec: PlanSpec) -> anyhow::Result<Arc<dyn Plan>> {
+        let mut counted_miss = false;
+        let mut state = self.state.lock().unwrap();
+        loop {
+            state.tick += 1;
+            let tick = state.tick;
+            if let Some(cached) = state.entries.get_mut(&spec) {
+                cached.last_used = tick;
+                let plan = cached.plan.clone();
+                // A call counts once: as a hit only if it never missed (a
+                // waiter that finds the freshly built plan on retry already
+                // counted its miss).
+                if !counted_miss {
+                    state.hits += 1;
+                }
+                return Ok(plan);
+            }
+            if !counted_miss {
+                state.misses += 1;
+                counted_miss = true;
+            }
+            if state.building.contains(&spec) {
+                state = self.built.wait(state).unwrap();
+                continue;
+            }
+            state.building.insert(spec);
+            break;
+        }
+        drop(state);
+
+        // The spec must leave `building` (and waiters must wake) no matter
+        // how the build ends — including a panicking backend, which would
+        // otherwise wedge every later request for this spec on the condvar.
+        struct BuildGuard<'a> {
+            cache: &'a PlanCache,
+            spec: PlanSpec,
+        }
+        impl Drop for BuildGuard<'_> {
+            fn drop(&mut self) {
+                self.cache.state.lock().unwrap().building.remove(&self.spec);
+                self.cache.built.notify_all();
+            }
+        }
+        let _guard = BuildGuard { cache: self, spec };
+
+        // Build outside the lock: other specs stay servable meanwhile.
+        let built = backend.prepare(spec);
+
+        let mut state = self.state.lock().unwrap();
+        match built {
+            Ok(plan) => {
+                state.builds += 1;
+                state.tick += 1;
+                let tick = state.tick;
+                state.entries.insert(spec, CachedPlan { plan: plan.clone(), last_used: tick });
+                while state.entries.len() > self.capacity {
+                    let lru = state
+                        .entries
+                        .iter()
+                        .min_by_key(|(_, c)| c.last_used)
+                        .map(|(s, _)| *s);
+                    match lru {
+                        Some(s) => {
+                            state.entries.remove(&s);
+                            state.evictions += 1;
+                        }
+                        None => break,
+                    }
+                }
+                Ok(plan)
+            }
+            Err(e) => Err(e),
+        }
+        // `_guard` drops here (after the lock): building cleared, waiters
+        // notified — they either hit the fresh entry or retry the build.
+    }
+
+    /// Does the cache currently hold a plan for `spec`? (Does not touch
+    /// the LRU order.)
+    pub fn contains(&self, spec: PlanSpec) -> bool {
+        self.state.lock().unwrap().entries.contains_key(&spec)
+    }
+
+    /// Current counters.
+    pub fn stats(&self) -> PlanCacheStats {
+        let s = self.state.lock().unwrap();
+        PlanCacheStats {
+            hits: s.hits,
+            misses: s.misses,
+            builds: s.builds,
+            evictions: s.evictions,
+            entries: s.entries.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::ReferenceBackend;
+    use crate::util::Rng;
+
+    fn spec(n: usize) -> PlanSpec {
+        PlanSpec::new(TransformKind::Dct2, Direction::Forward, (n, n, n))
+    }
+
+    fn rand32(n1: usize, n2: usize, n3: usize, seed: u64) -> Tensor3<f32> {
+        let mut rng = Rng::new(seed);
+        Tensor3::random(n1, n2, n3, &mut rng).to_f32()
+    }
+
+    #[test]
+    fn spec_from_batch_key_and_display() {
+        let key = BatchKey {
+            kind: TransformKind::Dht,
+            direction: Direction::Inverse,
+            shape: (2, 3, 4),
+        };
+        let s = PlanSpec::from(key);
+        assert_eq!(s.kind, TransformKind::Dht);
+        assert_eq!(s.direction, Direction::Inverse);
+        assert_eq!(s.shape, (2, 3, 4));
+        assert_eq!(s.to_string(), "dht inverse 2x3x4");
+    }
+
+    #[test]
+    fn spec_validation_rejects_unsupported() {
+        assert!(spec(4).validate().is_ok());
+        let bad = PlanSpec::new(TransformKind::Dwht, Direction::Forward, (3, 4, 4));
+        assert!(bad.validate().is_err());
+        let degenerate = PlanSpec::new(TransformKind::Dct2, Direction::Forward, (0, 4, 4));
+        assert!(degenerate.validate().is_err());
+    }
+
+    #[test]
+    fn check_inputs_enforces_arity_and_shape() {
+        let s = spec(4);
+        assert_eq!(s.input_arity(), 1);
+        assert!(s.check_inputs(&[rand32(4, 4, 4, 1)]).is_ok());
+        assert!(s.check_inputs(&[]).is_err());
+        assert!(s.check_inputs(&[rand32(5, 4, 4, 2)]).is_err());
+        assert!(s.check_inputs(&[rand32(4, 4, 4, 3), rand32(4, 4, 4, 4)]).is_err());
+        let split = PlanSpec::new(TransformKind::DftSplit, Direction::Forward, (4, 4, 4));
+        assert_eq!(split.input_arity(), 2);
+        assert!(split.check_inputs(&[rand32(4, 4, 4, 5)]).is_err());
+        assert!(split
+            .check_inputs(&[rand32(4, 4, 4, 6), rand32(4, 4, 4, 7)])
+            .is_ok());
+    }
+
+    #[test]
+    fn cache_hits_after_first_build() {
+        let cache = PlanCache::new(4);
+        assert_eq!(cache.capacity(), 4);
+        let backend = ReferenceBackend;
+        let p1 = cache.prepare(&backend, spec(4)).unwrap();
+        let p2 = cache.prepare(&backend, spec(4)).unwrap();
+        assert!(Arc::ptr_eq(&p1, &p2), "second lookup must share the first plan");
+        let stats = cache.stats();
+        assert_eq!((stats.hits, stats.misses, stats.builds), (1, 1, 1));
+        assert_eq!(stats.entries, 1);
+        assert!(cache.contains(spec(4)));
+        assert!(!cache.contains(spec(5)));
+    }
+
+    #[test]
+    fn cache_evicts_least_recently_used() {
+        let cache = PlanCache::new(2);
+        let backend = ReferenceBackend;
+        cache.prepare(&backend, spec(2)).unwrap(); // A
+        cache.prepare(&backend, spec(3)).unwrap(); // B
+        cache.prepare(&backend, spec(2)).unwrap(); // touch A → B is LRU
+        cache.prepare(&backend, spec(4)).unwrap(); // C evicts B
+        let stats = cache.stats();
+        assert_eq!(stats.evictions, 1);
+        assert_eq!(stats.entries, 2);
+        assert!(cache.contains(spec(2)), "recently-used plan must survive");
+        assert!(!cache.contains(spec(3)), "LRU plan must be evicted");
+        assert!(cache.contains(spec(4)));
+        // Re-preparing the evicted spec rebuilds it.
+        cache.prepare(&backend, spec(3)).unwrap();
+        assert_eq!(cache.stats().builds, 4);
+    }
+
+    #[test]
+    fn failed_build_is_not_cached() {
+        let cache = PlanCache::new(2);
+        let backend = ReferenceBackend;
+        let bad = PlanSpec::new(TransformKind::Dwht, Direction::Forward, (3, 3, 3));
+        assert!(cache.prepare(&backend, bad).is_err());
+        assert!(!cache.contains(bad));
+        let stats = cache.stats();
+        assert_eq!(stats.builds, 0);
+        assert_eq!(stats.misses, 1);
+    }
+
+    #[test]
+    fn panicking_prepare_does_not_wedge_waiters() {
+        struct PanickingPrepare;
+        impl Backend for PanickingPrepare {
+            fn name(&self) -> &'static str {
+                "panicking-prepare"
+            }
+
+            fn prepare(&self, _spec: PlanSpec) -> anyhow::Result<Arc<dyn Plan>> {
+                panic!("injected prepare panic (plan.rs test)");
+            }
+        }
+        let cache = PlanCache::new(2);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = cache.prepare(&PanickingPrepare, spec(4));
+        }));
+        assert!(result.is_err(), "the panic must propagate to the caller");
+        // The spec must not be stuck in the building set: the next caller
+        // builds it on a healthy backend instead of blocking forever.
+        let plan = cache.prepare(&ReferenceBackend, spec(4)).unwrap();
+        assert_eq!(plan.spec(), spec(4));
+        assert_eq!(cache.stats().builds, 1);
+    }
+
+    #[test]
+    fn zero_capacity_is_clamped_to_one() {
+        let cache = PlanCache::new(0);
+        assert_eq!(cache.capacity(), 1);
+        let backend = ReferenceBackend;
+        cache.prepare(&backend, spec(2)).unwrap();
+        cache.prepare(&backend, spec(3)).unwrap();
+        assert_eq!(cache.stats().entries, 1);
+    }
+}

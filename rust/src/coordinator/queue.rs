@@ -122,7 +122,7 @@ impl<T> BoundedQueue<T> {
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        self.inner.lock().unwrap().items.is_empty()
     }
 
     pub fn capacity(&self) -> usize {

@@ -13,6 +13,7 @@ use super::backend::Backend;
 use super::batcher::{Batch, BatchPolicy, Batcher};
 use super::job::{JobId, JobResult, TransformJob};
 use super::metrics::{Metrics, MetricsSnapshot};
+use super::plan::{DEFAULT_PLAN_CAPACITY, PlanCache, PlanCacheStats};
 use super::queue::{BoundedQueue, PopError};
 use super::worker::{worker_loop, Pending};
 
@@ -23,6 +24,9 @@ pub struct CoordinatorConfig {
     /// Submit-queue capacity — the backpressure bound.
     pub queue_depth: usize,
     pub batch: BatchPolicy,
+    /// Capacity of the shared stationary-plan cache (LRU-evicted; file form
+    /// `[plan_cache] capacity`, CLI `--plan-cache`).
+    pub plan_capacity: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -31,6 +35,7 @@ impl Default for CoordinatorConfig {
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8),
             queue_depth: 256,
             batch: BatchPolicy::default(),
+            plan_capacity: DEFAULT_PLAN_CAPACITY,
         }
     }
 }
@@ -59,6 +64,10 @@ impl CoordinatorConfig {
                 "coordinator.batch_window_ms must be finite and non-negative, got {ms}"
             );
             c.batch.window = Duration::from_secs_f64(ms / 1000.0);
+        }
+        if let Some(p) = cfg.get_usize("plan_cache", "capacity")? {
+            anyhow::ensure!(p > 0, "plan_cache.capacity must be positive");
+            c.plan_capacity = p;
         }
         Ok(c)
     }
@@ -106,18 +115,21 @@ pub struct Coordinator {
     metrics: Arc<Metrics>,
     next_id: AtomicU64,
     threads: Vec<JoinHandle<()>>,
-    backend_name: &'static str,
+    backend: Arc<dyn Backend>,
+    plans: Arc<PlanCache>,
 }
 
 impl Coordinator {
-    /// Start batcher + workers over a backend.
+    /// Start batcher + workers over a backend. All workers share one
+    /// [`PlanCache`], so every `(kind, direction, shape)` group the batcher
+    /// forms streams through a single stationary plan.
     pub fn start(config: CoordinatorConfig, backend: Arc<dyn Backend>) -> Coordinator {
         let submit_q: Arc<BoundedQueue<Pending>> = Arc::new(BoundedQueue::new(config.queue_depth));
         let batch_q: Arc<BoundedQueue<Batch<Pending>>> =
             Arc::new(BoundedQueue::new(config.queue_depth));
         let metrics = Arc::new(Metrics::new());
+        let plans = Arc::new(PlanCache::new(config.plan_capacity));
         let mut threads = Vec::new();
-        let backend_name = backend.name();
 
         // Batcher thread.
         {
@@ -136,21 +148,27 @@ impl Coordinator {
         for w in 0..config.workers.max(1) {
             let batch_q = batch_q.clone();
             let backend = backend.clone();
+            let plans = plans.clone();
             let metrics = metrics.clone();
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("triada-worker-{w}"))
-                    .spawn(move || worker_loop(batch_q, backend, metrics))
+                    .spawn(move || worker_loop(batch_q, backend, plans, metrics))
                     .expect("spawn worker"),
             );
         }
 
-        Coordinator { submit_q, metrics, next_id: AtomicU64::new(1), threads, backend_name }
+        Coordinator { submit_q, metrics, next_id: AtomicU64::new(1), threads, backend, plans }
     }
 
     /// Which backend this coordinator serves with.
     pub fn backend_name(&self) -> &'static str {
-        self.backend_name
+        self.backend.name()
+    }
+
+    /// Counters of the shared plan cache.
+    pub fn plan_stats(&self) -> PlanCacheStats {
+        self.plans.stats()
     }
 
     /// Submit a job, blocking if the queue is full (backpressure).
@@ -187,8 +205,13 @@ impl Coordinator {
         self.submit(job)?.wait()
     }
 
+    /// Point-in-time metrics, including plan-cache counters and any
+    /// backend degradation reasons ([`super::backend::FallbackNotice`]).
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.metrics.snapshot()
+        let mut snap = self.metrics.snapshot();
+        snap.plans = self.plans.stats();
+        snap.fallback_reasons = self.backend.fallback_reasons();
+        snap
     }
 
     pub fn queue_len(&self) -> usize {
@@ -267,6 +290,7 @@ mod tests {
             workers,
             queue_depth: 64,
             batch: BatchPolicy { max_batch: 4, window: Duration::from_millis(1) },
+            ..CoordinatorConfig::default()
         };
         Coordinator::start(cfg, Arc::new(ReferenceBackend))
     }
@@ -345,7 +369,7 @@ mod tests {
     #[test]
     fn config_from_file_section() {
         let cfg = crate::config::Config::parse(
-            "[coordinator]\nworkers = 3\nqueue_depth = 7\nmax_batch = 5\nbatch_window_ms = 4\n",
+            "[coordinator]\nworkers = 3\nqueue_depth = 7\nmax_batch = 5\nbatch_window_ms = 4\n\n[plan_cache]\ncapacity = 9\n",
         )
         .unwrap();
         let c = CoordinatorConfig::from_config(&cfg).unwrap();
@@ -353,12 +377,37 @@ mod tests {
         assert_eq!(c.queue_depth, 7);
         assert_eq!(c.batch.max_batch, 5);
         assert_eq!(c.batch.window, Duration::from_millis(4));
+        assert_eq!(c.plan_capacity, 9);
     }
 
     #[test]
     fn config_rejects_zero_workers() {
         let cfg = crate::config::Config::parse("[coordinator]\nworkers = 0\n").unwrap();
         assert!(CoordinatorConfig::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn config_rejects_zero_plan_capacity_and_defaults_when_absent() {
+        let zero = crate::config::Config::parse("[plan_cache]\ncapacity = 0\n").unwrap();
+        assert!(CoordinatorConfig::from_config(&zero).is_err());
+        let empty = crate::config::Config::parse("").unwrap();
+        let c = CoordinatorConfig::from_config(&empty).unwrap();
+        assert_eq!(c.plan_capacity, super::DEFAULT_PLAN_CAPACITY);
+    }
+
+    #[test]
+    fn coordinator_metrics_surface_plan_cache_counters() {
+        let c = coordinator(2);
+        for i in 0..6 {
+            let r = c.transform(job(20 + i)).unwrap();
+            assert!(r.outputs.is_ok());
+        }
+        let snap = c.metrics();
+        assert_eq!(snap.plans.builds, 1, "one shape/kind/direction = one plan build");
+        assert!(snap.plans.hits + snap.plans.misses >= 1);
+        assert_eq!(c.plan_stats().builds, 1);
+        assert!(snap.fallback_reasons.is_empty(), "reference never degrades");
+        c.shutdown();
     }
 
     #[test]

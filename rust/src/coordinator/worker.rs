@@ -1,5 +1,9 @@
 //! Worker pool: executes flushed batches on the backend and replies to each
 //! job's channel. One OS thread per worker (CPU-bound work).
+//!
+//! Every batch resolves its [`PlanSpec`] (the batch key) through the shared
+//! [`PlanCache`] first, so all jobs of the batch stream through one
+//! stationary plan and repeated shapes never rebuild coefficient matrices.
 
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
@@ -9,6 +13,7 @@ use super::backend::Backend;
 use super::batcher::Batch;
 use super::job::{JobResult, TransformJob};
 use super::metrics::Metrics;
+use super::plan::{Plan, PlanCache, PlanSpec};
 use super::queue::BoundedQueue;
 
 /// A job waiting for execution, with its reply channel.
@@ -20,34 +25,42 @@ pub struct Pending {
     pub enqueued_at: Instant,
 }
 
-/// Worker loop: pop batches until the queue closes.
+/// Worker loop: pop batches until the queue closes. One plan lookup per
+/// batch; every job of the batch executes on the shared plan.
 pub fn worker_loop(
     batch_q: Arc<BoundedQueue<Batch<Pending>>>,
     backend: Arc<dyn Backend>,
+    plans: Arc<PlanCache>,
     metrics: Arc<Metrics>,
 ) {
     while let Some(batch) = batch_q.pop() {
         let batch_size = batch.jobs.len();
         metrics.record_batch(batch_size);
-        for pending in batch.jobs {
-            execute_one(pending, batch_size, backend.as_ref(), &metrics);
+        let spec = PlanSpec::from(batch.key);
+        match spec.validate().and_then(|_| plans.prepare(backend.as_ref(), spec)) {
+            Ok(plan) => {
+                for pending in batch.jobs {
+                    execute_one(pending, batch_size, plan.as_ref(), &metrics);
+                }
+            }
+            Err(e) => {
+                // The whole batch shares the spec, so a spec that cannot be
+                // planned fails every job in it with the same reason.
+                let msg = format!("plan preparation failed: {e:#}");
+                for pending in batch.jobs {
+                    fail_one(pending, batch_size, backend.name(), &msg, &metrics);
+                }
+            }
         }
     }
 }
 
-/// Execute a single job and reply.
-pub fn execute_one(
-    pending: Pending,
-    batch_size: usize,
-    backend: &dyn Backend,
-    metrics: &Metrics,
-) {
+/// Execute a single job on a prepared plan and reply.
+pub fn execute_one(pending: Pending, batch_size: usize, plan: &dyn Plan, metrics: &Metrics) {
     let Pending { job, reply, enqueued_at } = pending;
     let started = Instant::now();
     let queue_wait = started.duration_since(enqueued_at).as_secs_f64();
-    let outputs = job
-        .validate()
-        .and_then(|_| backend.execute(job.kind, job.direction, &job.inputs));
+    let outputs = job.validate().and_then(|_| plan.execute(&job.inputs));
     let latency = job.submitted_at.elapsed().as_secs_f64();
     let ok = outputs.is_ok();
     metrics.record_completion(latency, queue_wait, ok);
@@ -56,7 +69,28 @@ pub fn execute_one(
         id: job.id,
         outputs,
         latency_s: latency,
-        backend: backend.name(),
+        backend: plan.backend_name(),
+        batch_size,
+    });
+}
+
+/// Fail a job without executing it (its batch's plan could not be built).
+fn fail_one(
+    pending: Pending,
+    batch_size: usize,
+    backend: &'static str,
+    reason: &str,
+    metrics: &Metrics,
+) {
+    let Pending { job, reply, enqueued_at } = pending;
+    let queue_wait = Instant::now().duration_since(enqueued_at).as_secs_f64();
+    let latency = job.submitted_at.elapsed().as_secs_f64();
+    metrics.record_completion(latency, queue_wait, false);
+    let _ = reply.send(JobResult {
+        id: job.id,
+        outputs: Err(anyhow::anyhow!("{reason}")),
+        latency_s: latency,
+        backend,
         batch_size,
     });
 }
@@ -70,17 +104,27 @@ mod tests {
     use crate::transforms::TransformKind;
     use std::sync::mpsc::channel;
 
-    fn pending(kind: TransformKind, inputs: Vec<Tensor3<f32>>) -> (Pending, std::sync::mpsc::Receiver<JobResult>) {
+    fn pending(
+        kind: TransformKind,
+        inputs: Vec<Tensor3<f32>>,
+    ) -> (Pending, std::sync::mpsc::Receiver<JobResult>) {
         let (tx, rx) = channel();
         let job = TransformJob::new(kind, Direction::Forward, inputs);
         (Pending { job, reply: tx, enqueued_at: Instant::now() }, rx)
+    }
+
+    fn plan_for(kind: TransformKind, shape: (usize, usize, usize)) -> Arc<dyn Plan> {
+        ReferenceBackend
+            .prepare(PlanSpec::new(kind, Direction::Forward, shape))
+            .unwrap()
     }
 
     #[test]
     fn execute_one_replies_with_output() {
         let metrics = Metrics::new();
         let (p, rx) = pending(TransformKind::Dct2, vec![Tensor3::zeros(2, 2, 2)]);
-        execute_one(p, 1, &ReferenceBackend, &metrics);
+        let plan = plan_for(TransformKind::Dct2, (2, 2, 2));
+        execute_one(p, 1, plan.as_ref(), &metrics);
         let res = rx.recv().unwrap();
         assert!(res.outputs.is_ok());
         assert_eq!(res.backend, "cpu-reference");
@@ -88,14 +132,23 @@ mod tests {
     }
 
     #[test]
-    fn invalid_job_fails_cleanly() {
-        let metrics = Metrics::new();
-        // DWHT on non-power-of-two must error, not panic.
+    fn invalid_job_fails_cleanly_in_worker_loop() {
+        // DWHT on non-power-of-two: the spec cannot be planned, so the
+        // whole batch fails with a clean error, never a panic.
+        let q: Arc<BoundedQueue<Batch<Pending>>> = Arc::new(BoundedQueue::new(4));
+        let metrics = Arc::new(Metrics::new());
+        let backend: Arc<dyn Backend> = Arc::new(ReferenceBackend);
+        let plans = Arc::new(PlanCache::new(4));
         let (p, rx) = pending(TransformKind::Dwht, vec![Tensor3::zeros(3, 4, 4)]);
-        execute_one(p, 1, &ReferenceBackend, &metrics);
+        let key = p.job.batch_key();
+        q.push(Batch { key, jobs: vec![p] }).map_err(|_| ()).unwrap();
+        q.close();
+        worker_loop(q, backend, plans.clone(), metrics.clone());
         let res = rx.recv().unwrap();
-        assert!(res.outputs.is_err());
+        let err = res.outputs.unwrap_err();
+        assert!(err.to_string().contains("plan preparation failed"), "{err:#}");
         assert_eq!(metrics.snapshot().failed, 1);
+        assert_eq!(plans.stats().builds, 0);
     }
 
     #[test]
@@ -103,7 +156,8 @@ mod tests {
         let metrics = Metrics::new();
         let (p, rx) = pending(TransformKind::Dct2, vec![Tensor3::zeros(2, 2, 2)]);
         drop(rx);
-        execute_one(p, 1, &ReferenceBackend, &metrics);
+        let plan = plan_for(TransformKind::Dct2, (2, 2, 2));
+        execute_one(p, 1, plan.as_ref(), &metrics);
         assert_eq!(metrics.snapshot().completed, 1);
     }
 
@@ -112,12 +166,37 @@ mod tests {
         let q: Arc<BoundedQueue<Batch<Pending>>> = Arc::new(BoundedQueue::new(4));
         let metrics = Arc::new(Metrics::new());
         let backend: Arc<dyn Backend> = Arc::new(ReferenceBackend);
+        let plans = Arc::new(PlanCache::new(4));
         let (p1, rx1) = pending(TransformKind::Dct2, vec![Tensor3::zeros(2, 2, 2)]);
         let key = p1.job.batch_key();
         q.push(Batch { key, jobs: vec![p1] }).map_err(|_| ()).unwrap();
         q.close();
-        worker_loop(q, backend, metrics.clone());
+        worker_loop(q, backend, plans.clone(), metrics.clone());
         assert!(rx1.recv().unwrap().outputs.is_ok());
         assert_eq!(metrics.snapshot().batches, 1);
+        assert_eq!(plans.stats().builds, 1);
+    }
+
+    #[test]
+    fn batch_jobs_share_one_plan_build() {
+        let q: Arc<BoundedQueue<Batch<Pending>>> = Arc::new(BoundedQueue::new(4));
+        let metrics = Arc::new(Metrics::new());
+        let backend: Arc<dyn Backend> = Arc::new(ReferenceBackend);
+        let plans = Arc::new(PlanCache::new(4));
+        let (p1, rx1) = pending(TransformKind::Dct2, vec![Tensor3::zeros(2, 2, 2)]);
+        let (p2, rx2) = pending(TransformKind::Dct2, vec![Tensor3::zeros(2, 2, 2)]);
+        let key = p1.job.batch_key();
+        q.push(Batch { key, jobs: vec![p1, p2] }).map_err(|_| ()).unwrap();
+        // A second batch of the same key hits the cached plan.
+        let (p3, rx3) = pending(TransformKind::Dct2, vec![Tensor3::zeros(2, 2, 2)]);
+        q.push(Batch { key, jobs: vec![p3] }).map_err(|_| ()).unwrap();
+        q.close();
+        worker_loop(q, backend, plans.clone(), metrics.clone());
+        for rx in [rx1, rx2, rx3] {
+            assert!(rx.recv().unwrap().outputs.is_ok());
+        }
+        let stats = plans.stats();
+        assert_eq!(stats.builds, 1, "one spec must build exactly once");
+        assert_eq!(stats.hits, 1, "second batch must hit the cache");
     }
 }

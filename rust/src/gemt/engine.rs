@@ -191,7 +191,7 @@ fn split_row_blocks<T>(
         return Vec::new();
     }
     let parts = parts.clamp(1, rows);
-    let rows_per = (rows + parts - 1) / parts;
+    let rows_per = rows.div_ceil(parts);
     data.chunks_mut(rows_per * row_len)
         .enumerate()
         .map(|(i, panel)| (i * rows_per, panel))

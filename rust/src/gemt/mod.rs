@@ -47,6 +47,7 @@ pub use naive::gemt_naive;
 pub use outer::gemt_outer;
 pub use rect::{gemt_rect, tucker_compress, tucker_expand};
 pub use shard::{gemt_sharded, ShardConfig, ShardPlan, Sharder};
+pub use split::SplitCoeffs;
 
 use crate::tensor::{Mat, Scalar, Tensor3};
 use crate::transforms::{forward_matrix, inverse_matrix, TransformKind};

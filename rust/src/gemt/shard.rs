@@ -59,6 +59,7 @@ use std::sync::Mutex;
 use std::thread;
 
 use super::engine::{gemt_engine_with, stage1_panel, EngineConfig};
+use super::split::SplitCoeffs;
 use super::CoeffSet;
 use crate::tensor::{Mat, Scalar, Tensor3};
 use crate::transforms::TransformKind;
@@ -139,7 +140,7 @@ impl ShardPlan {
         let band = rows.map(|r| band_rows(r, threads, max_tile));
         let mut tiles = [0usize; 3];
         for s in 0..3 {
-            tiles[s] = if rows[s] == 0 { 0 } else { (rows[s] + band[s] - 1) / band[s] };
+            tiles[s] = if rows[s] == 0 { 0 } else { rows[s].div_ceil(band[s]) };
         }
         ShardPlan { input, output, max_tile, band, tiles }
     }
@@ -169,7 +170,7 @@ fn band_rows(rows: usize, threads: usize, max_tile: usize) -> usize {
     if rows == 0 {
         return 1;
     }
-    ((rows + threads - 1) / threads).clamp(1, max_tile)
+    rows.div_ceil(threads).clamp(1, max_tile)
 }
 
 /// One tile pass: a disjoint row band of a stage's output.
@@ -310,11 +311,31 @@ pub fn gemt_sharded_with<T: Scalar>(
     cs: &CoeffSet<T>,
     config: &ShardConfig,
 ) -> Tensor3<T> {
+    let threads = config.engine.effective_threads().max(1);
+    let plan = ShardPlan::new(x.shape(), cs.output_shape(), config.max_tile, threads);
+    gemt_sharded_planned(x, cs, config, &plan)
+}
+
+/// Three-stage 3D-GEMT over a **precomputed** [`ShardPlan`] — the
+/// prepare-once/stream-many entry point: the decomposition is planned once
+/// per `(input, output)` shape and reused across every tensor streamed
+/// through it. The plan must describe this exact problem.
+pub fn gemt_sharded_planned<T: Scalar>(
+    x: &Tensor3<T>,
+    cs: &CoeffSet<T>,
+    config: &ShardConfig,
+    plan: &ShardPlan,
+) -> Tensor3<T> {
     let (n1, n2, n3) = x.shape();
     assert_eq!(cs.input_shape(), (n1, n2, n3));
     let (k1s, k2s, k3s) = cs.output_shape();
+    assert_eq!(plan.input, (n1, n2, n3), "shard plan was built for a different input shape");
+    assert_eq!(
+        plan.output,
+        (k1s, k2s, k3s),
+        "shard plan was built for a different output shape"
+    );
     let threads = config.engine.effective_threads().max(1);
-    let plan = ShardPlan::new((n1, n2, n3), (k1s, k2s, k3s), config.max_tile, threads);
     if !plan.needs_sharding() {
         return gemt_engine_with(x, cs, &config.engine);
     }
@@ -430,6 +451,17 @@ impl Sharder {
         gemt_sharded_with(x, cs, &self.config)
     }
 
+    /// Run one 3D-GEMT over a decomposition precomputed with
+    /// [`Sharder::plan`] (the plan path — no replanning per call).
+    pub fn run_planned<T: Scalar>(
+        &self,
+        x: &Tensor3<T>,
+        cs: &CoeffSet<T>,
+        plan: &ShardPlan,
+    ) -> Tensor3<T> {
+        gemt_sharded_planned(x, cs, &self.config, plan)
+    }
+
     /// Forward 3D-DXT on the sharded engine path.
     pub fn dxt3d_forward(&self, x: &Tensor3<f64>, kind: TransformKind) -> Tensor3<f64> {
         let (n1, n2, n3) = x.shape();
@@ -455,7 +487,7 @@ impl Sharder {
         }
         let threads = self.config.engine.effective_threads().max(1);
         let band = band_rows(rows, threads, self.config.max_tile);
-        12 * ((rows + band - 1) / band)
+        12 * rows.div_ceil(band)
     }
 
     /// Split 3D DFT on the engine path: four real mode products per mode,
@@ -467,13 +499,25 @@ impl Sharder {
         im: &Tensor3<f64>,
         inverse: bool,
     ) -> (Tensor3<f64>, Tensor3<f64>) {
+        self.dft3d_split_planned(re, im, &SplitCoeffs::new(re.shape(), inverse))
+    }
+
+    /// Split 3D DFT over **precomputed** stationary coefficients
+    /// ([`SplitCoeffs`], the plan path) with the tiled parallel mode
+    /// products — bit-identical to [`Sharder::dft3d_split`].
+    pub fn dft3d_split_planned(
+        &self,
+        re: &Tensor3<f64>,
+        im: &Tensor3<f64>,
+        coeffs: &SplitCoeffs,
+    ) -> (Tensor3<f64>, Tensor3<f64>) {
         let prod = |t: &Tensor3<f64>, c: &Mat<f64>, mode: u8| match mode {
             1 => mode1_sharded(t, c, &self.config),
             2 => mode2_sharded(t, c, &self.config),
             3 => mode3_sharded(t, c, &self.config),
             _ => unreachable!("mode must be 1, 2, or 3"),
         };
-        super::split::dft3d_split_with(re, im, inverse, &prod)
+        super::split::dft3d_split_planned(re, im, coeffs, &prod)
     }
 }
 

@@ -35,6 +35,74 @@ pub fn dft3d_complex(x: &Tensor3<Complex64>, inverse: bool) -> Tensor3<Complex64
     super::gemt_outer(x, &CoeffSet::new(m(n1), m(n2), m(n3)))
 }
 
+/// The **stationary** coefficient state of the split 3D DFT: one
+/// `(cos, ±sin)` matrix pair per mode, built once per `(shape, direction)`
+/// and reusable across every `(re, im)` pair streamed at that shape — the
+/// plan/execute analog of [`super::CoeffSet`] for the split representation.
+#[derive(Clone, Debug)]
+pub struct SplitCoeffs {
+    shape: (usize, usize, usize),
+    inverse: bool,
+    /// `(cos, ±sin)` pair per mode, indexed `mode − 1` (sizes n1, n2, n3).
+    pairs: [(Mat<f64>, Mat<f64>); 3],
+}
+
+impl SplitCoeffs {
+    /// Build the per-mode split pairs for an `(n1, n2, n3)` problem.
+    pub fn new(shape: (usize, usize, usize), inverse: bool) -> SplitCoeffs {
+        let build = |n: usize| {
+            let (r, m) = dft_split(n);
+            if inverse {
+                // inverse = conjugate for the unitary DFT
+                (r, m.map(|v| -v))
+            } else {
+                (r, m)
+            }
+        };
+        SplitCoeffs {
+            shape,
+            inverse,
+            pairs: [build(shape.0), build(shape.1), build(shape.2)],
+        }
+    }
+
+    /// The input/output shape these coefficients were built for.
+    pub fn shape(&self) -> (usize, usize, usize) {
+        self.shape
+    }
+
+    /// Whether this is the inverse (conjugated) coefficient set.
+    pub fn inverse(&self) -> bool {
+        self.inverse
+    }
+
+    /// The `(cos, ±sin)` pair applied along `mode` (1, 2, or 3).
+    pub fn pair(&self, mode: u8) -> &(Mat<f64>, Mat<f64>) {
+        &self.pairs[(mode - 1) as usize]
+    }
+
+    /// Run the split DFT over these stationary coefficients with the scalar
+    /// reference mode products — bit-identical to [`dft3d_split`].
+    pub fn run_scalar(
+        &self,
+        re: &Tensor3<f64>,
+        im: &Tensor3<f64>,
+    ) -> (Tensor3<f64>, Tensor3<f64>) {
+        dft3d_split_planned(re, im, self, &scalar_mode_product)
+    }
+}
+
+/// The scalar reference single-mode-product executor.
+fn scalar_mode_product(t: &Tensor3<f64>, c: &Mat<f64>, mode: u8) -> Tensor3<f64> {
+    use super::mode_product::{mode1_product, mode2_product, mode3_product};
+    match mode {
+        1 => mode1_product(t, c),
+        2 => mode2_product(t, c),
+        3 => mode3_product(t, c),
+        _ => unreachable!("mode must be 1, 2, or 3"),
+    }
+}
+
 /// Split 3D DFT: input/output are (re, im) pairs of real tensors, executed
 /// with the scalar reference mode products.
 pub fn dft3d_split(
@@ -42,47 +110,29 @@ pub fn dft3d_split(
     im: &Tensor3<f64>,
     inverse: bool,
 ) -> (Tensor3<f64>, Tensor3<f64>) {
-    use super::mode_product::{mode1_product, mode2_product, mode3_product};
-    let prod = |t: &Tensor3<f64>, c: &Mat<f64>, mode: u8| match mode {
-        1 => mode1_product(t, c),
-        2 => mode2_product(t, c),
-        3 => mode3_product(t, c),
-        _ => unreachable!("mode must be 1, 2, or 3"),
-    };
-    dft3d_split_with(re, im, inverse, &prod)
+    SplitCoeffs::new(re.shape(), inverse).run_scalar(re, im)
 }
 
-/// Split 3D DFT over a pluggable single-mode-product executor (`prod(t, c,
-/// mode)` applies `c` along `mode`). The split pair walks the same
+/// Split 3D DFT over **precomputed** stationary coefficients and a
+/// pluggable single-mode-product executor. The split pair walks the same
 /// `{3, 1, 2}` mode order as the three-stage chain; every executor that is
 /// bit-identical to the scalar mode products yields a bit-identical DFT.
-pub(crate) fn dft3d_split_with(
+pub(crate) fn dft3d_split_planned(
     re: &Tensor3<f64>,
     im: &Tensor3<f64>,
-    inverse: bool,
+    coeffs: &SplitCoeffs,
     prod: &(dyn Fn(&Tensor3<f64>, &Mat<f64>, u8) -> Tensor3<f64>),
 ) -> (Tensor3<f64>, Tensor3<f64>) {
     assert_eq!(re.shape(), im.shape());
-    let (n1, n2, n3) = re.shape();
-    let split = |n: usize| {
-        let (r, m) = dft_split(n);
-        if inverse {
-            // inverse = conjugate for the unitary DFT
-            (r, m.map(|v| -v))
-        } else {
-            (r, m)
-        }
-    };
+    assert_eq!(
+        re.shape(),
+        coeffs.shape(),
+        "split coefficients were built for a different shape"
+    );
     let (mut a, mut b) = (re.clone(), im.clone());
     for mode in [3u8, 1, 2] {
-        let n = match mode {
-            1 => n1,
-            2 => n2,
-            3 => n3,
-            _ => unreachable!(),
-        };
-        let (cr, ci) = split(n);
-        let (na, nb) = split_mode_product(&a, &b, &cr, &ci, mode, prod);
+        let (cr, ci) = coeffs.pair(mode);
+        let (na, nb) = split_mode_product(&a, &b, cr, ci, mode, prod);
         a = na;
         b = nb;
     }
@@ -161,6 +211,28 @@ mod tests {
         let (fr, fi) = dft3d_split(&re, &im, false);
         let after = (fr.frob_norm().powi(2) + fi.frob_norm().powi(2)).sqrt();
         assert!((before - after).abs() < 1e-9);
+    }
+
+    #[test]
+    fn precomputed_coeffs_match_inline_build_bit_exactly() {
+        // The stationary plan path (build SplitCoeffs once, stream many)
+        // must be indistinguishable from building coefficients per call.
+        let mut rng = Rng::new(84);
+        let fwd = SplitCoeffs::new((4, 3, 5), false);
+        let inv = SplitCoeffs::new((4, 3, 5), true);
+        assert_eq!(fwd.shape(), (4, 3, 5));
+        assert!(!fwd.inverse() && inv.inverse());
+        for _ in 0..3 {
+            let re = Tensor3::random(4, 3, 5, &mut rng);
+            let im = Tensor3::random(4, 3, 5, &mut rng);
+            let (pr, pi) = fwd.run_scalar(&re, &im);
+            let (sr, si) = dft3d_split(&re, &im, false);
+            assert_eq!(pr.max_abs_diff(&sr), 0.0);
+            assert_eq!(pi.max_abs_diff(&si), 0.0);
+            let (br, bi) = inv.run_scalar(&pr, &pi);
+            assert!(re.max_abs_diff(&br) < 1e-9);
+            assert!(im.max_abs_diff(&bi) < 1e-9);
+        }
     }
 
     #[test]

@@ -111,7 +111,8 @@ impl ArtifactManifest {
                 cfg.get(&name, key)
                     .with_context(|| format!("variant {name:?} missing key {key:?}"))
             };
-            let kind = TransformKind::parse(get("kind")?)
+            let kind: TransformKind = get("kind")?
+                .parse()
                 .with_context(|| format!("variant {name:?} has unknown kind"))?;
             let spec = ArtifactSpec {
                 name: name.clone(),

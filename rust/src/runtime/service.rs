@@ -38,6 +38,14 @@ pub struct PjrtHandle {
     tx: Mutex<Sender<Request>>,
 }
 
+impl Clone for PjrtHandle {
+    // Manual impl: `Sender` is `Send` but not `Sync`, so the handle wraps
+    // it in a `Mutex`, which has no derived `Clone`.
+    fn clone(&self) -> PjrtHandle {
+        PjrtHandle { tx: Mutex::new(self.sender()) }
+    }
+}
+
 /// The running service (join on drop).
 pub struct PjrtService {
     handle: PjrtHandle,

@@ -57,17 +57,46 @@ impl TransformKind {
         TransformKind::Dwht,
     ];
 
-    /// Parse from a CLI string.
-    pub fn parse(s: &str) -> Option<TransformKind> {
-        match s.to_ascii_lowercase().as_str() {
-            "identity" | "id" => Some(TransformKind::Identity),
-            "dct" | "dct2" => Some(TransformKind::Dct2),
-            "dht" | "hartley" => Some(TransformKind::Dht),
-            "dst" | "dst1" | "sine" => Some(TransformKind::Dst1),
-            "dwht" | "hadamard" | "walsh" => Some(TransformKind::Dwht),
-            "dft" | "fourier" | "dft-split" => Some(TransformKind::DftSplit),
-            _ => None,
+    /// Every accepted spelling with the kind it names — the single source
+    /// the `FromStr` impl and [`TransformKind::VALID_NAMES`] both read, so
+    /// the advertised list cannot drift from what actually parses.
+    const NAME_TABLE: [(&str, TransformKind); 15] = [
+        ("identity", TransformKind::Identity),
+        ("id", TransformKind::Identity),
+        ("dct", TransformKind::Dct2),
+        ("dct2", TransformKind::Dct2),
+        ("dht", TransformKind::Dht),
+        ("hartley", TransformKind::Dht),
+        ("dst", TransformKind::Dst1),
+        ("dst1", TransformKind::Dst1),
+        ("sine", TransformKind::Dst1),
+        ("dwht", TransformKind::Dwht),
+        ("hadamard", TransformKind::Dwht),
+        ("walsh", TransformKind::Dwht),
+        ("dft", TransformKind::DftSplit),
+        ("fourier", TransformKind::DftSplit),
+        ("dft-split", TransformKind::DftSplit),
+    ];
+
+    /// Every name and alias the `FromStr` impl accepts (the list quoted by
+    /// its error message), derived from the same table the parser reads.
+    pub const VALID_NAMES: [&str; 15] = {
+        let mut names = [""; 15];
+        let mut i = 0;
+        while i < names.len() {
+            names[i] = TransformKind::NAME_TABLE[i].0;
+            i += 1;
         }
+        names
+    };
+
+    /// Parse from a CLI string.
+    #[deprecated(
+        note = "use `str::parse::<TransformKind>()` (the `FromStr` impl), \
+                whose error message lists every valid kind name"
+    )]
+    pub fn parse(s: &str) -> Option<TransformKind> {
+        s.parse().ok()
     }
 
     pub fn name(self) -> &'static str {
@@ -87,6 +116,40 @@ impl TransformKind {
             TransformKind::Dwht => n.is_power_of_two(),
             _ => n >= 1,
         }
+    }
+}
+
+/// Error of the [`TransformKind`] `FromStr` impl: the rejected input plus
+/// every name the parser accepts.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ParseTransformKindError {
+    input: String,
+}
+
+impl std::fmt::Display for ParseTransformKindError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "unknown transform kind {:?}; valid kinds: {}",
+            self.input,
+            TransformKind::VALID_NAMES.join(", ")
+        )
+    }
+}
+
+impl std::error::Error for ParseTransformKindError {}
+
+impl std::str::FromStr for TransformKind {
+    type Err = ParseTransformKindError;
+
+    fn from_str(s: &str) -> Result<TransformKind, ParseTransformKindError> {
+        let lower = s.to_ascii_lowercase();
+        for (name, kind) in TransformKind::NAME_TABLE {
+            if lower == name {
+                return Ok(kind);
+            }
+        }
+        Err(ParseTransformKindError { input: s.to_string() })
     }
 }
 
@@ -167,9 +230,31 @@ mod tests {
     #[test]
     fn parse_roundtrip() {
         for kind in TransformKind::ALL {
-            assert_eq!(TransformKind::parse(kind.name()), Some(kind));
+            assert_eq!(kind.name().parse::<TransformKind>(), Ok(kind));
         }
+        assert_eq!("DCT".parse::<TransformKind>(), Ok(TransformKind::Dct2));
+        // Every advertised name parses to the kind the table promises, and
+        // the advertised list is exactly the parser's table.
+        for (i, (name, kind)) in TransformKind::NAME_TABLE.into_iter().enumerate() {
+            assert_eq!(name.parse::<TransformKind>(), Ok(kind), "{name}");
+            assert_eq!(TransformKind::VALID_NAMES[i], name);
+        }
+    }
+
+    #[test]
+    fn from_str_error_lists_valid_names() {
+        let err = "nope".parse::<TransformKind>().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("\"nope\""), "{msg}");
+        for name in TransformKind::VALID_NAMES {
+            assert!(msg.contains(name), "error message missing {name:?}: {msg}");
+        }
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_parse_shim_still_works() {
+        assert_eq!(TransformKind::parse("dht"), Some(TransformKind::Dht));
         assert_eq!(TransformKind::parse("nope"), None);
-        assert_eq!(TransformKind::parse("DCT"), Some(TransformKind::Dct2));
     }
 }

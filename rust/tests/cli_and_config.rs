@@ -75,6 +75,52 @@ fn serve_command_reference_backend_smoke() {
 }
 
 #[test]
+fn serve_plan_cache_flag_and_config_section() {
+    // Explicit plan-cache sizing works end to end...
+    commands::run(&args(&[
+        "serve", "--backend", "reference", "--jobs", "6", "--workers", "2", "--plan-cache", "4",
+    ]))
+    .unwrap();
+    // ...and validates.
+    assert!(commands::run(&args(&[
+        "serve", "--backend", "reference", "--jobs", "1", "--plan-cache", "0",
+    ]))
+    .is_err());
+    assert!(commands::run(&args(&[
+        "serve", "--backend", "reference", "--jobs", "1", "--plan-cache", "lots",
+    ]))
+    .is_err());
+    // The [plan_cache] file section feeds the same knob.
+    let dir = std::env::temp_dir().join("triada_cli_plan_cache_cfg_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("plans.ini");
+    std::fs::write(
+        &path,
+        "[coordinator]\nworkers = 2\nqueue_depth = 16\n\n[plan_cache]\ncapacity = 3\n",
+    )
+    .unwrap();
+    commands::run(&args(&[
+        "serve",
+        "--backend",
+        "reference",
+        "--jobs",
+        "4",
+        "--config",
+        path.to_str().unwrap(),
+    ]))
+    .unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn transform_rejects_unknown_kind_with_name_list() {
+    let err = commands::run(&args(&["transform", "--kind", "nope"])).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("valid kinds"), "{msg}");
+    assert!(msg.contains("dct2") && msg.contains("dft-split"), "{msg}");
+}
+
+#[test]
 fn transform_command_engine_path() {
     commands::run(&args(&[
         "transform", "--kind", "dht", "--shape", "6x5x4", "--engine", "--threads", "2",

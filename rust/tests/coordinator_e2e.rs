@@ -7,7 +7,9 @@ use std::time::Duration;
 
 use triada::coordinator::backend::{reference_execute, Backend, ReferenceBackend, SimBackend};
 use triada::coordinator::batcher::BatchPolicy;
-use triada::coordinator::{Coordinator, CoordinatorConfig, TransformJob, WaitOutcome};
+use triada::coordinator::{
+    Coordinator, CoordinatorConfig, Plan, PlanSpec, TransformJob, WaitOutcome,
+};
 use triada::gemt;
 use triada::runtime::Direction;
 use triada::sim::SimConfig;
@@ -20,6 +22,7 @@ fn config(workers: usize, queue: usize, max_batch: usize) -> CoordinatorConfig {
         workers,
         queue_depth: queue,
         batch: BatchPolicy { max_batch, window: Duration::from_millis(1) },
+        ..CoordinatorConfig::default()
     }
 }
 
@@ -198,8 +201,32 @@ fn backend_names_are_stable() {
 
 /// Backend that blocks every job until the gate opens — makes timeout
 /// behaviour deterministic instead of racing a fast reference transform.
+/// Implements the plan API the way a third-party backend would: `prepare`
+/// captures the gate in the plan; executing waits on it.
 struct GatedBackend {
     open: Arc<AtomicBool>,
+}
+
+struct GatedPlan {
+    spec: PlanSpec,
+    open: Arc<AtomicBool>,
+}
+
+impl Plan for GatedPlan {
+    fn spec(&self) -> PlanSpec {
+        self.spec
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "gated"
+    }
+
+    fn execute(&self, inputs: &[Tensor3<f32>]) -> anyhow::Result<Vec<Tensor3<f32>>> {
+        while !self.open.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        reference_execute(self.spec.kind, self.spec.direction, inputs)
+    }
 }
 
 impl Backend for GatedBackend {
@@ -207,35 +234,41 @@ impl Backend for GatedBackend {
         "gated"
     }
 
-    fn execute(
-        &self,
-        kind: TransformKind,
-        direction: Direction,
-        inputs: &[Tensor3<f32>],
-    ) -> anyhow::Result<Vec<Tensor3<f32>>> {
-        while !self.open.load(Ordering::SeqCst) {
-            std::thread::sleep(Duration::from_millis(1));
-        }
-        reference_execute(kind, direction, inputs)
+    fn prepare(&self, spec: PlanSpec) -> anyhow::Result<Arc<dyn Plan>> {
+        Ok(Arc::new(GatedPlan { spec, open: self.open.clone() }))
     }
 }
 
 /// Backend whose worker dies mid-job — the "coordinator dropped the job"
-/// case `wait_timeout` must distinguish from an ordinary timeout.
+/// case `wait_timeout` must distinguish from an ordinary timeout. Planning
+/// succeeds; the crash is injected at execute time.
 struct PanickingBackend;
+
+struct PanickingPlan {
+    spec: PlanSpec,
+}
+
+impl Plan for PanickingPlan {
+    fn spec(&self) -> PlanSpec {
+        self.spec
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "panicking"
+    }
+
+    fn execute(&self, _inputs: &[Tensor3<f32>]) -> anyhow::Result<Vec<Tensor3<f32>>> {
+        panic!("injected backend crash (coordinator_e2e)");
+    }
+}
 
 impl Backend for PanickingBackend {
     fn name(&self) -> &'static str {
         "panicking"
     }
 
-    fn execute(
-        &self,
-        _kind: TransformKind,
-        _direction: Direction,
-        _inputs: &[Tensor3<f32>],
-    ) -> anyhow::Result<Vec<Tensor3<f32>>> {
-        panic!("injected backend crash (coordinator_e2e)");
+    fn prepare(&self, spec: PlanSpec) -> anyhow::Result<Arc<dyn Plan>> {
+        Ok(Arc::new(PanickingPlan { spec }))
     }
 }
 

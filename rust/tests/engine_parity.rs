@@ -102,6 +102,7 @@ fn engine_backend_serves_through_coordinator() {
         workers: 2,
         queue_depth: 32,
         batch: BatchPolicy { max_batch: 4, window: Duration::from_millis(1) },
+        ..CoordinatorConfig::default()
     };
     let c = Coordinator::start(cfg, Arc::new(EngineBackend::new(EngineConfig::with_threads(2))));
     assert_eq!(c.backend_name(), "engine");

@@ -1,0 +1,274 @@
+//! Plan/execute integration: the shared [`PlanCache`] builds stationary
+//! state exactly once per spec under concurrency, evicts LRU at capacity,
+//! and every backend's prepared plans match direct (unplanned) execution —
+//! across all kinds, directions, and prime/rectangular shapes.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use triada::coordinator::batcher::BatchPolicy;
+use triada::coordinator::{
+    Backend, Coordinator, CoordinatorConfig, EngineBackend, Plan, PlanCache, PlanSpec,
+    ReferenceBackend, ShardedEngineBackend, SimBackend, TransformJob,
+};
+use triada::gemt::{self, EngineConfig, ShardConfig};
+use triada::prop_assert;
+use triada::proptest::run_prop;
+use triada::runtime::Direction;
+use triada::sim::SimConfig;
+use triada::tensor::Tensor3;
+use triada::transforms::TransformKind;
+use triada::util::Rng;
+
+/// Backend wrapper counting how many plans the inner backend builds.
+struct CountingBackend<B> {
+    inner: B,
+    builds: AtomicUsize,
+}
+
+impl<B> CountingBackend<B> {
+    fn new(inner: B) -> CountingBackend<B> {
+        CountingBackend { inner, builds: AtomicUsize::new(0) }
+    }
+
+    fn builds(&self) -> usize {
+        self.builds.load(Ordering::SeqCst)
+    }
+}
+
+impl<B: Backend> Backend for CountingBackend<B> {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn prepare(&self, spec: PlanSpec) -> anyhow::Result<Arc<dyn Plan>> {
+        self.builds.fetch_add(1, Ordering::SeqCst);
+        self.inner.prepare(spec)
+    }
+}
+
+fn spec(n: usize) -> PlanSpec {
+    PlanSpec::new(TransformKind::Dct2, Direction::Forward, (n, n, n))
+}
+
+#[test]
+fn concurrent_prepare_of_one_spec_builds_once() {
+    let backend = Arc::new(CountingBackend::new(ReferenceBackend));
+    let cache = Arc::new(PlanCache::new(8));
+    let mut rng = Rng::new(1000);
+    let x = Tensor3::random(6, 6, 6, &mut rng).to_f32();
+    thread::scope(|scope| {
+        for _ in 0..8 {
+            let backend = backend.clone();
+            let cache = cache.clone();
+            let x = x.clone();
+            scope.spawn(move || {
+                for _ in 0..10 {
+                    let plan = cache.prepare(backend.as_ref(), spec(6)).unwrap();
+                    assert!(plan.execute(&[x.clone()]).unwrap()[0].shape() == (6, 6, 6));
+                }
+            });
+        }
+    });
+    assert_eq!(backend.builds(), 1, "80 concurrent lookups must build one plan");
+    let stats = cache.stats();
+    assert_eq!(stats.builds, 1);
+    assert_eq!(stats.hits + stats.misses, 80);
+    assert_eq!(stats.entries, 1);
+}
+
+#[test]
+fn lru_eviction_at_capacity() {
+    let backend = CountingBackend::new(ReferenceBackend);
+    let cache = PlanCache::new(2);
+    cache.prepare(&backend, spec(2)).unwrap(); // A
+    cache.prepare(&backend, spec(3)).unwrap(); // B
+    cache.prepare(&backend, spec(2)).unwrap(); // touch A → B becomes LRU
+    cache.prepare(&backend, spec(4)).unwrap(); // C evicts B
+    assert!(cache.contains(spec(2)));
+    assert!(!cache.contains(spec(3)));
+    assert!(cache.contains(spec(4)));
+    assert_eq!(cache.stats().evictions, 1);
+    assert_eq!(backend.builds(), 3);
+    // The evicted spec rebuilds on next use; the resident one does not.
+    cache.prepare(&backend, spec(3)).unwrap();
+    assert_eq!(backend.builds(), 4);
+    cache.prepare(&backend, spec(3)).unwrap();
+    assert_eq!(backend.builds(), 4);
+}
+
+#[test]
+fn coordinator_builds_coefficients_once_for_repeated_requests() {
+    // The acceptance gate: repeated execution of one (kind, direction,
+    // shape) through the coordinator prepares exactly one plan — the
+    // coefficient matrices are built once, not per request.
+    let backend = Arc::new(CountingBackend::new(ReferenceBackend));
+    let cfg = CoordinatorConfig {
+        workers: 4,
+        queue_depth: 64,
+        batch: BatchPolicy { max_batch: 4, window: Duration::from_millis(1) },
+        ..CoordinatorConfig::default()
+    };
+    let c = Coordinator::start(cfg, backend.clone());
+    let mut rng = Rng::new(1001);
+    let handles: Vec<_> = (0..40)
+        .map(|_| {
+            let x = Tensor3::random(5, 6, 7, &mut rng).to_f32();
+            c.submit(TransformJob::new(TransformKind::Dht, Direction::Forward, vec![x]))
+                .unwrap()
+        })
+        .collect();
+    for h in handles {
+        assert!(h.wait().unwrap().outputs.is_ok());
+    }
+    let snap = c.metrics();
+    assert_eq!(snap.completed, 40);
+    assert_eq!(
+        backend.builds(),
+        1,
+        "40 identical requests across 4 workers must build one plan"
+    );
+    assert_eq!(snap.plans.builds, 1);
+    c.shutdown();
+}
+
+#[test]
+fn coordinator_surfaces_fallback_reasons_in_metrics() {
+    // A sim-backed coordinator serving DftSplit degrades to the reference;
+    // the degradation must be visible in MetricsSnapshot, not only stderr.
+    let cfg = CoordinatorConfig {
+        workers: 2,
+        queue_depth: 16,
+        batch: BatchPolicy { max_batch: 2, window: Duration::from_millis(1) },
+        ..CoordinatorConfig::default()
+    };
+    let c = Coordinator::start(cfg, Arc::new(SimBackend::new(SimConfig::esop((8, 8, 8)))));
+    assert!(c.metrics().fallback_reasons.is_empty());
+    let mut rng = Rng::new(1002);
+    let re = Tensor3::random(3, 3, 3, &mut rng).to_f32();
+    let im = Tensor3::random(3, 3, 3, &mut rng).to_f32();
+    let res = c
+        .transform(TransformJob::new(TransformKind::DftSplit, Direction::Forward, vec![re, im]))
+        .unwrap();
+    assert!(res.outputs.is_ok());
+    let snap = c.metrics();
+    assert_eq!(snap.fallback_reasons.len(), 1, "{:?}", snap.fallback_reasons);
+    assert!(snap.fallback_reasons[0].contains("dft-split"));
+    assert!(snap.summary().contains("DEGRADED"), "{}", snap.summary());
+    c.shutdown();
+}
+
+/// Direct (unplanned) oracle for one request.
+fn oracle(
+    kind: TransformKind,
+    direction: Direction,
+    inputs: &[Tensor3<f32>],
+) -> Vec<Tensor3<f32>> {
+    let inverse = direction == Direction::Inverse;
+    if kind == TransformKind::DftSplit {
+        let (or, oi) =
+            gemt::split::dft3d_split(&inputs[0].to_f64(), &inputs[1].to_f64(), inverse);
+        vec![or.to_f32(), oi.to_f32()]
+    } else {
+        let x = inputs[0].to_f64();
+        let y = if inverse {
+            gemt::dxt3d_inverse(&x, kind)
+        } else {
+            gemt::dxt3d_forward(&x, kind)
+        };
+        vec![y.to_f32()]
+    }
+}
+
+#[test]
+fn prop_plan_matches_direct_execution_all_backends() {
+    // Plan-vs-direct parity across every kind and direction, on prime and
+    // rectangular shapes, for all local backend families. The CPU families
+    // share the reference's accumulation order, so their agreement with the
+    // oracle is exact up to f32 edge conversions; the device simulator is
+    // numerically close but not bit-identical.
+    let backends: Vec<(Box<dyn Backend>, f64)> = vec![
+        (Box::new(ReferenceBackend), 0.0),
+        (Box::new(EngineBackend::new(EngineConfig::with_threads(2))), 0.0),
+        (
+            Box::new(ShardedEngineBackend::new(ShardConfig {
+                max_tile: 3,
+                engine: EngineConfig::with_threads(2),
+            })),
+            0.0,
+        ),
+        (Box::new(SimBackend::new(SimConfig::esop((16, 16, 16)))), 1e-4),
+    ];
+    run_prop("plan == direct", 25, |g| {
+        let kind = *g.choose(&TransformKind::ALL);
+        let direction = *g.choose(&[Direction::Forward, Direction::Inverse]);
+        // Prime and rectangular shapes probe the tile/band edge cases;
+        // DWHT constrains every dim to a power of two.
+        let shape = if kind == TransformKind::Dwht {
+            (g.pow2_in(1, 8), g.pow2_in(1, 8), g.pow2_in(1, 8))
+        } else {
+            *g.choose(&[(3, 5, 7), (7, 5, 3), (5, 5, 5), (2, 7, 4), (11, 2, 3)])
+        };
+        let mut inputs = vec![Tensor3::random(shape.0, shape.1, shape.2, g.rng()).to_f32()];
+        if kind == TransformKind::DftSplit {
+            inputs.push(Tensor3::random(shape.0, shape.1, shape.2, g.rng()).to_f32());
+        }
+        let want = oracle(kind, direction, &inputs);
+        let spec = PlanSpec::new(kind, direction, shape);
+        for (backend, tol) in &backends {
+            let plan = match backend.prepare(spec) {
+                Ok(p) => p,
+                Err(e) => return Err(format!("{}: prepare failed: {e:#}", backend.name())),
+            };
+            let got = match plan.execute(&inputs) {
+                Ok(o) => o,
+                Err(e) => return Err(format!("{}: execute failed: {e:#}", backend.name())),
+            };
+            prop_assert!(
+                got.len() == want.len(),
+                "{}: arity {} != {}",
+                backend.name(),
+                got.len(),
+                want.len()
+            );
+            for (w, o) in want.iter().zip(&got) {
+                let diff = w.to_f64().max_abs_diff(&o.to_f64());
+                prop_assert!(
+                    diff <= *tol,
+                    "{}: {} {} {:?} diverged from direct by {diff:.3e}",
+                    backend.name(),
+                    kind.name(),
+                    direction.name(),
+                    shape
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn warm_plan_survives_eviction_and_rebuild() {
+    // An evicted spec rebuilds into an identical plan: results match
+    // bit-for-bit before and after eviction.
+    let backend = ReferenceBackend;
+    let cache = PlanCache::new(1);
+    let mut rng = Rng::new(1003);
+    let x = Tensor3::random(4, 4, 4, &mut rng).to_f32();
+    let before = cache
+        .prepare(&backend, spec(4))
+        .unwrap()
+        .execute(&[x.clone()])
+        .unwrap();
+    cache.prepare(&backend, spec(5)).unwrap(); // evicts the 4³ plan
+    assert!(!cache.contains(spec(4)));
+    let after = cache
+        .prepare(&backend, spec(4))
+        .unwrap()
+        .execute(&[x])
+        .unwrap();
+    assert_eq!(before[0], after[0]);
+    assert_eq!(cache.stats().builds, 3);
+}

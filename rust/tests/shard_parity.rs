@@ -144,6 +144,7 @@ fn sharded_backend_serves_oversized_and_dft_split_through_coordinator() {
         workers: 2,
         queue_depth: 32,
         batch: BatchPolicy { max_batch: 4, window: Duration::from_millis(1) },
+        ..CoordinatorConfig::default()
     };
     let backend = ShardedEngineBackend::new(shard_cfg(8, 2, 8));
     let c = Coordinator::start(cfg, Arc::new(backend));
