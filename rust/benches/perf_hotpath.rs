@@ -2,6 +2,13 @@
 //! log in EXPERIMENTS.md. Not a paper experiment; a regression harness.
 //!
 //! Run: `cargo bench --bench perf_hotpath`
+//!
+//! * `TRIADA_BENCH_SMOKE=1` — CI smoke mode: few samples, short windows,
+//!   looser noise allowances. The regression *gates* still fire loudly.
+//! * `TRIADA_BENCH_BASELINE` — path to a committed `BENCH_pool.json`
+//!   baseline (default: `BENCH_pool.json` in the working directory, read
+//!   before this run overwrites it). A warm-pool speedup more than 25%
+//!   below the baseline's aborts the bench.
 
 use std::sync::Arc;
 
@@ -9,17 +16,29 @@ use triada::bench::{bench, black_box, BenchConfig, Table};
 use triada::coordinator::{
     Backend, EngineBackend, PlanSpec, ReferenceBackend, ShardedEngineBackend, SimBackend,
 };
-use triada::gemt::engine::{gemt_engine_with, EngineConfig};
+use triada::gemt::engine::{gemt_engine_on, gemt_engine_with, EngineConfig};
 use triada::gemt::shard::{gemt_sharded_with, ShardConfig};
 use triada::gemt::{gemt_naive, gemt_outer, mode3_product, CoeffSet};
+use triada::pool::{ComputePool, PoolConfig};
 use triada::runtime::Direction;
 use triada::sim::{self, SimConfig};
 use triada::tensor::{sparsify, Mat, Tensor3};
 use triada::transforms::TransformKind;
 use triada::util::{human, Rng};
 
+/// CI smoke mode: enough iterations to catch order-of-magnitude
+/// regressions in seconds, not minutes.
+fn smoke() -> bool {
+    std::env::var_os("TRIADA_BENCH_SMOKE").is_some_and(|v| !v.is_empty() && v != "0")
+}
+
 fn main() {
-    let cfg = BenchConfig { min_time_s: 0.4, samples: 9, warmup_s: 0.05 };
+    let cfg = if smoke() {
+        println!("TRIADA_BENCH_SMOKE set: short windows, loose noise allowances\n");
+        BenchConfig { min_time_s: 0.05, samples: 3, warmup_s: 0.01 }
+    } else {
+        BenchConfig { min_time_s: 0.4, samples: 9, warmup_s: 0.05 }
+    };
     let mut rng = Rng::new(99);
     let mut t = Table::new("perf: L3 hot paths", &["path", "median", "p90", "rate"]);
 
@@ -215,6 +234,159 @@ fn main() {
         Ok(()) => println!("\nwrote {json_path} ({} backends × shapes)", plan_rows.len()),
         Err(e) => println!("\nwarning: could not write {json_path}: {e}"),
     }
+
+    // ---- compute pool: cold per-request spawn vs warm long-lived pool ---
+    //
+    // Cold = what every release before the pool did on each request: spawn
+    // a fresh set of OS threads, run the engine, join them. Warm = the
+    // process-wide pool model: the workers already exist and park between
+    // requests. The gap is pure thread-lifecycle tax, largest where the
+    // compute is smallest (8³) and amortized away on big problems (96³).
+    let pool_rows = bench_pool(&cfg, &mut rng);
+    check_pool_regression(&pool_rows);
+    let json = pool_rows_json(&pool_rows);
+    let json_path = "BENCH_pool.json";
+    match std::fs::write(json_path, &json) {
+        Ok(()) => println!("wrote {json_path} ({} shapes)", pool_rows.len()),
+        Err(e) => println!("warning: could not write {json_path}: {e}"),
+    }
+}
+
+/// One cold-spawn vs warm-pool measurement of the engine at a shape.
+struct PoolRow {
+    shape: (usize, usize, usize),
+    width: usize,
+    cold_s: f64,
+    warm_s: f64,
+}
+
+impl PoolRow {
+    fn speedup(&self) -> f64 {
+        self.cold_s / self.warm_s
+    }
+}
+
+/// Measure per-request pool spawn vs the long-lived warm pool at 8³ (tax
+/// dominates), 32³ (tax visible), and 96³ (tax amortized).
+fn bench_pool(cfg: &BenchConfig, rng: &mut Rng) -> Vec<PoolRow> {
+    let width = 4usize;
+    let warm_pool = ComputePool::new(PoolConfig::with_threads(width));
+    let ecfg = EngineConfig { threads: width, block: 64 };
+    let mut t = Table::new(
+        "perf: cold per-request pool spawn vs warm process-wide pool (engine GEMT)",
+        &["shape", "cold (spawn+run+join)", "warm (run)", "warm speedup"],
+    );
+    let mut rows = Vec::new();
+    for &n in &[8usize, 32, 96] {
+        let x = Tensor3::random(n, n, n, rng);
+        let cs = CoeffSet::new(
+            Mat::random(n, n, rng),
+            Mat::random(n, n, rng),
+            Mat::random(n, n, rng),
+        );
+        let cold = bench(cfg, || {
+            let pool = ComputePool::new(PoolConfig::with_threads(width));
+            black_box(gemt_engine_on(&pool, black_box(&x), black_box(&cs), &ecfg));
+            pool.shutdown();
+        });
+        let warm = bench(cfg, || {
+            black_box(gemt_engine_on(&warm_pool, black_box(&x), black_box(&cs), &ecfg));
+        });
+        let row = PoolRow { shape: (n, n, n), width, cold_s: cold.median_s(), warm_s: warm.median_s() };
+        t.row(&[
+            format!("{n}³"),
+            human::duration(row.cold_s),
+            human::duration(row.warm_s),
+            format!("{:.3}x", row.speedup()),
+        ]);
+        rows.push(row);
+    }
+    t.print();
+    warm_pool.shutdown();
+    // Acceptance gate: at 8³ the request is microseconds of math, so the
+    // warm pool must beat spawning threads per request outright.
+    let small = &rows[0];
+    assert!(
+        small.warm_s < small.cold_s,
+        "warm pool ({:.3e}s) must beat per-request spawn ({:.3e}s) at 8³",
+        small.warm_s,
+        small.cold_s
+    );
+    rows
+}
+
+/// Compare this run's warm-pool speedups against the committed baseline
+/// (`TRIADA_BENCH_BASELINE`, default `BENCH_pool.json`); abort loudly on a
+/// >25% regression. A missing baseline is reported, not fatal — the first
+/// run of a fresh checkout writes one.
+fn check_pool_regression(rows: &[PoolRow]) {
+    let path = std::env::var("TRIADA_BENCH_BASELINE")
+        .unwrap_or_else(|_| "BENCH_pool.json".to_string());
+    let baseline = match std::fs::read_to_string(&path) {
+        Ok(s) => s,
+        Err(e) => {
+            println!("no pool baseline at {path} ({e}); skipping regression check");
+            return;
+        }
+    };
+    for row in rows {
+        let (n1, n2, n3) = row.shape;
+        let needle = format!("\"shape\": [{n1}, {n2}, {n3}]");
+        let Some(at) = baseline.find(&needle) else {
+            println!("baseline {path} has no row for {n1}×{n2}×{n3}; skipping that shape");
+            continue;
+        };
+        let Some(base) = parse_field_after(&baseline[at..], "\"warm_speedup\": ") else {
+            println!("baseline {path} row for {n1}×{n2}×{n3} has no warm_speedup; skipping");
+            continue;
+        };
+        let floor = base * 0.75;
+        assert!(
+            row.speedup() >= floor,
+            "POOL REGRESSION at {n1}³: warm speedup {:.3}x fell more than 25% below \
+             the {path} baseline {base:.3}x (floor {floor:.3}x)",
+            row.speedup()
+        );
+        println!(
+            "pool baseline check {n1}³: {:.3}x vs baseline {base:.3}x (floor {floor:.3}x) ok",
+            row.speedup()
+        );
+    }
+}
+
+/// Parse the float immediately following `key` in `s` (hand-rolled — the
+/// offline image has no JSON dependency).
+fn parse_field_after(s: &str, key: &str) -> Option<f64> {
+    let at = s.find(key)? + key.len();
+    let rest = &s[at..];
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || c == '.' || c == '-' || c == 'e' || c == '+'))
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// Render the pool measurements as a machine-readable JSON summary.
+fn pool_rows_json(rows: &[PoolRow]) -> String {
+    let mut json = String::from("{\n");
+    json.push_str("  \"bench\": \"pool\",\n");
+    json.push_str("  \"cold\": \"spawn pool + engine GEMT + join per request\",\n");
+    json.push_str("  \"warm\": \"engine GEMT on the long-lived pool\",\n");
+    json.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"shape\": [{}, {}, {}], \"width\": {}, \"cold_median_s\": {:.9}, \"warm_median_s\": {:.9}, \"warm_speedup\": {:.4}}}{}\n",
+            r.shape.0,
+            r.shape.1,
+            r.shape.2,
+            r.width,
+            r.cold_s,
+            r.warm_s,
+            r.speedup(),
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    json
 }
 
 /// One cold-vs-warm measurement of a backend at a shape.
@@ -274,12 +446,14 @@ fn bench_plans(cfg: &BenchConfig, rng: &mut Rng) -> Vec<PlanRow> {
     // The acceptance gate, sized to the signal. Only the unthreaded
     // reference at 8³ has a deterministically large cold/warm gap (the
     // coefficient build is a big fraction of a ~10µs request); the
-    // threaded backends' 8³ execute is dominated by thread::scope spawns
+    // threaded backends' 8³ execute is dominated by pool-task submission
     // and the simulator's by the device model, and at 32³ the build is a
     // few percent of a multi-ms execute — in all of those regimes a strict
     // median comparison would flake on scheduler noise, so they get a
     // small allowance instead (warm work is a strict subset of cold work,
-    // so warm may never *lose* beyond noise).
+    // so warm may never *lose* beyond noise). Smoke mode samples far less,
+    // so its noise allowance is wider.
+    let allow = if smoke() { 1.10 } else { 1.02 };
     for row in &rows {
         if row.backend == "cpu-reference" && row.shape == (8, 8, 8) {
             assert!(
@@ -291,7 +465,7 @@ fn bench_plans(cfg: &BenchConfig, rng: &mut Rng) -> Vec<PlanRow> {
             );
         } else if row.backend != "triada-sim" {
             assert!(
-                row.warm_s < row.cold_s * 1.02,
+                row.warm_s < row.cold_s * allow,
                 "{}: warm plan ({:.3e}s) must not lose to cold plan ({:.3e}s) at {:?}",
                 row.backend,
                 row.warm_s,

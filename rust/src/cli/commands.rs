@@ -43,15 +43,15 @@ COMMANDS:
     serve                        start the coordinator and run a demo load
         --artifacts DIR          artifact dir            [artifacts]
         --jobs N                 demo jobs to submit     [64]
-        --workers N              worker threads
+        --workers N              max batches in flight on the compute pool
         --backend pjrt|reference|sim|engine|sharded
         --engine                 shorthand for --backend engine
-        --threads N              engine worker threads   [auto]
+        --threads N              engine panel-count hint [auto = pool width]
         --block N                engine panel block size [64]
         --max-tile N             sharded backend tile bound [128]
         --plan-cache N           stationary plans kept resident (LRU) [32]
         --config FILE            INI config (sections [coordinator],
-                                 [engine], [plan_cache])
+                                 [engine], [plan_cache], [pool])
     help                         this text
 ";
 
@@ -78,6 +78,7 @@ fn parse_kind(args: &Args) -> anyhow::Result<TransformKind> {
 fn cmd_info(args: &Args) -> anyhow::Result<()> {
     println!("triada {} — three-layer Rust+JAX+Pallas TriADA reproduction", env!("CARGO_PKG_VERSION"));
     println!("kinds: {}", TransformKind::ALL.map(|k| k.name()).join(", "));
+    println!("compute pool: {} workers (process-wide, work-stealing)", crate::pool::global().width());
     let dir = args.opt_or("artifacts", "artifacts");
     match crate::runtime::ArtifactManifest::load(dir) {
         Ok(m) => {
@@ -264,6 +265,20 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         Some(c) => CoordinatorConfig::from_config(c)?,
         None => CoordinatorConfig::default(),
     };
+    // The `[pool]` section sizes the process-wide compute pool. First
+    // configuration wins: if another layer already spun the pool up (e.g.
+    // an earlier serve in this process), say so instead of silently
+    // ignoring the file.
+    if let Some(c) = &file_cfg {
+        let pool_cfg = crate::pool::PoolConfig::from_config(c)?;
+        if !crate::pool::configure_global(pool_cfg) && *crate::pool::global().config() != pool_cfg
+        {
+            println!(
+                "pool: already running with {} workers; [pool] section ignored (first configuration wins)",
+                crate::pool::global().width()
+            );
+        }
+    }
     if let Some(w) = args.opt("workers") {
         cfg.workers = w.parse().context("--workers")?;
     }
@@ -326,13 +341,14 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let jobs = args.opt_usize("jobs", 64)?;
     let shape = args.opt_shape("shape", (8, 8, 8))?;
     println!(
-        "coordinator: backend={} workers={} queue={} batch={}x/{:?} plan-cache={}",
+        "coordinator: backend={} workers={} queue={} batch={}x/{:?} plan-cache={} pool={}w",
         backend.name(),
         cfg.workers,
         cfg.queue_depth,
         cfg.batch.max_batch,
         cfg.batch.window,
-        cfg.plan_capacity
+        cfg.plan_capacity,
+        crate::pool::global().width()
     );
     let coordinator = Coordinator::start(cfg, backend);
 
@@ -358,6 +374,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     println!("served {ok}/{jobs} jobs in {} ({})", human::duration(dt), human::rate(jobs as f64 / dt));
     println!("{}", snap.summary());
     println!("plan cache: {}", snap.plans.summary());
+    println!("pool: {}", snap.pool.summary());
     if snap.fallback_reasons.is_empty() {
         println!("degraded paths: none");
     } else {

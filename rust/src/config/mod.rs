@@ -121,6 +121,20 @@ impl Config {
         }
         Ok(EngineSettings { threads, block, max_tile })
     }
+
+    /// Typed view of the `[pool]` section (the process-wide work-stealing
+    /// compute pool, `crate::pool`). Every key is optional; `threads = 0`
+    /// means auto-detect and a share of `0` means unlimited, so there is
+    /// nothing to validate beyond the types.
+    pub fn pool_settings(&self) -> anyhow::Result<PoolSettings> {
+        Ok(PoolSettings {
+            threads: self.get_usize("pool", "threads")?,
+            pin: self.get_bool("pool", "pin")?,
+            engine_share: self.get_usize("pool", "engine_share")?,
+            shard_share: self.get_usize("pool", "shard_share")?,
+            coordinator_share: self.get_usize("pool", "coordinator_share")?,
+        })
+    }
 }
 
 /// Parsed `[engine]` keys; `None` means "not set, use the engine default".
@@ -135,6 +149,21 @@ pub struct EngineSettings {
     pub max_tile: Option<usize>,
 }
 
+/// Parsed `[pool]` keys; `None` means "not set, use the pool default".
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolSettings {
+    /// Pool worker threads (`Some(0)` = explicit auto-detect).
+    pub threads: Option<usize>,
+    /// Request core pinning (accepted but a documented no-op offline).
+    pub pin: Option<bool>,
+    /// Max concurrently running engine-layer tasks (`0` = unlimited).
+    pub engine_share: Option<usize>,
+    /// Max concurrently running shard-layer tasks (`0` = unlimited).
+    pub shard_share: Option<usize>,
+    /// Max concurrently running coordinator-layer tasks (`0` = unlimited).
+    pub coordinator_share: Option<usize>,
+}
+
 /// Every supported config key as `(section, key, documented default)` —
 /// the source of truth `docs/CONFIG.md` is checked against by the
 /// `config_md_documents_every_key_and_default` test. Defaults are rendered
@@ -143,6 +172,7 @@ pub fn documented_keys() -> Vec<(&'static str, &'static str, String)> {
     let coord = crate::coordinator::CoordinatorConfig::default();
     let engine = crate::gemt::EngineConfig::default();
     let shard = crate::gemt::ShardConfig::default();
+    let pool = crate::pool::PoolConfig::default();
     vec![
         ("coordinator", "workers", "auto".to_string()),
         ("coordinator", "queue_depth", coord.queue_depth.to_string()),
@@ -156,6 +186,11 @@ pub fn documented_keys() -> Vec<(&'static str, &'static str, String)> {
         ("engine", "block", engine.block.to_string()),
         ("engine", "max_tile", shard.max_tile.to_string()),
         ("plan_cache", "capacity", coord.plan_capacity.to_string()),
+        ("pool", "threads", pool.threads.to_string()),
+        ("pool", "pin", pool.pin.to_string()),
+        ("pool", "engine_share", pool.engine_share.to_string()),
+        ("pool", "shard_share", pool.shard_share.to_string()),
+        ("pool", "coordinator_share", pool.coordinator_share.to_string()),
     ]
 }
 
@@ -248,6 +283,37 @@ p1 = 64
     }
 
     #[test]
+    fn pool_settings_parse_and_default() {
+        let c = Config::parse(
+            "[pool]\nthreads = 6\npin = true\nengine_share = 4\nshard_share = 2\ncoordinator_share = 1\n",
+        )
+        .unwrap();
+        let s = c.pool_settings().unwrap();
+        assert_eq!(
+            s,
+            PoolSettings {
+                threads: Some(6),
+                pin: Some(true),
+                engine_share: Some(4),
+                shard_share: Some(2),
+                coordinator_share: Some(1),
+            }
+        );
+        let empty = Config::parse("").unwrap();
+        assert_eq!(empty.pool_settings().unwrap(), PoolSettings::default());
+        // 0 is meaningful everywhere (auto / unlimited), never an error.
+        let zeros = Config::parse("[pool]\nthreads = 0\nengine_share = 0\n").unwrap();
+        let s = zeros.pool_settings().unwrap();
+        assert_eq!(s.threads, Some(0));
+        assert_eq!(s.engine_share, Some(0));
+        // Types are still enforced.
+        let junk = Config::parse("[pool]\nthreads = many\n").unwrap();
+        assert!(junk.pool_settings().is_err());
+        let junk = Config::parse("[pool]\npin = maybe\n").unwrap();
+        assert!(junk.pool_settings().is_err());
+    }
+
+    #[test]
     fn documented_keys_cover_both_sections() {
         let keys = documented_keys();
         assert!(keys.iter().any(|(s, k, _)| *s == "coordinator" && *k == "workers"));
@@ -259,6 +325,9 @@ p1 = 64
         }
         for key in ["threads", "block", "max_tile"] {
             assert!(keys.iter().any(|(s, k, _)| *s == "engine" && *k == key), "{key}");
+        }
+        for key in ["threads", "pin", "engine_share", "shard_share", "coordinator_share"] {
+            assert!(keys.iter().any(|(s, k, _)| *s == "pool" && *k == key), "{key}");
         }
     }
 }

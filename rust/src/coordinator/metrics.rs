@@ -42,6 +42,10 @@ pub struct MetricsSnapshot {
     /// Shared plan-cache counters (filled by
     /// [`super::server::Coordinator::metrics`]; zero for a bare `Metrics`).
     pub plans: PlanCacheStats,
+    /// Process-wide compute-pool gauges — queue depth, steals,
+    /// park/unpark, task latency ([`crate::pool::PoolStats`]). Filled by
+    /// [`super::server::Coordinator::metrics`]; zero for a bare `Metrics`.
+    pub pool: crate::pool::PoolStats,
     /// Backend degradation reasons ([`super::backend::FallbackNotice`];
     /// empty = every request ran on the backend's primary path). Filled by
     /// [`super::server::Coordinator::metrics`].
@@ -112,6 +116,7 @@ impl Metrics {
             queue_wait_p50_s: g.queue_wait.quantile(0.50),
             uptime_s: uptime,
             plans: PlanCacheStats::default(),
+            pool: crate::pool::PoolStats::default(),
             fallback_reasons: Vec::new(),
         }
     }
@@ -137,6 +142,16 @@ impl MetricsSnapshot {
             s.push_str(&format!(
                 " | plans={} ({} hits / {} builds)",
                 self.plans.entries, self.plans.hits, self.plans.builds
+            ));
+        }
+        if self.pool.executed > 0 {
+            s.push_str(&format!(
+                " | pool={}w depth={} ({} tasks, {} stolen, wait p~mean {})",
+                self.pool.workers,
+                self.pool.queue_depth,
+                self.pool.executed,
+                self.pool.stolen,
+                human::duration(self.pool.task_wait_mean_s),
             ));
         }
         if !self.fallback_reasons.is_empty() {
@@ -175,6 +190,7 @@ mod tests {
         assert_eq!(s.completed, 0);
         assert_eq!(s.mean_batch_size, 0.0);
         assert_eq!(s.plans, PlanCacheStats::default());
+        assert_eq!(s.pool, crate::pool::PoolStats::default());
         assert!(s.fallback_reasons.is_empty());
     }
 
@@ -190,5 +206,15 @@ mod tests {
         let line = s.summary();
         assert!(line.contains("plans=1 (9 hits / 1 builds)"), "{line}");
         assert!(line.contains("DEGRADED (1 reason(s))"), "{line}");
+        // Pool gauges appear once tasks have executed.
+        assert!(!line.contains("pool="), "no pool traffic yet: {line}");
+        s.pool = crate::pool::PoolStats {
+            workers: 4,
+            executed: 12,
+            submitted: 12,
+            ..Default::default()
+        };
+        let line = s.summary();
+        assert!(line.contains("pool=4w"), "{line}");
     }
 }

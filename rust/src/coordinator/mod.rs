@@ -1,21 +1,28 @@
 //! The serving coordinator — Layer 3's request path.
 //!
 //! Clients submit [`job::TransformJob`]s; the [`batcher`] groups them by
-//! `(kind, direction, shape)`; a [`worker`] pool resolves each batch's
-//! [`plan::PlanSpec`] through the shared [`plan::PlanCache`] and streams
-//! every job of the batch through one stationary [`plan::Plan`] prepared by
-//! the [`backend`] (prepare-once / stream-many — the serving analog of the
-//! device's stationary coefficient matrices); [`metrics`] records latency
-//! histograms, throughput, plan-cache counters, and degradation notices.
-//! Everything is std-threads + condvars (no tokio offline — the work is
-//! CPU-bound, so thread-per-worker is the right shape anyway).
+//! `(kind, direction, shape)`; each flushed batch becomes one task on the
+//! process-wide compute pool ([`crate::pool`]) via the [`worker`] module's
+//! `BatchDispatcher`, which resolves the batch's [`plan::PlanSpec`] through
+//! the shared [`plan::PlanCache`] and streams every job of the batch
+//! through one stationary [`plan::Plan`] prepared by the [`backend`]
+//! (prepare-once / stream-many — the serving analog of the device's
+//! stationary coefficient matrices); [`metrics`] records latency
+//! histograms, throughput, plan-cache counters, compute-pool gauges, and
+//! degradation notices. Everything is std-threads + condvars (no tokio
+//! offline — the work is CPU-bound), and batch-level and intra-plan
+//! parallelism share the same pool workers instead of oversubscribing
+//! each other.
 //!
 //! ```text
-//! submit() ─→ JobQueue ─→ batcher thread ─→ BatchQueue ─→ worker × W
-//!     ↑ backpressure (bounded)                    │            │
-//!     └────────────── JobHandle ←─ per-job channel┘      PlanCache (shared)
-//!                                                              │
-//!                                                  Backend::prepare → Plan
+//! submit() ─→ JobQueue ─→ batcher thread ─→ BatchDispatcher (≤ W in flight)
+//!     ↑ backpressure (bounded)                    │
+//!     └── JobHandle ←─ per-job channel ──┐        ▼ one task per batch
+//!                                        │   compute pool (shared workers)
+//!                                        └───────│
+//!                                           PlanCache (shared)
+//!                                                │
+//!                                    Backend::prepare → Plan
 //! ```
 //!
 //! ```

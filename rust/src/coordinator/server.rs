@@ -1,5 +1,5 @@
-//! The coordinator itself: submit-side API, batcher thread, worker pool,
-//! and graceful shutdown.
+//! The coordinator itself: submit-side API, batcher thread, batch dispatch
+//! onto the process-wide compute pool, and graceful shutdown.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver};
@@ -10,16 +10,19 @@ use std::time::{Duration, Instant};
 use anyhow::Context;
 
 use super::backend::Backend;
-use super::batcher::{Batch, BatchPolicy, Batcher};
+use super::batcher::{BatchPolicy, Batcher};
 use super::job::{JobId, JobResult, TransformJob};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::plan::{DEFAULT_PLAN_CAPACITY, PlanCache, PlanCacheStats};
 use super::queue::{BoundedQueue, PopError};
-use super::worker::{worker_loop, Pending};
+use super::worker::{BatchDispatcher, Pending};
 
 /// Coordinator knobs (see `config/` for the file form).
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
+    /// Maximum batches in flight on the compute pool at once (the
+    /// dispatcher's admission limit — formerly the OS worker-thread
+    /// count; execution itself happens on `[pool] threads` workers).
     pub workers: usize,
     /// Submit-queue capacity — the backpressure bound.
     pub queue_depth: usize,
@@ -114,51 +117,48 @@ pub struct Coordinator {
     submit_q: Arc<BoundedQueue<Pending>>,
     metrics: Arc<Metrics>,
     next_id: AtomicU64,
-    threads: Vec<JoinHandle<()>>,
+    batcher: Option<JoinHandle<()>>,
+    dispatcher: Arc<BatchDispatcher>,
     backend: Arc<dyn Backend>,
     plans: Arc<PlanCache>,
 }
 
 impl Coordinator {
-    /// Start batcher + workers over a backend. All workers share one
-    /// [`PlanCache`], so every `(kind, direction, shape)` group the batcher
-    /// forms streams through a single stationary plan.
+    /// Start the batcher thread over a backend; flushed batches execute as
+    /// compute-pool tasks via a [`BatchDispatcher`] admitting at most
+    /// `workers` batches in flight. All batches share one [`PlanCache`],
+    /// so every `(kind, direction, shape)` group the batcher forms streams
+    /// through a single stationary plan.
     pub fn start(config: CoordinatorConfig, backend: Arc<dyn Backend>) -> Coordinator {
         let submit_q: Arc<BoundedQueue<Pending>> = Arc::new(BoundedQueue::new(config.queue_depth));
-        let batch_q: Arc<BoundedQueue<Batch<Pending>>> =
-            Arc::new(BoundedQueue::new(config.queue_depth));
         let metrics = Arc::new(Metrics::new());
         let plans = Arc::new(PlanCache::new(config.plan_capacity));
-        let mut threads = Vec::new();
+        let dispatcher = Arc::new(BatchDispatcher::new(
+            backend.clone(),
+            plans.clone(),
+            metrics.clone(),
+            config.workers.max(1),
+        ));
 
-        // Batcher thread.
-        {
+        let batcher = {
             let submit_q = submit_q.clone();
-            let batch_q = batch_q.clone();
+            let dispatcher = dispatcher.clone();
             let policy = config.batch;
-            threads.push(
-                std::thread::Builder::new()
-                    .name("triada-batcher".into())
-                    .spawn(move || batcher_loop(submit_q, batch_q, policy))
-                    .expect("spawn batcher"),
-            );
-        }
+            std::thread::Builder::new()
+                .name("triada-batcher".into())
+                .spawn(move || batcher_loop(submit_q, dispatcher, policy))
+                .expect("spawn batcher")
+        };
 
-        // Workers.
-        for w in 0..config.workers.max(1) {
-            let batch_q = batch_q.clone();
-            let backend = backend.clone();
-            let plans = plans.clone();
-            let metrics = metrics.clone();
-            threads.push(
-                std::thread::Builder::new()
-                    .name(format!("triada-worker-{w}"))
-                    .spawn(move || worker_loop(batch_q, backend, plans, metrics))
-                    .expect("spawn worker"),
-            );
+        Coordinator {
+            submit_q,
+            metrics,
+            next_id: AtomicU64::new(1),
+            batcher: Some(batcher),
+            dispatcher,
+            backend,
+            plans,
         }
-
-        Coordinator { submit_q, metrics, next_id: AtomicU64::new(1), threads, backend, plans }
     }
 
     /// Which backend this coordinator serves with.
@@ -205,11 +205,13 @@ impl Coordinator {
         self.submit(job)?.wait()
     }
 
-    /// Point-in-time metrics, including plan-cache counters and any
-    /// backend degradation reasons ([`super::backend::FallbackNotice`]).
+    /// Point-in-time metrics, including plan-cache counters, compute-pool
+    /// gauges, and any backend degradation reasons
+    /// ([`super::backend::FallbackNotice`]).
     pub fn metrics(&self) -> MetricsSnapshot {
         let mut snap = self.metrics.snapshot();
         snap.plans = self.plans.stats();
+        snap.pool = crate::pool::global().stats();
         snap.fallback_reasons = self.backend.fallback_reasons();
         snap
     }
@@ -218,28 +220,35 @@ impl Coordinator {
         self.submit_q.len()
     }
 
-    /// Graceful shutdown: stop intake, drain, join all threads.
-    pub fn shutdown(mut self) {
+    /// Stop intake, join the batcher (which flushes and dispatches every
+    /// buffered batch on its way out), then wait for all in-flight batch
+    /// tasks to finish on the pool. Idempotent.
+    fn stop(&mut self) {
         self.submit_q.close();
-        for t in self.threads.drain(..) {
-            let _ = t.join();
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
         }
+        self.dispatcher.drain();
+    }
+
+    /// Graceful shutdown: stop intake, drain every pending batch.
+    pub fn shutdown(mut self) {
+        self.stop();
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        self.submit_q.close();
-        for t in self.threads.drain(..) {
-            let _ = t.join();
-        }
+        self.stop();
     }
 }
 
-/// Batcher thread body: accumulate → flush on size/window → forward.
+/// Batcher thread body: accumulate → flush on size/window → dispatch as a
+/// pool task. Dispatch applies its own in-flight backpressure and never
+/// fails, so every accepted job is eventually answered.
 fn batcher_loop(
     submit_q: Arc<BoundedQueue<Pending>>,
-    batch_q: Arc<BoundedQueue<Batch<Pending>>>,
+    dispatcher: Arc<BatchDispatcher>,
     policy: BatchPolicy,
 ) {
     let mut batcher: Batcher<Pending> = Batcher::new(policy);
@@ -252,26 +261,19 @@ fn batcher_loop(
             Ok(pending) => {
                 let key = pending.job.batch_key();
                 if let Some(batch) = batcher.add(key, pending, Instant::now()) {
-                    if batch_q.push(batch).is_err() {
-                        return; // downstream closed
-                    }
+                    dispatcher.dispatch(batch);
                 }
             }
             Err(PopError::Timeout) => {}
             Err(PopError::Closed) => {
                 for batch in batcher.flush_all() {
-                    if batch_q.push(batch).is_err() {
-                        break;
-                    }
+                    dispatcher.dispatch(batch);
                 }
-                batch_q.close();
                 return;
             }
         }
         for batch in batcher.flush_expired(Instant::now()) {
-            if batch_q.push(batch).is_err() {
-                return;
-            }
+            dispatcher.dispatch(batch);
         }
     }
 }
@@ -407,6 +409,9 @@ mod tests {
         assert!(snap.plans.hits + snap.plans.misses >= 1);
         assert_eq!(c.plan_stats().builds, 1);
         assert!(snap.fallback_reasons.is_empty(), "reference never degrades");
+        // Batches ran as compute-pool tasks, so the pool gauges are live.
+        assert_eq!(snap.pool.workers, crate::pool::global().width());
+        assert!(snap.pool.executed >= 1, "batch tasks must show in pool gauges");
         c.shutdown();
     }
 

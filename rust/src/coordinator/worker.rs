@@ -1,12 +1,19 @@
-//! Worker pool: executes flushed batches on the backend and replies to each
-//! job's channel. One OS thread per worker (CPU-bound work).
+//! Batch execution: flushed batches become [`crate::pool::Layer::Coordinator`]
+//! tasks on the process-wide compute pool, instead of the one-OS-thread-per
+//! worker pool this module used to own. [`BatchDispatcher`] is the bridge —
+//! it admits at most `limit` batches in flight (the old `workers` knob),
+//! submits each as one detached pool task, and tracks completion with a
+//! latch so shutdown can drain.
 //!
 //! Every batch resolves its [`PlanSpec`] (the batch key) through the shared
 //! [`PlanCache`] first, so all jobs of the batch stream through one
 //! stationary plan and repeated shapes never rebuild coefficient matrices.
+//! A backend that runs the engine parallelizes *within* the batch task on
+//! the same pool (nested scopes help-execute, so this is deadlock-free at
+//! any pool width).
 
 use std::sync::mpsc::Sender;
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use super::backend::Backend;
@@ -14,7 +21,7 @@ use super::batcher::Batch;
 use super::job::{JobResult, TransformJob};
 use super::metrics::Metrics;
 use super::plan::{Plan, PlanCache, PlanSpec};
-use super::queue::BoundedQueue;
+use crate::pool::Layer;
 
 /// A job waiting for execution, with its reply channel.
 #[derive(Debug)]
@@ -25,32 +32,113 @@ pub struct Pending {
     pub enqueued_at: Instant,
 }
 
-/// Worker loop: pop batches until the queue closes. One plan lookup per
-/// batch; every job of the batch executes on the shared plan.
-pub fn worker_loop(
-    batch_q: Arc<BoundedQueue<Batch<Pending>>>,
+/// Execute one flushed batch: one plan lookup, then every job of the batch
+/// runs on the shared plan. This is the body of a coordinator pool task.
+pub fn execute_batch(
+    batch: Batch<Pending>,
+    backend: &dyn Backend,
+    plans: &PlanCache,
+    metrics: &Metrics,
+) {
+    let batch_size = batch.jobs.len();
+    metrics.record_batch(batch_size);
+    let spec = PlanSpec::from(batch.key);
+    match spec.validate().and_then(|_| plans.prepare(backend, spec)) {
+        Ok(plan) => {
+            for pending in batch.jobs {
+                execute_one(pending, batch_size, plan.as_ref(), metrics);
+            }
+        }
+        Err(e) => {
+            // The whole batch shares the spec, so a spec that cannot be
+            // planned fails every job in it with the same reason.
+            let msg = format!("plan preparation failed: {e:#}");
+            for pending in batch.jobs {
+                fail_one(pending, batch_size, backend.name(), &msg, metrics);
+            }
+        }
+    }
+}
+
+/// Turns flushed batches into compute-pool task graphs: each dispatched
+/// batch is one [`Layer::Coordinator`] task; at most `limit` batches run
+/// concurrently (dispatch blocks past that — the same backpressure the
+/// fixed worker-thread pool used to apply); [`BatchDispatcher::drain`]
+/// blocks until every dispatched batch has completed.
+pub struct BatchDispatcher {
     backend: Arc<dyn Backend>,
     plans: Arc<PlanCache>,
     metrics: Arc<Metrics>,
-) {
-    while let Some(batch) = batch_q.pop() {
-        let batch_size = batch.jobs.len();
-        metrics.record_batch(batch_size);
-        let spec = PlanSpec::from(batch.key);
-        match spec.validate().and_then(|_| plans.prepare(backend.as_ref(), spec)) {
-            Ok(plan) => {
-                for pending in batch.jobs {
-                    execute_one(pending, batch_size, plan.as_ref(), &metrics);
-                }
+    limit: usize,
+    gate: Arc<InFlight>,
+}
+
+/// The in-flight latch: count behind a mutex, condvar signaled on change.
+struct InFlight {
+    count: Mutex<usize>,
+    changed: Condvar,
+}
+
+/// Decrements the latch when a batch task finishes — a drop guard, so a
+/// panicking backend still releases its slot and `drain` cannot hang.
+struct InFlightGuard(Arc<InFlight>);
+
+impl Drop for InFlightGuard {
+    fn drop(&mut self) {
+        let mut n = self.0.count.lock().unwrap();
+        *n -= 1;
+        self.0.changed.notify_all();
+    }
+}
+
+impl BatchDispatcher {
+    /// `limit` is the max batches in flight (≥ 1).
+    pub fn new(
+        backend: Arc<dyn Backend>,
+        plans: Arc<PlanCache>,
+        metrics: Arc<Metrics>,
+        limit: usize,
+    ) -> BatchDispatcher {
+        BatchDispatcher {
+            backend,
+            plans,
+            metrics,
+            limit: limit.max(1),
+            gate: Arc::new(InFlight { count: Mutex::new(0), changed: Condvar::new() }),
+        }
+    }
+
+    /// Submit one batch as a pool task, blocking while `limit` batches are
+    /// already in flight. Never fails: the process-wide pool outlives every
+    /// coordinator, and after shutdown it runs tasks inline.
+    pub fn dispatch(&self, batch: Batch<Pending>) {
+        {
+            let mut n = self.gate.count.lock().unwrap();
+            while *n >= self.limit {
+                n = self.gate.changed.wait(n).unwrap();
             }
-            Err(e) => {
-                // The whole batch shares the spec, so a spec that cannot be
-                // planned fails every job in it with the same reason.
-                let msg = format!("plan preparation failed: {e:#}");
-                for pending in batch.jobs {
-                    fail_one(pending, batch_size, backend.name(), &msg, &metrics);
-                }
-            }
+            *n += 1;
+        }
+        let guard = InFlightGuard(self.gate.clone());
+        let backend = self.backend.clone();
+        let plans = self.plans.clone();
+        let metrics = self.metrics.clone();
+        crate::pool::global().submit(Layer::Coordinator, move || {
+            let _guard = guard;
+            execute_batch(batch, backend.as_ref(), &plans, &metrics);
+        });
+    }
+
+    /// Batches currently executing or queued on the pool.
+    pub fn in_flight(&self) -> usize {
+        *self.gate.count.lock().unwrap()
+    }
+
+    /// Block until every dispatched batch has completed.
+    pub fn drain(&self) {
+        let mut n = self.gate.count.lock().unwrap();
+        while *n > 0 {
+            n = self.gate.changed.wait(n).unwrap();
         }
     }
 }
@@ -132,18 +220,14 @@ mod tests {
     }
 
     #[test]
-    fn invalid_job_fails_cleanly_in_worker_loop() {
+    fn invalid_spec_fails_whole_batch_cleanly() {
         // DWHT on non-power-of-two: the spec cannot be planned, so the
         // whole batch fails with a clean error, never a panic.
-        let q: Arc<BoundedQueue<Batch<Pending>>> = Arc::new(BoundedQueue::new(4));
-        let metrics = Arc::new(Metrics::new());
-        let backend: Arc<dyn Backend> = Arc::new(ReferenceBackend);
-        let plans = Arc::new(PlanCache::new(4));
+        let metrics = Metrics::new();
+        let plans = PlanCache::new(4);
         let (p, rx) = pending(TransformKind::Dwht, vec![Tensor3::zeros(3, 4, 4)]);
         let key = p.job.batch_key();
-        q.push(Batch { key, jobs: vec![p] }).map_err(|_| ()).unwrap();
-        q.close();
-        worker_loop(q, backend, plans.clone(), metrics.clone());
+        execute_batch(Batch { key, jobs: vec![p] }, &ReferenceBackend, &plans, &metrics);
         let res = rx.recv().unwrap();
         let err = res.outputs.unwrap_err();
         assert!(err.to_string().contains("plan preparation failed"), "{err:#}");
@@ -162,41 +246,49 @@ mod tests {
     }
 
     #[test]
-    fn worker_loop_drains_queue_until_close() {
-        let q: Arc<BoundedQueue<Batch<Pending>>> = Arc::new(BoundedQueue::new(4));
-        let metrics = Arc::new(Metrics::new());
-        let backend: Arc<dyn Backend> = Arc::new(ReferenceBackend);
-        let plans = Arc::new(PlanCache::new(4));
-        let (p1, rx1) = pending(TransformKind::Dct2, vec![Tensor3::zeros(2, 2, 2)]);
-        let key = p1.job.batch_key();
-        q.push(Batch { key, jobs: vec![p1] }).map_err(|_| ()).unwrap();
-        q.close();
-        worker_loop(q, backend, plans.clone(), metrics.clone());
-        assert!(rx1.recv().unwrap().outputs.is_ok());
-        assert_eq!(metrics.snapshot().batches, 1);
-        assert_eq!(plans.stats().builds, 1);
-    }
-
-    #[test]
     fn batch_jobs_share_one_plan_build() {
-        let q: Arc<BoundedQueue<Batch<Pending>>> = Arc::new(BoundedQueue::new(4));
-        let metrics = Arc::new(Metrics::new());
-        let backend: Arc<dyn Backend> = Arc::new(ReferenceBackend);
-        let plans = Arc::new(PlanCache::new(4));
+        let metrics = Metrics::new();
+        let plans = PlanCache::new(4);
         let (p1, rx1) = pending(TransformKind::Dct2, vec![Tensor3::zeros(2, 2, 2)]);
         let (p2, rx2) = pending(TransformKind::Dct2, vec![Tensor3::zeros(2, 2, 2)]);
         let key = p1.job.batch_key();
-        q.push(Batch { key, jobs: vec![p1, p2] }).map_err(|_| ()).unwrap();
+        execute_batch(
+            Batch { key, jobs: vec![p1, p2] },
+            &ReferenceBackend,
+            &plans,
+            &metrics,
+        );
         // A second batch of the same key hits the cached plan.
         let (p3, rx3) = pending(TransformKind::Dct2, vec![Tensor3::zeros(2, 2, 2)]);
-        q.push(Batch { key, jobs: vec![p3] }).map_err(|_| ()).unwrap();
-        q.close();
-        worker_loop(q, backend, plans.clone(), metrics.clone());
+        execute_batch(Batch { key, jobs: vec![p3] }, &ReferenceBackend, &plans, &metrics);
         for rx in [rx1, rx2, rx3] {
             assert!(rx.recv().unwrap().outputs.is_ok());
         }
         let stats = plans.stats();
         assert_eq!(stats.builds, 1, "one spec must build exactly once");
         assert_eq!(stats.hits, 1, "second batch must hit the cache");
+        assert_eq!(metrics.snapshot().batches, 2);
+    }
+
+    #[test]
+    fn dispatcher_runs_batches_as_pool_tasks_and_drains() {
+        let metrics = Arc::new(Metrics::new());
+        let plans = Arc::new(PlanCache::new(4));
+        let backend: Arc<dyn Backend> = Arc::new(ReferenceBackend);
+        let d = BatchDispatcher::new(backend, plans.clone(), metrics.clone(), 2);
+        let mut receivers = Vec::new();
+        for _ in 0..10 {
+            let (p, rx) = pending(TransformKind::Dct2, vec![Tensor3::zeros(2, 2, 2)]);
+            let key = p.job.batch_key();
+            d.dispatch(Batch { key, jobs: vec![p] });
+            receivers.push(rx);
+        }
+        d.drain();
+        assert_eq!(d.in_flight(), 0);
+        for rx in receivers {
+            assert!(rx.recv().unwrap().outputs.is_ok());
+        }
+        assert_eq!(metrics.snapshot().batches, 10);
+        assert_eq!(plans.stats().builds, 1, "all batches share one cached plan");
     }
 }

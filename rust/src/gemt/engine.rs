@@ -3,20 +3,22 @@
 //!
 //! Same mathematics as [`super::outer::gemt_outer`] (the three-stage
 //! outer-product chain of Eq. (6.1)–(6.3), §5.1 kernel (3), schedule (d) of
-//! §4), rebuilt as cache-blocked SR-GEMM panels dispatched across a
-//! `std::thread::scope` worker pool:
+//! §4), rebuilt as cache-blocked SR-GEMM panels submitted as tasks to the
+//! process-wide [`crate::pool`] compute pool (tagged
+//! [`crate::pool::Layer::Engine`]):
 //!
-//! * **Panel ownership, not locks.** Each worker owns a disjoint contiguous
-//!   row-block of the stationary output tensor, obtained by splitting the
-//!   underlying buffer — so no two threads ever alias a byte and no
-//!   synchronization is needed inside a phase (the I/O-optimal
+//! * **Panel ownership, not locks.** Each panel task owns a disjoint
+//!   contiguous row-block of the stationary output tensor, obtained by
+//!   splitting the underlying buffer — so no two tasks ever alias a byte
+//!   and no synchronization is needed inside a phase (the I/O-optimal
 //!   communication-avoiding decomposition argued by Deinsum applied at the
-//!   shared-memory level).
-//! * **Fused Stages II+III.** A worker that owns the `k1` row-block of the
-//!   final tensor computes its own `ẍ` panel (Stage II) into thread-local
+//!   shared-memory level). Panel count is clamped to the available rows:
+//!   a wide pool never receives empty work.
+//! * **Fused Stages II+III.** The task that owns the `k1` row-block of the
+//!   final tensor computes its own `ẍ` panel (Stage II) into task-local
 //!   storage and immediately re-slices it through `C₂` (Stage III): the two
-//!   stages pipeline within the thread with no barrier between them. Only
-//!   the Stage I → Stage II hand-off joins the pool (Stage II reads every
+//!   stages pipeline within the task with no barrier between them. Only
+//!   the Stage I → Stage II hand-off synchronizes (Stage II reads every
 //!   `ẋ` row, so it genuinely needs all of Stage I).
 //! * **Blocked summation.** The streamed coefficient panel is walked in
 //!   `block`-row slabs reused across the whole owned row-block, so a
@@ -43,9 +45,8 @@
 //! assert!(x.max_abs_diff(&back) < 1e-9);
 //! ```
 
-use std::thread;
-
 use super::CoeffSet;
+use crate::pool::{ComputePool, Layer};
 use crate::tensor::{Mat, Scalar, Tensor3};
 use crate::transforms::TransformKind;
 
@@ -53,9 +54,10 @@ use crate::transforms::TransformKind;
 /// [`crate::config::Config::engine_settings`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct EngineConfig {
-    /// Worker threads; `0` means auto-detect from the host parallelism,
-    /// capped at 8 (the coordinator's worker default uses the same cap —
-    /// pass an explicit count to use more cores).
+    /// Panel-count hint: how many row-band panels each phase splits into.
+    /// `0` (the default) tracks the compute-pool width — one panel per
+    /// pool worker. Pool *width* itself is `[pool] threads`
+    /// ([`crate::pool::PoolConfig`]); this knob only shapes the split.
     pub threads: usize,
     /// Summation-step panel height for the blocked SR-GEMM loops.
     pub block: usize,
@@ -86,13 +88,15 @@ impl EngineConfig {
         Ok(e)
     }
 
-    /// The thread count actually used (resolves `0` = auto, capped at 8;
-    /// explicit counts are honored unchanged).
+    /// The parallelism actually used: explicit counts are honored
+    /// unchanged, `0` = auto resolves to the process-wide compute pool's
+    /// worker count (which itself auto-detects host parallelism capped at
+    /// 8 — see [`crate::pool::PoolConfig::effective_threads`]).
     pub fn effective_threads(&self) -> usize {
         if self.threads > 0 {
             self.threads
         } else {
-            thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8)
+            crate::pool::global().width()
         }
     }
 }
@@ -135,8 +139,21 @@ pub fn gemt_engine<T: Scalar>(x: &Tensor3<T>, cs: &CoeffSet<T>) -> Tensor3<T> {
     gemt_engine_with(x, cs, &EngineConfig::default())
 }
 
-/// Three-stage 3D-GEMT on the engine with an explicit configuration.
+/// Three-stage 3D-GEMT on the engine with an explicit configuration,
+/// running on the process-wide compute pool ([`crate::pool::global`]).
 pub fn gemt_engine_with<T: Scalar>(
+    x: &Tensor3<T>,
+    cs: &CoeffSet<T>,
+    config: &EngineConfig,
+) -> Tensor3<T> {
+    gemt_engine_on(crate::pool::global(), x, cs, config)
+}
+
+/// Three-stage 3D-GEMT on an explicit compute pool. The library entry
+/// points use the process-wide pool; tests and embedders can pass their
+/// own to control width exactly.
+pub fn gemt_engine_on<T: Scalar>(
+    pool: &ComputePool,
     x: &Tensor3<T>,
     cs: &CoeffSet<T>,
     config: &EngineConfig,
@@ -144,36 +161,56 @@ pub fn gemt_engine_with<T: Scalar>(
     let (n1, n2, n3) = x.shape();
     assert_eq!(cs.input_shape(), (n1, n2, n3));
     let (k1s, k2s, k3s) = cs.output_shape();
-    let threads = config.effective_threads().max(1);
+    let parallelism = if config.threads > 0 { config.threads } else { pool.width() }.max(1);
     let block = config.block.max(1);
 
     // Phase A — Stage I (Eq. 6.1): ẋ[i,j,:] = Σ_step x[i,j,step]·c3[step,:].
-    // Workers own disjoint contiguous (i,j) row-blocks of ẋ.
+    // Panel tasks own disjoint contiguous (i,j) row-blocks of ẋ.
     let mut s1 = Tensor3::<T>::zeros(n1, n2, k3s);
     {
         let c3 = &cs.c3;
-        let panels = split_row_blocks(s1.data_mut(), n1 * n2, k3s, threads);
-        thread::scope(|scope| {
-            for (first_row, panel) in panels {
-                scope.spawn(move || stage1_panel(x, c3, first_row, panel, n2, block));
-            }
+        let panels = split_row_blocks(s1.data_mut(), n1 * n2, k3s, parallelism);
+        run_panels(pool, panels, |first_row, panel| {
+            stage1_panel(x, c3, first_row, panel, n2, block)
         });
     }
 
-    // Phase B — Stages II+III fused (Eq. 6.2–6.3): workers own disjoint k1
-    // row-blocks of the final tensor end-to-end, so the two stages pipeline
-    // within each thread with no barrier or lock between them.
+    // Phase B — Stages II+III fused (Eq. 6.2–6.3): panel tasks own disjoint
+    // k1 row-blocks of the final tensor end-to-end, so the two stages
+    // pipeline within each task with no barrier or lock between them.
     let mut out = Tensor3::<T>::zeros(k1s, k2s, k3s);
     {
         let s1_ref = &s1;
-        let panels = split_row_blocks(out.data_mut(), k1s, k2s * k3s, threads);
-        thread::scope(|scope| {
-            for (first_k1, panel) in panels {
-                scope.spawn(move || stage23_panel(s1_ref, cs, first_k1, panel, block));
-            }
+        let panels = split_row_blocks(out.data_mut(), k1s, k2s * k3s, parallelism);
+        run_panels(pool, panels, |first_k1, panel| {
+            stage23_panel(s1_ref, cs, first_k1, panel, block)
         });
     }
     out
+}
+
+/// Run one phase's row-band panels. A single panel (tiny problem, or
+/// width-1 pool) runs inline on the caller — no submission overhead; more
+/// panels fan out as [`Layer::Engine`] tasks on a pool scope, which blocks
+/// (helping) until the phase is complete. `split_row_blocks` never yields
+/// an empty panel, so every submitted task has real work.
+fn run_panels<T: Scalar>(
+    pool: &ComputePool,
+    panels: Vec<(usize, &mut [T])>,
+    job: impl Fn(usize, &mut [T]) + Send + Sync,
+) {
+    if panels.len() <= 1 {
+        for (first_row, panel) in panels {
+            job(first_row, panel);
+        }
+        return;
+    }
+    let job = &job;
+    pool.scope(Layer::Engine, |s| {
+        for (first_row, panel) in panels {
+            s.spawn(move || job(first_row, panel));
+        }
+    });
 }
 
 /// Split a row-major `rows × row_len` buffer into at most `parts`
@@ -404,6 +441,39 @@ mod tests {
     fn effective_threads_resolves_auto() {
         assert!(EngineConfig::default().effective_threads() >= 1);
         assert_eq!(EngineConfig::with_threads(5).effective_threads(), 5);
+        // Auto tracks the process-wide pool width.
+        assert_eq!(
+            EngineConfig::default().effective_threads(),
+            crate::pool::global().width()
+        );
+    }
+
+    #[test]
+    fn runs_bit_identical_on_explicit_pools_of_any_width() {
+        use crate::pool::{ComputePool, PoolConfig};
+        let (x, cs) = case((5, 4, 3), (5, 4, 3), 507);
+        let want = gemt_outer(&x, &cs);
+        for width in [1usize, 2, 8] {
+            let pool = ComputePool::new(PoolConfig::with_threads(width));
+            let got = gemt_engine_on(&pool, &x, &cs, &EngineConfig::default());
+            assert_eq!(got.max_abs_diff(&want), 0.0, "diverged at pool width {width}");
+            pool.shutdown();
+        }
+    }
+
+    #[test]
+    fn panel_tasks_never_exceed_rows() {
+        // threads ≫ rows must not submit empty panels: 2 rows → at most 2
+        // panel tasks per phase, and with 1 output row Phase B runs inline.
+        use crate::pool::{ComputePool, PoolConfig};
+        let (x, cs) = case((2, 1, 3), (1, 1, 3), 508);
+        let pool = ComputePool::new(PoolConfig::with_threads(8));
+        let got = gemt_engine_on(&pool, &x, &cs, &EngineConfig::with_threads(64));
+        assert!(got.max_abs_diff(&gemt_naive(&x, &cs)) < 1e-12);
+        let stats = pool.stats();
+        // Phase A has 2 rows (≤ 2 tasks); Phase B has 1 row (inline, 0 tasks).
+        assert!(stats.submitted <= 2, "submitted {} tasks for 2+1 rows", stats.submitted);
+        pool.shutdown();
     }
 
     #[test]

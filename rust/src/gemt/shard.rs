@@ -22,11 +22,12 @@
 //!   addition does not forgive.) The contraction dimension is instead
 //!   streamed through the cache in `block`-row slabs, exactly like the
 //!   engine's panels.
-//! * **One worker pool per stage, not per tile.** All tile passes of a
-//!   stage drain from a shared queue into one `std::thread::scope` pool
-//!   (three pool spawns per sharded run, independent of the tile count),
-//!   rather than re-spawning a scope for each tile the way calling
-//!   [`super::engine::gemt_engine_with`] per tile would.
+//! * **One task per tile on the shared pool.** All tile passes of a stage
+//!   are submitted together as [`crate::pool::Layer::Shard`] tasks to the
+//!   process-wide compute pool ([`crate::pool::global`]) under a single
+//!   scope — no threads are spawned per stage or per tile, and shard tiles
+//!   interleave fairly with engine panels and coordinator batches on the
+//!   same workers.
 //!
 //! The same three tile kernels are exactly the three single-mode products,
 //! so this module also provides [`mode1_sharded`] / [`mode2_sharded`] /
@@ -55,12 +56,10 @@
 //! assert_eq!(sharded.max_abs_diff(&gemt_outer(&x, &cs)), 0.0);
 //! ```
 
-use std::sync::Mutex;
-use std::thread;
-
 use super::engine::{gemt_engine_with, stage1_panel, EngineConfig};
 use super::split::SplitCoeffs;
 use super::CoeffSet;
+use crate::pool::{self, Layer};
 use crate::tensor::{Mat, Scalar, Tensor3};
 use crate::transforms::TransformKind;
 
@@ -191,10 +190,10 @@ fn row_tiles<T>(data: &mut [T], width: usize, band: usize) -> Vec<Tile<'_, T>> {
         .collect()
 }
 
-/// Drain every tile of one stage through a single scoped worker pool: the
-/// pool is spawned once per stage and reused across all of the stage's tile
-/// passes (the shared-queue alternative to re-entering `thread::scope` per
-/// tile).
+/// Run every tile of one stage as [`Layer::Shard`] tasks on the
+/// process-wide compute pool, under a single scope that blocks (helping)
+/// until the stage completes. `threads == 1` or a single tile runs inline
+/// on the caller — no submission overhead for serial or tiny stages.
 fn run_tiles<T: Scalar>(
     threads: usize,
     tiles: Vec<Tile<'_, T>>,
@@ -203,24 +202,16 @@ fn run_tiles<T: Scalar>(
     if tiles.is_empty() {
         return;
     }
-    let workers = threads.clamp(1, tiles.len());
-    if workers == 1 {
+    if threads <= 1 || tiles.len() == 1 {
         for t in tiles {
             job(t.first_row, t.panel);
         }
         return;
     }
-    let queue = Mutex::new(tiles);
-    let queue = &queue;
     let job = &job;
-    thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(move || loop {
-                let Some(t) = queue.lock().unwrap().pop() else {
-                    break;
-                };
-                job(t.first_row, t.panel);
-            });
+    pool::global().scope(Layer::Shard, |s| {
+        for t in tiles {
+            s.spawn(move || job(t.first_row, t.panel));
         }
     });
 }
@@ -418,7 +409,8 @@ pub fn mode3_sharded<T: Scalar>(x: &Tensor3<T>, c: &Mat<T>, config: &ShardConfig
 }
 
 /// A configured sharding instance — what [`ShardedEngineBackend`] and the
-/// CLI hold. Owns nothing but the knobs; every call plans and pools fresh.
+/// CLI hold. Owns nothing but the knobs; every call plans fresh and runs
+/// its tile passes on the process-wide compute pool.
 ///
 /// [`ShardedEngineBackend`]: crate::coordinator::backend::ShardedEngineBackend
 #[derive(Clone, Debug, Default)]

@@ -16,7 +16,9 @@
 //!   coefficient generators ([`transforms`]), an FFT baseline ([`fft`]), a
 //!   PJRT runtime that executes the AOT artifacts ([`runtime`]), and a
 //!   serving-style coordinator ([`coordinator`]) that batches and routes
-//!   transform jobs. Python never runs on the request path.
+//!   transform jobs. Python never runs on the request path. All CPU
+//!   parallelism — engine panels, shard tiles, coordinator batches — runs
+//!   on one process-wide work-stealing compute pool ([`pool`]).
 //!
 //! ## Quick start
 //!
@@ -37,6 +39,7 @@ pub mod config;
 pub mod coordinator;
 pub mod fft;
 pub mod gemt;
+pub mod pool;
 pub mod proptest;
 pub mod runtime;
 pub mod sim;

@@ -1,0 +1,922 @@
+//! The process-wide **compute pool** — one long-lived work-stealing worker
+//! pool that every layer schedules onto, mirroring the paper's central
+//! resource model: a TriADA device is a *fixed* physical mesh of cells and
+//! problems are mapped onto it, never the other way around (§3). Before
+//! this module, `gemt::engine` and `gemt::shard` spawned a fresh
+//! `std::thread::scope` pool per stage per request while the coordinator
+//! ran its own per-worker OS threads on top — job-level and intra-plan
+//! parallelism oversubscribed each other, and small problems paid thread
+//! spawn cost on every call.
+//!
+//! Shape of the pool (std-only — no rayon/crossbeam offline):
+//!
+//! * **Per-worker deques + a global injector.** A task submitted from a
+//!   pool worker lands on that worker's own deque (kept hot, LIFO-adjacent
+//!   work); tasks from outside land on the shared injector. An idle worker
+//!   drains its own deque front, then the injector, then **steals** from
+//!   the back of a sibling's deque. All queue state sits behind one mutex
+//!   (the coordinator's `BoundedQueue` discipline): at worker counts ≤ the
+//!   host's core count the lock is uncontended relative to panel-sized
+//!   tasks, and correctness is auditable.
+//! * **Condvar parking.** Idle workers park on a condvar and are woken by
+//!   submissions; parks/unparks are counted and surfaced in [`PoolStats`].
+//! * **Scoped spawns with help-first waiting.** [`ComputePool::scope`] is
+//!   the structured entry point the engine's row-band panels use: spawned
+//!   closures may borrow the caller's stack (panels of a live output
+//!   tensor), and `scope` does not return until every spawn has finished.
+//!   A thread blocked in `scope` does not idle — it *helps*, executing
+//!   pool tasks while it waits. That makes nested parallelism (a
+//!   coordinator batch task that runs an engine scope on the same pool)
+//!   deadlock-free at any pool width, including width 1.
+//! * **Panic isolation.** A panicking detached task is caught and counted;
+//!   the pool keeps serving. A panicking scoped task is captured and
+//!   re-raised at the `scope` caller — the submitting layer observes its
+//!   own panic, other layers are unaffected.
+//! * **Per-layer share limits.** Tasks are tagged with the [`Layer`] that
+//!   submitted them; an optional per-layer cap bounds how many of a
+//!   layer's tasks run concurrently (excess tasks are deferred and
+//!   re-injected as slots free), so one layer cannot starve the others.
+//! * **Graceful shutdown.** [`ComputePool::shutdown`] drains every queued
+//!   task, joins the workers, and flips the pool into inline mode: tasks
+//!   submitted after shutdown run on the caller thread, so no accepted
+//!   work is ever lost.
+//!
+//! The process-wide instance lives behind [`global`] (first use builds it;
+//! [`configure_global`] installs explicit knobs if called before first
+//! use). File form: the `[pool]` section — see
+//! [`crate::config::Config::pool_settings`]. The `TRIADA_POOL_THREADS`
+//! environment variable overrides the auto-detected width (the CI
+//! scheduling matrix runs the whole test suite at width 1 and at 2× host
+//! parallelism through it).
+//!
+//! ```
+//! use triada::pool::{ComputePool, Layer, PoolConfig};
+//! use std::sync::atomic::{AtomicUsize, Ordering};
+//!
+//! let pool = ComputePool::new(PoolConfig::with_threads(2));
+//! let sum = AtomicUsize::new(0);
+//! pool.scope(Layer::General, |s| {
+//!     for i in 0..8 {
+//!         let sum = &sum;
+//!         s.spawn(move || {
+//!             sum.fetch_add(i, Ordering::Relaxed);
+//!         });
+//!     }
+//! });
+//! assert_eq!(sum.load(Ordering::Relaxed), 28);
+//! pool.shutdown();
+//! ```
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Which layer submitted a task — the tag per-layer share limits and the
+/// stats breakdown key off.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Layer {
+    /// `gemt::engine` row-band panel tasks (stages I–III).
+    Engine,
+    /// `gemt::shard` tile passes.
+    Shard,
+    /// Coordinator batch-execution tasks.
+    Coordinator,
+    /// Anything else (tests, ad-hoc callers).
+    General,
+}
+
+impl Layer {
+    /// Number of layers (array sizing).
+    pub const COUNT: usize = 4;
+
+    /// Dense index for per-layer arrays.
+    pub fn index(self) -> usize {
+        match self {
+            Layer::Engine => 0,
+            Layer::Shard => 1,
+            Layer::Coordinator => 2,
+            Layer::General => 3,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Layer::Engine => "engine",
+            Layer::Shard => "shard",
+            Layer::Coordinator => "coordinator",
+            Layer::General => "general",
+        }
+    }
+}
+
+/// Pool knobs (file form: `[pool] threads / pin / engine_share /
+/// shard_share / coordinator_share`, see
+/// [`crate::config::Config::pool_settings`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PoolConfig {
+    /// Worker threads; `0` means auto-detect: `TRIADA_POOL_THREADS` if set,
+    /// else host parallelism capped at 8 (the cap the engine and
+    /// coordinator defaults already shared).
+    pub threads: usize,
+    /// Request pinning workers to cores. The offline build has no
+    /// `sched_setaffinity` binding, so this is accepted, documented, and
+    /// warned about once — never silently dropped.
+    pub pin: bool,
+    /// Max concurrently *running* [`Layer::Engine`] tasks (`0` = no limit).
+    pub engine_share: usize,
+    /// Max concurrently running [`Layer::Shard`] tasks (`0` = no limit).
+    pub shard_share: usize,
+    /// Max concurrently running [`Layer::Coordinator`] tasks (`0` = no
+    /// limit).
+    pub coordinator_share: usize,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            threads: 0,
+            pin: false,
+            engine_share: 0,
+            shard_share: 0,
+            coordinator_share: 0,
+        }
+    }
+}
+
+impl PoolConfig {
+    /// Default config pinned to an explicit worker count.
+    pub fn with_threads(threads: usize) -> PoolConfig {
+        PoolConfig { threads, ..PoolConfig::default() }
+    }
+
+    /// Build from a parsed [`crate::config::Config`] `[pool]` section.
+    pub fn from_config(cfg: &crate::config::Config) -> anyhow::Result<PoolConfig> {
+        let settings = cfg.pool_settings()?;
+        let mut p = PoolConfig::default();
+        if let Some(t) = settings.threads {
+            p.threads = t;
+        }
+        if let Some(pin) = settings.pin {
+            p.pin = pin;
+        }
+        if let Some(s) = settings.engine_share {
+            p.engine_share = s;
+        }
+        if let Some(s) = settings.shard_share {
+            p.shard_share = s;
+        }
+        if let Some(s) = settings.coordinator_share {
+            p.coordinator_share = s;
+        }
+        Ok(p)
+    }
+
+    /// The worker count actually used: explicit `threads` wins, then the
+    /// `TRIADA_POOL_THREADS` environment override, then host parallelism
+    /// capped at 8.
+    pub fn effective_threads(&self) -> usize {
+        if self.threads > 0 {
+            return self.threads;
+        }
+        if let Some(t) = env_threads() {
+            return t;
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8)
+    }
+
+    fn share_limits(&self) -> [usize; Layer::COUNT] {
+        let mut limits = [0usize; Layer::COUNT];
+        limits[Layer::Engine.index()] = self.engine_share;
+        limits[Layer::Shard.index()] = self.shard_share;
+        limits[Layer::Coordinator.index()] = self.coordinator_share;
+        limits
+    }
+}
+
+/// `TRIADA_POOL_THREADS` override, if set to a positive integer.
+fn env_threads() -> Option<usize> {
+    std::env::var("TRIADA_POOL_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&t| t > 0)
+}
+
+/// Point-in-time pool gauges (surfaced in `MetricsSnapshot` and `serve`
+/// output).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PoolStats {
+    /// Worker thread count.
+    pub workers: usize,
+    /// Tasks currently queued (injector + worker deques + deferred).
+    pub queue_depth: usize,
+    /// Tasks accepted since the pool started.
+    pub submitted: u64,
+    /// Tasks executed to completion (including panicked ones).
+    pub executed: u64,
+    /// Tasks taken from a sibling worker's deque.
+    pub stolen: u64,
+    /// Times a worker parked on the condvar…
+    pub parks: u64,
+    /// …and woke again.
+    pub unparks: u64,
+    /// Detached-task panics caught (scoped-task panics re-raise at the
+    /// `scope` caller instead and are not counted here).
+    pub panics: u64,
+    /// Tasks deferred at least once by a per-layer share limit.
+    pub deferred: u64,
+    /// Mean queue wait (submit → execution start), seconds.
+    pub task_wait_mean_s: f64,
+    /// Worst queue wait observed, seconds.
+    pub task_wait_max_s: f64,
+}
+
+impl PoolStats {
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        use crate::util::human;
+        format!(
+            "{} workers | depth={} | {} submitted / {} executed ({} stolen, {} deferred) | parks={}/{} | wait mean={} max={} | panics={}",
+            self.workers,
+            self.queue_depth,
+            self.submitted,
+            self.executed,
+            self.stolen,
+            self.deferred,
+            self.parks,
+            self.unparks,
+            human::duration(self.task_wait_mean_s),
+            human::duration(self.task_wait_max_s),
+            self.panics,
+        )
+    }
+}
+
+/// A queued unit of work.
+struct Task {
+    layer: Layer,
+    submitted: Instant,
+    run: Box<dyn FnOnce() + Send + 'static>,
+}
+
+/// Queue state behind the pool mutex.
+struct State {
+    /// Shared FIFO for tasks submitted from outside the pool.
+    injector: VecDeque<Task>,
+    /// One deque per worker: owner pops the front, thieves pop the back.
+    deques: Vec<VecDeque<Task>>,
+    /// Tasks bounced by a per-layer share limit, awaiting a free slot.
+    deferred: Vec<VecDeque<Task>>,
+    /// Currently-running task count per layer.
+    running: [usize; Layer::COUNT],
+    /// Shutdown requested: drain and exit.
+    draining: bool,
+    /// Workers joined; submissions now run inline on the caller.
+    terminated: bool,
+    parks: u64,
+    unparks: u64,
+    steals: u64,
+    deferrals: u64,
+}
+
+impl State {
+    fn queued(&self) -> usize {
+        self.injector.len()
+            + self.deques.iter().map(|d| d.len()).sum::<usize>()
+            + self.deferred.iter().map(|d| d.len()).sum::<usize>()
+    }
+
+    /// Admit a candidate task against the share limits: either mark it
+    /// running and hand it out, or defer it and report `None`.
+    fn admit(&mut self, task: Task, limits: &[usize; Layer::COUNT]) -> Option<Task> {
+        let l = task.layer.index();
+        if limits[l] != 0 && self.running[l] >= limits[l] {
+            self.deferrals += 1;
+            self.deferred[l].push_back(task);
+            return None;
+        }
+        self.running[l] += 1;
+        Some(task)
+    }
+
+    /// Take the next runnable task: own deque first (when the caller is
+    /// worker `who`), then the injector, then steal from a sibling's back.
+    fn take(&mut self, who: Option<usize>, limits: &[usize; Layer::COUNT]) -> Option<Task> {
+        if let Some(w) = who {
+            while let Some(t) = self.deques[w].pop_front() {
+                if let Some(t) = self.admit(t, limits) {
+                    return Some(t);
+                }
+            }
+        }
+        while let Some(t) = self.injector.pop_front() {
+            if let Some(t) = self.admit(t, limits) {
+                return Some(t);
+            }
+        }
+        for j in 0..self.deques.len() {
+            if who == Some(j) {
+                continue;
+            }
+            while let Some(t) = self.deques[j].pop_back() {
+                self.steals += 1;
+                if let Some(t) = self.admit(t, limits) {
+                    return Some(t);
+                }
+            }
+        }
+        None
+    }
+
+    /// A task of `layer` finished: free its slot and promote one deferred
+    /// task of the same layer, if any.
+    fn finish(&mut self, layer: Layer) -> bool {
+        let l = layer.index();
+        debug_assert!(self.running[l] > 0);
+        self.running[l] -= 1;
+        if let Some(t) = self.deferred[l].pop_front() {
+            self.injector.push_front(t);
+            return true; // caller must notify
+        }
+        false
+    }
+}
+
+struct Shared {
+    /// Distinguishes pools so a thread that is a worker of pool A submits
+    /// to A's deque but to pool B's injector.
+    id: usize,
+    width: usize,
+    limits: [usize; Layer::COUNT],
+    state: Mutex<State>,
+    work_ready: Condvar,
+    submitted: AtomicU64,
+    executed: AtomicU64,
+    panics: AtomicU64,
+    wait_sum_ns: AtomicU64,
+    wait_max_ns: AtomicU64,
+}
+
+thread_local! {
+    /// `(pool id, worker index)` of the pool worker running this thread.
+    static WORKER: Cell<Option<(usize, usize)>> = const { Cell::new(None) };
+}
+
+static NEXT_POOL_ID: AtomicUsize = AtomicUsize::new(1);
+
+/// A long-lived work-stealing worker pool. See the module docs for the
+/// full design; the process-wide instance is [`global`].
+pub struct ComputePool {
+    config: PoolConfig,
+    shared: Arc<Shared>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl ComputePool {
+    /// Spawn a pool with the given knobs.
+    pub fn new(config: PoolConfig) -> ComputePool {
+        let width = config.effective_threads().max(1);
+        if config.pin {
+            eprintln!(
+                "pool: pin = true requested, but the offline build has no core-affinity \
+                 binding; continuing unpinned"
+            );
+        }
+        let shared = Arc::new(Shared {
+            id: NEXT_POOL_ID.fetch_add(1, Ordering::Relaxed),
+            width,
+            limits: config.share_limits(),
+            state: Mutex::new(State {
+                injector: VecDeque::new(),
+                deques: (0..width).map(|_| VecDeque::new()).collect(),
+                deferred: (0..Layer::COUNT).map(|_| VecDeque::new()).collect(),
+                running: [0; Layer::COUNT],
+                draining: false,
+                terminated: false,
+                parks: 0,
+                unparks: 0,
+                steals: 0,
+                deferrals: 0,
+            }),
+            work_ready: Condvar::new(),
+            submitted: AtomicU64::new(0),
+            executed: AtomicU64::new(0),
+            panics: AtomicU64::new(0),
+            wait_sum_ns: AtomicU64::new(0),
+            wait_max_ns: AtomicU64::new(0),
+        });
+        let mut workers = Vec::with_capacity(width);
+        for w in 0..width {
+            let shared = shared.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("triada-pool-{w}"))
+                    .spawn(move || worker_main(shared, w))
+                    .expect("spawn pool worker"),
+            );
+        }
+        ComputePool { config, shared, workers: Mutex::new(workers) }
+    }
+
+    /// Worker thread count.
+    pub fn width(&self) -> usize {
+        self.shared.width
+    }
+
+    /// The knobs this pool was built with.
+    pub fn config(&self) -> &PoolConfig {
+        &self.config
+    }
+
+    /// Submit a detached (fire-and-forget) task. Panics inside it are
+    /// caught and counted ([`PoolStats::panics`]); the pool keeps serving.
+    /// After [`ComputePool::shutdown`] the task runs inline on the caller.
+    pub fn submit(&self, layer: Layer, f: impl FnOnce() + Send + 'static) {
+        self.submit_task(Task { layer, submitted: Instant::now(), run: Box::new(f) });
+    }
+
+    fn submit_task(&self, task: Task) {
+        let sh = &self.shared;
+        let mut task = Some(task);
+        {
+            let mut st = sh.state.lock().unwrap();
+            if !st.terminated {
+                sh.submitted.fetch_add(1, Ordering::Relaxed);
+                let t = task.take().unwrap();
+                match WORKER.with(|w| w.get()) {
+                    Some((pool_id, idx)) if pool_id == sh.id => st.deques[idx].push_back(t),
+                    _ => st.injector.push_back(t),
+                }
+            }
+        }
+        match task {
+            // Post-shutdown: execute on the caller so accepted work is
+            // never lost (the running count is bumped directly — share
+            // limits no longer apply once the workers are gone).
+            Some(t) => {
+                sh.submitted.fetch_add(1, Ordering::Relaxed);
+                sh.state.lock().unwrap().running[t.layer.index()] += 1;
+                execute(sh, t);
+            }
+            None => sh.work_ready.notify_one(),
+        }
+    }
+
+    /// Run `op`, which may spawn borrowing closures onto the pool via the
+    /// provided [`Scope`]; returns only after every spawned task finished.
+    /// While waiting, the calling thread executes other pool tasks
+    /// (help-first), so scopes nest without deadlock at any width. A panic
+    /// in any spawned task (or in `op` itself) is re-raised here after all
+    /// tasks completed.
+    pub fn scope<'scope, R>(
+        &'scope self,
+        layer: Layer,
+        op: impl FnOnce(&Scope<'scope>) -> R,
+    ) -> R {
+        let scope = Scope {
+            pool: self,
+            layer,
+            state: Arc::new(ScopeState {
+                pending: Mutex::new(0),
+                done: Condvar::new(),
+                panic: Mutex::new(None),
+            }),
+            _marker: PhantomData,
+        };
+        let result = catch_unwind(AssertUnwindSafe(|| op(&scope)));
+        // Whatever `op` did, every spawn must complete before the borrows
+        // captured by the tasks can expire.
+        self.wait_scope(&scope.state);
+        if let Some(p) = scope.state.panic.lock().unwrap().take() {
+            resume_unwind(p);
+        }
+        match result {
+            Ok(r) => r,
+            Err(p) => resume_unwind(p),
+        }
+    }
+
+    /// Help-first wait: run pool tasks while the scope has pending spawns;
+    /// park briefly when nothing is runnable (the short timeout covers the
+    /// window where a task is taken by another worker between our check
+    /// and the wait).
+    fn wait_scope(&self, scope: &Arc<ScopeState>) {
+        loop {
+            if *scope.pending.lock().unwrap() == 0 {
+                return;
+            }
+            if self.help_one() {
+                continue;
+            }
+            let g = scope.pending.lock().unwrap();
+            if *g == 0 {
+                return;
+            }
+            let _ = scope.done.wait_timeout(g, Duration::from_millis(1)).unwrap();
+        }
+    }
+
+    /// Try to execute one queued task on the current thread. Used by scope
+    /// waiters; also the shutdown sweep.
+    fn help_one(&self) -> bool {
+        let who = match WORKER.with(|w| w.get()) {
+            Some((pool_id, idx)) if pool_id == self.shared.id => Some(idx),
+            _ => None,
+        };
+        let task = self.shared.state.lock().unwrap().take(who, &self.shared.limits);
+        match task {
+            Some(task) => {
+                execute(&self.shared, task);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Point-in-time gauges.
+    pub fn stats(&self) -> PoolStats {
+        let (queue_depth, parks, unparks, steals, deferrals) = {
+            let st = self.shared.state.lock().unwrap();
+            (st.queued(), st.parks, st.unparks, st.steals, st.deferrals)
+        };
+        let executed = self.shared.executed.load(Ordering::Relaxed);
+        let wait_sum = self.shared.wait_sum_ns.load(Ordering::Relaxed);
+        PoolStats {
+            workers: self.shared.width,
+            queue_depth,
+            submitted: self.shared.submitted.load(Ordering::Relaxed),
+            executed,
+            stolen: steals,
+            parks,
+            unparks,
+            panics: self.shared.panics.load(Ordering::Relaxed),
+            deferred: deferrals,
+            task_wait_mean_s: if executed == 0 {
+                0.0
+            } else {
+                wait_sum as f64 / executed as f64 / 1e9
+            },
+            task_wait_max_s: self.shared.wait_max_ns.load(Ordering::Relaxed) as f64 / 1e9,
+        }
+    }
+
+    /// Graceful shutdown: drain every queued task, join the workers, then
+    /// flip to inline mode (later submissions run on the caller thread).
+    /// Idempotent.
+    pub fn shutdown(&self) {
+        let handles = std::mem::take(&mut *self.workers.lock().unwrap());
+        self.shared.state.lock().unwrap().draining = true;
+        self.shared.work_ready.notify_all();
+        for h in handles {
+            let _ = h.join();
+        }
+        // Sweep any task that raced past the exiting workers (or was
+        // re-injected from the deferred queues after they left). The
+        // terminated flag flips under the same lock acquisition that
+        // witnesses empty queues, so a concurrent submit either lands
+        // before the flip (and is swept here) or after it (and runs
+        // inline on the submitter) — never stranded in between.
+        loop {
+            while self.help_one() {}
+            let st = self.shared.state.lock().unwrap();
+            if st.queued() == 0 {
+                let mut st = st;
+                st.terminated = true;
+                return;
+            }
+            // Non-empty but nothing takeable: a deferred task is waiting
+            // on a still-running sibling (e.g. a scope on another thread)
+            // to finish and promote it.
+            let _ = self
+                .shared
+                .work_ready
+                .wait_timeout(st, Duration::from_millis(1))
+                .unwrap();
+        }
+    }
+}
+
+impl Drop for ComputePool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+impl std::fmt::Debug for ComputePool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ComputePool")
+            .field("config", &self.config)
+            .field("width", &self.shared.width)
+            .finish()
+    }
+}
+
+/// Decrements the per-layer running count (and promotes a deferred task)
+/// even when the task panics.
+struct RunGuard<'a> {
+    shared: &'a Shared,
+    layer: Layer,
+}
+
+impl Drop for RunGuard<'_> {
+    fn drop(&mut self) {
+        self.shared.executed.fetch_add(1, Ordering::Relaxed);
+        let promoted = self.shared.state.lock().unwrap().finish(self.layer);
+        if promoted {
+            self.shared.work_ready.notify_one();
+        }
+    }
+}
+
+/// Run one admitted task: record queue wait, isolate panics, settle the
+/// running count via [`RunGuard`].
+fn execute(shared: &Shared, task: Task) {
+    let wait_ns = task.submitted.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+    shared.wait_sum_ns.fetch_add(wait_ns, Ordering::Relaxed);
+    shared.wait_max_ns.fetch_max(wait_ns, Ordering::Relaxed);
+    let _guard = RunGuard { shared, layer: task.layer };
+    if catch_unwind(AssertUnwindSafe(task.run)).is_err() {
+        shared.panics.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Worker body: take → execute → park when idle → exit when draining and
+/// nothing is queued.
+fn worker_main(shared: Arc<Shared>, idx: usize) {
+    WORKER.with(|w| w.set(Some((shared.id, idx))));
+    loop {
+        let task = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(t) = st.take(Some(idx), &shared.limits) {
+                    break Some(t);
+                }
+                if st.draining {
+                    break None;
+                }
+                st.parks += 1;
+                st = shared.work_ready.wait(st).unwrap();
+                st.unparks += 1;
+            }
+        };
+        match task {
+            Some(task) => execute(&shared, task),
+            None => return,
+        }
+    }
+}
+
+/// State shared between a [`Scope`] and its spawned tasks.
+struct ScopeState {
+    pending: Mutex<usize>,
+    done: Condvar,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send + 'static>>>,
+}
+
+impl ScopeState {
+    fn finish_one(&self) {
+        let mut g = self.pending.lock().unwrap();
+        *g -= 1;
+        if *g == 0 {
+            self.done.notify_all();
+        }
+    }
+}
+
+/// Spawn handle passed to the closure of [`ComputePool::scope`]. Spawned
+/// closures may borrow anything that outlives the `scope` call.
+pub struct Scope<'scope> {
+    pool: &'scope ComputePool,
+    layer: Layer,
+    state: Arc<ScopeState>,
+    /// Invariant in `'scope` (the `&mut`), like `rayon::Scope` /
+    /// `std::thread::Scope`: keeps callers from shrinking the lifetime the
+    /// spawned borrows must survive.
+    _marker: PhantomData<&'scope mut &'scope ()>,
+}
+
+impl<'scope> Scope<'scope> {
+    /// Spawn a task onto the pool. The closure may borrow data of
+    /// lifetime `'scope`; the enclosing [`ComputePool::scope`] call blocks
+    /// (helping) until it has run.
+    pub fn spawn(&self, body: impl FnOnce() + Send + 'scope) {
+        *self.state.pending.lock().unwrap() += 1;
+        let state = Arc::clone(&self.state);
+        let task: Box<dyn FnOnce() + Send + 'scope> = Box::new(move || {
+            if let Err(p) = catch_unwind(AssertUnwindSafe(body)) {
+                // First panic wins; later ones are dropped (same policy as
+                // std::thread::scope's "first to propagate").
+                let mut slot = state.panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(p);
+                }
+            }
+            state.finish_one();
+        });
+        // SAFETY: the task is type-erased to 'static so it can sit in the
+        // pool's queues, but `ComputePool::scope` does not return until
+        // `pending` reaches zero — i.e. until this closure has run and
+        // dropped — so every `'scope` borrow it captures is live for as
+        // long as the closure exists. This is the rayon/std scoped-spawn
+        // construction. Shutdown cannot strand it either: drained pools
+        // run submissions inline on the caller.
+        let task: Box<dyn FnOnce() + Send + 'static> = unsafe { std::mem::transmute(task) };
+        self.pool.submit_task(Task {
+            layer: self.layer,
+            submitted: Instant::now(),
+            run: task,
+        });
+    }
+
+    /// The layer this scope tags its spawns with.
+    pub fn layer(&self) -> Layer {
+        self.layer
+    }
+}
+
+static GLOBAL: OnceLock<ComputePool> = OnceLock::new();
+
+/// The process-wide pool. Built on first use from [`PoolConfig::default`]
+/// (honoring `TRIADA_POOL_THREADS`) unless [`configure_global`] installed
+/// explicit knobs first. Never shut down — it lives for the process.
+pub fn global() -> &'static ComputePool {
+    GLOBAL.get_or_init(|| ComputePool::new(PoolConfig::default()))
+}
+
+/// Install explicit knobs for the process-wide pool. Returns `true` if
+/// this call built the pool, `false` if it already existed (first
+/// configuration wins; the running pool is returned by [`global`]).
+pub fn configure_global(config: PoolConfig) -> bool {
+    let mut built = false;
+    GLOBAL.get_or_init(|| {
+        built = true;
+        ComputePool::new(config)
+    });
+    built
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn detached_tasks_run() {
+        let pool = ComputePool::new(PoolConfig::with_threads(2));
+        let (tx, rx) = std::sync::mpsc::channel();
+        for i in 0..16 {
+            let tx = tx.clone();
+            pool.submit(Layer::General, move || tx.send(i).unwrap());
+        }
+        let mut got: Vec<usize> = (0..16).map(|_| rx.recv().unwrap()).collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..16).collect::<Vec<_>>());
+        let stats = pool.stats();
+        assert_eq!(stats.submitted, 16);
+        assert_eq!(stats.workers, 2);
+        pool.shutdown();
+        assert_eq!(pool.stats().executed, 16);
+    }
+
+    #[test]
+    fn scope_runs_borrowing_closures() {
+        let pool = ComputePool::new(PoolConfig::with_threads(3));
+        let mut data = vec![0usize; 10];
+        pool.scope(Layer::General, |s| {
+            for (i, slot) in data.iter_mut().enumerate() {
+                s.spawn(move || *slot = i * i);
+            }
+        });
+        assert_eq!(data, (0..10).map(|i| i * i).collect::<Vec<_>>());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn scope_panic_propagates_but_pool_survives() {
+        let pool = ComputePool::new(PoolConfig::with_threads(2));
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            pool.scope(Layer::General, |s| {
+                s.spawn(|| panic!("scoped boom"));
+                s.spawn(|| {});
+            });
+        }));
+        assert!(err.is_err(), "scoped panic must re-raise at the scope caller");
+        // Pool still serves.
+        let ran = AtomicUsize::new(0);
+        pool.scope(Layer::General, |s| {
+            let ran = &ran;
+            s.spawn(move || {
+                ran.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(ran.load(Ordering::Relaxed), 1);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn detached_panic_is_isolated_and_counted() {
+        let pool = ComputePool::new(PoolConfig::with_threads(1));
+        pool.submit(Layer::General, || panic!("detached boom"));
+        let (tx, rx) = std::sync::mpsc::channel();
+        pool.submit(Layer::General, move || tx.send(7usize).unwrap());
+        assert_eq!(rx.recv().unwrap(), 7);
+        assert_eq!(pool.stats().panics, 1);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_then_runs_inline() {
+        let pool = ComputePool::new(PoolConfig::with_threads(2));
+        let count = Arc::new(AtomicUsize::new(0));
+        for _ in 0..32 {
+            let count = count.clone();
+            pool.submit(Layer::General, move || {
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.shutdown();
+        assert_eq!(count.load(Ordering::Relaxed), 32, "shutdown must drain queued tasks");
+        // Post-shutdown submissions run inline, never lost.
+        let count2 = count.clone();
+        pool.submit(Layer::General, move || {
+            count2.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 33);
+    }
+
+    #[test]
+    fn share_limit_defers_but_completes() {
+        let cfg = PoolConfig { threads: 4, engine_share: 1, ..PoolConfig::default() };
+        let pool = ComputePool::new(cfg);
+        let count = AtomicUsize::new(0);
+        pool.scope(Layer::Engine, |s| {
+            for _ in 0..24 {
+                let count = &count;
+                s.spawn(move || {
+                    count.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 24);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn nested_scope_on_width_1_pool_completes() {
+        // A detached task that itself opens a scope on the same width-1
+        // pool: the scope waiter must help-execute its own spawns.
+        let pool = Arc::new(ComputePool::new(PoolConfig::with_threads(1)));
+        let (tx, rx) = std::sync::mpsc::channel();
+        let inner = pool.clone();
+        pool.submit(Layer::Coordinator, move || {
+            let total = AtomicUsize::new(0);
+            inner.scope(Layer::Engine, |s| {
+                for i in 1..=5 {
+                    let total = &total;
+                    s.spawn(move || {
+                        total.fetch_add(i, Ordering::Relaxed);
+                    });
+                }
+            });
+            tx.send(total.load(Ordering::Relaxed)).unwrap();
+        });
+        assert_eq!(rx.recv().unwrap(), 15);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn config_from_ini_section() {
+        let cfg = crate::config::Config::parse(
+            "[pool]\nthreads = 3\npin = false\nengine_share = 2\ncoordinator_share = 1\n",
+        )
+        .unwrap();
+        let p = PoolConfig::from_config(&cfg).unwrap();
+        assert_eq!(p.threads, 3);
+        assert!(!p.pin);
+        assert_eq!(p.engine_share, 2);
+        assert_eq!(p.shard_share, 0);
+        assert_eq!(p.coordinator_share, 1);
+        let empty = crate::config::Config::parse("").unwrap();
+        assert_eq!(PoolConfig::from_config(&empty).unwrap(), PoolConfig::default());
+    }
+
+    #[test]
+    fn effective_threads_explicit_wins() {
+        assert_eq!(PoolConfig::with_threads(5).effective_threads(), 5);
+        assert!(PoolConfig::default().effective_threads() >= 1);
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_stable() {
+        let a = global() as *const ComputePool;
+        let b = global() as *const ComputePool;
+        assert_eq!(a, b);
+        assert!(global().width() >= 1);
+        // After first use, configure_global cannot rebuild it.
+        assert!(!configure_global(PoolConfig::with_threads(1)));
+    }
+}

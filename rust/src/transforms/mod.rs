@@ -90,15 +90,6 @@ impl TransformKind {
         names
     };
 
-    /// Parse from a CLI string.
-    #[deprecated(
-        note = "use `str::parse::<TransformKind>()` (the `FromStr` impl), \
-                whose error message lists every valid kind name"
-    )]
-    pub fn parse(s: &str) -> Option<TransformKind> {
-        s.parse().ok()
-    }
-
     pub fn name(self) -> &'static str {
         match self {
             TransformKind::Identity => "identity",
@@ -249,12 +240,5 @@ mod tests {
         for name in TransformKind::VALID_NAMES {
             assert!(msg.contains(name), "error message missing {name:?}: {msg}");
         }
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_parse_shim_still_works() {
-        assert_eq!(TransformKind::parse("dht"), Some(TransformKind::Dht));
-        assert_eq!(TransformKind::parse("nope"), None);
     }
 }

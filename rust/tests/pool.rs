@@ -1,0 +1,244 @@
+//! Compute-pool integration tests: shutdown/drain under concurrent
+//! submitters, panic isolation, nested-scope liveness, share limits, and
+//! the engine/shard parity proptests at pool widths 1/2/8 (prime,
+//! rectangular, and oversized shapes) — the bit-identical contract of the
+//! panel-ownership decomposition must hold at every width.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use triada::gemt::engine::{gemt_engine_on, EngineConfig};
+use triada::gemt::shard::gemt_sharded_with;
+use triada::gemt::{gemt_outer, CoeffSet, ShardConfig};
+use triada::pool::{ComputePool, Layer, PoolConfig};
+use triada::prop_assert;
+use triada::proptest::run_prop;
+use triada::tensor::{Mat, Tensor3};
+use triada::util::Rng;
+
+fn case(
+    shape: (usize, usize, usize),
+    out: (usize, usize, usize),
+    seed: u64,
+) -> (Tensor3<f64>, CoeffSet<f64>) {
+    let mut rng = Rng::new(seed);
+    let x = Tensor3::random(shape.0, shape.1, shape.2, &mut rng);
+    let cs = CoeffSet::new(
+        Mat::random(shape.0, out.0, &mut rng),
+        Mat::random(shape.1, out.1, &mut rng),
+        Mat::random(shape.2, out.2, &mut rng),
+    );
+    (x, cs)
+}
+
+#[test]
+fn shutdown_drains_under_concurrent_submitters() {
+    // Several OS threads hammer submit() while the main thread shuts the
+    // pool down. Every accepted task must execute exactly once — either
+    // drained by the workers, swept during shutdown, or run inline after
+    // termination — and none may be lost or doubled.
+    let pool = Arc::new(ComputePool::new(PoolConfig::with_threads(3)));
+    let executed = Arc::new(AtomicUsize::new(0));
+    let submitted = Arc::new(AtomicUsize::new(0));
+    let mut submitters = Vec::new();
+    for _ in 0..4 {
+        let pool = pool.clone();
+        let executed = executed.clone();
+        let submitted = submitted.clone();
+        submitters.push(std::thread::spawn(move || {
+            for _ in 0..250 {
+                let executed = executed.clone();
+                submitted.fetch_add(1, Ordering::SeqCst);
+                pool.submit(Layer::General, move || {
+                    executed.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        }));
+    }
+    // Shut down while submitters are still running: late submissions land
+    // on the inline post-termination path.
+    pool.shutdown();
+    for s in submitters {
+        s.join().unwrap();
+    }
+    // Anything accepted before/after shutdown alike must have run by the
+    // time every submitter returned (inline path runs on the caller).
+    pool.shutdown(); // idempotent; sweeps any straggler
+    assert_eq!(
+        executed.load(Ordering::SeqCst),
+        submitted.load(Ordering::SeqCst),
+        "accepted tasks must execute exactly once through shutdown"
+    );
+    assert_eq!(pool.stats().queue_depth, 0);
+}
+
+#[test]
+fn panicking_task_does_not_poison_the_pool() {
+    let pool = ComputePool::new(PoolConfig::with_threads(2));
+    for _ in 0..3 {
+        pool.submit(Layer::General, || panic!("task boom"));
+    }
+    // The pool must still execute work afterwards on every worker.
+    let (tx, rx) = std::sync::mpsc::channel();
+    for i in 0..8 {
+        let tx = tx.clone();
+        pool.submit(Layer::General, move || tx.send(i).unwrap());
+    }
+    let mut got: Vec<i32> = (0..8).map(|_| rx.recv().unwrap()).collect();
+    got.sort_unstable();
+    assert_eq!(got, (0..8).collect::<Vec<_>>());
+    pool.shutdown();
+    let stats = pool.stats();
+    assert_eq!(stats.panics, 3, "every panic is counted");
+    assert_eq!(stats.executed, 11, "panicked tasks still count as executed");
+}
+
+#[test]
+fn scope_panic_reraises_at_caller_not_worker() {
+    let pool = ComputePool::new(PoolConfig::with_threads(2));
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        pool.scope(Layer::General, |s| {
+            s.spawn(|| panic!("scoped boom"));
+        });
+    }));
+    assert!(caught.is_err(), "scope must re-raise the task panic");
+    // Scoped panics are the caller's, not the pool's.
+    assert_eq!(pool.stats().panics, 0);
+    // And the pool still serves scopes afterwards.
+    let n = AtomicUsize::new(0);
+    pool.scope(Layer::General, |s| {
+        for _ in 0..4 {
+            let n = &n;
+            s.spawn(move || {
+                n.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+    });
+    assert_eq!(n.load(Ordering::Relaxed), 4);
+    pool.shutdown();
+}
+
+#[test]
+fn nested_engine_scope_inside_pool_task_completes_at_width_1() {
+    // A coordinator-style detached task that runs a full engine GEMT on
+    // the same width-1 pool: the scope waiter must help-execute its own
+    // panels rather than deadlock waiting for the lone busy worker.
+    let pool = Arc::new(ComputePool::new(PoolConfig::with_threads(1)));
+    let (x, cs) = case((6, 5, 4), (6, 5, 4), 90);
+    let want = gemt_outer(&x, &cs);
+    let (tx, rx) = std::sync::mpsc::channel();
+    {
+        let pool2 = pool.clone();
+        pool.submit(Layer::Coordinator, move || {
+            let got = gemt_engine_on(&pool2, &x, &cs, &EngineConfig::with_threads(4));
+            tx.send(got).unwrap();
+        });
+    }
+    let got = rx.recv_timeout(std::time::Duration::from_secs(30)).expect("deadlocked");
+    assert_eq!(got.max_abs_diff(&want), 0.0);
+    pool.shutdown();
+}
+
+#[test]
+fn share_limited_layers_make_progress() {
+    let pool = ComputePool::new(PoolConfig {
+        threads: 4,
+        engine_share: 1,
+        shard_share: 1,
+        coordinator_share: 2,
+        ..PoolConfig::default()
+    });
+    let n = Arc::new(AtomicUsize::new(0));
+    for layer in [Layer::Engine, Layer::Shard, Layer::Coordinator, Layer::General] {
+        for _ in 0..20 {
+            let n = n.clone();
+            pool.submit(layer, move || {
+                n.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+    }
+    pool.shutdown();
+    assert_eq!(n.load(Ordering::SeqCst), 80, "share limits defer, never drop");
+    assert!(pool.stats().deferred > 0 || pool.stats().executed == 80);
+}
+
+/// Engine-on-pool vs `gemt_outer` over prime, rectangular, and oversized
+/// shapes — results must be bit-identical at pool widths 1, 2, and 8.
+#[test]
+fn prop_engine_on_pool_parity_across_widths() {
+    let pools: Vec<ComputePool> = [1usize, 2, 8]
+        .iter()
+        .map(|&w| ComputePool::new(PoolConfig::with_threads(w)))
+        .collect();
+    let primes = [5usize, 7, 11, 13];
+    run_prop("engine_on_pool_parity", 12, |g| {
+        // Mix prime and arbitrary sides so panel splits land awkwardly.
+        let side = |g: &mut triada::proptest::Gen| {
+            if g.usize_in(0, 1) == 0 {
+                *g.choose(&primes)
+            } else {
+                g.usize_in(1, 9)
+            }
+        };
+        let shape = (side(g), side(g), side(g));
+        let out = (side(g), side(g), side(g));
+        let seed = g.usize_in(0, u32::MAX as usize) as u64;
+        let (x, cs) = case(shape, out, seed);
+        let want = gemt_outer(&x, &cs);
+        let block = *g.choose(&[1usize, 2, 64]);
+        for pool in &pools {
+            let cfg = EngineConfig { threads: 0, block };
+            let got = gemt_engine_on(pool, &x, &cs, &cfg);
+            prop_assert!(
+                got.max_abs_diff(&want) == 0.0,
+                "engine diverged from outer at width {} shape {shape:?} out {out:?} block {block}",
+                pool.width()
+            );
+        }
+        Ok(())
+    });
+    for pool in pools {
+        pool.shutdown();
+    }
+}
+
+/// Sharded (oversized) problems on the global pool stay bit-identical to
+/// the scalar chain for any tile bound and thread hint.
+#[test]
+fn prop_sharded_parity_oversized_shapes() {
+    run_prop("sharded_on_pool_parity", 8, |g| {
+        let shape = g.shape_in(6, 12);
+        let out = g.shape_in(4, 12);
+        let seed = g.usize_in(0, u32::MAX as usize) as u64;
+        let (x, cs) = case(shape, out, seed);
+        let want = gemt_outer(&x, &cs);
+        let max_tile = g.usize_in(2, 5); // always below the sides: real sharding
+        let threads = *g.choose(&[1usize, 2, 8]);
+        let cfg = ShardConfig {
+            max_tile,
+            engine: EngineConfig::with_threads(threads),
+        };
+        let got = gemt_sharded_with(&x, &cs, &cfg);
+        prop_assert!(
+            got.max_abs_diff(&want) == 0.0,
+            "sharded diverged at shape {shape:?} out {out:?} max_tile {max_tile} threads {threads}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn global_pool_stats_accumulate() {
+    // Run something on the global pool, then check the gauges move.
+    let (x, cs) = case((8, 7, 6), (8, 7, 6), 91);
+    let before = triada::pool::global().stats();
+    let _ = triada::gemt::gemt_engine(&x, &cs);
+    let after = triada::pool::global().stats();
+    assert_eq!(after.workers, triada::pool::global().width());
+    // Width-1 global pools run panels inline (no submissions); otherwise
+    // the counters must have advanced.
+    if after.workers > 1 {
+        assert!(after.submitted > before.submitted);
+        assert!(after.executed >= before.executed);
+    }
+}
