@@ -9,6 +9,16 @@
 //! Requires `make artifacts` (falls back to reference-only if missing).
 //!
 //! Run: `cargo bench --bench e6_throughput`
+//!
+//! * `TRIADA_BENCH_SMOKE=1` — CI smoke mode: fewer jobs and only the
+//!   unbatched and (16, 2ms) policies; the regression gate still fires.
+//! * `TRIADA_BENCH_BASELINE` — path to a committed
+//!   `BENCH_throughput.json` baseline (default: `BENCH_throughput.json`
+//!   in the working directory, read before this run overwrites it). Each
+//!   local backend's batching gain — batched (16, 2ms) throughput over
+//!   unbatched — must stay above 75% of the baseline's, or the bench
+//!   aborts. Raw throughput is **not** gated: it tracks the host, not
+//!   the code; the gain is a within-run ratio and survives machine swaps.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -25,6 +35,29 @@ use triada::runtime::{Direction, PjrtService};
 use triada::tensor::Tensor3;
 use triada::transforms::TransformKind;
 use triada::util::{human, Rng, Timer};
+
+/// CI smoke mode: few jobs, two policies — seconds, not minutes.
+fn smoke() -> bool {
+    std::env::var_os("TRIADA_BENCH_SMOKE").is_some_and(|v| !v.is_empty() && v != "0")
+}
+
+/// One (backend, batching policy) serving measurement.
+struct ThroughputRow {
+    backend: &'static str,
+    max_batch: usize,
+    window_ms: u64,
+    thrpt: f64,
+    p50_s: f64,
+    p99_s: f64,
+    mean_batch: f64,
+}
+
+/// A backend's batched (16, 2ms) throughput over its unbatched (1, 0ms)
+/// throughput — the machine-robust metric the baseline gates on.
+struct BatchGain {
+    backend: &'static str,
+    gain: f64,
+}
 
 fn drive(backend: Arc<dyn Backend>, policy: BatchPolicy, jobs: usize) -> (f64, f64, f64, f64) {
     let config = CoordinatorConfig {
@@ -57,77 +90,66 @@ fn drive(backend: Arc<dyn Backend>, policy: BatchPolicy, jobs: usize) -> (f64, f
 }
 
 fn main() {
-    let jobs = 200;
+    let jobs = if smoke() { 120 } else { 200 };
+    let policies: &[(usize, u64)] = if smoke() {
+        println!("TRIADA_BENCH_SMOKE set: {jobs} jobs, unbatched + (16, 2ms) only\n");
+        &[(1, 0), (16, 2)]
+    } else {
+        &[(1, 0), (8, 2), (16, 2), (32, 5)]
+    };
 
     let pjrt_service = PjrtService::spawn("artifacts").ok();
+    let title = format!(
+        "E6: served throughput vs backend and batching policy (8³, {jobs} jobs, 4 workers)"
+    );
     let mut t = Table::new(
-        "E6: served throughput vs backend and batching policy (8³, 200 jobs, 4 workers)",
+        &title,
         &["backend", "max_batch", "window", "throughput", "p50", "p99", "mean batch"],
     );
+    let mut rows: Vec<ThroughputRow> = Vec::new();
 
-    let policies = [
-        (1usize, 0u64),   // no batching
-        (8, 2),
-        (16, 2),
-        (32, 5),
+    // The local backends under identical load: the scalar reference, the
+    // blocked multi-threaded engine, and the sharding layer with a tile
+    // bound below the job shape (8³, tile 4 — every request
+    // block-decomposes across engine tile passes).
+    let locals: [(&'static str, fn() -> Arc<dyn Backend>); 3] = [
+        ("cpu-reference", || Arc::new(ReferenceBackend)),
+        ("engine (2 threads)", || Arc::new(EngineBackend::new(EngineConfig::with_threads(2)))),
+        ("sharded (2 threads, tile 4)", || {
+            Arc::new(ShardedEngineBackend::new(ShardConfig {
+                max_tile: 4,
+                engine: EngineConfig::with_threads(2),
+            }))
+        }),
     ];
-
-    for &(max_batch, window_ms) in &policies {
-        let policy = BatchPolicy { max_batch, window: Duration::from_millis(window_ms) };
-        let (thrpt, p50, p99, mb) = drive(Arc::new(ReferenceBackend), policy, jobs);
-        t.row(&[
-            "cpu-reference".into(),
-            max_batch.to_string(),
-            format!("{window_ms}ms"),
-            human::rate(thrpt),
-            human::duration(p50),
-            human::duration(p99),
-            format!("{mb:.1}"),
-        ]);
-    }
-
-    // The blocked multi-threaded engine behind the same coordinator —
-    // quantifies the scalar-vs-engine serving gap on identical load.
-    for &(max_batch, window_ms) in &policies {
-        let policy = BatchPolicy { max_batch, window: Duration::from_millis(window_ms) };
-        let backend = Arc::new(EngineBackend::new(EngineConfig::with_threads(2)));
-        let (thrpt, p50, p99, mb) = drive(backend, policy, jobs);
-        t.row(&[
-            "engine (2 threads)".into(),
-            max_batch.to_string(),
-            format!("{window_ms}ms"),
-            human::rate(thrpt),
-            human::duration(p50),
-            human::duration(p99),
-            format!("{mb:.1}"),
-        ]);
-    }
-
-    // The sharding layer under the same load with a tile bound below the
-    // job shape (8³, tile 4): every request block-decomposes across engine
-    // tile passes — quantifies the decomposition overhead at serving time
-    // against both the scalar reference and the fused engine.
-    for &(max_batch, window_ms) in &policies {
-        let policy = BatchPolicy { max_batch, window: Duration::from_millis(window_ms) };
-        let backend = Arc::new(ShardedEngineBackend::new(ShardConfig {
-            max_tile: 4,
-            engine: EngineConfig::with_threads(2),
-        }));
-        let (thrpt, p50, p99, mb) = drive(backend, policy, jobs);
-        t.row(&[
-            "sharded (2 threads, tile 4)".into(),
-            max_batch.to_string(),
-            format!("{window_ms}ms"),
-            human::rate(thrpt),
-            human::duration(p50),
-            human::duration(p99),
-            format!("{mb:.1}"),
-        ]);
+    for &(name, make) in &locals {
+        for &(max_batch, window_ms) in policies {
+            let policy = BatchPolicy { max_batch, window: Duration::from_millis(window_ms) };
+            let (thrpt, p50, p99, mb) = drive(make(), policy, jobs);
+            t.row(&[
+                name.to_string(),
+                max_batch.to_string(),
+                format!("{window_ms}ms"),
+                human::rate(thrpt),
+                human::duration(p50),
+                human::duration(p99),
+                format!("{mb:.1}"),
+            ]);
+            rows.push(ThroughputRow {
+                backend: name,
+                max_batch,
+                window_ms,
+                thrpt,
+                p50_s: p50,
+                p99_s: p99,
+                mean_batch: mb,
+            });
+        }
     }
 
     if let Some(service) = &pjrt_service {
         service.handle().warmup().expect("warmup");
-        for &(max_batch, window_ms) in &policies {
+        for &(max_batch, window_ms) in policies {
             let policy = BatchPolicy { max_batch, window: Duration::from_millis(window_ms) };
             let backend = Arc::new(PjrtBackend::new(service.handle()));
             let (thrpt, p50, p99, mb) = drive(backend, policy, jobs);
@@ -140,6 +162,15 @@ fn main() {
                 human::duration(p99),
                 format!("{mb:.1}"),
             ]);
+            rows.push(ThroughputRow {
+                backend: "pjrt (AOT)",
+                max_batch,
+                window_ms,
+                thrpt,
+                p50_s: p50,
+                p99_s: p99,
+                mean_batch: mb,
+            });
         }
         let (compiles, execs, hits) = service.handle().stats().unwrap();
         println!(
@@ -151,5 +182,129 @@ fn main() {
         println!("\n(pjrt artifacts unavailable — run `make artifacts` for the AOT rows)");
     }
     t.print();
+
+    let gains = batch_gains(&rows);
+    check_throughput_regression(&gains);
+    let json = throughput_json(&rows, &gains);
+    let json_path = "BENCH_throughput.json";
+    match std::fs::write(json_path, &json) {
+        Ok(()) => println!("\nwrote {json_path} ({} rows, {} gains)", rows.len(), gains.len()),
+        Err(e) => println!("\nwarning: could not write {json_path}: {e}"),
+    }
     println!("\nE6 OK.");
+}
+
+/// Compute each backend's batched-vs-unbatched throughput ratio from the
+/// measured rows. Both policies run in every mode (smoke included), so a
+/// backend missing either row is a bench bug, not a data gap.
+fn batch_gains(rows: &[ThroughputRow]) -> Vec<BatchGain> {
+    let mut gains = Vec::new();
+    let mut seen: Vec<&'static str> = Vec::new();
+    for row in rows {
+        if seen.contains(&row.backend) {
+            continue;
+        }
+        seen.push(row.backend);
+        let unbatched = rows
+            .iter()
+            .find(|r| r.backend == row.backend && r.max_batch == 1 && r.window_ms == 0)
+            .expect("every backend runs the unbatched policy");
+        let batched = rows
+            .iter()
+            .find(|r| r.backend == row.backend && r.max_batch == 16 && r.window_ms == 2)
+            .expect("every backend runs the (16, 2ms) policy");
+        gains.push(BatchGain { backend: row.backend, gain: batched.thrpt / unbatched.thrpt });
+    }
+    gains
+}
+
+/// Compare this run's batching gains against the committed baseline
+/// (`TRIADA_BENCH_BASELINE`, default `BENCH_throughput.json`); abort
+/// loudly on a >25% regression. A missing baseline (or a backend absent
+/// from it, e.g. pjrt on a checkout without artifacts) is reported, not
+/// fatal.
+fn check_throughput_regression(gains: &[BatchGain]) {
+    let path = std::env::var("TRIADA_BENCH_BASELINE")
+        .unwrap_or_else(|_| "BENCH_throughput.json".to_string());
+    let baseline = match std::fs::read_to_string(&path) {
+        Ok(s) => s,
+        Err(e) => {
+            println!("no throughput baseline at {path} ({e}); skipping regression check");
+            return;
+        }
+    };
+    for g in gains {
+        let needle = format!("{{\"backend\": {:?}, \"batch_gain\": ", g.backend);
+        let Some(at) = baseline.find(&needle) else {
+            println!("baseline {path} has no batch_gain for {:?}; skipping", g.backend);
+            continue;
+        };
+        let Some(base) = parse_field_after(&baseline[at..], "\"batch_gain\": ") else {
+            println!("baseline {path} batch_gain for {:?} is unparsable; skipping", g.backend);
+            continue;
+        };
+        let floor = base * 0.75;
+        assert!(
+            g.gain >= floor,
+            "THROUGHPUT REGRESSION for {:?}: batching gain {:.3}x fell more than 25% below \
+             the {path} baseline {base:.3}x (floor {floor:.3}x)",
+            g.backend,
+            g.gain
+        );
+        println!(
+            "throughput baseline check {:?}: batching gain {:.3}x vs baseline {base:.3}x \
+             (floor {floor:.3}x) ok",
+            g.backend, g.gain
+        );
+    }
+}
+
+/// Parse the float immediately following `key` in `s` (hand-rolled — the
+/// offline image has no JSON dependency).
+fn parse_field_after(s: &str, key: &str) -> Option<f64> {
+    let at = s.find(key)? + key.len();
+    let rest = &s[at..];
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || c == '.' || c == '-' || c == 'e' || c == '+'))
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// Render the serving measurements as a machine-readable JSON summary.
+fn throughput_json(rows: &[ThroughputRow], gains: &[BatchGain]) -> String {
+    let mut json = String::from("{\n");
+    json.push_str("  \"bench\": \"throughput\",\n");
+    json.push_str("  \"shape\": [8, 8, 8],\n");
+    json.push_str(
+        "  \"note\": \"batch_gain = batched (16, 2ms) throughput / unbatched; \
+         the regression gate floors at 75% of the committed gain\",\n",
+    );
+    json.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"backend\": {:?}, \"max_batch\": {}, \"window_ms\": {}, \
+             \"throughput_jobs_s\": {:.3}, \"p50_s\": {:.9}, \"p99_s\": {:.9}, \
+             \"mean_batch\": {:.3}}}{}\n",
+            r.backend,
+            r.max_batch,
+            r.window_ms,
+            r.thrpt,
+            r.p50_s,
+            r.p99_s,
+            r.mean_batch,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str("  \"gains\": [\n");
+    for (i, g) in gains.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"backend\": {:?}, \"batch_gain\": {:.4}}}{}\n",
+            g.backend,
+            g.gain,
+            if i + 1 == gains.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    json
 }

@@ -9,12 +9,12 @@ use crate::coordinator::{
     Coordinator, CoordinatorConfig, EngineBackend, ReferenceBackend, ShardedEngineBackend,
     SimBackend, TransformJob,
 };
-use crate::gemt::{self, CoeffSet};
+use crate::gemt::{self, CoeffSet, SplitCoeffs};
 use crate::runtime::{Direction, PjrtService};
 use crate::sim::{self, SimConfig};
 use crate::tensor::{sparsify, Tensor3};
 use crate::transforms::TransformKind;
-use crate::util::{human, Rng, Timer};
+use crate::util::{human, JobContext, Rng, Timer};
 
 pub const USAGE: &str = "\
 triada — TriADA trilinear transform accelerator (Sedukhin et al., 2025 reproduction)
@@ -34,6 +34,8 @@ COMMANDS:
         --block N                engine panel block size [64]
         --max-tile N             shard tile bound: dims beyond it run as
                                  repeated engine tile passes [128]
+        --timeout-ms N           abort cooperatively past this deadline
+                                 (engine path stops between phases/tiles)
     simulate                     run the TriADA device simulator
         --kind, --shape          as above
         --sparsity F             zero-fraction of the input [0]
@@ -50,13 +52,18 @@ COMMANDS:
         --block N                engine panel block size [64]
         --max-tile N             sharded backend tile bound [128]
         --plan-cache N           stationary plans kept resident (LRU) [32]
+        --deadline-ms N          default per-job deadline (0 = none)
         --config FILE            INI config (sections [coordinator],
-                                 [engine], [plan_cache], [pool])
+                                 [engine], [plan_cache], [pool], [faults])
     help                         this text
+
+Fault injection: set TRIADA_FAULTS (e.g. seed=7,transient_p=0.2) or a
+[faults] config section to exercise retry/failover paths deterministically.
 ";
 
 /// Dispatch a parsed command line.
 pub fn run(args: &Args) -> anyhow::Result<()> {
+    crate::faults::init_from_env();
     match args.command.as_deref() {
         None | Some("help") => {
             print!("{USAGE}");
@@ -164,6 +171,15 @@ fn cmd_transform(args: &Args) -> anyhow::Result<()> {
             p => format!("engine, {p} tile passes"),
         },
     };
+    // `--timeout-ms` builds a deadline context threaded through the engine
+    // path's phase/tile checkpoints; a run that outlasts it stops
+    // cooperatively with a typed error instead of burning to completion.
+    let ctx = match args.opt_f64("timeout-ms", 0.0)? {
+        ms if ms > 0.0 => JobContext::deadline_in(std::time::Duration::from_secs_f64(ms / 1e3)),
+        ms if ms == 0.0 => JobContext::new(),
+        ms => bail!("--timeout-ms must be non-negative, got {ms}"),
+    };
+    let stopped = |e: crate::util::JobError| anyhow::anyhow!("transform stopped: {e}");
     let mut rng = Rng::new(args.opt_usize("seed", 42)? as u64);
     let x = Tensor3::random(shape.0, shape.1, shape.2, &mut rng);
     let square_macs =
@@ -174,20 +190,37 @@ fn cmd_transform(args: &Args) -> anyhow::Result<()> {
         let im = Tensor3::random(shape.0, shape.1, shape.2, &mut rng);
         let t = Timer::start();
         let (yr, yi) = match &sharder {
-            Some(s) => s.dft3d_split(&x, &im, inverse),
-            None => gemt::split::dft3d_split(&x, &im, inverse),
+            Some(s) => {
+                let coeffs = SplitCoeffs::new(shape, inverse);
+                s.dft3d_split_planned_ctx(&x, &im, &coeffs, &ctx).map_err(stopped)?
+            }
+            None => {
+                ctx.checkpoint().map_err(stopped)?;
+                gemt::split::dft3d_split(&x, &im, inverse)
+            }
         };
         let dt = t.elapsed_s();
         let in_norm = (x.frob_norm().powi(2) + im.frob_norm().powi(2)).sqrt();
         let out_norm = (yr.frob_norm().powi(2) + yi.frob_norm().powi(2)).sqrt();
         (dt, 4 * square_macs, in_norm, out_norm)
     } else {
+        let cs = if inverse {
+            CoeffSet::inverse(kind, shape.0, shape.1, shape.2)
+        } else {
+            CoeffSet::forward(kind, shape.0, shape.1, shape.2)
+        };
         let t = Timer::start();
-        let y = match (&sharder, inverse) {
-            (Some(s), false) => s.dxt3d_forward(&x, kind),
-            (Some(s), true) => s.dxt3d_inverse(&x, kind),
-            (None, false) => gemt::dxt3d_forward(&x, kind),
-            (None, true) => gemt::dxt3d_inverse(&x, kind),
+        let y = match &sharder {
+            // Square transforms: planning (shape → shape) matches what
+            // `dxt3d_forward`/`dxt3d_inverse` plan internally.
+            Some(s) => {
+                let plan = s.plan(shape, shape);
+                s.run_planned_ctx(&x, &cs, &plan, &ctx).map_err(stopped)?
+            }
+            None => {
+                ctx.checkpoint().map_err(stopped)?;
+                gemt::gemt_outer(&x, &cs)
+            }
         };
         (t.elapsed_s(), square_macs, x.frob_norm(), y.frob_norm())
     };
@@ -279,12 +312,28 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             );
         }
     }
+    // A `[faults]` section arms the deterministic injector (the
+    // TRIADA_FAULTS environment variable, read at CLI entry, wins).
+    if let Some(c) = &file_cfg {
+        if crate::faults::env_plan().is_none() {
+            if let Some(plan) = crate::faults::from_config(c)? {
+                crate::faults::configure(plan);
+            }
+        }
+    }
     if let Some(w) = args.opt("workers") {
         cfg.workers = w.parse().context("--workers")?;
     }
     if let Some(p) = args.opt("plan-cache") {
         cfg.plan_capacity = p.parse().context("--plan-cache")?;
         anyhow::ensure!(cfg.plan_capacity > 0, "--plan-cache must be positive");
+    }
+    match args.opt_f64("deadline-ms", 0.0)? {
+        ms if ms > 0.0 => {
+            cfg.deadline = Some(std::time::Duration::from_secs_f64(ms / 1e3));
+        }
+        ms if ms == 0.0 => {}
+        ms => bail!("--deadline-ms must be non-negative, got {ms}"),
     }
     // `--engine` is shorthand for `--backend engine`; reject contradictions
     // instead of silently picking one.
@@ -375,6 +424,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     println!("{}", snap.summary());
     println!("plan cache: {}", snap.plans.summary());
     println!("pool: {}", snap.pool.summary());
+    if crate::faults::armed() {
+        let fs = crate::faults::stats();
+        println!(
+            "faults: {} transients / {} slowdowns / {} plan panics / {} pool panics injected",
+            fs.transients, fs.slowdowns, fs.plan_panics, fs.pool_panics
+        );
+    }
     if snap.fallback_reasons.is_empty() {
         println!("degraded paths: none");
     } else {

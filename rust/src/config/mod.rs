@@ -173,6 +173,7 @@ pub fn documented_keys() -> Vec<(&'static str, &'static str, String)> {
     let engine = crate::gemt::EngineConfig::default();
     let shard = crate::gemt::ShardConfig::default();
     let pool = crate::pool::PoolConfig::default();
+    let faults = crate::faults::FaultPlan::default();
     vec![
         ("coordinator", "workers", "auto".to_string()),
         ("coordinator", "queue_depth", coord.queue_depth.to_string()),
@@ -182,6 +183,28 @@ pub fn documented_keys() -> Vec<(&'static str, &'static str, String)> {
             "batch_window_ms",
             format!("{}", coord.batch.window.as_secs_f64() * 1000.0),
         ),
+        ("coordinator", "deadline_ms", "0".to_string()),
+        ("coordinator", "submit_timeout_ms", "0".to_string()),
+        ("coordinator", "retry_attempts", coord.retry.attempts.to_string()),
+        (
+            "coordinator",
+            "retry_base_ms",
+            format!("{}", coord.retry.base.as_secs_f64() * 1000.0),
+        ),
+        (
+            "coordinator",
+            "retry_cap_ms",
+            format!("{}", coord.retry.cap.as_secs_f64() * 1000.0),
+        ),
+        ("coordinator", "retry_failover", coord.retry.failover.to_string()),
+        ("faults", "seed", faults.seed.to_string()),
+        ("faults", "transient_p", faults.transient_p.to_string()),
+        ("faults", "transient_max", faults.transient_max.to_string()),
+        ("faults", "slow_p", faults.slow_p.to_string()),
+        ("faults", "slow_ms", faults.slow_ms.to_string()),
+        ("faults", "plan_panic_n", faults.plan_panic_n.to_string()),
+        ("faults", "pool_panic_p", faults.pool_panic_p.to_string()),
+        ("faults", "pool_panic_max", faults.pool_panic_max.to_string()),
         ("engine", "threads", engine.threads.to_string()),
         ("engine", "block", engine.block.to_string()),
         ("engine", "max_tile", shard.max_tile.to_string()),

@@ -34,6 +34,7 @@ use crate::runtime::{Direction, PjrtHandle};
 use crate::sim::{self, Counters, SimConfig};
 use crate::tensor::Tensor3;
 use crate::transforms::TransformKind;
+use crate::util::JobContext;
 
 use super::plan::{Plan, PlanSpec};
 
@@ -209,7 +210,21 @@ fn engine_split_execute(
     coeffs: &SplitCoeffs,
     inputs: &[Tensor3<f32>],
 ) -> anyhow::Result<Vec<Tensor3<f32>>> {
-    let (or, oi) = sharder.dft3d_split_planned(&inputs[0].to_f64(), &inputs[1].to_f64(), coeffs);
+    engine_split_execute_ctx(sharder, coeffs, inputs, &JobContext::default())
+}
+
+/// Context-aware variant of [`engine_split_execute`]: cancellation and
+/// deadline expiry stop at the tiled mode-product checkpoints and surface
+/// as a downcastable [`crate::util::JobError`].
+fn engine_split_execute_ctx(
+    sharder: &gemt::Sharder,
+    coeffs: &SplitCoeffs,
+    inputs: &[Tensor3<f32>],
+    ctx: &JobContext,
+) -> anyhow::Result<Vec<Tensor3<f32>>> {
+    let (or, oi) = sharder
+        .dft3d_split_planned_ctx(&inputs[0].to_f64(), &inputs[1].to_f64(), coeffs, ctx)
+        .map_err(anyhow::Error::new)?;
     Ok(vec![or.to_f32(), oi.to_f32()])
 }
 
@@ -263,6 +278,27 @@ impl Plan for EnginePlan {
         match &self.stationary {
             Stationary::Split(coeffs) => engine_split_execute(&self.sharder, coeffs, inputs),
             Stationary::Real(cs) => Ok(vec![self.engine.run(&inputs[0].to_f64(), cs).to_f32()]),
+        }
+    }
+
+    fn execute_ctx(
+        &self,
+        inputs: &[Tensor3<f32>],
+        ctx: &JobContext,
+    ) -> anyhow::Result<Vec<Tensor3<f32>>> {
+        self.spec.check_inputs(inputs)?;
+        match &self.stationary {
+            Stationary::Split(coeffs) => {
+                engine_split_execute_ctx(&self.sharder, coeffs, inputs, ctx)
+            }
+            Stationary::Real(cs) => Ok(vec![gemt::engine::gemt_engine_ctx(
+                &inputs[0].to_f64(),
+                cs,
+                self.engine.config(),
+                ctx,
+            )
+            .map_err(anyhow::Error::new)?
+            .to_f32()]),
         }
     }
 }
@@ -333,6 +369,24 @@ impl Plan for ShardedPlan {
             Stationary::Real(cs) => Ok(vec![self
                 .sharder
                 .run_planned(&inputs[0].to_f64(), cs, &self.shard_plan)
+                .to_f32()]),
+        }
+    }
+
+    fn execute_ctx(
+        &self,
+        inputs: &[Tensor3<f32>],
+        ctx: &JobContext,
+    ) -> anyhow::Result<Vec<Tensor3<f32>>> {
+        self.spec.check_inputs(inputs)?;
+        match &self.stationary {
+            Stationary::Split(coeffs) => {
+                engine_split_execute_ctx(&self.sharder, coeffs, inputs, ctx)
+            }
+            Stationary::Real(cs) => Ok(vec![self
+                .sharder
+                .run_planned_ctx(&inputs[0].to_f64(), cs, &self.shard_plan, ctx)
+                .map_err(anyhow::Error::new)?
                 .to_f32()]),
         }
     }

@@ -6,8 +6,47 @@ use crate::runtime::Direction;
 use crate::tensor::Tensor3;
 use crate::transforms::TransformKind;
 
+pub use crate::util::cancel::{CancelToken, JobContext, JobError};
+
 /// Monotone job identifier.
 pub type JobId = u64;
+
+/// Why a submission was not accepted (the job is handed back untouched;
+/// nothing was enqueued). Match with `matches!` — the payload is the
+/// rejected job, which has no equality.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// The admission queue is at capacity (or stayed full for the whole
+    /// `submit_within` wait). Retry later or shed the request.
+    QueueFull(TransformJob),
+    /// The coordinator is shutting down and accepts no new work.
+    ShuttingDown(TransformJob),
+    /// The job's deadline had already passed at submit time.
+    DeadlineExpired(TransformJob),
+}
+
+impl SubmitError {
+    /// Recover the job that was not admitted.
+    pub fn into_job(self) -> TransformJob {
+        match self {
+            SubmitError::QueueFull(j)
+            | SubmitError::ShuttingDown(j)
+            | SubmitError::DeadlineExpired(j) => j,
+        }
+    }
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull(_) => write!(f, "submission queue full"),
+            SubmitError::ShuttingDown(_) => write!(f, "coordinator shutting down"),
+            SubmitError::DeadlineExpired(_) => write!(f, "job deadline already expired"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 /// A transform request.
 #[derive(Clone, Debug)]
@@ -86,6 +125,17 @@ pub struct JobResult {
     pub backend: &'static str,
     /// How many jobs shared the batch (1 = unbatched).
     pub batch_size: usize,
+}
+
+impl JobResult {
+    /// The typed lifecycle error, if this job was canceled or expired
+    /// (`None` for successes and ordinary failures).
+    pub fn job_error(&self) -> Option<JobError> {
+        match &self.outputs {
+            Ok(_) => None,
+            Err(e) => e.chain().find_map(|c| c.downcast_ref::<JobError>()).copied(),
+        }
+    }
 }
 
 #[cfg(test)]

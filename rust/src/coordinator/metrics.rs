@@ -21,6 +21,10 @@ struct Inner {
     batches: u64,
     batched_jobs: u64,
     rejected: u64,
+    canceled: u64,
+    deadline_missed: u64,
+    retries: u64,
+    failovers: u64,
 }
 
 /// A point-in-time copy for reporting.
@@ -29,6 +33,16 @@ pub struct MetricsSnapshot {
     pub completed: u64,
     pub failed: u64,
     pub rejected: u64,
+    /// Jobs resolved [`crate::util::JobError::Canceled`].
+    pub canceled: u64,
+    /// Jobs resolved [`crate::util::JobError::DeadlineExceeded`] —
+    /// evicted at batch flush or stopped at an execute checkpoint.
+    pub deadline_missed: u64,
+    /// Transient-error execute attempts that were retried.
+    pub retries: u64,
+    /// Jobs that exhausted retries and were served by the reference
+    /// backend instead.
+    pub failovers: u64,
     pub batches: u64,
     /// Mean jobs per batch (executable-reuse factor).
     pub mean_batch_size: f64,
@@ -69,6 +83,10 @@ impl Metrics {
                 batches: 0,
                 batched_jobs: 0,
                 rejected: 0,
+                canceled: 0,
+                deadline_missed: 0,
+                retries: 0,
+                failovers: 0,
             }),
             started: Instant::now(),
         }
@@ -95,6 +113,26 @@ impl Metrics {
         self.inner.lock().unwrap().rejected += 1;
     }
 
+    /// A job resolved `Canceled` (counted apart from `failed`).
+    pub fn record_canceled(&self) {
+        self.inner.lock().unwrap().canceled += 1;
+    }
+
+    /// A job resolved `DeadlineExceeded` (counted apart from `failed`).
+    pub fn record_deadline_missed(&self) {
+        self.inner.lock().unwrap().deadline_missed += 1;
+    }
+
+    /// An execute attempt failed transiently and will be retried.
+    pub fn record_retry(&self) {
+        self.inner.lock().unwrap().retries += 1;
+    }
+
+    /// A job fell back to the reference backend after exhausting retries.
+    pub fn record_failover(&self) {
+        self.inner.lock().unwrap().failovers += 1;
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let g = self.inner.lock().unwrap();
         let uptime = self.started.elapsed().as_secs_f64().max(1e-9);
@@ -102,6 +140,10 @@ impl Metrics {
             completed: g.completed,
             failed: g.failed,
             rejected: g.rejected,
+            canceled: g.canceled,
+            deadline_missed: g.deadline_missed,
+            retries: g.retries,
+            failovers: g.failovers,
             batches: g.batches,
             mean_batch_size: if g.batches == 0 {
                 0.0
@@ -138,6 +180,12 @@ impl MetricsSnapshot {
             human::duration(self.latency_p95_s),
             human::duration(self.latency_p99_s),
         );
+        if self.canceled + self.deadline_missed + self.retries + self.failovers > 0 {
+            s.push_str(&format!(
+                " | lifecycle: {} canceled / {} expired / {} retries / {} failovers",
+                self.canceled, self.deadline_missed, self.retries, self.failovers
+            ));
+        }
         if self.plans.hits + self.plans.misses > 0 {
             s.push_str(&format!(
                 " | plans={} ({} hits / {} builds)",
@@ -173,11 +221,21 @@ mod tests {
         m.record_completion(0.5, 0.4, false);
         m.record_batch(3);
         m.record_rejection();
+        m.record_canceled();
+        m.record_deadline_missed();
+        m.record_retry();
+        m.record_retry();
+        m.record_failover();
         let s = m.snapshot();
         assert_eq!(s.completed, 2);
         assert_eq!(s.failed, 1);
         assert_eq!(s.rejected, 1);
+        assert_eq!(s.canceled, 1);
+        assert_eq!(s.deadline_missed, 1);
+        assert_eq!(s.retries, 2);
+        assert_eq!(s.failovers, 1);
         assert_eq!(s.batches, 1);
+        assert!(s.summary().contains("1 canceled / 1 expired / 2 retries / 1 failovers"));
         assert!((s.mean_batch_size - 3.0).abs() < 1e-12);
         assert!(s.latency_p50_s > 0.0);
         assert!(s.latency_p99_s >= s.latency_p50_s);

@@ -53,7 +53,8 @@ pub use backend::{
     Backend, EngineBackend, FallbackNotice, PjrtBackend, ReferenceBackend, ShardedEngineBackend,
     SimBackend,
 };
-pub use job::{JobId, JobResult, TransformJob};
+pub use job::{CancelToken, JobContext, JobError, JobId, JobResult, SubmitError, TransformJob};
 pub use metrics::MetricsSnapshot;
 pub use plan::{Plan, PlanCache, PlanCacheStats, PlanSpec};
 pub use server::{Coordinator, CoordinatorConfig, JobHandle, WaitOutcome};
+pub use worker::RetryPolicy;

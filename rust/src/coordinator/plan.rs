@@ -161,6 +161,21 @@ pub trait Plan: Send + Sync {
     /// tensor for real kinds, an `(re, im)` pair for the split DFT).
     fn execute(&self, inputs: &[Tensor3<f32>]) -> anyhow::Result<Vec<Tensor3<f32>>>;
 
+    /// [`Plan::execute`] under a job's [`crate::util::JobContext`]:
+    /// implementations poll the context at their internal checkpoints
+    /// (engine phase boundaries, shard tile passes) and stop with the
+    /// typed [`crate::util::JobError`] when it interrupts. The default
+    /// checks once up front and then runs to completion — correct for
+    /// plans whose execute has no internal checkpoints.
+    fn execute_ctx(
+        &self,
+        inputs: &[Tensor3<f32>],
+        ctx: &crate::util::JobContext,
+    ) -> anyhow::Result<Vec<Tensor3<f32>>> {
+        ctx.checkpoint()?;
+        self.execute(inputs)
+    }
+
     /// Stream a batch of requests through the same stationary state. The
     /// default executes them in order; backends with a cheaper batched path
     /// may override.
@@ -305,6 +320,10 @@ impl PlanCache {
             }
         }
         let _guard = BuildGuard { cache: self, spec };
+
+        // Fault-injection point: a panicking build exercises the guard
+        // above and the dispatcher's catch-and-failover path.
+        crate::faults::maybe_plan_build_panic();
 
         // Build outside the lock: other specs stay servable meanwhile.
         let built = backend.prepare(spec);

@@ -29,6 +29,27 @@ pub enum PopError {
     Timeout,
 }
 
+/// Why a push failed; the rejected item rides along so callers can
+/// resolve it (e.g. fail the job handle) instead of losing it.
+#[derive(Debug, PartialEq, Eq)]
+pub enum PushError<T> {
+    /// Queue at capacity (non-blocking push).
+    Full(T),
+    /// Queue stayed at capacity for the whole bounded wait.
+    Timeout(T),
+    /// Queue closed.
+    Closed(T),
+}
+
+impl<T> PushError<T> {
+    /// Recover the item that was not enqueued.
+    pub fn into_inner(self) -> T {
+        match self {
+            PushError::Full(item) | PushError::Timeout(item) | PushError::Closed(item) => item,
+        }
+    }
+}
+
 impl<T> BoundedQueue<T> {
     pub fn new(capacity: usize) -> BoundedQueue<T> {
         assert!(capacity > 0);
@@ -40,12 +61,12 @@ impl<T> BoundedQueue<T> {
         }
     }
 
-    /// Blocking push; returns Err(item) if the queue is closed.
-    pub fn push(&self, item: T) -> Result<(), T> {
+    /// Blocking push; fails only with [`PushError::Closed`].
+    pub fn push(&self, item: T) -> Result<(), PushError<T>> {
         let mut g = self.inner.lock().unwrap();
         loop {
             if g.closed {
-                return Err(item);
+                return Err(PushError::Closed(item));
             }
             if g.items.len() < self.capacity {
                 g.items.push_back(item);
@@ -56,15 +77,44 @@ impl<T> BoundedQueue<T> {
         }
     }
 
-    /// Non-blocking push; Err(item) when full or closed.
-    pub fn try_push(&self, item: T) -> Result<(), T> {
+    /// Non-blocking push; [`PushError::Full`] or [`PushError::Closed`].
+    pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
         let mut g = self.inner.lock().unwrap();
-        if g.closed || g.items.len() >= self.capacity {
-            return Err(item);
+        if g.closed {
+            return Err(PushError::Closed(item));
+        }
+        if g.items.len() >= self.capacity {
+            return Err(PushError::Full(item));
         }
         g.items.push_back(item);
         self.not_empty.notify_one();
         Ok(())
+    }
+
+    /// Bounded-wait push: the middle ground between [`push`](Self::push)
+    /// (blocks forever) and [`try_push`](Self::try_push) (sheds
+    /// immediately). Waits up to `timeout` for a slot; fails with
+    /// [`PushError::Timeout`] if the queue stays full, or
+    /// [`PushError::Closed`] if it closes while waiting.
+    pub fn push_timeout(&self, item: T, timeout: Duration) -> Result<(), PushError<T>> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(PushError::Closed(item));
+            }
+            if g.items.len() < self.capacity {
+                g.items.push_back(item);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(PushError::Timeout(item));
+            }
+            let (guard, _) = self.not_full.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
     }
 
     /// Pop with a timeout.
@@ -149,7 +199,7 @@ mod tests {
     fn try_push_full() {
         let q = BoundedQueue::new(1);
         q.try_push(1).unwrap();
-        assert_eq!(q.try_push(2), Err(2));
+        assert_eq!(q.try_push(2), Err(PushError::Full(2)));
     }
 
     #[test]
@@ -165,7 +215,44 @@ mod tests {
         q.close();
         assert_eq!(q.pop(), Some(1));
         assert_eq!(q.pop(), None);
-        assert_eq!(q.push(9), Err(9));
+        assert_eq!(q.push(9), Err(PushError::Closed(9)));
+    }
+
+    #[test]
+    fn push_timeout_times_out_while_full() {
+        let q = BoundedQueue::new(1);
+        q.push(1).unwrap();
+        let start = Instant::now();
+        assert_eq!(q.push_timeout(2, Duration::from_millis(20)), Err(PushError::Timeout(2)));
+        assert!(start.elapsed() >= Duration::from_millis(20));
+        // The original occupant is untouched.
+        assert_eq!(q.pop(), Some(1));
+    }
+
+    #[test]
+    fn push_timeout_succeeds_when_slot_frees() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.push(0).unwrap();
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.push_timeout(1, Duration::from_secs(5)));
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.pop(), Some(0));
+        assert_eq!(h.join().unwrap(), Ok(()));
+        assert_eq!(q.pop(), Some(1));
+    }
+
+    #[test]
+    fn push_timeout_observes_close_while_waiting() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.push(0).unwrap();
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.push_timeout(1, Duration::from_secs(5)));
+        thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert_eq!(h.join().unwrap(), Err(PushError::Closed(1)));
+        // The queue still drains what was accepted before close.
+        assert_eq!(q.pop(), Some(0));
+        assert_eq!(q.pop(), None);
     }
 
     #[test]

@@ -1,9 +1,18 @@
-//! The coordinator itself: submit-side API, batcher thread, batch dispatch
-//! onto the process-wide compute pool, and graceful shutdown.
+//! The coordinator itself: submit-side admission control, batcher thread,
+//! batch dispatch onto the process-wide compute pool, and graceful (or
+//! deadline-bounded) shutdown.
+//!
+//! Every job rides a [`JobContext`]: submit-side deadlines (the config
+//! `deadline_ms` default or an explicit context) and a cancel token the
+//! caller keeps through its [`JobHandle`]. The batcher evicts
+//! already-interrupted jobs at flush time, the dispatcher re-checks before
+//! execute, and the engine/shard layers poll between phases and tiles —
+//! so canceled or expired work resolves quickly with a typed
+//! [`super::job::JobError`] instead of burning compute.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -11,11 +20,12 @@ use anyhow::Context;
 
 use super::backend::Backend;
 use super::batcher::{BatchPolicy, Batcher};
-use super::job::{JobId, JobResult, TransformJob};
+use super::job::{CancelToken, JobContext, JobId, JobResult, SubmitError, TransformJob};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::plan::{DEFAULT_PLAN_CAPACITY, PlanCache, PlanCacheStats};
-use super::queue::{BoundedQueue, PopError};
-use super::worker::{BatchDispatcher, Pending};
+use super::queue::{BoundedQueue, PopError, PushError};
+use super::worker::{evict_interrupted, BatchDispatcher, Pending, RetryPolicy};
+use crate::util::WeakCancelToken;
 
 /// Coordinator knobs (see `config/` for the file form).
 #[derive(Clone, Debug)]
@@ -30,6 +40,18 @@ pub struct CoordinatorConfig {
     /// Capacity of the shared stationary-plan cache (LRU-evicted; file form
     /// `[plan_cache] capacity`, CLI `--plan-cache`).
     pub plan_capacity: usize,
+    /// Default per-job deadline applied by [`Coordinator::submit`] when the
+    /// caller does not bring its own context (`None` = no deadline; file
+    /// form `deadline_ms`, 0 = off).
+    pub deadline: Option<Duration>,
+    /// How long [`Coordinator::submit`] may block on a full queue before
+    /// rejecting (`None` = block indefinitely; file form
+    /// `submit_timeout_ms`, 0 = block).
+    pub submit_timeout: Option<Duration>,
+    /// Transient-failure retry/backoff/failover policy (file form
+    /// `retry_attempts` / `retry_base_ms` / `retry_cap_ms` /
+    /// `retry_failover`).
+    pub retry: RetryPolicy,
 }
 
 impl Default for CoordinatorConfig {
@@ -39,6 +61,9 @@ impl Default for CoordinatorConfig {
             queue_depth: 256,
             batch: BatchPolicy::default(),
             plan_capacity: DEFAULT_PLAN_CAPACITY,
+            deadline: None,
+            submit_timeout: None,
+            retry: RetryPolicy::default(),
         }
     }
 }
@@ -68,6 +93,41 @@ impl CoordinatorConfig {
             );
             c.batch.window = Duration::from_secs_f64(ms / 1000.0);
         }
+        if let Some(ms) = cfg.get_f64("coordinator", "deadline_ms")? {
+            anyhow::ensure!(
+                ms.is_finite() && ms >= 0.0,
+                "coordinator.deadline_ms must be finite and non-negative, got {ms}"
+            );
+            c.deadline = (ms > 0.0).then(|| Duration::from_secs_f64(ms / 1000.0));
+        }
+        if let Some(ms) = cfg.get_f64("coordinator", "submit_timeout_ms")? {
+            anyhow::ensure!(
+                ms.is_finite() && ms >= 0.0,
+                "coordinator.submit_timeout_ms must be finite and non-negative, got {ms}"
+            );
+            c.submit_timeout = (ms > 0.0).then(|| Duration::from_secs_f64(ms / 1000.0));
+        }
+        if let Some(n) = cfg.get_usize("coordinator", "retry_attempts")? {
+            anyhow::ensure!(n > 0, "coordinator.retry_attempts must be positive");
+            c.retry.attempts = n as u32;
+        }
+        if let Some(ms) = cfg.get_f64("coordinator", "retry_base_ms")? {
+            anyhow::ensure!(
+                ms.is_finite() && ms >= 0.0,
+                "coordinator.retry_base_ms must be finite and non-negative, got {ms}"
+            );
+            c.retry.base = Duration::from_secs_f64(ms / 1000.0);
+        }
+        if let Some(ms) = cfg.get_f64("coordinator", "retry_cap_ms")? {
+            anyhow::ensure!(
+                ms.is_finite() && ms >= 0.0,
+                "coordinator.retry_cap_ms must be finite and non-negative, got {ms}"
+            );
+            c.retry.cap = Duration::from_secs_f64(ms / 1000.0);
+        }
+        if let Some(f) = cfg.get_bool("coordinator", "retry_failover")? {
+            c.retry.failover = f;
+        }
         if let Some(p) = cfg.get_usize("plan_cache", "capacity")? {
             anyhow::ensure!(p > 0, "plan_cache.capacity must be positive");
             c.plan_capacity = p;
@@ -80,6 +140,7 @@ impl CoordinatorConfig {
 pub struct JobHandle {
     pub id: JobId,
     rx: Receiver<JobResult>,
+    cancel: CancelToken,
 }
 
 /// Outcome of a timed wait on a [`JobHandle`] — distinguishes "not done
@@ -110,6 +171,20 @@ impl JobHandle {
             Err(RecvTimeoutError::Disconnected) => WaitOutcome::Disconnected,
         }
     }
+
+    /// Request cancellation of this job: it stops at its next checkpoint
+    /// (or is evicted before dispatch) and resolves
+    /// [`super::job::JobError::Canceled`]. Idempotent.
+    pub fn cancel(&self) {
+        self.cancel.cancel();
+    }
+}
+
+/// How `admit` waits on a full submit queue.
+enum Admission {
+    Block,
+    Try,
+    Within(Duration),
 }
 
 /// The running coordinator.
@@ -117,10 +192,15 @@ pub struct Coordinator {
     submit_q: Arc<BoundedQueue<Pending>>,
     metrics: Arc<Metrics>,
     next_id: AtomicU64,
-    batcher: Option<JoinHandle<()>>,
+    batcher: Mutex<Option<JoinHandle<()>>>,
     dispatcher: Arc<BatchDispatcher>,
     backend: Arc<dyn Backend>,
     plans: Arc<PlanCache>,
+    default_deadline: Option<Duration>,
+    submit_timeout: Option<Duration>,
+    /// Weak tokens of every admitted job, so a deadline-bounded shutdown
+    /// can cancel stragglers; dead entries prune on overflow.
+    active: Mutex<Vec<WeakCancelToken>>,
 }
 
 impl Coordinator {
@@ -138,15 +218,17 @@ impl Coordinator {
             plans.clone(),
             metrics.clone(),
             config.workers.max(1),
+            config.retry,
         ));
 
         let batcher = {
             let submit_q = submit_q.clone();
             let dispatcher = dispatcher.clone();
+            let metrics = metrics.clone();
             let policy = config.batch;
             std::thread::Builder::new()
                 .name("triada-batcher".into())
-                .spawn(move || batcher_loop(submit_q, dispatcher, policy))
+                .spawn(move || batcher_loop(submit_q, dispatcher, policy, metrics))
                 .expect("spawn batcher")
         };
 
@@ -154,10 +236,13 @@ impl Coordinator {
             submit_q,
             metrics,
             next_id: AtomicU64::new(1),
-            batcher: Some(batcher),
+            batcher: Mutex::new(Some(batcher)),
             dispatcher,
             backend,
             plans,
+            default_deadline: config.deadline,
+            submit_timeout: config.submit_timeout,
+            active: Mutex::new(Vec::new()),
         }
     }
 
@@ -171,33 +256,98 @@ impl Coordinator {
         self.plans.stats()
     }
 
-    /// Submit a job, blocking if the queue is full (backpressure).
-    pub fn submit(&self, mut job: TransformJob) -> anyhow::Result<JobHandle> {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        job.id = id;
-        job.submitted_at = Instant::now();
-        let (tx, rx) = channel();
-        let pending = Pending { job, reply: tx, enqueued_at: Instant::now() };
-        self.submit_q
-            .push(pending)
-            .map_err(|_| anyhow::anyhow!("coordinator is shut down"))?;
-        Ok(JobHandle { id, rx })
+    /// The default context for submits that bring none: the configured
+    /// deadline (if any) and a fresh cancel token.
+    fn default_ctx(&self) -> JobContext {
+        match self.default_deadline {
+            Some(d) => JobContext::deadline_in(d),
+            None => JobContext::new(),
+        }
     }
 
-    /// Non-blocking submit; `None` when the queue is full (load-shed).
-    pub fn try_submit(&self, mut job: TransformJob) -> Option<JobHandle> {
+    /// The single admission path: stamp the job, register its token for
+    /// shutdown-time cancellation, and push with the requested waiting
+    /// mode. A job whose deadline has already passed is rejected without
+    /// ever being enqueued.
+    fn admit(
+        &self,
+        mut job: TransformJob,
+        ctx: JobContext,
+        how: Admission,
+    ) -> Result<JobHandle, SubmitError> {
+        if ctx.expired() && !ctx.cancel.is_canceled() {
+            self.metrics.record_deadline_missed();
+            return Err(SubmitError::DeadlineExpired(job));
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         job.id = id;
         job.submitted_at = Instant::now();
         let (tx, rx) = channel();
-        let pending = Pending { job, reply: tx, enqueued_at: Instant::now() };
-        match self.submit_q.try_push(pending) {
-            Ok(()) => Some(JobHandle { id, rx }),
-            Err(_) => {
+        let cancel = ctx.cancel.clone();
+        self.register(&cancel);
+        let pending = Pending { job, reply: tx, enqueued_at: Instant::now(), ctx };
+        let pushed = match how {
+            Admission::Block => self.submit_q.push(pending),
+            Admission::Try => self.submit_q.try_push(pending),
+            Admission::Within(t) => self.submit_q.push_timeout(pending, t),
+        };
+        match pushed {
+            Ok(()) => Ok(JobHandle { id, rx, cancel }),
+            Err(e) => {
                 self.metrics.record_rejection();
-                None
+                let closed = matches!(e, PushError::Closed(_));
+                let job = e.into_inner().job;
+                Err(if closed {
+                    SubmitError::ShuttingDown(job)
+                } else {
+                    SubmitError::QueueFull(job)
+                })
             }
         }
+    }
+
+    /// Submit a job under the coordinator's default context. Blocks on a
+    /// full queue — forever, or up to the configured `submit_timeout_ms`.
+    pub fn submit(&self, job: TransformJob) -> anyhow::Result<JobHandle> {
+        let how = match self.submit_timeout {
+            Some(t) => Admission::Within(t),
+            None => Admission::Block,
+        };
+        self.admit(job, self.default_ctx(), how).map_err(anyhow::Error::new)
+    }
+
+    /// Submit with an explicit context (deadline and/or caller-held cancel
+    /// token), blocking on a full queue.
+    pub fn submit_ctx(
+        &self,
+        job: TransformJob,
+        ctx: JobContext,
+    ) -> Result<JobHandle, SubmitError> {
+        self.admit(job, ctx, Admission::Block)
+    }
+
+    /// Non-blocking submit (load-shed fast path): typed rejection when the
+    /// queue is full or the coordinator is shutting down.
+    pub fn try_submit(&self, job: TransformJob) -> Result<JobHandle, SubmitError> {
+        self.admit(job, self.default_ctx(), Admission::Try)
+    }
+
+    /// Non-blocking submit with an explicit context.
+    pub fn try_submit_ctx(
+        &self,
+        job: TransformJob,
+        ctx: JobContext,
+    ) -> Result<JobHandle, SubmitError> {
+        self.admit(job, ctx, Admission::Try)
+    }
+
+    /// Submit, waiting at most `timeout` for queue space.
+    pub fn submit_within(
+        &self,
+        job: TransformJob,
+        timeout: Duration,
+    ) -> Result<JobHandle, SubmitError> {
+        self.admit(job, self.default_ctx(), Admission::Within(timeout))
     }
 
     /// Submit and wait (convenience).
@@ -207,12 +357,15 @@ impl Coordinator {
 
     /// Point-in-time metrics, including plan-cache counters, compute-pool
     /// gauges, and any backend degradation reasons
-    /// ([`super::backend::FallbackNotice`]).
+    /// ([`super::backend::FallbackNotice`]) plus the dispatcher's
+    /// retry-failover notices.
     pub fn metrics(&self) -> MetricsSnapshot {
         let mut snap = self.metrics.snapshot();
         snap.plans = self.plans.stats();
         snap.pool = crate::pool::global().stats();
-        snap.fallback_reasons = self.backend.fallback_reasons();
+        let mut reasons = self.backend.fallback_reasons();
+        reasons.extend(self.dispatcher.fallback_reasons());
+        snap.fallback_reasons = reasons;
         snap
     }
 
@@ -220,20 +373,75 @@ impl Coordinator {
         self.submit_q.len()
     }
 
+    fn register(&self, token: &CancelToken) {
+        let mut g = self.active.lock().unwrap();
+        if g.len() >= 256 {
+            g.retain(WeakCancelToken::is_live);
+        }
+        g.push(token.downgrade());
+    }
+
+    /// Cancel every job whose token is still alive (queued or in flight).
+    fn cancel_active(&self) {
+        let mut g = self.active.lock().unwrap();
+        g.retain(|w| w.cancel());
+    }
+
     /// Stop intake, join the batcher (which flushes and dispatches every
     /// buffered batch on its way out), then wait for all in-flight batch
     /// tasks to finish on the pool. Idempotent.
-    fn stop(&mut self) {
+    ///
+    /// Ordering matters: `close()` makes every *future* push fail typed
+    /// (`ShuttingDown`), while the queue's pop side drains items that were
+    /// already accepted before reporting closed — so a job raced against
+    /// shutdown is either rejected at submit or answered, never silently
+    /// dropped.
+    fn stop(&self) {
         self.submit_q.close();
-        if let Some(b) = self.batcher.take() {
+        let handle = self.batcher.lock().unwrap().take();
+        if let Some(b) = handle {
             let _ = b.join();
         }
         self.dispatcher.drain();
     }
 
     /// Graceful shutdown: stop intake, drain every pending batch.
-    pub fn shutdown(mut self) {
+    pub fn shutdown(self) {
         self.stop();
+    }
+
+    /// Deadline-bounded shutdown: stop intake and drain gracefully; if
+    /// draining outlasts `timeout`, cancel every straggler (each resolves
+    /// [`super::job::JobError::Canceled`] at its next checkpoint) and
+    /// finish the drain. Returns `true` when the drain completed without
+    /// canceling anything.
+    pub fn shutdown_within(self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        self.submit_q.close();
+        let mut graceful = true;
+        let mut cancel_once = |graceful: &mut bool| {
+            if *graceful {
+                *graceful = false;
+                self.cancel_active();
+            }
+        };
+        let handle = self.batcher.lock().unwrap().take();
+        if let Some(b) = handle {
+            while !b.is_finished() {
+                if Instant::now() >= deadline {
+                    cancel_once(&mut graceful);
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            let _ = b.join();
+        }
+        while self.dispatcher.in_flight() > 0 {
+            if Instant::now() >= deadline {
+                cancel_once(&mut graceful);
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        graceful
     }
 }
 
@@ -243,15 +451,23 @@ impl Drop for Coordinator {
     }
 }
 
-/// Batcher thread body: accumulate → flush on size/window → dispatch as a
-/// pool task. Dispatch applies its own in-flight backpressure and never
-/// fails, so every accepted job is eventually answered.
+/// Batcher thread body: accumulate → flush on size/window → evict
+/// already-interrupted jobs (each resolves its typed error without
+/// consuming an execute slot) → dispatch the rest as a pool task.
+/// Dispatch applies its own in-flight backpressure and never fails, so
+/// every accepted job is eventually answered.
 fn batcher_loop(
     submit_q: Arc<BoundedQueue<Pending>>,
     dispatcher: Arc<BatchDispatcher>,
     policy: BatchPolicy,
+    metrics: Arc<Metrics>,
 ) {
     let mut batcher: Batcher<Pending> = Batcher::new(policy);
+    let dispatch = |batch| {
+        if let Some(live) = evict_interrupted(batch, &metrics) {
+            dispatcher.dispatch(live);
+        }
+    };
     loop {
         let timeout = batcher
             .next_deadline()
@@ -261,19 +477,19 @@ fn batcher_loop(
             Ok(pending) => {
                 let key = pending.job.batch_key();
                 if let Some(batch) = batcher.add(key, pending, Instant::now()) {
-                    dispatcher.dispatch(batch);
+                    dispatch(batch);
                 }
             }
             Err(PopError::Timeout) => {}
             Err(PopError::Closed) => {
                 for batch in batcher.flush_all() {
-                    dispatcher.dispatch(batch);
+                    dispatch(batch);
                 }
                 return;
             }
         }
         for batch in batcher.flush_expired(Instant::now()) {
-            dispatcher.dispatch(batch);
+            dispatch(batch);
         }
     }
 }
@@ -282,6 +498,7 @@ fn batcher_loop(
 mod tests {
     use super::*;
     use crate::coordinator::backend::ReferenceBackend;
+    use crate::coordinator::job::JobError;
     use crate::runtime::Direction;
     use crate::tensor::Tensor3;
     use crate::transforms::TransformKind;
@@ -363,9 +580,135 @@ mod tests {
             .try_push(Pending {
                 job: job(1),
                 reply: channel().0,
-                enqueued_at: Instant::now()
+                enqueued_at: Instant::now(),
+                ctx: JobContext::default(),
             })
             .is_err());
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_typed_shutting_down() {
+        let c = coordinator(1);
+        c.submit_q.close();
+        match c.try_submit(job(2)) {
+            Err(SubmitError::ShuttingDown(j)) => assert_eq!(j.kind, TransformKind::Dct2),
+            other => panic!("expected ShuttingDown, got {other:?}"),
+        }
+        match c.submit_within(job(3), Duration::from_millis(5)) {
+            Err(SubmitError::ShuttingDown(_)) => {}
+            other => panic!("expected ShuttingDown, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pre_expired_deadline_is_rejected_without_enqueue() {
+        let c = coordinator(1);
+        let ctx = JobContext::with_deadline(Instant::now() - Duration::from_millis(1));
+        match c.submit_ctx(job(4), ctx) {
+            Err(SubmitError::DeadlineExpired(_)) => {}
+            other => panic!("expected DeadlineExpired, got {other:?}"),
+        }
+        let snap = c.metrics();
+        assert_eq!(snap.deadline_missed, 1);
+        assert_eq!(snap.completed + snap.failed, 0, "nothing was enqueued");
+        c.shutdown();
+    }
+
+    #[test]
+    fn pre_canceled_job_resolves_typed_canceled() {
+        let c = coordinator(1);
+        let ctx = JobContext::new();
+        ctx.cancel.cancel();
+        let h = c.submit_ctx(job(5), ctx).expect("canceled jobs are admitted");
+        let res = h.wait().unwrap();
+        assert_eq!(res.job_error(), Some(JobError::Canceled));
+        assert_eq!(c.metrics().canceled, 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn handle_cancel_resolves_typed_or_completes() {
+        // Cancellation races execution: the job must resolve either
+        // completed or typed-canceled, never hang or drop.
+        let c = coordinator(1);
+        let h = c.submit(job(6)).unwrap();
+        h.cancel();
+        let res = h.wait().unwrap();
+        match res.job_error() {
+            Some(JobError::Canceled) | None => {}
+            other => panic!("unexpected resolution {other:?}"),
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn default_deadline_applies_to_plain_submit() {
+        let cfg = CoordinatorConfig {
+            workers: 1,
+            deadline: Some(Duration::from_secs(3600)),
+            ..CoordinatorConfig::default()
+        };
+        let c = Coordinator::start(cfg, Arc::new(ReferenceBackend));
+        let res = c.transform(job(7)).unwrap();
+        assert!(res.outputs.is_ok(), "a generous deadline never interrupts");
+        c.shutdown();
+    }
+
+    #[test]
+    fn shutdown_within_is_graceful_when_idle() {
+        let c = coordinator(2);
+        let h = c.submit(job(8)).unwrap();
+        assert!(h.wait().unwrap().outputs.is_ok());
+        assert!(c.shutdown_within(Duration::from_secs(5)), "idle drain must be graceful");
+    }
+
+    #[test]
+    fn submit_during_shutdown_never_silently_drops() {
+        // Satellite regression: jobs pushed concurrently with close() are
+        // either rejected typed (ShuttingDown/QueueFull) or answered —
+        // every accepted handle resolves, no Disconnected leaks.
+        for round in 0..8 {
+            let c = Arc::new(coordinator(2));
+            let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+            let submitters: Vec<_> = (0..4)
+                .map(|t| {
+                    let c = c.clone();
+                    let stop = stop.clone();
+                    std::thread::spawn(move || {
+                        let mut accepted = Vec::new();
+                        let mut i = 0u64;
+                        while !stop.load(Ordering::Relaxed) && i < 500 {
+                            i += 1;
+                            match c.try_submit(job(round * 1000 + t * 100 + i)) {
+                                Ok(h) => accepted.push(h),
+                                Err(SubmitError::ShuttingDown(_)) => break,
+                                Err(SubmitError::QueueFull(_)) => {
+                                    std::thread::yield_now();
+                                }
+                                Err(SubmitError::DeadlineExpired(_)) => {
+                                    unreachable!("no deadline configured")
+                                }
+                            }
+                        }
+                        accepted
+                    })
+                })
+                .collect();
+            // Let submitters race the close for a moment.
+            std::thread::sleep(Duration::from_millis(2));
+            c.submit_q.close();
+            stop.store(true, Ordering::Relaxed);
+            let handles: Vec<_> =
+                submitters.into_iter().flat_map(|t| t.join().unwrap()).collect();
+            let accepted = handles.len();
+            for h in handles {
+                assert!(
+                    h.wait().is_ok(),
+                    "accepted job dropped during shutdown (round {round}, {accepted} accepted)"
+                );
+            }
+            Arc::try_unwrap(c).ok().unwrap().shutdown();
+        }
     }
 
     #[test]
@@ -380,6 +723,37 @@ mod tests {
         assert_eq!(c.batch.max_batch, 5);
         assert_eq!(c.batch.window, Duration::from_millis(4));
         assert_eq!(c.plan_capacity, 9);
+        assert_eq!(c.deadline, None);
+        assert_eq!(c.submit_timeout, None);
+    }
+
+    #[test]
+    fn config_reads_robustness_keys() {
+        let cfg = crate::config::Config::parse(
+            "[coordinator]\ndeadline_ms = 250\nsubmit_timeout_ms = 10\nretry_attempts = 5\nretry_base_ms = 1\nretry_cap_ms = 8\nretry_failover = false\n",
+        )
+        .unwrap();
+        let c = CoordinatorConfig::from_config(&cfg).unwrap();
+        assert_eq!(c.deadline, Some(Duration::from_millis(250)));
+        assert_eq!(c.submit_timeout, Some(Duration::from_millis(10)));
+        assert_eq!(c.retry.attempts, 5);
+        assert_eq!(c.retry.base, Duration::from_millis(1));
+        assert_eq!(c.retry.cap, Duration::from_millis(8));
+        assert!(!c.retry.failover);
+        // 0 means "off" for the optional durations.
+        let off = crate::config::Config::parse(
+            "[coordinator]\ndeadline_ms = 0\nsubmit_timeout_ms = 0\n",
+        )
+        .unwrap();
+        let c = CoordinatorConfig::from_config(&off).unwrap();
+        assert_eq!(c.deadline, None);
+        assert_eq!(c.submit_timeout, None);
+        // Bad values are typed config errors.
+        for bad in ["deadline_ms = -1", "retry_attempts = 0", "retry_base_ms = nan"] {
+            let cfg =
+                crate::config::Config::parse(&format!("[coordinator]\n{bad}\n")).unwrap();
+            assert!(CoordinatorConfig::from_config(&cfg).is_err(), "{bad} must be rejected");
+        }
     }
 
     #[test]

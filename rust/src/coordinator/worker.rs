@@ -11,17 +11,31 @@
 //! A backend that runs the engine parallelizes *within* the batch task on
 //! the same pool (nested scopes help-execute, so this is deadlock-free at
 //! any pool width).
+//!
+//! Robustness lives here too. Each job carries a [`JobContext`]: a job
+//! whose deadline already passed (or whose token was canceled) is resolved
+//! with a typed [`JobError`] *before* `Plan::execute` ever runs, and the
+//! plan itself polls the context between engine phases and shard tile
+//! passes. Execute attempts that fail transiently (a
+//! [`crate::faults::TransientError`] anywhere in the chain, or a panic)
+//! are retried under a [`RetryPolicy`] with jittered exponential backoff;
+//! when retries are exhausted the job takes a last-resort failover through
+//! the scalar reference — bit-identical numerics, recorded in the metrics
+//! `failovers` counter and the dispatcher's [`FallbackNotice`].
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use super::backend::Backend;
+use super::backend::{reference_execute, Backend, FallbackNotice, ReferenceBackend};
 use super::batcher::Batch;
-use super::job::{JobResult, TransformJob};
+use super::job::{JobContext, JobError, JobResult, TransformJob};
 use super::metrics::Metrics;
 use super::plan::{Plan, PlanCache, PlanSpec};
 use crate::pool::Layer;
+use crate::tensor::Tensor3;
+use crate::util::Rng;
 
 /// A job waiting for execution, with its reply channel.
 #[derive(Debug)]
@@ -30,26 +44,117 @@ pub struct Pending {
     pub reply: Sender<JobResult>,
     /// When the job entered the submit queue.
     pub enqueued_at: Instant,
+    /// Deadline and cancellation state, polled at every checkpoint.
+    pub ctx: JobContext,
+}
+
+/// Bounded retries with jittered exponential backoff for transient
+/// execute failures, plus the last-resort reference failover switch.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Total execute attempts per job, including the first (min 1).
+    pub attempts: u32,
+    /// Backoff before retry `k` is `base * 2^k`, capped at `cap`, then
+    /// jittered to 50–100% of that.
+    pub base: Duration,
+    /// Upper bound on a single backoff sleep.
+    pub cap: Duration,
+    /// After exhausting retries, serve the job through the scalar
+    /// reference (bit-identical numerics) instead of failing it.
+    pub failover: bool,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            attempts: 3,
+            base: Duration::from_micros(500),
+            cap: Duration::from_millis(20),
+            failover: true,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The jittered sleep before retry number `attempt` (1-based).
+    fn backoff(&self, attempt: u32, rng: &mut Rng) -> Duration {
+        let exp = self.base.as_secs_f64() * f64::from(1u32 << attempt.min(16));
+        let capped = exp.min(self.cap.as_secs_f64());
+        Duration::from_secs_f64(capped * rng.f64_range(0.5, 1.0))
+    }
+}
+
+/// Sleep for `total` in ~1ms slices, polling the context; returns the
+/// interrupt if cancellation or expiry arrives mid-sleep.
+fn sleep_checked(ctx: &JobContext, total: Duration) -> Option<JobError> {
+    let until = Instant::now() + total;
+    loop {
+        if let Some(e) = ctx.interrupted() {
+            return Some(e);
+        }
+        let now = Instant::now();
+        if now >= until {
+            return None;
+        }
+        std::thread::sleep((until - now).min(Duration::from_millis(1)));
+    }
+}
+
+/// Render a caught panic payload.
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 /// Execute one flushed batch: one plan lookup, then every job of the batch
 /// runs on the shared plan. This is the body of a coordinator pool task.
+/// A plan build that fails or panics fails over to a freshly built
+/// reference plan when the policy allows it, so one poisoned build does
+/// not take down the whole batch.
 pub fn execute_batch(
     batch: Batch<Pending>,
     backend: &dyn Backend,
     plans: &PlanCache,
     metrics: &Metrics,
+    policy: &RetryPolicy,
+    notices: &FallbackNotice,
 ) {
     let batch_size = batch.jobs.len();
     metrics.record_batch(batch_size);
     let spec = PlanSpec::from(batch.key);
-    match spec.validate().and_then(|_| plans.prepare(backend, spec)) {
+    let prepared = catch_unwind(AssertUnwindSafe(|| {
+        spec.validate().and_then(|_| plans.prepare(backend, spec))
+    }))
+    .unwrap_or_else(|p| Err(anyhow::anyhow!("plan build panicked: {}", panic_message(p))));
+    match prepared {
         Ok(plan) => {
             for pending in batch.jobs {
-                execute_one(pending, batch_size, plan.as_ref(), metrics);
+                execute_one(pending, batch_size, plan.as_ref(), metrics, policy, notices);
             }
         }
         Err(e) => {
+            // Last resort: a spec the primary backend cannot plan (or
+            // whose build panicked) is served on the exact reference
+            // instead — bit-identical, just slower. An invalid spec fails
+            // the reference build too and lands in the failure arm.
+            if policy.failover && backend.name() != "cpu-reference" {
+                if let Ok(plan) = ReferenceBackend.prepare(spec) {
+                    notices.record(
+                        backend.name(),
+                        &format!("plan build failed ({e:#}); batch failed over"),
+                    );
+                    for pending in batch.jobs {
+                        metrics.record_failover();
+                        execute_one(pending, batch_size, plan.as_ref(), metrics, policy, notices);
+                    }
+                    return;
+                }
+            }
             // The whole batch shares the spec, so a spec that cannot be
             // planned fails every job in it with the same reason.
             let msg = format!("plan preparation failed: {e:#}");
@@ -57,6 +162,39 @@ pub fn execute_batch(
                 fail_one(pending, batch_size, backend.name(), &msg, metrics);
             }
         }
+    }
+}
+
+/// Resolve every already-interrupted job of a flushed batch with its typed
+/// [`JobError`] (never dispatching it), returning the still-live
+/// remainder. The batcher calls this at flush time so expired jobs are
+/// evicted before they consume a plan build or an execute slot.
+pub fn evict_interrupted(batch: Batch<Pending>, metrics: &Metrics) -> Option<Batch<Pending>> {
+    let Batch { key, jobs } = batch;
+    let batch_size = jobs.len();
+    let mut live = Vec::with_capacity(batch_size);
+    for pending in jobs {
+        match pending.ctx.interrupted() {
+            Some(err) => {
+                let Pending { job, reply, enqueued_at, ctx: _ } = pending;
+                let queue_wait = enqueued_at.elapsed().as_secs_f64();
+                resolve(
+                    job,
+                    reply,
+                    Err(anyhow::Error::new(err)),
+                    queue_wait,
+                    "coordinator",
+                    batch_size,
+                    metrics,
+                );
+            }
+            None => live.push(pending),
+        }
+    }
+    if live.is_empty() {
+        None
+    } else {
+        Some(Batch { key, jobs: live })
     }
 }
 
@@ -69,6 +207,8 @@ pub struct BatchDispatcher {
     backend: Arc<dyn Backend>,
     plans: Arc<PlanCache>,
     metrics: Arc<Metrics>,
+    policy: RetryPolicy,
+    notices: Arc<FallbackNotice>,
     limit: usize,
     gate: Arc<InFlight>,
 }
@@ -98,11 +238,14 @@ impl BatchDispatcher {
         plans: Arc<PlanCache>,
         metrics: Arc<Metrics>,
         limit: usize,
+        policy: RetryPolicy,
     ) -> BatchDispatcher {
         BatchDispatcher {
             backend,
             plans,
             metrics,
+            policy,
+            notices: Arc::new(FallbackNotice::default()),
             limit: limit.max(1),
             gate: Arc::new(InFlight { count: Mutex::new(0), changed: Condvar::new() }),
         }
@@ -123,15 +266,23 @@ impl BatchDispatcher {
         let backend = self.backend.clone();
         let plans = self.plans.clone();
         let metrics = self.metrics.clone();
+        let policy = self.policy;
+        let notices = self.notices.clone();
         crate::pool::global().submit(Layer::Coordinator, move || {
             let _guard = guard;
-            execute_batch(batch, backend.as_ref(), &plans, &metrics);
+            execute_batch(batch, backend.as_ref(), &plans, &metrics, &policy, &notices);
         });
     }
 
     /// Batches currently executing or queued on the pool.
     pub fn in_flight(&self) -> usize {
         *self.gate.count.lock().unwrap()
+    }
+
+    /// Failover reasons recorded by this dispatcher (empty = every job
+    /// ran on the primary backend's plan).
+    pub fn fallback_reasons(&self) -> Vec<String> {
+        self.notices.reasons()
     }
 
     /// Block until every dispatched batch has completed.
@@ -143,26 +294,139 @@ impl BatchDispatcher {
     }
 }
 
-/// Execute a single job on a prepared plan and reply.
-pub fn execute_one(pending: Pending, batch_size: usize, plan: &dyn Plan, metrics: &Metrics) {
-    let Pending { job, reply, enqueued_at } = pending;
-    let started = Instant::now();
-    let queue_wait = started.duration_since(enqueued_at).as_secs_f64();
-    let outputs = job.validate().and_then(|_| plan.execute(&job.inputs));
+/// Execute a single job on a prepared plan and reply. Interrupted jobs
+/// (canceled or past deadline) resolve with their typed [`JobError`]
+/// without touching the plan; transient failures retry under `policy`.
+pub fn execute_one(
+    pending: Pending,
+    batch_size: usize,
+    plan: &dyn Plan,
+    metrics: &Metrics,
+    policy: &RetryPolicy,
+    notices: &FallbackNotice,
+) {
+    let Pending { job, reply, enqueued_at, ctx } = pending;
+    let queue_wait = enqueued_at.elapsed().as_secs_f64();
+
+    // An already-interrupted job never reaches `Plan::execute`.
+    let mut interrupt = ctx.interrupted();
+    if interrupt.is_none() {
+        if let Some(delay) = crate::faults::inject_slow_execute() {
+            interrupt = sleep_checked(&ctx, delay);
+        }
+    }
+    let (outputs, backend) = match interrupt {
+        Some(e) => (Err(anyhow::Error::new(e)), plan.backend_name()),
+        None => match job.validate() {
+            Err(e) => (Err(e), plan.backend_name()),
+            Ok(()) => run_with_retries(&job, plan, &ctx, metrics, policy, notices),
+        },
+    };
+    resolve(job, reply, outputs, queue_wait, backend, batch_size, metrics);
+}
+
+/// The per-job retry loop: each attempt consults the transient injector,
+/// then runs the plan under `catch_unwind` (a panicking backend — e.g. an
+/// injected pool-task panic re-raised at the scope caller — counts as a
+/// transient failure). Returns the outputs and the backend that actually
+/// served them.
+fn run_with_retries(
+    job: &TransformJob,
+    plan: &dyn Plan,
+    ctx: &JobContext,
+    metrics: &Metrics,
+    policy: &RetryPolicy,
+    notices: &FallbackNotice,
+) -> (anyhow::Result<Vec<Tensor3<f32>>>, &'static str) {
+    let attempts = policy.attempts.max(1);
+    let mut rng = Rng::new(job.id ^ 0x7265_7472_79); // "retry"
+    let mut attempt = 0u32;
+    loop {
+        let (result, panicked) = match crate::faults::inject_transient("coordinator.execute") {
+            Some(e) => (Err(e), false),
+            None => match catch_unwind(AssertUnwindSafe(|| plan.execute_ctx(&job.inputs, ctx))) {
+                Ok(r) => (r, false),
+                Err(p) => {
+                    (Err(anyhow::anyhow!("execute panicked: {}", panic_message(p))), true)
+                }
+            },
+        };
+        let e = match result {
+            Ok(out) => return (Ok(out), plan.backend_name()),
+            Err(e) => e,
+        };
+        // Typed interrupts pass through unchanged — never retried.
+        if e.chain().any(|c| c.downcast_ref::<JobError>().is_some()) {
+            return (Err(e), plan.backend_name());
+        }
+        let transient = panicked || crate::faults::is_transient(&e);
+        if transient && attempt + 1 < attempts {
+            attempt += 1;
+            metrics.record_retry();
+            if let Some(i) = sleep_checked(ctx, policy.backoff(attempt, &mut rng)) {
+                return (Err(anyhow::Error::new(i)), plan.backend_name());
+            }
+            continue;
+        }
+        // Retries exhausted: last resort is the exact scalar reference —
+        // bit-identical numerics, so a completed job is still a correct
+        // job. Permanent (non-transient) errors fail without failover:
+        // the reference would deterministically reject them too.
+        if transient && policy.failover && plan.backend_name() != "cpu-reference" {
+            match reference_execute(job.kind, job.direction, &job.inputs) {
+                Ok(out) => {
+                    metrics.record_failover();
+                    notices.record(
+                        plan.backend_name(),
+                        &format!("transient execute failure persisted for {attempts} attempt(s) ({e:#}); job failed over"),
+                    );
+                    return (Ok(out), "cpu-reference");
+                }
+                Err(fe) => {
+                    return (
+                        (Err(e.context(format!("reference failover also failed: {fe:#}")))),
+                        plan.backend_name(),
+                    )
+                }
+            }
+        }
+        return (Err(e), plan.backend_name());
+    }
+}
+
+/// Record the job's fate in the metrics (typed interrupts count in their
+/// own `canceled` / `deadline_missed` buckets, not as failures) and reply.
+fn resolve(
+    job: TransformJob,
+    reply: Sender<JobResult>,
+    outputs: anyhow::Result<Vec<Tensor3<f32>>>,
+    queue_wait: f64,
+    backend: &'static str,
+    batch_size: usize,
+    metrics: &Metrics,
+) {
     let latency = job.submitted_at.elapsed().as_secs_f64();
-    let ok = outputs.is_ok();
-    metrics.record_completion(latency, queue_wait, ok);
+    let job_err = match &outputs {
+        Ok(_) => None,
+        Err(e) => e.chain().find_map(|c| c.downcast_ref::<JobError>()).copied(),
+    };
+    match job_err {
+        Some(JobError::Canceled) => metrics.record_canceled(),
+        Some(JobError::DeadlineExceeded) => metrics.record_deadline_missed(),
+        None => metrics.record_completion(latency, queue_wait, outputs.is_ok()),
+    }
     // Receiver may have hung up (client gave up); that's fine.
     let _ = reply.send(JobResult {
         id: job.id,
         outputs,
         latency_s: latency,
-        backend: plan.backend_name(),
+        backend,
         batch_size,
     });
 }
 
 /// Fail a job without executing it (its batch's plan could not be built).
+/// A job that was interrupted anyway resolves with its typed error.
 fn fail_one(
     pending: Pending,
     batch_size: usize,
@@ -170,23 +434,21 @@ fn fail_one(
     reason: &str,
     metrics: &Metrics,
 ) {
-    let Pending { job, reply, enqueued_at } = pending;
-    let queue_wait = Instant::now().duration_since(enqueued_at).as_secs_f64();
-    let latency = job.submitted_at.elapsed().as_secs_f64();
-    metrics.record_completion(latency, queue_wait, false);
-    let _ = reply.send(JobResult {
-        id: job.id,
-        outputs: Err(anyhow::anyhow!("{reason}")),
-        latency_s: latency,
-        backend,
-        batch_size,
-    });
+    let Pending { job, reply, enqueued_at, ctx } = pending;
+    let queue_wait = enqueued_at.elapsed().as_secs_f64();
+    let outputs = match ctx.interrupted() {
+        Some(e) => Err(anyhow::Error::new(e)),
+        None => Err(anyhow::anyhow!("{reason}")),
+    };
+    resolve(job, reply, outputs, queue_wait, backend, batch_size, metrics);
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::backend::ReferenceBackend;
+    use crate::coordinator::backend::{EngineBackend, ReferenceBackend};
+    use crate::faults::{self, FaultPlan};
+    use crate::gemt::engine::EngineConfig;
     use crate::runtime::Direction;
     use crate::tensor::Tensor3;
     use crate::transforms::TransformKind;
@@ -198,7 +460,15 @@ mod tests {
     ) -> (Pending, std::sync::mpsc::Receiver<JobResult>) {
         let (tx, rx) = channel();
         let job = TransformJob::new(kind, Direction::Forward, inputs);
-        (Pending { job, reply: tx, enqueued_at: Instant::now() }, rx)
+        (
+            Pending {
+                job,
+                reply: tx,
+                enqueued_at: Instant::now(),
+                ctx: JobContext::default(),
+            },
+            rx,
+        )
     }
 
     fn plan_for(kind: TransformKind, shape: (usize, usize, usize)) -> Arc<dyn Plan> {
@@ -207,12 +477,17 @@ mod tests {
             .unwrap()
     }
 
+    fn quiet() -> (RetryPolicy, FallbackNotice) {
+        (RetryPolicy::default(), FallbackNotice::default())
+    }
+
     #[test]
     fn execute_one_replies_with_output() {
         let metrics = Metrics::new();
+        let (policy, notices) = quiet();
         let (p, rx) = pending(TransformKind::Dct2, vec![Tensor3::zeros(2, 2, 2)]);
         let plan = plan_for(TransformKind::Dct2, (2, 2, 2));
-        execute_one(p, 1, plan.as_ref(), &metrics);
+        execute_one(p, 1, plan.as_ref(), &metrics, &policy, &notices);
         let res = rx.recv().unwrap();
         assert!(res.outputs.is_ok());
         assert_eq!(res.backend, "cpu-reference");
@@ -221,13 +496,22 @@ mod tests {
 
     #[test]
     fn invalid_spec_fails_whole_batch_cleanly() {
-        // DWHT on non-power-of-two: the spec cannot be planned, so the
-        // whole batch fails with a clean error, never a panic.
+        // DWHT on non-power-of-two: the spec cannot be planned anywhere
+        // (the reference rejects it too), so the whole batch fails with a
+        // clean error, never a panic.
         let metrics = Metrics::new();
+        let (policy, notices) = quiet();
         let plans = PlanCache::new(4);
         let (p, rx) = pending(TransformKind::Dwht, vec![Tensor3::zeros(3, 4, 4)]);
         let key = p.job.batch_key();
-        execute_batch(Batch { key, jobs: vec![p] }, &ReferenceBackend, &plans, &metrics);
+        execute_batch(
+            Batch { key, jobs: vec![p] },
+            &ReferenceBackend,
+            &plans,
+            &metrics,
+            &policy,
+            &notices,
+        );
         let res = rx.recv().unwrap();
         let err = res.outputs.unwrap_err();
         assert!(err.to_string().contains("plan preparation failed"), "{err:#}");
@@ -238,16 +522,18 @@ mod tests {
     #[test]
     fn dropped_receiver_does_not_panic() {
         let metrics = Metrics::new();
+        let (policy, notices) = quiet();
         let (p, rx) = pending(TransformKind::Dct2, vec![Tensor3::zeros(2, 2, 2)]);
         drop(rx);
         let plan = plan_for(TransformKind::Dct2, (2, 2, 2));
-        execute_one(p, 1, plan.as_ref(), &metrics);
+        execute_one(p, 1, plan.as_ref(), &metrics, &policy, &notices);
         assert_eq!(metrics.snapshot().completed, 1);
     }
 
     #[test]
     fn batch_jobs_share_one_plan_build() {
         let metrics = Metrics::new();
+        let (policy, notices) = quiet();
         let plans = PlanCache::new(4);
         let (p1, rx1) = pending(TransformKind::Dct2, vec![Tensor3::zeros(2, 2, 2)]);
         let (p2, rx2) = pending(TransformKind::Dct2, vec![Tensor3::zeros(2, 2, 2)]);
@@ -257,10 +543,19 @@ mod tests {
             &ReferenceBackend,
             &plans,
             &metrics,
+            &policy,
+            &notices,
         );
         // A second batch of the same key hits the cached plan.
         let (p3, rx3) = pending(TransformKind::Dct2, vec![Tensor3::zeros(2, 2, 2)]);
-        execute_batch(Batch { key, jobs: vec![p3] }, &ReferenceBackend, &plans, &metrics);
+        execute_batch(
+            Batch { key, jobs: vec![p3] },
+            &ReferenceBackend,
+            &plans,
+            &metrics,
+            &policy,
+            &notices,
+        );
         for rx in [rx1, rx2, rx3] {
             assert!(rx.recv().unwrap().outputs.is_ok());
         }
@@ -275,7 +570,8 @@ mod tests {
         let metrics = Arc::new(Metrics::new());
         let plans = Arc::new(PlanCache::new(4));
         let backend: Arc<dyn Backend> = Arc::new(ReferenceBackend);
-        let d = BatchDispatcher::new(backend, plans.clone(), metrics.clone(), 2);
+        let d =
+            BatchDispatcher::new(backend, plans.clone(), metrics.clone(), 2, RetryPolicy::default());
         let mut receivers = Vec::new();
         for _ in 0..10 {
             let (p, rx) = pending(TransformKind::Dct2, vec![Tensor3::zeros(2, 2, 2)]);
@@ -290,5 +586,142 @@ mod tests {
         }
         assert_eq!(metrics.snapshot().batches, 10);
         assert_eq!(plans.stats().builds, 1, "all batches share one cached plan");
+    }
+
+    #[test]
+    fn expired_job_never_reaches_execute() {
+        let metrics = Metrics::new();
+        let (policy, notices) = quiet();
+        let (mut p, rx) = pending(TransformKind::Dct2, vec![Tensor3::zeros(2, 2, 2)]);
+        p.ctx = JobContext::with_deadline(Instant::now() - Duration::from_millis(1));
+        // A plan that panics on execute proves execute was never called.
+        struct Bomb;
+        impl Plan for Bomb {
+            fn spec(&self) -> PlanSpec {
+                PlanSpec::new(TransformKind::Dct2, Direction::Forward, (2, 2, 2))
+            }
+            fn backend_name(&self) -> &'static str {
+                "bomb"
+            }
+            fn execute(&self, _: &[Tensor3<f32>]) -> anyhow::Result<Vec<Tensor3<f32>>> {
+                panic!("expired job must not execute");
+            }
+        }
+        execute_one(p, 1, &Bomb, &metrics, &policy, &notices);
+        let res = rx.recv().unwrap();
+        assert_eq!(res.job_error(), Some(JobError::DeadlineExceeded));
+        let s = metrics.snapshot();
+        assert_eq!(s.deadline_missed, 1);
+        assert_eq!(s.completed + s.failed, 0, "typed interrupts have their own bucket");
+    }
+
+    #[test]
+    fn canceled_job_resolves_typed() {
+        let metrics = Metrics::new();
+        let (policy, notices) = quiet();
+        let (p, rx) = pending(TransformKind::Dct2, vec![Tensor3::zeros(2, 2, 2)]);
+        p.ctx.cancel.cancel();
+        let plan = plan_for(TransformKind::Dct2, (2, 2, 2));
+        execute_one(p, 1, plan.as_ref(), &metrics, &policy, &notices);
+        assert_eq!(rx.recv().unwrap().job_error(), Some(JobError::Canceled));
+        assert_eq!(metrics.snapshot().canceled, 1);
+    }
+
+    #[test]
+    fn evict_interrupted_partitions_batches() {
+        let metrics = Metrics::new();
+        let (live, live_rx) = pending(TransformKind::Dct2, vec![Tensor3::zeros(2, 2, 2)]);
+        let (expired, expired_rx) = pending(TransformKind::Dct2, vec![Tensor3::zeros(2, 2, 2)]);
+        expired.ctx.cancel.cancel();
+        let key = live.job.batch_key();
+        let rest = evict_interrupted(Batch { key, jobs: vec![live, expired] }, &metrics)
+            .expect("one live job remains");
+        assert_eq!(rest.jobs.len(), 1);
+        assert_eq!(expired_rx.recv().unwrap().job_error(), Some(JobError::Canceled));
+        assert!(live_rx.try_recv().is_err(), "live job is not resolved by eviction");
+        assert_eq!(metrics.snapshot().canceled, 1);
+        // An all-interrupted batch evicts to nothing.
+        let (gone, gone_rx) = pending(TransformKind::Dct2, vec![Tensor3::zeros(2, 2, 2)]);
+        gone.ctx.cancel.cancel();
+        assert!(evict_interrupted(Batch { key, jobs: vec![gone] }, &metrics).is_none());
+        assert_eq!(gone_rx.recv().unwrap().job_error(), Some(JobError::Canceled));
+    }
+
+    #[test]
+    fn transient_errors_retry_then_failover_to_reference() {
+        let _g = faults::serial_lock();
+        // Every execute attempt fails transiently (uncapped): the engine
+        // plan exhausts its retries, then the job fails over to the
+        // reference (which the injector cannot touch — failover calls the
+        // backend directly, not through this retry loop's injection site).
+        faults::configure(FaultPlan { seed: 1, transient_p: 1.0, ..Default::default() });
+        let metrics = Metrics::new();
+        let notices = FallbackNotice::default();
+        let policy = RetryPolicy {
+            attempts: 3,
+            base: Duration::from_micros(10),
+            cap: Duration::from_micros(50),
+            failover: true,
+        };
+        let plans = PlanCache::new(4);
+        let backend = EngineBackend::new(EngineConfig::with_threads(1));
+        let (p, rx) = pending(TransformKind::Dct2, vec![Tensor3::zeros(2, 2, 2)]);
+        let key = p.job.batch_key();
+        execute_batch(Batch { key, jobs: vec![p] }, &backend, &plans, &metrics, &policy, &notices);
+        faults::disarm();
+        let res = rx.recv().unwrap();
+        assert!(res.outputs.is_ok(), "failover must serve the job");
+        assert_eq!(res.backend, "cpu-reference");
+        let s = metrics.snapshot();
+        assert_eq!(s.retries, 2, "attempts - 1 retries before failover");
+        assert_eq!(s.failovers, 1);
+        assert_eq!(s.completed, 1);
+        assert_eq!(notices.reasons().len(), 1);
+    }
+
+    #[test]
+    fn exhausted_retries_without_failover_fail_typed_transient() {
+        let _g = faults::serial_lock();
+        faults::configure(FaultPlan { seed: 2, transient_p: 1.0, ..Default::default() });
+        let metrics = Metrics::new();
+        let notices = FallbackNotice::default();
+        let policy = RetryPolicy {
+            attempts: 2,
+            base: Duration::from_micros(10),
+            cap: Duration::from_micros(50),
+            failover: false,
+        };
+        let (p, rx) = pending(TransformKind::Dct2, vec![Tensor3::zeros(2, 2, 2)]);
+        let plan = plan_for(TransformKind::Dct2, (2, 2, 2));
+        execute_one(p, 1, plan.as_ref(), &metrics, &policy, &notices);
+        faults::disarm();
+        let err = rx.recv().unwrap().outputs.unwrap_err();
+        assert!(faults::is_transient(&err), "the transient marker survives: {err:#}");
+        let s = metrics.snapshot();
+        assert_eq!(s.retries, 1);
+        assert_eq!(s.failed, 1);
+        assert_eq!(s.failovers, 0);
+    }
+
+    #[test]
+    fn plan_build_panic_fails_over_whole_batch() {
+        let _g = faults::serial_lock();
+        faults::configure(FaultPlan { seed: 3, plan_panic_n: 1, ..Default::default() });
+        let metrics = Metrics::new();
+        let (policy, notices) = quiet();
+        let plans = PlanCache::new(4);
+        let backend = EngineBackend::new(EngineConfig::with_threads(1));
+        let (p, rx) = pending(TransformKind::Dct2, vec![Tensor3::zeros(2, 2, 2)]);
+        let key = p.job.batch_key();
+        execute_batch(Batch { key, jobs: vec![p] }, &backend, &plans, &metrics, &policy, &notices);
+        faults::disarm();
+        let res = rx.recv().unwrap();
+        assert!(res.outputs.is_ok(), "plan-build panic must fail over, not fail");
+        assert_eq!(res.backend, "cpu-reference");
+        assert_eq!(metrics.snapshot().failovers, 1);
+        // The poisoned build did not wedge the cache: the next prepare of
+        // the same spec (injection exhausted) builds cleanly.
+        let spec = PlanSpec::from(key);
+        assert!(plans.prepare(&backend, spec).is_ok());
     }
 }

@@ -1,0 +1,437 @@
+//! Deterministic, seeded fault injection for robustness testing.
+//!
+//! A [`FaultPlan`] arms up to four injection points consulted from the
+//! serving hot path:
+//!
+//! * **backend transient error** — each plan execute attempt may fail
+//!   with a [`TransientError`] (probability `transient_p`, at most
+//!   `transient_max` times), exercising the coordinator's retry policy;
+//! * **slow execute** — an attempt may be delayed by `slow_ms`
+//!   (probability `slow_p`), exercising deadlines;
+//! * **plan-build panic** — the first `plan_panic_n` plan builds panic,
+//!   exercising the plan-cache build guard and the dispatcher's
+//!   failover path;
+//! * **pool-task panic** — a compute-layer (engine/shard) pool task may
+//!   panic at start (probability `pool_panic_p`, at most
+//!   `pool_panic_max` times), exercising pool panic isolation and the
+//!   dispatcher's retry-after-panic path.
+//!
+//! Everything is driven by one seed through [`crate::util::Rng`]
+//! (xoshiro256**), so a given plan fires the same decision *sequence*
+//! per injection point run-to-run. Faults are process-global and off by
+//! default — a single relaxed atomic load is the entire disarmed cost.
+//! Arm them programmatically ([`configure`]), from the `TRIADA_FAULTS`
+//! environment variable ([`init_from_env`], a comma list like
+//! `seed=7,transient_p=0.2,plan_panic_n=1`), or from a `[faults]` config
+//! section ([`from_config`]). `tests/chaos.rs` is the consumer proving
+//! completed jobs stay bit-identical to the scalar reference while all
+//! four points rage.
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::config::Config;
+use crate::util::Rng;
+
+/// A retry-eligible failure. Backends (and the injector) wrap errors in
+/// this marker type; the dispatcher's retry policy classifies an error
+/// as transient by downcasting anywhere in its chain.
+#[derive(Debug, Clone)]
+pub struct TransientError(pub String);
+
+impl fmt::Display for TransientError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "transient backend error: {}", self.0)
+    }
+}
+
+impl std::error::Error for TransientError {}
+
+/// Is any error in the chain a [`TransientError`]?
+pub fn is_transient(err: &anyhow::Error) -> bool {
+    err.chain().any(|c| c.downcast_ref::<TransientError>().is_some())
+}
+
+/// What to inject, how often, and under which seed. All points default
+/// to off; probabilities are in `[0, 1]`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Seed for every injection point's decision stream.
+    pub seed: u64,
+    /// Probability an execute attempt fails with a [`TransientError`].
+    pub transient_p: f64,
+    /// Cap on injected transient errors (0 = unlimited).
+    pub transient_max: u64,
+    /// Probability an execute attempt is delayed.
+    pub slow_p: f64,
+    /// Injected delay in milliseconds.
+    pub slow_ms: f64,
+    /// Panic the first N plan builds.
+    pub plan_panic_n: u64,
+    /// Probability a compute-layer pool task panics at start.
+    pub pool_panic_p: f64,
+    /// Cap on injected pool-task panics (0 = unlimited).
+    pub pool_panic_max: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan {
+            seed: 42,
+            transient_p: 0.0,
+            transient_max: 0,
+            slow_p: 0.0,
+            slow_ms: 0.0,
+            plan_panic_n: 0,
+            pool_panic_p: 0.0,
+            pool_panic_max: 0,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Parse a `key=value` comma list (the `TRIADA_FAULTS` format);
+    /// unset keys keep their defaults.
+    pub fn parse(spec: &str) -> anyhow::Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("fault spec `{part}` is not key=value"))?;
+            let (key, value) = (key.trim(), value.trim());
+            let bad = |e| anyhow::anyhow!("fault key `{key}`: bad value `{value}`: {e}");
+            match key {
+                "seed" => plan.seed = value.parse().map_err(bad)?,
+                "transient_p" => plan.transient_p = value.parse().map_err(bad)?,
+                "transient_max" => plan.transient_max = value.parse().map_err(bad)?,
+                "slow_p" => plan.slow_p = value.parse().map_err(bad)?,
+                "slow_ms" => plan.slow_ms = value.parse().map_err(bad)?,
+                "plan_panic_n" => plan.plan_panic_n = value.parse().map_err(bad)?,
+                "pool_panic_p" => plan.pool_panic_p = value.parse().map_err(bad)?,
+                "pool_panic_max" => plan.pool_panic_max = value.parse().map_err(bad)?,
+                other => anyhow::bail!("unknown fault key `{other}`"),
+            }
+        }
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// Sanity-check probabilities and delays.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (name, p) in [
+            ("transient_p", self.transient_p),
+            ("slow_p", self.slow_p),
+            ("pool_panic_p", self.pool_panic_p),
+        ] {
+            anyhow::ensure!(
+                p.is_finite() && (0.0..=1.0).contains(&p),
+                "fault probability {name} must be in [0, 1], got {p}"
+            );
+        }
+        anyhow::ensure!(
+            self.slow_ms.is_finite() && self.slow_ms >= 0.0,
+            "faults slow_ms must be a finite non-negative delay, got {}",
+            self.slow_ms
+        );
+        Ok(())
+    }
+
+    /// Does this plan actually inject anything?
+    pub fn is_armed(&self) -> bool {
+        self.transient_p > 0.0
+            || self.slow_p > 0.0
+            || self.plan_panic_n > 0
+            || self.pool_panic_p > 0.0
+    }
+}
+
+/// Read a plan from a `[faults]` config section; `Ok(None)` when the
+/// section is absent.
+pub fn from_config(cfg: &Config) -> anyhow::Result<Option<FaultPlan>> {
+    if cfg.section_keys("faults").is_empty() {
+        return Ok(None);
+    }
+    let mut plan = FaultPlan::default();
+    plan.seed = cfg.get_usize("faults", "seed")?.unwrap_or(plan.seed as usize) as u64;
+    plan.transient_p = cfg.get_f64("faults", "transient_p")?.unwrap_or(plan.transient_p);
+    plan.transient_max =
+        cfg.get_usize("faults", "transient_max")?.unwrap_or(plan.transient_max as usize) as u64;
+    plan.slow_p = cfg.get_f64("faults", "slow_p")?.unwrap_or(plan.slow_p);
+    plan.slow_ms = cfg.get_f64("faults", "slow_ms")?.unwrap_or(plan.slow_ms);
+    plan.plan_panic_n =
+        cfg.get_usize("faults", "plan_panic_n")?.unwrap_or(plan.plan_panic_n as usize) as u64;
+    plan.pool_panic_p = cfg.get_f64("faults", "pool_panic_p")?.unwrap_or(plan.pool_panic_p);
+    plan.pool_panic_max =
+        cfg.get_usize("faults", "pool_panic_max")?.unwrap_or(plan.pool_panic_max as usize) as u64;
+    plan.validate()?;
+    Ok(Some(plan))
+}
+
+/// How many times each point has fired so far (for test assertions and
+/// the `serve` status line).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    pub transients: u64,
+    pub slowdowns: u64,
+    pub plan_panics: u64,
+    pub pool_panics: u64,
+}
+
+struct State {
+    plan: FaultPlan,
+    // One decision stream per point so firing order at one point never
+    // perturbs another.
+    transient_rng: Rng,
+    slow_rng: Rng,
+    pool_rng: Rng,
+    plan_builds: u64,
+    stats: FaultStats,
+}
+
+impl State {
+    fn new(plan: FaultPlan) -> State {
+        State {
+            plan,
+            transient_rng: Rng::new(plan.seed ^ 0x7261_6e73), // "trans"
+            slow_rng: Rng::new(plan.seed ^ 0x736c_6f77),      // "slow"
+            pool_rng: Rng::new(plan.seed ^ 0x706f_6f6c),      // "pool"
+            plan_builds: 0,
+            stats: FaultStats::default(),
+        }
+    }
+}
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static STATE: Mutex<Option<State>> = Mutex::new(None);
+
+/// The injector is process-global; tests that arm it (here, in the
+/// coordinator, in `tests/chaos.rs`) hold this lock so cargo's parallel
+/// test threads never observe each other's plans.
+#[doc(hidden)]
+pub fn serial_lock() -> std::sync::MutexGuard<'static, ()> {
+    use std::sync::OnceLock;
+    static GATE: OnceLock<Mutex<()>> = OnceLock::new();
+    GATE.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Arm the process-global injector with `plan` (replacing any previous
+/// plan and resetting its decision streams and counters).
+pub fn configure(plan: FaultPlan) {
+    let mut g = STATE.lock().unwrap();
+    ARMED.store(plan.is_armed(), Ordering::Release);
+    *g = Some(State::new(plan));
+}
+
+/// Disarm all injection points.
+pub fn disarm() {
+    let mut g = STATE.lock().unwrap();
+    ARMED.store(false, Ordering::Release);
+    *g = None;
+}
+
+/// Is any injection point live?
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Acquire)
+}
+
+/// The currently armed plan, if any.
+pub fn active_plan() -> Option<FaultPlan> {
+    STATE.lock().unwrap().as_ref().map(|s| s.plan)
+}
+
+/// Injection counters so far (zeros when disarmed).
+pub fn stats() -> FaultStats {
+    STATE.lock().unwrap().as_ref().map(|s| s.stats).unwrap_or_default()
+}
+
+/// The plan named by `TRIADA_FAULTS`, if the variable is set and parses.
+pub fn env_plan() -> Option<FaultPlan> {
+    let spec = std::env::var("TRIADA_FAULTS").ok()?;
+    if spec.trim().is_empty() {
+        return None;
+    }
+    match FaultPlan::parse(&spec) {
+        Ok(plan) => Some(plan),
+        Err(e) => {
+            eprintln!("warning: ignoring invalid TRIADA_FAULTS: {e:#}");
+            None
+        }
+    }
+}
+
+/// Arm from `TRIADA_FAULTS` when set (CLI entry point); no-op otherwise.
+pub fn init_from_env() {
+    if let Some(plan) = env_plan() {
+        configure(plan);
+    }
+}
+
+/// Injection point: should this execute attempt fail transiently?
+/// Returns the injected error when firing.
+pub fn inject_transient(site: &str) -> Option<anyhow::Error> {
+    if !armed() {
+        return None;
+    }
+    let mut g = STATE.lock().unwrap();
+    let s = g.as_mut()?;
+    if s.plan.transient_p <= 0.0 {
+        return None;
+    }
+    if s.plan.transient_max > 0 && s.stats.transients >= s.plan.transient_max {
+        return None;
+    }
+    if s.transient_rng.f64() < s.plan.transient_p {
+        s.stats.transients += 1;
+        let n = s.stats.transients;
+        return Some(anyhow::Error::new(TransientError(format!("injected at {site} (#{n})"))));
+    }
+    None
+}
+
+/// Injection point: how long should this execute attempt stall? The
+/// caller sleeps (ideally in slices, polling its job context).
+pub fn inject_slow_execute() -> Option<Duration> {
+    if !armed() {
+        return None;
+    }
+    let mut g = STATE.lock().unwrap();
+    let s = g.as_mut()?;
+    if s.plan.slow_p <= 0.0 || s.plan.slow_ms <= 0.0 {
+        return None;
+    }
+    if s.slow_rng.f64() < s.plan.slow_p {
+        s.stats.slowdowns += 1;
+        return Some(Duration::from_secs_f64(s.plan.slow_ms / 1e3));
+    }
+    None
+}
+
+/// Injection point: panics the first `plan_panic_n` plan builds.
+/// Consulted from the plan cache right before `Backend::prepare`.
+pub fn maybe_plan_build_panic() {
+    if !armed() {
+        return;
+    }
+    let fire = {
+        let mut g = STATE.lock().unwrap();
+        match g.as_mut() {
+            Some(s) if s.plan.plan_panic_n > 0 => {
+                s.plan_builds += 1;
+                let fire = s.plan_builds <= s.plan.plan_panic_n;
+                if fire {
+                    s.stats.plan_panics += 1;
+                }
+                fire
+            }
+            _ => false,
+        }
+    };
+    if fire {
+        panic!("injected plan-build panic");
+    }
+}
+
+/// Injection point: should this compute-layer pool task panic? The pool
+/// consults it for engine/shard tasks only (coordinator batch tasks own
+/// job reply channels; panicking those would turn injected faults into
+/// lost results instead of retries).
+pub fn pool_task_should_panic() -> bool {
+    if !armed() {
+        return false;
+    }
+    let mut g = STATE.lock().unwrap();
+    let Some(s) = g.as_mut() else { return false };
+    if s.plan.pool_panic_p <= 0.0 {
+        return false;
+    }
+    if s.plan.pool_panic_max > 0 && s.stats.pool_panics >= s.plan.pool_panic_max {
+        return false;
+    }
+    if s.pool_rng.f64() < s.plan.pool_panic_p {
+        s.stats.pool_panics += 1;
+        return true;
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The injector is process-global; serialize tests that arm it.
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        serial_lock()
+    }
+
+    #[test]
+    fn parse_roundtrip_and_unknown_key() {
+        let p = FaultPlan::parse("seed=7, transient_p=0.25,transient_max=3,slow_ms=2.5").unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.transient_p, 0.25);
+        assert_eq!(p.transient_max, 3);
+        assert_eq!(p.slow_ms, 2.5);
+        assert!(FaultPlan::parse("bogus_key=1").is_err());
+        assert!(FaultPlan::parse("transient_p=1.5").is_err());
+        assert!(FaultPlan::parse("transient_p").is_err());
+    }
+
+    #[test]
+    fn from_config_reads_faults_section() {
+        let cfg = Config::parse("[faults]\ntransient_p = 0.5\nplan_panic_n = 1\n").unwrap();
+        let plan = from_config(&cfg).unwrap().unwrap();
+        assert_eq!(plan.transient_p, 0.5);
+        assert_eq!(plan.plan_panic_n, 1);
+        let empty = Config::parse("[coordinator]\nworkers = 1\n").unwrap();
+        assert!(from_config(&empty).unwrap().is_none());
+    }
+
+    #[test]
+    fn disarmed_points_never_fire() {
+        let _g = lock();
+        disarm();
+        assert!(!armed());
+        assert!(inject_transient("test").is_none());
+        assert!(inject_slow_execute().is_none());
+        assert!(!pool_task_should_panic());
+        maybe_plan_build_panic(); // must not panic
+        assert_eq!(stats(), FaultStats::default());
+    }
+
+    #[test]
+    fn transient_injection_is_seeded_and_capped() {
+        let _g = lock();
+        configure(FaultPlan { seed: 9, transient_p: 1.0, transient_max: 2, ..Default::default() });
+        assert!(is_transient(&inject_transient("a").unwrap()));
+        assert!(inject_transient("b").is_some());
+        assert!(inject_transient("c").is_none(), "cap must hold");
+        assert_eq!(stats().transients, 2);
+
+        // Same seed, same decision stream.
+        configure(FaultPlan { transient_p: 0.5, transient_max: 0, seed: 9, ..Default::default() });
+        let first: Vec<bool> = (0..32).map(|_| inject_transient("x").is_some()).collect();
+        configure(FaultPlan { transient_p: 0.5, transient_max: 0, seed: 9, ..Default::default() });
+        let second: Vec<bool> = (0..32).map(|_| inject_transient("x").is_some()).collect();
+        assert_eq!(first, second);
+        disarm();
+    }
+
+    #[test]
+    fn plan_build_panic_fires_exactly_n_times() {
+        let _g = lock();
+        configure(FaultPlan { plan_panic_n: 1, ..Default::default() });
+        let r = std::panic::catch_unwind(maybe_plan_build_panic);
+        assert!(r.is_err(), "first build must panic");
+        maybe_plan_build_panic(); // second build sails through
+        assert_eq!(stats().plan_panics, 1);
+        disarm();
+    }
+
+    #[test]
+    fn is_transient_sees_through_context() {
+        let e = anyhow::Error::new(TransientError("x".into())).context("while serving");
+        assert!(is_transient(&e));
+        assert!(!is_transient(&anyhow::anyhow!("permanent")));
+    }
+}

@@ -49,6 +49,7 @@ use super::CoeffSet;
 use crate::pool::{ComputePool, Layer};
 use crate::tensor::{Mat, Scalar, Tensor3};
 use crate::transforms::TransformKind;
+use crate::util::{JobContext, JobError};
 
 /// Engine knobs (file form: `[engine] threads / block`, see
 /// [`crate::config::Config::engine_settings`]).
@@ -158,11 +159,42 @@ pub fn gemt_engine_on<T: Scalar>(
     cs: &CoeffSet<T>,
     config: &EngineConfig,
 ) -> Tensor3<T> {
+    gemt_engine_on_ctx(pool, x, cs, config, &JobContext::default())
+        .expect("default context never interrupts")
+}
+
+/// Three-stage 3D-GEMT with cooperative cancellation: the caller's
+/// [`JobContext`] is polled at the phase boundaries (before Phase A and
+/// at the Phase A → Phase B hand-off), so a canceled or expired request
+/// stops burning pool time at the next checkpoint instead of finishing
+/// the transform. A run either completes — bit-identical to the scalar
+/// path, exactly as [`gemt_engine_on`] — or returns the typed
+/// [`JobError`] and discards its partial state; no torn output is ever
+/// observable.
+pub fn gemt_engine_ctx<T: Scalar>(
+    x: &Tensor3<T>,
+    cs: &CoeffSet<T>,
+    config: &EngineConfig,
+    ctx: &JobContext,
+) -> Result<Tensor3<T>, JobError> {
+    gemt_engine_on_ctx(crate::pool::global(), x, cs, config, ctx)
+}
+
+/// [`gemt_engine_ctx`] on an explicit compute pool.
+pub fn gemt_engine_on_ctx<T: Scalar>(
+    pool: &ComputePool,
+    x: &Tensor3<T>,
+    cs: &CoeffSet<T>,
+    config: &EngineConfig,
+    ctx: &JobContext,
+) -> Result<Tensor3<T>, JobError> {
     let (n1, n2, n3) = x.shape();
     assert_eq!(cs.input_shape(), (n1, n2, n3));
     let (k1s, k2s, k3s) = cs.output_shape();
     let parallelism = if config.threads > 0 { config.threads } else { pool.width() }.max(1);
     let block = config.block.max(1);
+
+    ctx.checkpoint()?;
 
     // Phase A — Stage I (Eq. 6.1): ẋ[i,j,:] = Σ_step x[i,j,step]·c3[step,:].
     // Panel tasks own disjoint contiguous (i,j) row-blocks of ẋ.
@@ -175,6 +207,10 @@ pub fn gemt_engine_on<T: Scalar>(
         });
     }
 
+    // The Stage I → Stage II hand-off is the one real barrier of the run —
+    // the natural cancellation checkpoint between the two phases.
+    ctx.checkpoint()?;
+
     // Phase B — Stages II+III fused (Eq. 6.2–6.3): panel tasks own disjoint
     // k1 row-blocks of the final tensor end-to-end, so the two stages
     // pipeline within each task with no barrier or lock between them.
@@ -186,7 +222,7 @@ pub fn gemt_engine_on<T: Scalar>(
             stage23_panel(s1_ref, cs, first_k1, panel, block)
         });
     }
-    out
+    Ok(out)
 }
 
 /// Run one phase's row-band panels. A single panel (tiny problem, or
@@ -474,6 +510,33 @@ mod tests {
         // Phase A has 2 rows (≤ 2 tasks); Phase B has 1 row (inline, 0 tasks).
         assert!(stats.submitted <= 2, "submitted {} tasks for 2+1 rows", stats.submitted);
         pool.shutdown();
+    }
+
+    #[test]
+    fn canceled_context_stops_at_first_checkpoint() {
+        let (x, cs) = case((4, 4, 4), (4, 4, 4), 509);
+        let ctx = JobContext::new();
+        ctx.cancel.cancel();
+        let r = gemt_engine_ctx(&x, &cs, &EngineConfig::default(), &ctx);
+        assert!(matches!(r, Err(JobError::Canceled)));
+    }
+
+    #[test]
+    fn expired_context_is_deadline_exceeded() {
+        use std::time::{Duration, Instant};
+        let (x, cs) = case((4, 4, 4), (4, 4, 4), 510);
+        let ctx = JobContext::with_deadline(Instant::now() - Duration::from_millis(1));
+        let r = gemt_engine_ctx(&x, &cs, &EngineConfig::default(), &ctx);
+        assert!(matches!(r, Err(JobError::DeadlineExceeded)));
+    }
+
+    #[test]
+    fn live_context_completes_bit_identical() {
+        let (x, cs) = case((5, 4, 6), (5, 4, 6), 511);
+        let want = gemt_outer(&x, &cs);
+        let got = gemt_engine_ctx(&x, &cs, &EngineConfig::with_threads(3), &JobContext::new())
+            .expect("live context must complete");
+        assert_eq!(got.max_abs_diff(&want), 0.0);
     }
 
     #[test]

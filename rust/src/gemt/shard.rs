@@ -56,12 +56,13 @@
 //! assert_eq!(sharded.max_abs_diff(&gemt_outer(&x, &cs)), 0.0);
 //! ```
 
-use super::engine::{gemt_engine_with, stage1_panel, EngineConfig};
+use super::engine::{gemt_engine_ctx, stage1_panel, EngineConfig};
 use super::split::SplitCoeffs;
 use super::CoeffSet;
 use crate::pool::{self, Layer};
 use crate::tensor::{Mat, Scalar, Tensor3};
 use crate::transforms::TransformKind;
+use crate::util::{JobContext, JobError};
 
 /// Default row/column bound of one engine tile pass — the serving-path
 /// analog of the device grid edge (a problem with every dimension at most
@@ -199,11 +200,29 @@ fn run_tiles<T: Scalar>(
     tiles: Vec<Tile<'_, T>>,
     job: impl Fn(usize, &mut [T]) + Sync,
 ) {
+    run_tiles_ctx(threads, tiles, &JobContext::default(), job)
+}
+
+/// [`run_tiles`] with a per-tile cancellation checkpoint: each tile pass
+/// polls `ctx` before touching its panel and becomes a no-op once the
+/// job is canceled or expired, so a mid-stage interrupt stops at the
+/// next tile boundary instead of finishing the stage. The caller
+/// discards the (partially written) stage output after its own
+/// checkpoint fails — skipped panels are never observed.
+fn run_tiles_ctx<T: Scalar>(
+    threads: usize,
+    tiles: Vec<Tile<'_, T>>,
+    ctx: &JobContext,
+    job: impl Fn(usize, &mut [T]) + Sync,
+) {
     if tiles.is_empty() {
         return;
     }
     if threads <= 1 || tiles.len() == 1 {
         for t in tiles {
+            if ctx.interrupted().is_some() {
+                return;
+            }
             job(t.first_row, t.panel);
         }
         return;
@@ -211,7 +230,12 @@ fn run_tiles<T: Scalar>(
     let job = &job;
     pool::global().scope(Layer::Shard, |s| {
         for t in tiles {
-            s.spawn(move || job(t.first_row, t.panel));
+            s.spawn(move || {
+                if ctx.interrupted().is_some() {
+                    return;
+                }
+                job(t.first_row, t.panel)
+            });
         }
     });
 }
@@ -317,6 +341,23 @@ pub fn gemt_sharded_planned<T: Scalar>(
     config: &ShardConfig,
     plan: &ShardPlan,
 ) -> Tensor3<T> {
+    gemt_sharded_planned_ctx(x, cs, config, plan, &JobContext::default())
+        .expect("default context never interrupts")
+}
+
+/// [`gemt_sharded_planned`] with cooperative cancellation: the job's
+/// [`JobContext`] is polled between the three stages and at every tile
+/// boundary within a stage, so a canceled or expired request stops at
+/// the next checkpoint. A run either completes bit-identical to
+/// [`super::outer::gemt_outer`] or returns the typed [`JobError`] and
+/// discards all partial stage state.
+pub fn gemt_sharded_planned_ctx<T: Scalar>(
+    x: &Tensor3<T>,
+    cs: &CoeffSet<T>,
+    config: &ShardConfig,
+    plan: &ShardPlan,
+    ctx: &JobContext,
+) -> Result<Tensor3<T>, JobError> {
     let (n1, n2, n3) = x.shape();
     assert_eq!(cs.input_shape(), (n1, n2, n3));
     let (k1s, k2s, k3s) = cs.output_shape();
@@ -328,39 +369,44 @@ pub fn gemt_sharded_planned<T: Scalar>(
     );
     let threads = config.engine.effective_threads().max(1);
     if !plan.needs_sharding() {
-        return gemt_engine_with(x, cs, &config.engine);
+        return gemt_engine_ctx(x, cs, &config.engine, ctx);
     }
     let block = config.engine.block.max(1);
+
+    ctx.checkpoint()?;
 
     // Stage I (Eq. 6.1) = mode-3 product with C₃: ẋ (N1,N2,K3).
     let mut s1 = Tensor3::<T>::zeros(n1, n2, k3s);
     {
         let tiles = row_tiles(s1.data_mut(), k3s, plan.band[0]);
-        run_tiles(threads, tiles, |first, panel| {
+        run_tiles_ctx(threads, tiles, ctx, |first, panel| {
             stage1_panel(x, &cs.c3, first, panel, n2, block)
         });
     }
+    ctx.checkpoint()?;
 
     // Stage II (Eq. 6.2) = mode-1 product with C₁: ẍ (K1,N2,K3).
     let mut s2 = Tensor3::<T>::zeros(k1s, n2, k3s);
     {
         let s1_ref = &s1;
         let tiles = row_tiles(s2.data_mut(), k3s, plan.band[1]);
-        run_tiles(threads, tiles, |first, panel| {
+        run_tiles_ctx(threads, tiles, ctx, |first, panel| {
             stage2_panel(s1_ref, &cs.c1, first, panel, n2, block)
         });
     }
+    ctx.checkpoint()?;
 
     // Stage III (Eq. 6.3) = mode-2 product with C₂: final (K1,K2,K3).
     let mut out = Tensor3::<T>::zeros(k1s, k2s, k3s);
     {
         let s2_ref = &s2;
         let tiles = row_tiles(out.data_mut(), k3s, plan.band[2]);
-        run_tiles(threads, tiles, |first, panel| {
+        run_tiles_ctx(threads, tiles, ctx, |first, panel| {
             stage3_panel(s2_ref, &cs.c2, first, panel, k2s, block)
         });
     }
-    out
+    ctx.checkpoint()?;
+    Ok(out)
 }
 
 /// Tiled parallel mode-1 product, bit-identical to
@@ -454,6 +500,18 @@ impl Sharder {
         gemt_sharded_planned(x, cs, &self.config, plan)
     }
 
+    /// [`Sharder::run_planned`] with cooperative cancellation at stage
+    /// and tile checkpoints ([`gemt_sharded_planned_ctx`]).
+    pub fn run_planned_ctx<T: Scalar>(
+        &self,
+        x: &Tensor3<T>,
+        cs: &CoeffSet<T>,
+        plan: &ShardPlan,
+        ctx: &JobContext,
+    ) -> Result<Tensor3<T>, JobError> {
+        gemt_sharded_planned_ctx(x, cs, &self.config, plan, ctx)
+    }
+
     /// Forward 3D-DXT on the sharded engine path.
     pub fn dxt3d_forward(&self, x: &Tensor3<f64>, kind: TransformKind) -> Tensor3<f64> {
         let (n1, n2, n3) = x.shape();
@@ -503,13 +561,44 @@ impl Sharder {
         im: &Tensor3<f64>,
         coeffs: &SplitCoeffs,
     ) -> (Tensor3<f64>, Tensor3<f64>) {
-        let prod = |t: &Tensor3<f64>, c: &Mat<f64>, mode: u8| match mode {
-            1 => mode1_sharded(t, c, &self.config),
-            2 => mode2_sharded(t, c, &self.config),
-            3 => mode3_sharded(t, c, &self.config),
-            _ => unreachable!("mode must be 1, 2, or 3"),
+        self.dft3d_split_planned_ctx(re, im, coeffs, &JobContext::default())
+            .expect("default context never interrupts")
+    }
+
+    /// [`Sharder::dft3d_split_planned`] with cooperative cancellation:
+    /// the job's [`JobContext`] is polled before each of the twelve real
+    /// mode products (an interrupted product short-circuits to a zero
+    /// tensor of the right shape, never computed against), and the typed
+    /// [`JobError`] is returned once the chain finishes unwinding.
+    pub fn dft3d_split_planned_ctx(
+        &self,
+        re: &Tensor3<f64>,
+        im: &Tensor3<f64>,
+        coeffs: &SplitCoeffs,
+        ctx: &JobContext,
+    ) -> Result<(Tensor3<f64>, Tensor3<f64>), JobError> {
+        let prod = |t: &Tensor3<f64>, c: &Mat<f64>, mode: u8| {
+            if ctx.interrupted().is_some() {
+                // Skip the remaining products; shapes must stay coherent
+                // so the chain unwinds without panicking. The result is
+                // discarded at the checkpoint below.
+                let (n1, n2, n3) = t.shape();
+                return match mode {
+                    1 => Tensor3::zeros(c.cols(), n2, n3),
+                    2 => Tensor3::zeros(n1, c.cols(), n3),
+                    _ => Tensor3::zeros(n1, n2, c.cols()),
+                };
+            }
+            match mode {
+                1 => mode1_sharded(t, c, &self.config),
+                2 => mode2_sharded(t, c, &self.config),
+                3 => mode3_sharded(t, c, &self.config),
+                _ => unreachable!("mode must be 1, 2, or 3"),
+            }
         };
-        super::split::dft3d_split_planned(re, im, coeffs, &prod)
+        let (out_re, out_im) = super::split::dft3d_split_planned(re, im, coeffs, &prod);
+        ctx.checkpoint()?;
+        Ok((out_re, out_im))
     }
 }
 
@@ -670,6 +759,40 @@ mod tests {
         assert_eq!(ShardConfig::from_config(&empty).unwrap(), ShardConfig::default());
         let bad = crate::config::Config::parse("[engine]\nmax_tile = 0\n").unwrap();
         assert!(ShardConfig::from_config(&bad).is_err());
+    }
+
+    #[test]
+    fn canceled_context_stops_sharded_run() {
+        let (x, cs) = case((12, 12, 12), (12, 12, 12), 708);
+        let c = cfg(4, 2);
+        let plan = ShardPlan::new((12, 12, 12), (12, 12, 12), 4, 2);
+        let ctx = JobContext::new();
+        ctx.cancel.cancel();
+        let r = gemt_sharded_planned_ctx(&x, &cs, &c, &plan, &ctx);
+        assert!(matches!(r, Err(JobError::Canceled)));
+    }
+
+    #[test]
+    fn expired_context_stops_split_dft() {
+        use std::time::{Duration, Instant};
+        let mut rng = Rng::new(709);
+        let re = Tensor3::random(6, 5, 7, &mut rng);
+        let im = Tensor3::random(6, 5, 7, &mut rng);
+        let sharder = Sharder::new(cfg(3, 2));
+        let coeffs = SplitCoeffs::new(re.shape(), false);
+        let ctx = JobContext::with_deadline(Instant::now() - Duration::from_millis(1));
+        let r = sharder.dft3d_split_planned_ctx(&re, &im, &coeffs, &ctx);
+        assert!(matches!(r, Err(JobError::DeadlineExceeded)));
+    }
+
+    #[test]
+    fn live_context_sharded_run_bit_identical() {
+        let (x, cs) = case((12, 12, 12), (12, 12, 12), 710);
+        let c = cfg(4, 2);
+        let plan = ShardPlan::new((12, 12, 12), (12, 12, 12), 4, 2);
+        let got = gemt_sharded_planned_ctx(&x, &cs, &c, &plan, &JobContext::new())
+            .expect("live context must complete");
+        assert_eq!(got.max_abs_diff(&gemt_outer(&x, &cs)), 0.0);
     }
 
     #[test]

@@ -18,7 +18,9 @@
 //!   serving-style coordinator ([`coordinator`]) that batches and routes
 //!   transform jobs. Python never runs on the request path. All CPU
 //!   parallelism — engine panels, shard tiles, coordinator batches — runs
-//!   on one process-wide work-stealing compute pool ([`pool`]).
+//!   on one process-wide work-stealing compute pool ([`pool`]), and the
+//!   whole request path is exercised under deterministic fault injection
+//!   ([`faults`]).
 //!
 //! ## Quick start
 //!
@@ -37,6 +39,7 @@ pub mod bench;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod faults;
 pub mod fft;
 pub mod gemt;
 pub mod pool;

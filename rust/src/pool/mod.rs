@@ -706,6 +706,19 @@ impl<'scope> Scope<'scope> {
     pub fn spawn(&self, body: impl FnOnce() + Send + 'scope) {
         *self.state.pending.lock().unwrap() += 1;
         let state = Arc::clone(&self.state);
+        let layer = self.layer;
+        let body = move || {
+            // Fault-injection point: compute-layer (engine/shard) tasks
+            // only. The panic lands inside this task's catch_unwind, so
+            // the scope still settles and re-raises at its caller — the
+            // path the dispatcher's retry/failover must absorb.
+            if matches!(layer, Layer::Engine | Layer::Shard)
+                && crate::faults::pool_task_should_panic()
+            {
+                panic!("injected pool-task panic");
+            }
+            body()
+        };
         let task: Box<dyn FnOnce() + Send + 'scope> = Box::new(move || {
             if let Err(p) = catch_unwind(AssertUnwindSafe(body)) {
                 // First panic wins; later ones are dropped (same policy as

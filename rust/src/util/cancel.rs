@@ -1,0 +1,204 @@
+//! Cooperative cancellation and deadlines for in-flight work.
+//!
+//! A [`JobContext`] rides with every request from submit to the innermost
+//! phase/tile checkpoints of the GEMT engine: layers call
+//! [`JobContext::checkpoint`] between units of work and bail out with a
+//! typed [`JobError`] the moment the request is canceled or its deadline
+//! passes. Checkpoints are purely cooperative — nothing is ever torn down
+//! mid-write, so a run either completes bit-identical to the scalar
+//! reference or stops cleanly between phases.
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Shared cancellation flag; cloning yields another handle to the same
+/// flag, so a caller can keep one clone and cancel a job it already
+/// submitted.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken {
+    flag: Arc<AtomicBool>,
+}
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Request cancellation; idempotent, wakes nothing (checkpoints poll).
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::Release);
+    }
+
+    pub fn is_canceled(&self) -> bool {
+        self.flag.load(Ordering::Acquire)
+    }
+
+    /// A weak handle for registries (e.g. the coordinator's straggler
+    /// list) that must not keep finished jobs' tokens alive.
+    pub fn downgrade(&self) -> WeakCancelToken {
+        WeakCancelToken { flag: Arc::downgrade(&self.flag) }
+    }
+}
+
+/// Weak counterpart of [`CancelToken`]: cancels the job only if some
+/// strong handle (the in-flight context or the caller's [`CancelToken`])
+/// is still alive; dead entries prune themselves.
+#[derive(Clone, Debug)]
+pub struct WeakCancelToken {
+    flag: std::sync::Weak<AtomicBool>,
+}
+
+impl WeakCancelToken {
+    /// Cancel if the token is still alive; returns whether it was.
+    pub fn cancel(&self) -> bool {
+        match self.flag.upgrade() {
+            Some(flag) => {
+                flag.store(true, Ordering::Release);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Is any strong handle still alive?
+    pub fn is_live(&self) -> bool {
+        self.flag.strong_count() > 0
+    }
+}
+
+/// Why a job stopped before producing outputs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobError {
+    /// The caller canceled via [`CancelToken::cancel`].
+    Canceled,
+    /// The deadline in the job's [`JobContext`] passed.
+    DeadlineExceeded,
+}
+
+impl fmt::Display for JobError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JobError::Canceled => write!(f, "job canceled"),
+            JobError::DeadlineExceeded => write!(f, "job deadline exceeded"),
+        }
+    }
+}
+
+impl std::error::Error for JobError {}
+
+/// Per-request execution context: an optional absolute deadline plus a
+/// cancellation token. The default context never interrupts anything.
+#[derive(Clone, Debug, Default)]
+pub struct JobContext {
+    /// Absolute instant past which the job must not keep computing.
+    pub deadline: Option<Instant>,
+    /// Cooperative cancellation flag.
+    pub cancel: CancelToken,
+}
+
+impl JobContext {
+    /// A context with no deadline and a fresh token.
+    pub fn new() -> JobContext {
+        JobContext::default()
+    }
+
+    /// A context expiring at an absolute instant.
+    pub fn with_deadline(deadline: Instant) -> JobContext {
+        JobContext { deadline: Some(deadline), cancel: CancelToken::new() }
+    }
+
+    /// A context expiring `timeout` from now.
+    pub fn deadline_in(timeout: Duration) -> JobContext {
+        JobContext::with_deadline(Instant::now() + timeout)
+    }
+
+    /// Has the deadline (if any) passed?
+    pub fn expired(&self) -> bool {
+        self.deadline.is_some_and(|d| Instant::now() >= d)
+    }
+
+    /// Time left until the deadline (None = no deadline; zero = expired).
+    pub fn remaining(&self) -> Option<Duration> {
+        self.deadline.map(|d| d.saturating_duration_since(Instant::now()))
+    }
+
+    /// Why this job should stop, if it should. Cancellation wins over
+    /// expiry when both hold (the caller's explicit signal is the more
+    /// specific one).
+    pub fn interrupted(&self) -> Option<JobError> {
+        if self.cancel.is_canceled() {
+            Some(JobError::Canceled)
+        } else if self.expired() {
+            Some(JobError::DeadlineExceeded)
+        } else {
+            None
+        }
+    }
+
+    /// The cooperative checkpoint: call between phases/tiles, propagate
+    /// the error to stop.
+    pub fn checkpoint(&self) -> Result<(), JobError> {
+        match self.interrupted() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_context_never_interrupts() {
+        let ctx = JobContext::new();
+        assert!(ctx.checkpoint().is_ok());
+        assert!(!ctx.expired());
+        assert_eq!(ctx.remaining(), None);
+    }
+
+    #[test]
+    fn cancel_is_shared_across_clones() {
+        let ctx = JobContext::new();
+        let handle = ctx.cancel.clone();
+        assert!(ctx.checkpoint().is_ok());
+        handle.cancel();
+        assert_eq!(ctx.checkpoint(), Err(JobError::Canceled));
+    }
+
+    #[test]
+    fn deadline_expiry_is_typed() {
+        let ctx = JobContext::with_deadline(Instant::now() - Duration::from_millis(1));
+        assert!(ctx.expired());
+        assert_eq!(ctx.checkpoint(), Err(JobError::DeadlineExceeded));
+        assert_eq!(ctx.remaining(), Some(Duration::ZERO));
+    }
+
+    #[test]
+    fn cancel_wins_over_expiry() {
+        let ctx = JobContext::with_deadline(Instant::now() - Duration::from_millis(1));
+        ctx.cancel.cancel();
+        assert_eq!(ctx.checkpoint(), Err(JobError::Canceled));
+    }
+
+    #[test]
+    fn future_deadline_does_not_interrupt() {
+        let ctx = JobContext::deadline_in(Duration::from_secs(3600));
+        assert!(ctx.checkpoint().is_ok());
+        assert!(ctx.remaining().unwrap() > Duration::from_secs(3000));
+    }
+
+    #[test]
+    fn weak_token_cancels_only_while_live() {
+        let ctx = JobContext::new();
+        let weak = ctx.cancel.downgrade();
+        assert!(weak.is_live());
+        assert!(weak.cancel());
+        assert_eq!(ctx.checkpoint(), Err(JobError::Canceled));
+        drop(ctx);
+        assert!(!weak.is_live());
+        assert!(!weak.cancel(), "dead token must report itself prunable");
+    }
+}

@@ -2,11 +2,13 @@
 //! human-readable formatting. These exist because the offline build has no
 //! `rand`/`criterion`; see DESIGN.md §Substitutions.
 
+pub mod cancel;
 pub mod human;
 pub mod rng;
 pub mod stats;
 pub mod timer;
 
+pub use cancel::{CancelToken, JobContext, JobError, WeakCancelToken};
 pub use rng::Rng;
 pub use stats::Summary;
 pub use timer::Timer;

@@ -8,7 +8,8 @@ use std::time::Duration;
 use triada::coordinator::backend::{reference_execute, Backend, ReferenceBackend, SimBackend};
 use triada::coordinator::batcher::BatchPolicy;
 use triada::coordinator::{
-    Coordinator, CoordinatorConfig, Plan, PlanSpec, TransformJob, WaitOutcome,
+    Coordinator, CoordinatorConfig, JobError, Plan, PlanSpec, SubmitError, TransformJob,
+    WaitOutcome,
 };
 use triada::gemt;
 use triada::runtime::Direction;
@@ -121,8 +122,11 @@ fn try_submit_sheds_load_when_full() {
     for _ in 0..200 {
         let x = Tensor3::random(12, 12, 12, &mut rng).to_f32();
         match c.try_submit(TransformJob::new(TransformKind::Dht, Direction::Forward, vec![x])) {
-            Some(h) => accepted.push(h),
-            None => rejected += 1,
+            Ok(h) => accepted.push(h),
+            Err(e) => {
+                assert!(matches!(e, SubmitError::QueueFull(_)), "unexpected rejection: {e}");
+                rejected += 1;
+            }
         }
     }
     for h in accepted {
@@ -239,9 +243,10 @@ impl Backend for GatedBackend {
     }
 }
 
-/// Backend whose worker dies mid-job — the "coordinator dropped the job"
-/// case `wait_timeout` must distinguish from an ordinary timeout. Planning
-/// succeeds; the crash is injected at execute time.
+/// Backend whose execute panics on every call. Planning succeeds; the
+/// crash is injected at execute time. The dispatcher must catch the
+/// panic, retry, and ultimately fail the job over to the reference
+/// backend — a handle must never observe `Disconnected`.
 struct PanickingBackend;
 
 struct PanickingPlan {
@@ -309,27 +314,70 @@ fn wait_timeout_reports_in_flight_jobs_as_timed_out() {
 }
 
 #[test]
-fn wait_timeout_reports_dropped_jobs_as_disconnected() {
+fn panicking_backend_retries_then_fails_over_to_reference() {
     let c = Coordinator::start(config(1, 8, 1), Arc::new(PanickingBackend));
     let mut rng = Rng::new(41);
-    let x = Tensor3::random(4, 4, 4, &mut rng).to_f32();
+    let x = Tensor3::random(4, 4, 4, &mut rng);
     let h = c
-        .submit(TransformJob::new(TransformKind::Dct2, Direction::Forward, vec![x]))
+        .submit(TransformJob::new(TransformKind::Dct2, Direction::Forward, vec![x.to_f32()]))
         .unwrap();
-    // The worker crashes on this job, dropping the reply channel: the
-    // handle must surface Disconnected (never Ready, never an eternal
-    // TimedOut loop).
-    let mut disconnected = false;
-    for _ in 0..2000 {
-        match h.wait_timeout(Duration::from_millis(10)) {
-            WaitOutcome::Disconnected => {
-                disconnected = true;
-                break;
-            }
-            WaitOutcome::TimedOut => continue,
-            WaitOutcome::Ready(res) => panic!("crashed worker produced result {}", res.id),
-        }
-    }
-    assert!(disconnected, "dropped job never reported Disconnected");
+    // The backend crashes on every attempt. The dispatcher catches each
+    // panic, retries with backoff, then fails over to the reference
+    // backend — so the handle resolves Ready/Ok, never Disconnected.
+    let res = h.wait().expect("handle must resolve, not disconnect");
+    let out = res.outputs.expect("failover must recover the job");
+    assert_eq!(res.backend, "cpu-reference", "result should come from the failover backend");
+    let want = gemt::dxt3d_forward(&x.to_f32().to_f64(), TransformKind::Dct2);
+    assert!(out[0].to_f64().max_abs_diff(&want) < 1e-3);
+    let snap = c.metrics();
+    assert!(snap.retries >= 1, "panic should be retried, got {}", snap.retries);
+    assert_eq!(snap.failovers, 1, "exhausted retries should fail over once");
+    assert_eq!(snap.completed, 1);
+    assert_eq!(snap.failed, 0);
+    assert!(
+        snap.fallback_reasons.iter().any(|r| r.contains("panicking")),
+        "failover should be recorded as a degradation notice: {:?}",
+        snap.fallback_reasons
+    );
+    c.shutdown();
+}
+
+#[test]
+fn canceled_queued_job_resolves_typed_while_worker_is_busy() {
+    // One in-flight batch at a time; the gate keeps job A on the worker so
+    // job B is still queued (or waiting for a dispatch slot) when we cancel
+    // it. B must resolve with a typed JobError::Canceled at its next
+    // checkpoint — never hang, never complete as if nothing happened.
+    let gate = Arc::new(AtomicBool::new(false));
+    let c = Coordinator::start(
+        config(1, 8, 1),
+        Arc::new(GatedBackend { open: gate.clone() }),
+    );
+    let mut rng = Rng::new(42);
+    let a = c
+        .submit(TransformJob::new(
+            TransformKind::Dct2,
+            Direction::Forward,
+            vec![Tensor3::random(4, 4, 4, &mut rng).to_f32()],
+        ))
+        .unwrap();
+    let b = c
+        .submit(TransformJob::new(
+            TransformKind::Dht,
+            Direction::Forward,
+            vec![Tensor3::random(4, 4, 4, &mut rng).to_f32()],
+        ))
+        .unwrap();
+    // Let A reach the gated execute so B sits behind it, then cancel B.
+    std::thread::sleep(Duration::from_millis(20));
+    b.cancel();
+    gate.store(true, Ordering::SeqCst);
+    let res_b = b.wait().unwrap();
+    assert_eq!(res_b.job_error(), Some(JobError::Canceled));
+    assert!(a.wait().unwrap().outputs.is_ok());
+    let snap = c.metrics();
+    assert_eq!(snap.canceled, 1);
+    assert_eq!(snap.completed, 1);
+    assert_eq!(snap.failed, 0);
     c.shutdown();
 }
