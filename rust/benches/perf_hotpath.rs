@@ -9,6 +9,9 @@
 //!   baseline (default: `BENCH_pool.json` in the working directory, read
 //!   before this run overwrites it). A warm-pool speedup more than 25%
 //!   below the baseline's aborts the bench.
+//! * `TRIADA_BENCH_KERNEL_BASELINE` — same for the microkernel sweep
+//!   (default: `BENCH_kernels.json`). A wide-kernel speedup more than 25%
+//!   below the baseline's aborts the bench.
 
 use std::sync::Arc;
 
@@ -250,6 +253,221 @@ fn main() {
         Ok(()) => println!("wrote {json_path} ({} shapes)", pool_rows.len()),
         Err(e) => println!("warning: could not write {json_path}: {e}"),
     }
+
+    // ---- microkernels: scalar rank-1 loop vs wide 4-step blocks ---------
+    //
+    // Scalar = the reference rank-1 update per summation step. Wide = the
+    // same per-element operation sequence, four steps blocked into one
+    // register-resident pass over the destination row (gemt::kernels).
+    // Both produce bit-identical output; the gap is the per-step
+    // store→load round trip the blocking eliminates.
+    let kernel_rows = bench_kernels(&cfg, &mut rng);
+    check_kernels_regression(&kernel_rows);
+    let json = kernel_rows_json(&kernel_rows);
+    let json_path = "BENCH_kernels.json";
+    match std::fs::write(json_path, &json) {
+        Ok(()) => println!("wrote {json_path} ({} rows)", kernel_rows.len()),
+        Err(e) => println!("warning: could not write {json_path}: {e}"),
+    }
+}
+
+/// One scalar-vs-wide kernel measurement of a mode product at a shape.
+struct KernelRow {
+    label: &'static str,
+    dtype: &'static str,
+    shape: (usize, usize, usize),
+    scalar_s: f64,
+    wide_s: f64,
+}
+
+impl KernelRow {
+    fn speedup(&self) -> f64 {
+        self.scalar_s / self.wide_s
+    }
+}
+
+/// Measure the forced-scalar vs forced-wide kernel on `mode3_product` —
+/// exactly the Stage-I inner loops: contiguous rows, one row per step —
+/// at the acceptance 32³ shape (f64 and f32) and a ragged remainder-heavy
+/// shape. Asserts wide is never slower, and ≥1.5× on contiguous 32³ f64
+/// rows when an arch-accelerated lowering is available.
+fn bench_kernels(cfg: &BenchConfig, rng: &mut Rng) -> Vec<KernelRow> {
+    use triada::gemt::kernels::{self, KernelKind};
+
+    let mut t = Table::new(
+        "perf: microkernels, forced scalar vs forced wide (mode3_product)",
+        &["case", "scalar", "wide", "wide speedup"],
+    );
+    let mut rows = Vec::new();
+
+    let mut run = |label: &'static str,
+                   dtype: &'static str,
+                   shape: (usize, usize, usize),
+                   rows: &mut Vec<KernelRow>,
+                   t: &mut Table,
+                   scalar_s: f64,
+                   wide_s: f64| {
+        let row = KernelRow { label, dtype, shape, scalar_s, wide_s };
+        t.row(&[
+            format!("{label} {dtype}"),
+            human::duration(row.scalar_s),
+            human::duration(row.wide_s),
+            format!("{:.3}x", row.speedup()),
+        ]);
+        rows.push(row);
+    };
+
+    // 32³ f64 — the acceptance row: 32·32 contiguous len-32 rows × 32 steps.
+    let n = 32;
+    let x = Tensor3::random(n, n, n, rng);
+    let c = Mat::random(n, n, rng);
+    kernels::force_kernel(Some(KernelKind::Scalar));
+    let scalar = bench(cfg, || {
+        black_box(mode3_product(black_box(&x), black_box(&c)));
+    });
+    kernels::force_kernel(Some(KernelKind::Wide));
+    let wide = bench(cfg, || {
+        black_box(mode3_product(black_box(&x), black_box(&c)));
+    });
+    run("mode3 32³", "f64", (n, n, n), &mut rows, &mut t, scalar.median_s(), wide.median_s());
+
+    // 32³ f32 — same shape, narrower lanes.
+    let x32 = x.to_f32();
+    let c32 = c.map(|v| v as f32);
+    kernels::force_kernel(Some(KernelKind::Scalar));
+    let scalar = bench(cfg, || {
+        black_box(mode3_product(black_box(&x32), black_box(&c32)));
+    });
+    kernels::force_kernel(Some(KernelKind::Wide));
+    let wide = bench(cfg, || {
+        black_box(mode3_product(black_box(&x32), black_box(&c32)));
+    });
+    run("mode3 32³", "f32", (n, n, n), &mut rows, &mut t, scalar.median_s(), wide.median_s());
+
+    // Ragged 24×24×37 f64 — rows not a multiple of any lane width, step
+    // count not a multiple of the 4-step block: exercises every tail path.
+    let (r1, r2, r3) = (24, 24, 37);
+    let xr = Tensor3::random(r1, r2, r3, rng);
+    let cr = Mat::random(r3, r3, rng);
+    kernels::force_kernel(Some(KernelKind::Scalar));
+    let scalar = bench(cfg, || {
+        black_box(mode3_product(black_box(&xr), black_box(&cr)));
+    });
+    kernels::force_kernel(Some(KernelKind::Wide));
+    let wide = bench(cfg, || {
+        black_box(mode3_product(black_box(&xr), black_box(&cr)));
+    });
+    run("mode3 24·24·37", "f64", (r1, r2, r3), &mut rows, &mut t, scalar.median_s(), wide.median_s());
+
+    kernels::force_kernel(None);
+    t.print();
+
+    // Bit-identity of the two kinds on the acceptance shape (cheap spot
+    // check; the exhaustive version lives in tests/kernels.rs).
+    kernels::force_kernel(Some(KernelKind::Scalar));
+    let ys = mode3_product(&x, &c);
+    kernels::force_kernel(Some(KernelKind::Wide));
+    let yw = mode3_product(&x, &c);
+    kernels::force_kernel(None);
+    assert_eq!(ys.max_abs_diff(&yw), 0.0, "scalar and wide kernels must be bit-identical");
+
+    // Wide must never lose to scalar (noise allowance only); the strong
+    // ≥1.5× bound applies to contiguous 32³ f64 rows when the wide path
+    // has an arch-accelerated lowering (AVX2/NEON).
+    let allow = if smoke() { 1.10 } else { 1.02 };
+    for row in &rows {
+        assert!(
+            row.wide_s < row.scalar_s * allow,
+            "{} {}: wide kernel ({:.3e}s) must not lose to scalar ({:.3e}s)",
+            row.label,
+            row.dtype,
+            row.wide_s,
+            row.scalar_s
+        );
+    }
+    if kernels::accelerated() {
+        let acc = &rows[0];
+        assert!(
+            acc.speedup() >= 1.5,
+            "wide f64 kernel must be ≥1.5x scalar on contiguous 32³ rows \
+             (got {:.3}x on isa {})",
+            acc.speedup(),
+            kernels::isa()
+        );
+    } else {
+        println!("kernels: no arch-accelerated lowering on this host; 1.5x gate skipped");
+    }
+    rows
+}
+
+/// Compare this run's wide-kernel speedups against the committed baseline
+/// (`TRIADA_BENCH_KERNEL_BASELINE`, default `BENCH_kernels.json` — its own
+/// variable because CI points `TRIADA_BENCH_BASELINE` at the pool
+/// baseline for the same run); abort loudly on a >25% regression.
+fn check_kernels_regression(rows: &[KernelRow]) {
+    let path = std::env::var("TRIADA_BENCH_KERNEL_BASELINE")
+        .unwrap_or_else(|_| "BENCH_kernels.json".to_string());
+    let baseline = match std::fs::read_to_string(&path) {
+        Ok(s) => s,
+        Err(e) => {
+            println!("no kernel baseline at {path} ({e}); skipping regression check");
+            return;
+        }
+    };
+    for row in rows {
+        let needle = format!("\"case\": \"{} {}\"", row.label, row.dtype);
+        let Some(at) = baseline.find(&needle) else {
+            println!("baseline {path} has no row for {} {}; skipping", row.label, row.dtype);
+            continue;
+        };
+        let Some(base) = parse_field_after(&baseline[at..], "\"wide_speedup\": ") else {
+            println!(
+                "baseline {path} row for {} {} has no wide_speedup; skipping",
+                row.label, row.dtype
+            );
+            continue;
+        };
+        let floor = base * 0.75;
+        assert!(
+            row.speedup() >= floor,
+            "KERNEL REGRESSION at {} {}: wide speedup {:.3}x fell more than 25% below \
+             the {path} baseline {base:.3}x (floor {floor:.3}x)",
+            row.label,
+            row.dtype,
+            row.speedup()
+        );
+        println!(
+            "kernel baseline check {} {}: {:.3}x vs baseline {base:.3}x (floor {floor:.3}x) ok",
+            row.label,
+            row.dtype,
+            row.speedup()
+        );
+    }
+}
+
+/// Render the kernel measurements as a machine-readable JSON summary.
+fn kernel_rows_json(rows: &[KernelRow]) -> String {
+    let mut json = String::from("{\n");
+    json.push_str("  \"bench\": \"kernels\",\n");
+    json.push_str("  \"scalar\": \"forced scalar kernel (rank-1 update per step)\",\n");
+    json.push_str("  \"wide\": \"forced wide kernel (4-step register blocks)\",\n");
+    json.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"case\": \"{} {}\", \"shape\": [{}, {}, {}], \"scalar_median_s\": {:.9}, \"wide_median_s\": {:.9}, \"wide_speedup\": {:.4}}}{}\n",
+            r.label,
+            r.dtype,
+            r.shape.0,
+            r.shape.1,
+            r.shape.2,
+            r.scalar_s,
+            r.wide_s,
+            r.speedup(),
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    json
 }
 
 /// One cold-spawn vs warm-pool measurement of the engine at a shape.

@@ -86,6 +86,11 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
     println!("triada {} — three-layer Rust+JAX+Pallas TriADA reproduction", env!("CARGO_PKG_VERSION"));
     println!("kinds: {}", TransformKind::ALL.map(|k| k.name()).join(", "));
     println!("compute pool: {} workers (process-wide, work-stealing)", crate::pool::global().width());
+    println!(
+        "kernels: {} selected ({} isa); force with TRIADA_KERNEL=auto|scalar|wide",
+        crate::gemt::kernels::selected().name(),
+        crate::gemt::kernels::isa()
+    );
     let dir = args.opt_or("artifacts", "artifacts");
     match crate::runtime::ArtifactManifest::load(dir) {
         Ok(m) => {
@@ -320,6 +325,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 crate::faults::configure(plan);
             }
         }
+    }
+    // A `[kernels]` section pins the microkernel family (the TRIADA_KERNEL
+    // environment variable wins; see `gemt::kernels` selection precedence).
+    if let Some(c) = &file_cfg {
+        crate::gemt::kernels::configure_from_config(c)?;
     }
     if let Some(w) = args.opt("workers") {
         cfg.workers = w.parse().context("--workers")?;

@@ -135,6 +135,20 @@ impl Config {
             coordinator_share: self.get_usize("pool", "coordinator_share")?,
         })
     }
+
+    /// Typed view of the `[kernels]` section (the vectorized microkernel
+    /// layer, `crate::gemt::kernels`). Validates that `force` is one of
+    /// `auto` / `scalar` / `wide`.
+    pub fn kernel_settings(&self) -> anyhow::Result<KernelSettings> {
+        let force = self.get("kernels", "force").map(|v| v.to_string());
+        if let Some(f) = &force {
+            anyhow::ensure!(
+                matches!(f.as_str(), "auto" | "scalar" | "wide"),
+                "kernels.force={f:?} is not one of auto|scalar|wide"
+            );
+        }
+        Ok(KernelSettings { force })
+    }
 }
 
 /// Parsed `[engine]` keys; `None` means "not set, use the engine default".
@@ -147,6 +161,14 @@ pub struct EngineSettings {
     /// Sharding tile bound: any problem dimension exceeding this is block
     /// decomposed across engine passes (`gemt::shard`).
     pub max_tile: Option<usize>,
+}
+
+/// Parsed `[kernels]` keys; `None` means "not set, use auto selection".
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct KernelSettings {
+    /// Kernel choice: `"auto"` (default), `"scalar"`, or `"wide"`. The
+    /// `TRIADA_KERNEL` environment variable overrides this key.
+    pub force: Option<String>,
 }
 
 /// Parsed `[pool]` keys; `None` means "not set, use the pool default".
@@ -208,6 +230,7 @@ pub fn documented_keys() -> Vec<(&'static str, &'static str, String)> {
         ("engine", "threads", engine.threads.to_string()),
         ("engine", "block", engine.block.to_string()),
         ("engine", "max_tile", shard.max_tile.to_string()),
+        ("kernels", "force", "auto".to_string()),
         ("plan_cache", "capacity", coord.plan_capacity.to_string()),
         ("pool", "threads", pool.threads.to_string()),
         ("pool", "pin", pool.pin.to_string()),
@@ -337,6 +360,25 @@ p1 = 64
     }
 
     #[test]
+    fn kernel_settings_parse_and_validate() {
+        for (text, want) in [
+            ("", None),
+            ("[kernels]\nforce = auto\n", Some("auto")),
+            ("[kernels]\nforce = scalar\n", Some("scalar")),
+            ("[kernels]\nforce = \"wide\"\n", Some("wide")),
+        ] {
+            let c = Config::parse(text).unwrap();
+            assert_eq!(
+                c.kernel_settings().unwrap(),
+                KernelSettings { force: want.map(str::to_string) },
+                "{text:?}"
+            );
+        }
+        let bad = Config::parse("[kernels]\nforce = avx512\n").unwrap();
+        assert!(bad.kernel_settings().is_err());
+    }
+
+    #[test]
     fn documented_keys_cover_both_sections() {
         let keys = documented_keys();
         assert!(keys.iter().any(|(s, k, _)| *s == "coordinator" && *k == "workers"));
@@ -352,5 +394,6 @@ p1 = 64
         for key in ["threads", "pin", "engine_share", "shard_share", "coordinator_share"] {
             assert!(keys.iter().any(|(s, k, _)| *s == "pool" && *k == key), "{key}");
         }
+        assert!(keys.iter().any(|(s, k, d)| *s == "kernels" && *k == "force" && d == "auto"));
     }
 }

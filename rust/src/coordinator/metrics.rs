@@ -64,6 +64,10 @@ pub struct MetricsSnapshot {
     /// empty = every request ran on the backend's primary path). Filled by
     /// [`super::server::Coordinator::metrics`].
     pub fallback_reasons: Vec<String>,
+    /// Microkernel selection and per-kind dispatch counts
+    /// ([`crate::gemt::kernels::stats`]). Filled by
+    /// [`super::server::Coordinator::metrics`]; zero for a bare `Metrics`.
+    pub kernels: crate::gemt::kernels::KernelStats,
 }
 
 impl Default for Metrics {
@@ -160,6 +164,7 @@ impl Metrics {
             plans: PlanCacheStats::default(),
             pool: crate::pool::PoolStats::default(),
             fallback_reasons: Vec::new(),
+            kernels: crate::gemt::kernels::KernelStats::default(),
         }
     }
 }
@@ -200,6 +205,15 @@ impl MetricsSnapshot {
                 self.pool.executed,
                 self.pool.stolen,
                 human::duration(self.pool.task_wait_mean_s),
+            ));
+        }
+        if self.kernels.scalar_dispatches + self.kernels.wide_dispatches > 0 {
+            s.push_str(&format!(
+                " | kernels={}/{} ({} wide / {} scalar dispatches)",
+                self.kernels.selected,
+                self.kernels.isa,
+                self.kernels.wide_dispatches,
+                self.kernels.scalar_dispatches,
             ));
         }
         if !self.fallback_reasons.is_empty() {
@@ -250,6 +264,7 @@ mod tests {
         assert_eq!(s.plans, PlanCacheStats::default());
         assert_eq!(s.pool, crate::pool::PoolStats::default());
         assert!(s.fallback_reasons.is_empty());
+        assert_eq!(s.kernels, crate::gemt::kernels::KernelStats::default());
     }
 
     #[test]
@@ -274,5 +289,15 @@ mod tests {
         };
         let line = s.summary();
         assert!(line.contains("pool=4w"), "{line}");
+        // Kernel stats appear once any dispatch has been counted.
+        assert!(!line.contains("kernels="), "no kernel traffic yet: {line}");
+        s.kernels = crate::gemt::kernels::KernelStats {
+            selected: "wide",
+            isa: "avx2",
+            scalar_dispatches: 2,
+            wide_dispatches: 40,
+        };
+        let line = s.summary();
+        assert!(line.contains("kernels=wide/avx2 (40 wide / 2 scalar dispatches)"), "{line}");
     }
 }

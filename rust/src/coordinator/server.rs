@@ -356,13 +356,14 @@ impl Coordinator {
     }
 
     /// Point-in-time metrics, including plan-cache counters, compute-pool
-    /// gauges, and any backend degradation reasons
-    /// ([`super::backend::FallbackNotice`]) plus the dispatcher's
+    /// gauges, microkernel dispatch counts, and any backend degradation
+    /// reasons ([`super::backend::FallbackNotice`]) plus the dispatcher's
     /// retry-failover notices.
     pub fn metrics(&self) -> MetricsSnapshot {
         let mut snap = self.metrics.snapshot();
         snap.plans = self.plans.stats();
         snap.pool = crate::pool::global().stats();
+        snap.kernels = crate::gemt::kernels::stats();
         let mut reasons = self.backend.fallback_reasons();
         reasons.extend(self.dispatcher.fallback_reasons());
         snap.fallback_reasons = reasons;
@@ -786,6 +787,12 @@ mod tests {
         // Batches ran as compute-pool tasks, so the pool gauges are live.
         assert_eq!(snap.pool.workers, crate::pool::global().width());
         assert!(snap.pool.executed >= 1, "batch tasks must show in pool gauges");
+        // Every transform dispatched microkernels, so their counters are live.
+        assert!(
+            snap.kernels.scalar_dispatches + snap.kernels.wide_dispatches >= 1,
+            "transforms must show in kernel dispatch counts"
+        );
+        assert!(!snap.kernels.selected.is_empty() && !snap.kernels.isa.is_empty());
         c.shutdown();
     }
 

@@ -45,7 +45,7 @@
 //! assert!(x.max_abs_diff(&back) < 1e-9);
 //! ```
 
-use super::CoeffSet;
+use super::{kernels, CoeffSet};
 use crate::pool::{ComputePool, Layer};
 use crate::tensor::{Mat, Scalar, Tensor3};
 use crate::transforms::TransformKind;
@@ -292,22 +292,16 @@ pub(crate) fn stage1_panel<T: Scalar>(
     if k3s == 0 {
         return;
     }
+    let ker = kernels::dispatch();
     for step0 in (0..n3).step_by(block) {
         let step1 = (step0 + block).min(n3);
         for (r, dst) in panel.chunks_mut(k3s).enumerate() {
             let flat = first_row + r;
             let (i, j) = (flat / n2, flat % n2);
             let xrow = x.row(i, j);
-            for step in step0..step1 {
-                let xv = xrow[step];
-                if xv.is_zero() {
-                    continue; // ESOP skip (§6) — same predicate as gemt_outer
-                }
-                let crow = c3.row(step);
-                for (d, &cv) in dst.iter_mut().zip(crow) {
-                    *d += xv * cv;
-                }
-            }
+            // The kernel applies the ESOP skip (§6) per step — same
+            // predicate as gemt_outer — and accumulates in ascending order.
+            ker.update_row(dst, step1 - step0, |s| (xrow[step0 + s], c3.row(step0 + s)));
         }
     }
 }
@@ -330,45 +324,37 @@ fn stage23_panel<T: Scalar>(
         return;
     }
     let k1_count = panel.len() / (k2s * k3s);
+    let ker = kernels::dispatch();
 
-    // Stage II (Eq. 6.2), blocked over the owned k1 rows: each loaded ẋ row
-    // is rank-1-broadcast into a `block`-high slab of owned ẍ rows.
+    // Stage II (Eq. 6.2), blocked over the summation steps: each owned ẍ
+    // row accumulates a `block`-high slab of shared ẋ rows while it stays
+    // register/L1-resident. Per-element step order is still ascending —
+    // identical to the scalar path; the kernel applies the ESOP skip.
     let mut s2 = vec![T::zero(); k1_count * n2 * k3s];
-    for kb0 in (0..k1_count).step_by(block) {
-        let kb1 = (kb0 + block).min(k1_count);
-        for j in 0..n2 {
-            for step in 0..n1 {
-                let srow = s1.row(step, j);
-                for dk in kb0..kb1 {
-                    let cv = cs.c1.get(step, first_k1 + dk);
-                    if cv.is_zero() {
-                        continue; // ESOP skip
-                    }
-                    let base = (dk * n2 + j) * k3s;
-                    let dst = &mut s2[base..base + k3s];
-                    for (d, &sv) in dst.iter_mut().zip(srow) {
-                        *d += cv * sv;
-                    }
-                }
+    for step0 in (0..n1).step_by(block) {
+        let step1 = (step0 + block).min(n1);
+        for dk in 0..k1_count {
+            for j in 0..n2 {
+                let base = (dk * n2 + j) * k3s;
+                let dst = &mut s2[base..base + k3s];
+                ker.update_row(dst, step1 - step0, |s| {
+                    (cs.c1.get(step0 + s, first_k1 + dk), s1.row(step0 + s, j))
+                });
             }
         }
     }
 
     // Stage III (Eq. 6.3): lateral re-slice of the owned ẍ panel through
     // C₂ into the owned output rows; source and destination contiguous.
+    // Steps innermost per destination row, slabbed like Stage II.
     for (dk, out_rows) in panel.chunks_mut(k2s * k3s).enumerate() {
-        for step in 0..n2 {
-            let sbase = (dk * n2 + step) * k3s;
-            let src = &s2[sbase..sbase + k3s];
-            let crow = cs.c2.row(step);
-            for (kk2, &cv) in crow.iter().enumerate() {
-                if cv.is_zero() {
-                    continue; // ESOP skip
-                }
-                let dst = &mut out_rows[kk2 * k3s..(kk2 + 1) * k3s];
-                for (d, &sv) in dst.iter_mut().zip(src) {
-                    *d += sv * cv;
-                }
+        for step0 in (0..n2).step_by(block) {
+            let step1 = (step0 + block).min(n2);
+            for (kk2, dst) in out_rows.chunks_mut(k3s).enumerate() {
+                ker.update_row(dst, step1 - step0, |s| {
+                    let sbase = (dk * n2 + step0 + s) * k3s;
+                    (cs.c2.get(step0 + s, kk2), &s2[sbase..sbase + k3s])
+                });
             }
         }
     }

@@ -1,0 +1,813 @@
+//! Vectorized microkernels under every hot loop.
+//!
+//! Every stage of the three-stage outer-product schedule (Eq. 6.1–6.3, the
+//! SR-GEMM kernel of §5.1) bottoms out in the same axpy: `dst[k] += a *
+//! src[k]` over a contiguous row. This module is the single implementation
+//! of that loop — `gemt_outer` (the bit-identity reference), the engine
+//! phases, the shard tiles, the `mode{1,2,3}_product` family, and the
+//! split-DFT pair path all route through it, so "bit-identical to
+//! `gemt_outer` at any width" holds by construction while every backend
+//! shares the same speedups.
+//!
+//! # The two kernels
+//!
+//! - **Scalar** is the reference semantics: one rank-1 [`Kernels::axpy`]
+//!   per summation step, destination element loaded, one non-fused
+//!   [`Scalar::mac`] (`d + a*b`, two roundings), stored.
+//! - **Wide** performs the *same per-element operation sequence* but blocks
+//!   **four summation steps** into one register-resident row pass
+//!   ([`Kernels::update_row`]): the destination chunk is loaded once,
+//!   receives the four steps' `mul`+`add` terms in ascending step order,
+//!   and is stored once. Eliminating the per-step store→load round trip on
+//!   the destination row — not lane width — is where the speedup comes
+//!   from (the rank-1 loop is store-bound; register blocking makes it ALU
+//!   bound). No term is ever fused (`mul_add` is *not* used on any
+//!   dispatch path) and no sum is regrouped, so scalar and wide agree
+//!   bit-for-bit for every dtype.
+//!
+//! On x86-64 the wide path lowers the 4-step block through explicit AVX2
+//! `_mm256_mul_pd`/`_mm256_add_pd` intrinsics for `f64`/`f32` behind an
+//! `is_x86_feature_detected!("avx2")` runtime check; everywhere else (and
+//! for [`Complex64`](crate::tensor::Complex64)) a portable
+//! fixed-width-chunk body takes over, which the autovectorizer lowers to
+//! the native ISA (NEON is a baseline feature on aarch64, so no runtime
+//! probe is needed there). Rust never contracts separate `mul`+`add` into
+//! an FMA, so the portable body is bit-identical to the intrinsics.
+//!
+//! # ESOP at chunk granularity
+//!
+//! The elementwise zero skip (paper §6) is preserved: a zero step scalar
+//! never touches the destination row on either kernel. The wide path
+//! additionally hoists the skip to chunk granularity — only *nonzero*
+//! steps are gathered into the 4-step register block, so a run of zero
+//! steps costs four `is_zero` tests and no row traffic at all, while the
+//! scalar remainder (1–3 trailing nonzero steps) keeps the elementwise
+//! skip and executes as sequential rank-1 updates in ascending step order
+//! (never zero-padded into a block: `d + 0.0` would flip `-0.0` to `+0.0`
+//! and break bit-identity).
+//!
+//! # Selection
+//!
+//! Precedence: [`force_kernel`] (test/bench hook) > `TRIADA_KERNEL` env
+//! (`auto`/`scalar`/`wide`, read once) > `[kernels] force` config
+//! ([`configure_from_config`]) > auto. Auto resolves to **wide** — it is
+//! bit-identical and never slower. Selection and per-kind dispatch counts
+//! are observable via [`stats`] (surfaced in `MetricsSnapshot` and
+//! `triada info`).
+//!
+//! ```
+//! use triada::gemt::kernels::{KernelKind, Kernels};
+//!
+//! let scalar = Kernels::with_kind(KernelKind::Scalar);
+//! let wide = Kernels::with_kind(KernelKind::Wide);
+//! let src: Vec<f64> = (0..13).map(|k| k as f64).collect();
+//! let (mut a, mut b) = (vec![1.0; 13], vec![1.0; 13]);
+//! scalar.axpy(&mut a, 0.5, &src);
+//! wide.axpy(&mut b, 0.5, &src);
+//! assert_eq!(a, b); // bit-identical, not approximately equal
+//! ```
+
+use crate::tensor::Scalar;
+use std::any::TypeId;
+use std::sync::atomic::{AtomicU8, AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+/// How many summation steps the wide path blocks into one register-resident
+/// pass over the destination row.
+pub const STEP_BLOCK: usize = 4;
+
+/// Which microkernel family executes the inner axpy loops.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Reference semantics: rank-1 update per summation step.
+    Scalar,
+    /// 4-step register-blocked updates (AVX2 on x86-64 with runtime
+    /// detection, portable chunks elsewhere). Bit-identical to `Scalar`.
+    Wide,
+}
+
+impl KernelKind {
+    /// Stable lowercase name (`"scalar"` / `"wide"`).
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Wide => "wide",
+        }
+    }
+}
+
+/// Parse a selection string: `auto` (=> `None`), `scalar`, or `wide`.
+pub fn parse_kind(s: &str) -> anyhow::Result<Option<KernelKind>> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "auto" => Ok(None),
+        "scalar" => Ok(Some(KernelKind::Scalar)),
+        "wide" => Ok(Some(KernelKind::Wide)),
+        other => anyhow::bail!("kernel selection must be auto|scalar|wide, got {other:?}"),
+    }
+}
+
+// Selection state. 0 = unset/auto, 1 = scalar, 2 = wide.
+static FORCED: AtomicU8 = AtomicU8::new(0);
+static CONFIGURED: AtomicU8 = AtomicU8::new(0);
+static ENV: OnceLock<Option<KernelKind>> = OnceLock::new();
+
+static SCALAR_DISPATCHES: AtomicU64 = AtomicU64::new(0);
+static WIDE_DISPATCHES: AtomicU64 = AtomicU64::new(0);
+
+fn encode(kind: Option<KernelKind>) -> u8 {
+    match kind {
+        None => 0,
+        Some(KernelKind::Scalar) => 1,
+        Some(KernelKind::Wide) => 2,
+    }
+}
+
+fn decode(v: u8) -> Option<KernelKind> {
+    match v {
+        1 => Some(KernelKind::Scalar),
+        2 => Some(KernelKind::Wide),
+        _ => None,
+    }
+}
+
+fn env_choice() -> Option<KernelKind> {
+    *ENV.get_or_init(|| match std::env::var("TRIADA_KERNEL") {
+        Ok(v) => match parse_kind(&v) {
+            Ok(kind) => kind,
+            Err(e) => {
+                eprintln!("warning: ignoring invalid TRIADA_KERNEL: {e}");
+                None
+            }
+        },
+        Err(_) => None,
+    })
+}
+
+/// Process-wide override used by tests and benches to pin the kernel
+/// regardless of env/config. `None` restores normal selection. Safe to
+/// flip at any time — every kernel is bit-identical, so concurrent work
+/// observing different kinds still produces identical numbers.
+pub fn force_kernel(kind: Option<KernelKind>) {
+    FORCED.store(encode(kind), Ordering::Relaxed);
+}
+
+/// Apply the `[kernels]` config section (`force = auto|scalar|wide`).
+/// The `TRIADA_KERNEL` environment variable, read lazily once, wins over
+/// this; [`force_kernel`] wins over both.
+pub fn configure_from_config(cfg: &crate::config::Config) -> anyhow::Result<()> {
+    if let Some(force) = cfg.kernel_settings()?.force {
+        CONFIGURED.store(encode(parse_kind(&force)?), Ordering::Relaxed);
+    }
+    Ok(())
+}
+
+/// The kernel kind the next [`dispatch`] will hand out.
+pub fn selected() -> KernelKind {
+    if let Some(kind) = decode(FORCED.load(Ordering::Relaxed)) {
+        return kind;
+    }
+    if let Some(kind) = env_choice() {
+        return kind;
+    }
+    // Auto: wide is bit-identical and never slower than the rank-1 loop.
+    decode(CONFIGURED.load(Ordering::Relaxed)).unwrap_or(KernelKind::Wide)
+}
+
+#[cfg(target_arch = "x86_64")]
+fn wide_isa() -> &'static str {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        "avx2"
+    } else {
+        "portable"
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn wide_isa() -> &'static str {
+    // NEON is a baseline aarch64 feature: the portable chunked body lowers
+    // to NEON directly, no runtime probe needed.
+    "neon"
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn wide_isa() -> &'static str {
+    "portable"
+}
+
+/// The instruction set the wide path runs on (`"avx2"`, `"neon"`, or
+/// `"portable"`); `"scalar"` when the scalar kernel is selected.
+pub fn isa() -> &'static str {
+    match selected() {
+        KernelKind::Scalar => "scalar",
+        KernelKind::Wide => wide_isa(),
+    }
+}
+
+/// True when the wide path has an arch-accelerated lowering on this host
+/// (AVX2 detected, or aarch64/NEON). Benches use this to decide how strong
+/// a speedup to assert.
+pub fn accelerated() -> bool {
+    wide_isa() != "portable"
+}
+
+/// Point-in-time kernel observability: the selected kind, its ISA, and how
+/// many times each kind has been dispatched (one dispatch = one
+/// stage/panel/tile entering its inner loops).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KernelStats {
+    /// Name of the kind [`selected`] at snapshot time.
+    pub selected: &'static str,
+    /// ISA of the selected kind at snapshot time.
+    pub isa: &'static str,
+    /// Dispatches served with the scalar kernel.
+    pub scalar_dispatches: u64,
+    /// Dispatches served with the wide kernel.
+    pub wide_dispatches: u64,
+}
+
+/// Snapshot the kernel selection and dispatch counters.
+pub fn stats() -> KernelStats {
+    KernelStats {
+        selected: selected().name(),
+        isa: isa(),
+        scalar_dispatches: SCALAR_DISPATCHES.load(Ordering::Relaxed),
+        wide_dispatches: WIDE_DISPATCHES.load(Ordering::Relaxed),
+    }
+}
+
+/// A resolved kernel handle. `Copy` — resolve once per stage/panel/tile
+/// with [`dispatch`] and use it for every row in that unit of work.
+#[derive(Clone, Copy, Debug)]
+pub struct Kernels {
+    kind: KernelKind,
+    #[cfg(target_arch = "x86_64")]
+    avx2: bool,
+}
+
+/// Resolve the selected kernel and count the dispatch. Call once per
+/// stage/panel/tile, not per row — the counters are meant to tell you how
+/// many units of compute each kernel served.
+pub fn dispatch() -> Kernels {
+    let k = Kernels::with_kind(selected());
+    match k.kind {
+        KernelKind::Scalar => SCALAR_DISPATCHES.fetch_add(1, Ordering::Relaxed),
+        KernelKind::Wide => WIDE_DISPATCHES.fetch_add(1, Ordering::Relaxed),
+    };
+    k
+}
+
+impl Kernels {
+    /// Build a handle of an explicit kind without touching the dispatch
+    /// counters or the process-wide selection — the parity tests compare
+    /// `with_kind(Scalar)` against `with_kind(Wide)` without racing other
+    /// threads' selection.
+    pub fn with_kind(kind: KernelKind) -> Kernels {
+        Kernels {
+            kind,
+            #[cfg(target_arch = "x86_64")]
+            avx2: std::arch::is_x86_feature_detected!("avx2"),
+        }
+    }
+
+    /// The kind this handle executes.
+    pub fn kind(self) -> KernelKind {
+        self.kind
+    }
+
+    /// Rank-1 update `dst[k] += a * src[k]` over `min(dst.len(),
+    /// src.len())` elements, with the ESOP skip: a zero `a` performs no
+    /// work and never touches `dst`.
+    #[inline]
+    pub fn axpy<T: Scalar>(self, dst: &mut [T], a: T, src: &[T]) {
+        if a.is_zero() {
+            return;
+        }
+        match self.kind {
+            KernelKind::Scalar => axpy_ref(dst, a, src),
+            KernelKind::Wide => self.axpy_wide(dst, a, src),
+        }
+    }
+
+    /// Paired rank-1 update: `d0 += a0 * s0` and `d1 += a1 * s1`, each
+    /// with the ESOP skip. The wide path interleaves the two rows chunk by
+    /// chunk so a shared source row (the split-DFT `(cos, ±sin)` pattern:
+    /// `s0 == s1`) is streamed once per chunk instead of once per half.
+    /// Per-row results are bit-identical to two [`Kernels::axpy`] calls.
+    #[inline]
+    pub fn axpy2<T: Scalar>(self, d0: &mut [T], a0: T, s0: &[T], d1: &mut [T], a1: T, s1: &[T]) {
+        match self.kind {
+            KernelKind::Scalar => {
+                if !a0.is_zero() {
+                    axpy_ref(d0, a0, s0);
+                }
+                if !a1.is_zero() {
+                    axpy_ref(d1, a1, s1);
+                }
+            }
+            KernelKind::Wide => match (a0.is_zero(), a1.is_zero()) {
+                (true, true) => {}
+                (false, true) => self.axpy_wide(d0, a0, s0),
+                (true, false) => self.axpy_wide(d1, a1, s1),
+                (false, false) => axpy2_chunked(d0, a0, s0, d1, a1, s1),
+            },
+        }
+    }
+
+    /// Accumulate `steps` summation steps into one destination row:
+    /// `dst += term(s).0 * term(s).1` for `s = 0..steps`, in ascending
+    /// step order per element. This is the Stage I/II/III inner loop. The
+    /// scalar kind runs one rank-1 pass per step; the wide kind gathers
+    /// nonzero steps into [`STEP_BLOCK`]-deep register blocks (zero steps
+    /// are skipped at chunk granularity) and drains the 1–3 step remainder
+    /// as sequential rank-1 passes — bit-identical either way.
+    #[inline]
+    pub fn update_row<'a, T: Scalar>(
+        self,
+        dst: &mut [T],
+        steps: usize,
+        mut term: impl FnMut(usize) -> (T, &'a [T]),
+    ) {
+        match self.kind {
+            KernelKind::Scalar => {
+                for s in 0..steps {
+                    let (a, src) = term(s);
+                    if a.is_zero() {
+                        continue;
+                    }
+                    axpy_ref(dst, a, src);
+                }
+            }
+            KernelKind::Wide => {
+                let mut pending = Pending::new();
+                for s in 0..steps {
+                    let (a, src) = term(s);
+                    if a.is_zero() {
+                        continue;
+                    }
+                    pending.push(self, dst, a, src);
+                }
+                pending.drain(self, dst);
+            }
+        }
+    }
+
+    /// Paired [`Kernels::update_row`]: both destination rows walk the same
+    /// `steps` summation steps, each with its own `(scalar, source-row)`
+    /// term — the split-DFT `(cos, ±sin)` pair in one pass. Per-row
+    /// results are bit-identical to two independent `update_row` calls.
+    #[inline]
+    pub fn update_row2<'a, T: Scalar>(
+        self,
+        d0: &mut [T],
+        d1: &mut [T],
+        steps: usize,
+        mut term: impl FnMut(usize) -> ((T, &'a [T]), (T, &'a [T])),
+    ) {
+        match self.kind {
+            KernelKind::Scalar => {
+                for s in 0..steps {
+                    let ((a0, s0), (a1, s1)) = term(s);
+                    self.axpy2(d0, a0, s0, d1, a1, s1);
+                }
+            }
+            KernelKind::Wide => {
+                let mut p0 = Pending::new();
+                let mut p1 = Pending::new();
+                for s in 0..steps {
+                    let ((a0, s0), (a1, s1)) = term(s);
+                    if !a0.is_zero() {
+                        p0.push(self, d0, a0, s0);
+                    }
+                    if !a1.is_zero() {
+                        p1.push(self, d1, a1, s1);
+                    }
+                }
+                p0.drain(self, d0);
+                p1.drain(self, d1);
+            }
+        }
+    }
+
+    /// Wide rank-1 body: chunked portable loop (LLVM autovectorizes the
+    /// fixed-width inner loop; no arch path — the rank-1 update is bound
+    /// by the destination store→load round trip, which wider lanes do not
+    /// help; the arch intrinsics live in the 4-step block).
+    #[inline]
+    fn axpy_wide<T: Scalar>(self, dst: &mut [T], a: T, src: &[T]) {
+        axpy_chunked(dst, a, src);
+    }
+
+    /// Wide 4-step register-blocked body: AVX2 intrinsics for `f64`/`f32`
+    /// when detected, portable chunks otherwise. All four step scalars are
+    /// nonzero by construction (the caller gathers only nonzero steps).
+    #[inline]
+    fn axpy4<T: Scalar>(self, dst: &mut [T], a: [T; 4], r: [&[T]; 4]) {
+        #[cfg(target_arch = "x86_64")]
+        if self.avx2 {
+            if same_type::<T, f64>() {
+                // SAFETY: T == f64 (TypeId equality ⇒ identical layout);
+                // AVX2 availability checked at handle construction.
+                unsafe {
+                    let d = &mut *(dst as *mut [T] as *mut [f64]);
+                    let aa: [f64; 4] = std::mem::transmute_copy(&a);
+                    let rr: [&[f64]; 4] = std::mem::transmute_copy(&r);
+                    avx2::axpy4_f64(d, aa, rr);
+                }
+                return;
+            }
+            if same_type::<T, f32>() {
+                // SAFETY: as above, for f32.
+                unsafe {
+                    let d = &mut *(dst as *mut [T] as *mut [f32]);
+                    let aa: [f32; 4] = std::mem::transmute_copy(&a);
+                    let rr: [&[f32]; 4] = std::mem::transmute_copy(&r);
+                    avx2::axpy4_f32(d, aa, rr);
+                }
+                return;
+            }
+        }
+        axpy4_chunked(dst, a, r);
+    }
+}
+
+/// A measurement-only *fused* rank-1 update (`dst[k] = fma(a, src[k],
+/// dst[k])`, single rounding via [`Scalar::mul_add`]). Never reachable
+/// from [`dispatch`] — fusing would break the bit-identity contract. The
+/// `e4_accuracy` bench uses it to measure (not assume) the roundoff
+/// difference a fused path would introduce.
+pub fn axpy_fma<T: Scalar>(dst: &mut [T], a: T, src: &[T]) {
+    if a.is_zero() {
+        return;
+    }
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = d.mul_add(a, s);
+    }
+}
+
+#[inline]
+fn same_type<T: 'static, U: 'static>() -> bool {
+    TypeId::of::<T>() == TypeId::of::<U>()
+}
+
+/// Reference rank-1 loop: element-at-a-time non-fused MAC in ascending
+/// index order. This is the semantic definition every other path must
+/// reproduce bit-for-bit.
+#[inline]
+fn axpy_ref<T: Scalar>(dst: &mut [T], a: T, src: &[T]) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = d.mac(a, s);
+    }
+}
+
+/// Portable chunked rank-1 body: `chunks_exact` pairs with a fixed-width
+/// inner loop the autovectorizer lowers reliably; elementwise tail.
+#[inline(always)]
+fn axpy_chunked<T: Scalar>(dst: &mut [T], a: T, src: &[T]) {
+    const W: usize = 8;
+    let n = dst.len().min(src.len());
+    let (dst, src) = (&mut dst[..n], &src[..n]);
+    let mut dc = dst.chunks_exact_mut(W);
+    let mut sc = src.chunks_exact(W);
+    for (d, s) in (&mut dc).zip(&mut sc) {
+        for i in 0..W {
+            d[i] = d[i].mac(a, s[i]);
+        }
+    }
+    for (d, &s) in dc.into_remainder().iter_mut().zip(sc.remainder()) {
+        *d = d.mac(a, s);
+    }
+}
+
+/// Interleaved pair of rank-1 updates over the common prefix (both step
+/// scalars nonzero): chunk of row 0, chunk of row 1, repeat — a shared
+/// source row stays register/L1-resident across both uses. Tails beyond
+/// the common prefix finish per row.
+#[inline(always)]
+fn axpy2_chunked<T: Scalar>(d0: &mut [T], a0: T, s0: &[T], d1: &mut [T], a1: T, s1: &[T]) {
+    const W: usize = 8;
+    let n0 = d0.len().min(s0.len());
+    let n1 = d1.len().min(s1.len());
+    let n = n0.min(n1) / W * W;
+    {
+        let mut dc0 = d0[..n].chunks_exact_mut(W);
+        let mut sc0 = s0[..n].chunks_exact(W);
+        let mut dc1 = d1[..n].chunks_exact_mut(W);
+        let mut sc1 = s1[..n].chunks_exact(W);
+        for (((c0, x0), c1), x1) in (&mut dc0).zip(&mut sc0).zip(&mut dc1).zip(&mut sc1) {
+            for i in 0..W {
+                c0[i] = c0[i].mac(a0, x0[i]);
+            }
+            for i in 0..W {
+                c1[i] = c1[i].mac(a1, x1[i]);
+            }
+        }
+    }
+    for (d, &s) in d0[n..n0].iter_mut().zip(&s0[n..n0]) {
+        *d = d.mac(a0, s);
+    }
+    for (d, &s) in d1[n..n1].iter_mut().zip(&s1[n..n1]) {
+        *d = d.mac(a1, s);
+    }
+}
+
+/// Portable 4-step register-blocked body: per chunk, the destination
+/// elements are read once, receive the four steps' non-fused terms in
+/// ascending step order, and are written once.
+#[inline(always)]
+fn axpy4_chunked<T: Scalar>(dst: &mut [T], a: [T; 4], r: [&[T]; 4]) {
+    const W: usize = 4;
+    let n = dst
+        .len()
+        .min(r[0].len())
+        .min(r[1].len())
+        .min(r[2].len())
+        .min(r[3].len());
+    let chunks = n / W * W;
+    let (r0, r1, r2, r3) = (r[0], r[1], r[2], r[3]);
+    let mut k = 0;
+    while k + W <= chunks {
+        let mut acc = [T::zero(); W];
+        acc.copy_from_slice(&dst[k..k + W]);
+        for i in 0..W {
+            acc[i] = acc[i].mac(a[0], r0[k + i]);
+        }
+        for i in 0..W {
+            acc[i] = acc[i].mac(a[1], r1[k + i]);
+        }
+        for i in 0..W {
+            acc[i] = acc[i].mac(a[2], r2[k + i]);
+        }
+        for i in 0..W {
+            acc[i] = acc[i].mac(a[3], r3[k + i]);
+        }
+        dst[k..k + W].copy_from_slice(&acc);
+        k += W;
+    }
+    while k < n {
+        let mut v = dst[k];
+        v = v.mac(a[0], r0[k]);
+        v = v.mac(a[1], r1[k]);
+        v = v.mac(a[2], r2[k]);
+        v = v.mac(a[3], r3[k]);
+        dst[k] = v;
+        k += 1;
+    }
+}
+
+/// Gather buffer for the wide path: nonzero summation steps accumulate
+/// here and flush as 4-step register blocks; the 1–3 step remainder drains
+/// as sequential rank-1 passes in ascending step order.
+struct Pending<'a, T: Scalar> {
+    a: [T; STEP_BLOCK],
+    r: [&'a [T]; STEP_BLOCK],
+    n: usize,
+}
+
+impl<'a, T: Scalar> Pending<'a, T> {
+    #[inline]
+    fn new() -> Self {
+        Pending {
+            a: [T::zero(); STEP_BLOCK],
+            r: [&[]; STEP_BLOCK],
+            n: 0,
+        }
+    }
+
+    #[inline]
+    fn push(&mut self, k: Kernels, dst: &mut [T], a: T, src: &'a [T]) {
+        self.a[self.n] = a;
+        self.r[self.n] = src;
+        self.n += 1;
+        if self.n == STEP_BLOCK {
+            self.n = 0;
+            k.axpy4(dst, self.a, self.r);
+        }
+    }
+
+    #[inline]
+    fn drain(&mut self, k: Kernels, dst: &mut [T]) {
+        for t in 0..self.n {
+            k.axpy_wide(dst, self.a[t], self.r[t]);
+        }
+        self.n = 0;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! Explicit AVX2 lowerings of the 4-step register block. Deliberately
+    //! `mul` + `add` (two roundings), never `fmadd`: the fused form rounds
+    //! once and would diverge from the scalar reference by the last bit.
+
+    #[allow(clippy::wildcard_imports)]
+    use std::arch::x86_64::*;
+
+    /// 4-step block over an `f64` row: 8 elements (two 4-lane registers)
+    /// per iteration, per-element term order = ascending step order.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 is available on this CPU.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy4_f64(dst: &mut [f64], a: [f64; 4], r: [&[f64]; 4]) {
+        let n = dst
+            .len()
+            .min(r[0].len())
+            .min(r[1].len())
+            .min(r[2].len())
+            .min(r[3].len());
+        let (a0, a1, a2, a3) = (
+            _mm256_set1_pd(a[0]),
+            _mm256_set1_pd(a[1]),
+            _mm256_set1_pd(a[2]),
+            _mm256_set1_pd(a[3]),
+        );
+        let d = dst.as_mut_ptr();
+        let (r0, r1, r2, r3) = (r[0].as_ptr(), r[1].as_ptr(), r[2].as_ptr(), r[3].as_ptr());
+        let mut k = 0usize;
+        while k + 8 <= n {
+            let mut va = _mm256_loadu_pd(d.add(k));
+            let mut vb = _mm256_loadu_pd(d.add(k + 4));
+            va = _mm256_add_pd(va, _mm256_mul_pd(a0, _mm256_loadu_pd(r0.add(k))));
+            vb = _mm256_add_pd(vb, _mm256_mul_pd(a0, _mm256_loadu_pd(r0.add(k + 4))));
+            va = _mm256_add_pd(va, _mm256_mul_pd(a1, _mm256_loadu_pd(r1.add(k))));
+            vb = _mm256_add_pd(vb, _mm256_mul_pd(a1, _mm256_loadu_pd(r1.add(k + 4))));
+            va = _mm256_add_pd(va, _mm256_mul_pd(a2, _mm256_loadu_pd(r2.add(k))));
+            vb = _mm256_add_pd(vb, _mm256_mul_pd(a2, _mm256_loadu_pd(r2.add(k + 4))));
+            va = _mm256_add_pd(va, _mm256_mul_pd(a3, _mm256_loadu_pd(r3.add(k))));
+            vb = _mm256_add_pd(vb, _mm256_mul_pd(a3, _mm256_loadu_pd(r3.add(k + 4))));
+            _mm256_storeu_pd(d.add(k), va);
+            _mm256_storeu_pd(d.add(k + 4), vb);
+            k += 8;
+        }
+        if k + 4 <= n {
+            let mut va = _mm256_loadu_pd(d.add(k));
+            va = _mm256_add_pd(va, _mm256_mul_pd(a0, _mm256_loadu_pd(r0.add(k))));
+            va = _mm256_add_pd(va, _mm256_mul_pd(a1, _mm256_loadu_pd(r1.add(k))));
+            va = _mm256_add_pd(va, _mm256_mul_pd(a2, _mm256_loadu_pd(r2.add(k))));
+            va = _mm256_add_pd(va, _mm256_mul_pd(a3, _mm256_loadu_pd(r3.add(k))));
+            _mm256_storeu_pd(d.add(k), va);
+            k += 4;
+        }
+        while k < n {
+            let mut v = *d.add(k);
+            v += a[0] * *r0.add(k);
+            v += a[1] * *r1.add(k);
+            v += a[2] * *r2.add(k);
+            v += a[3] * *r3.add(k);
+            *d.add(k) = v;
+            k += 1;
+        }
+    }
+
+    /// 4-step block over an `f32` row: 16 elements (two 8-lane registers)
+    /// per iteration, per-element term order = ascending step order.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 is available on this CPU.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy4_f32(dst: &mut [f32], a: [f32; 4], r: [&[f32]; 4]) {
+        let n = dst
+            .len()
+            .min(r[0].len())
+            .min(r[1].len())
+            .min(r[2].len())
+            .min(r[3].len());
+        let (a0, a1, a2, a3) = (
+            _mm256_set1_ps(a[0]),
+            _mm256_set1_ps(a[1]),
+            _mm256_set1_ps(a[2]),
+            _mm256_set1_ps(a[3]),
+        );
+        let d = dst.as_mut_ptr();
+        let (r0, r1, r2, r3) = (r[0].as_ptr(), r[1].as_ptr(), r[2].as_ptr(), r[3].as_ptr());
+        let mut k = 0usize;
+        while k + 16 <= n {
+            let mut va = _mm256_loadu_ps(d.add(k));
+            let mut vb = _mm256_loadu_ps(d.add(k + 8));
+            va = _mm256_add_ps(va, _mm256_mul_ps(a0, _mm256_loadu_ps(r0.add(k))));
+            vb = _mm256_add_ps(vb, _mm256_mul_ps(a0, _mm256_loadu_ps(r0.add(k + 8))));
+            va = _mm256_add_ps(va, _mm256_mul_ps(a1, _mm256_loadu_ps(r1.add(k))));
+            vb = _mm256_add_ps(vb, _mm256_mul_ps(a1, _mm256_loadu_ps(r1.add(k + 8))));
+            va = _mm256_add_ps(va, _mm256_mul_ps(a2, _mm256_loadu_ps(r2.add(k))));
+            vb = _mm256_add_ps(vb, _mm256_mul_ps(a2, _mm256_loadu_ps(r2.add(k + 8))));
+            va = _mm256_add_ps(va, _mm256_mul_ps(a3, _mm256_loadu_ps(r3.add(k))));
+            vb = _mm256_add_ps(vb, _mm256_mul_ps(a3, _mm256_loadu_ps(r3.add(k + 8))));
+            _mm256_storeu_ps(d.add(k), va);
+            _mm256_storeu_ps(d.add(k + 8), vb);
+            k += 16;
+        }
+        if k + 8 <= n {
+            let mut va = _mm256_loadu_ps(d.add(k));
+            va = _mm256_add_ps(va, _mm256_mul_ps(a0, _mm256_loadu_ps(r0.add(k))));
+            va = _mm256_add_ps(va, _mm256_mul_ps(a1, _mm256_loadu_ps(r1.add(k))));
+            va = _mm256_add_ps(va, _mm256_mul_ps(a2, _mm256_loadu_ps(r2.add(k))));
+            va = _mm256_add_ps(va, _mm256_mul_ps(a3, _mm256_loadu_ps(r3.add(k))));
+            _mm256_storeu_ps(d.add(k), va);
+            k += 8;
+        }
+        while k < n {
+            let mut v = *d.add(k);
+            v += a[0] * *r0.add(k);
+            v += a[1] * *r1.add(k);
+            v += a[2] * *r2.add(k);
+            v += a[3] * *r3.add(k);
+            *d.add(k) = v;
+            k += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Complex64;
+
+    fn seq_f64(n: usize, salt: f64) -> Vec<f64> {
+        (0..n).map(|k| (k as f64 * 0.37 + salt).sin()).collect()
+    }
+
+    #[test]
+    fn parse_kind_accepts_the_three_choices() {
+        assert_eq!(parse_kind("auto").unwrap(), None);
+        assert_eq!(parse_kind("Scalar").unwrap(), Some(KernelKind::Scalar));
+        assert_eq!(parse_kind(" wide ").unwrap(), Some(KernelKind::Wide));
+        assert!(parse_kind("fast").is_err());
+    }
+
+    #[test]
+    fn wide_axpy_matches_scalar_bitwise_all_lengths() {
+        let scalar = Kernels::with_kind(KernelKind::Scalar);
+        let wide = Kernels::with_kind(KernelKind::Wide);
+        for n in 0..=67 {
+            let src = seq_f64(n, 1.0);
+            let mut a = seq_f64(n, 2.0);
+            let mut b = a.clone();
+            scalar.axpy(&mut a, 0.731, &src);
+            wide.axpy(&mut b, 0.731, &src);
+            assert_eq!(a, b, "len {n}");
+        }
+    }
+
+    #[test]
+    fn update_row_blocks_match_sequential_rank1_bitwise() {
+        let scalar = Kernels::with_kind(KernelKind::Scalar);
+        let wide = Kernels::with_kind(KernelKind::Wide);
+        for steps in [0usize, 1, 2, 3, 4, 5, 7, 8, 11] {
+            let rows: Vec<Vec<f64>> = (0..steps).map(|s| seq_f64(37, s as f64)).collect();
+            // Make some steps zero to exercise the chunk-granular skip.
+            let coef: Vec<f64> = (0..steps)
+                .map(|s| if s % 3 == 2 { 0.0 } else { 0.1 + s as f64 })
+                .collect();
+            let mut a = seq_f64(37, 9.0);
+            let mut b = a.clone();
+            scalar.update_row(&mut a, steps, |s| (coef[s], rows[s].as_slice()));
+            wide.update_row(&mut b, steps, |s| (coef[s], rows[s].as_slice()));
+            assert_eq!(a, b, "steps {steps}");
+        }
+    }
+
+    #[test]
+    fn zero_scalar_never_touches_dst() {
+        let wide = Kernels::with_kind(KernelKind::Wide);
+        let src = vec![f64::NAN; 16];
+        let mut dst = seq_f64(16, 0.0);
+        let before = dst.clone();
+        wide.axpy(&mut dst, 0.0, &src);
+        assert_eq!(dst, before);
+    }
+
+    #[test]
+    fn complex_goes_through_the_portable_path_bitwise() {
+        let scalar = Kernels::with_kind(KernelKind::Scalar);
+        let wide = Kernels::with_kind(KernelKind::Wide);
+        for n in [0usize, 1, 7, 8, 9, 33] {
+            let src: Vec<Complex64> = (0..n)
+                .map(|k| Complex64::new((k as f64).cos(), (k as f64).sin()))
+                .collect();
+            let a = Complex64::new(0.3, -0.7);
+            let mut x: Vec<Complex64> = (0..n)
+                .map(|k| Complex64::new(k as f64 * 0.1, -(k as f64)))
+                .collect();
+            let mut y = x.clone();
+            scalar.axpy(&mut x, a, &src);
+            wide.axpy(&mut y, a, &src);
+            assert_eq!(x, y, "len {n}");
+        }
+    }
+
+    #[test]
+    fn dispatch_counts_by_kind() {
+        let before = stats();
+        force_kernel(Some(KernelKind::Scalar));
+        let k = dispatch();
+        assert_eq!(k.kind(), KernelKind::Scalar);
+        force_kernel(Some(KernelKind::Wide));
+        let k = dispatch();
+        assert_eq!(k.kind(), KernelKind::Wide);
+        force_kernel(None);
+        let after = stats();
+        assert!(after.scalar_dispatches > before.scalar_dispatches);
+        assert!(after.wide_dispatches > before.wide_dispatches);
+        assert!(!after.selected.is_empty() && !after.isa.is_empty());
+    }
+}

@@ -13,6 +13,9 @@
 //! * [`shard`] — block decomposition of oversized/rectangular problems
 //!   across repeated engine tile passes (the CPU analog of the device's
 //!   grid tiling), bit-identical to [`outer`].
+//! * [`kernels`] — the vectorized microkernel layer every path above
+//!   bottoms out in: runtime-dispatched scalar/wide axpy and 4-step
+//!   register-blocked row updates, bit-identical by construction.
 //!
 //! Plus [`mode_product`] (single rectangular mode-s products, the building
 //! block of Tucker compression/expansion §2.3) and the [`parenthesize`]
@@ -30,6 +33,7 @@
 
 pub mod engine;
 pub mod inner;
+pub mod kernels;
 pub mod lower_dims;
 pub mod mode_product;
 pub mod naive;
@@ -42,7 +46,10 @@ pub mod split;
 pub use engine::{gemt_engine, Engine, EngineConfig};
 pub use inner::gemt_inner;
 pub use lower_dims::{dxt1d_forward, dxt1d_inverse, dxt2d_forward, dxt2d_inverse};
-pub use mode_product::{mode1_product, mode2_product, mode3_product};
+pub use mode_product::{
+    mode1_product, mode1_product_pair, mode2_product, mode2_product_pair, mode3_product,
+    mode3_product_pair,
+};
 pub use naive::gemt_naive;
 pub use outer::gemt_outer;
 pub use rect::{gemt_rect, tucker_compress, tucker_expand};

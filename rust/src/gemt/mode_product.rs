@@ -15,6 +15,7 @@
 //! assert_eq!(mode2_product(&x, &Mat::zeros(3, 5)).shape(), (2, 5, 2));
 //! ```
 
+use super::kernels;
 use crate::tensor::{Mat, Scalar, Tensor3};
 
 /// Mode-1 product: `out[k1, j, k] = Σ_i x[i, j, k] · c[i, k1]`,
@@ -23,23 +24,40 @@ pub fn mode1_product<T: Scalar>(x: &Tensor3<T>, c: &Mat<T>) -> Tensor3<T> {
     let (n1, n2, n3) = x.shape();
     assert_eq!(c.rows(), n1, "mode-1 coefficient rows must equal N1");
     let k1 = c.cols();
+    let ker = kernels::dispatch();
     let mut out = Tensor3::zeros(k1, n2, n3);
-    for i in 0..n1 {
-        for kk in 0..k1 {
-            let cv = c.get(i, kk);
-            if cv.is_zero() {
-                continue;
-            }
-            for j in 0..n2 {
-                let src = x.row(i, j);
-                let dst = out.row_mut(kk, j);
-                for (d, &s) in dst.iter_mut().zip(src) {
-                    *d += s * cv;
-                }
-            }
+    for kk in 0..k1 {
+        for j in 0..n2 {
+            ker.update_row(out.row_mut(kk, j), n1, |i| (c.get(i, kk), x.row(i, j)));
         }
     }
     out
+}
+
+/// Mode-1 product against a coefficient pair `(cr, ci)` sharing one input
+/// sweep — the split-DFT `(cos, ±sin)` pattern. Each half is bit-identical
+/// to the corresponding single [`mode1_product`] call.
+pub fn mode1_product_pair<T: Scalar>(
+    x: &Tensor3<T>,
+    cr: &Mat<T>,
+    ci: &Mat<T>,
+) -> (Tensor3<T>, Tensor3<T>) {
+    let (n1, n2, n3) = x.shape();
+    assert_eq!(cr.rows(), n1, "mode-1 coefficient rows must equal N1");
+    assert_eq!((ci.rows(), ci.cols()), (cr.rows(), cr.cols()), "pair shape mismatch");
+    let k1 = cr.cols();
+    let ker = kernels::dispatch();
+    let mut out_r = Tensor3::zeros(k1, n2, n3);
+    let mut out_m = Tensor3::zeros(k1, n2, n3);
+    for kk in 0..k1 {
+        for j in 0..n2 {
+            ker.update_row2(out_r.row_mut(kk, j), out_m.row_mut(kk, j), n1, |i| {
+                let src = x.row(i, j);
+                ((cr.get(i, kk), src), (ci.get(i, kk), src))
+            });
+        }
+    }
+    (out_r, out_m)
 }
 
 /// Mode-2 product: `out[i, k2, k] = Σ_j x[i, j, k] · c[j, k2]`,
@@ -48,23 +66,39 @@ pub fn mode2_product<T: Scalar>(x: &Tensor3<T>, c: &Mat<T>) -> Tensor3<T> {
     let (n1, n2, n3) = x.shape();
     assert_eq!(c.rows(), n2, "mode-2 coefficient rows must equal N2");
     let k2 = c.cols();
+    let ker = kernels::dispatch();
     let mut out = Tensor3::zeros(n1, k2, n3);
     for i in 0..n1 {
-        for j in 0..n2 {
-            let src = x.row(i, j);
-            for kk in 0..k2 {
-                let cv = c.get(j, kk);
-                if cv.is_zero() {
-                    continue;
-                }
-                let dst = out.row_mut(i, kk);
-                for (d, &s) in dst.iter_mut().zip(src) {
-                    *d += s * cv;
-                }
-            }
+        for kk in 0..k2 {
+            ker.update_row(out.row_mut(i, kk), n2, |j| (c.get(j, kk), x.row(i, j)));
         }
     }
     out
+}
+
+/// Mode-2 product against a coefficient pair `(cr, ci)` sharing one input
+/// sweep; each half bit-identical to the single [`mode2_product`].
+pub fn mode2_product_pair<T: Scalar>(
+    x: &Tensor3<T>,
+    cr: &Mat<T>,
+    ci: &Mat<T>,
+) -> (Tensor3<T>, Tensor3<T>) {
+    let (n1, n2, n3) = x.shape();
+    assert_eq!(cr.rows(), n2, "mode-2 coefficient rows must equal N2");
+    assert_eq!((ci.rows(), ci.cols()), (cr.rows(), cr.cols()), "pair shape mismatch");
+    let k2 = cr.cols();
+    let ker = kernels::dispatch();
+    let mut out_r = Tensor3::zeros(n1, k2, n3);
+    let mut out_m = Tensor3::zeros(n1, k2, n3);
+    for i in 0..n1 {
+        for kk in 0..k2 {
+            ker.update_row2(out_r.row_mut(i, kk), out_m.row_mut(i, kk), n2, |j| {
+                let src = x.row(i, j);
+                ((cr.get(j, kk), src), (ci.get(j, kk), src))
+            });
+        }
+    }
+    (out_r, out_m)
 }
 
 /// Mode-3 product: `out[i, j, k3] = Σ_k x[i, j, k] · c[k, k3]`,
@@ -73,23 +107,43 @@ pub fn mode3_product<T: Scalar>(x: &Tensor3<T>, c: &Mat<T>) -> Tensor3<T> {
     let (n1, n2, n3) = x.shape();
     assert_eq!(c.rows(), n3, "mode-3 coefficient rows must equal N3");
     let k3 = c.cols();
+    let ker = kernels::dispatch();
     let mut out = Tensor3::zeros(n1, n2, k3);
     for i in 0..n1 {
         for j in 0..n2 {
             let src = x.row(i, j);
-            let dst = out.row_mut(i, j);
-            for (k, &s) in src.iter().enumerate() {
-                if s.is_zero() {
-                    continue;
-                }
-                let crow = c.row(k);
-                for (d, &cv) in dst.iter_mut().zip(crow) {
-                    *d += s * cv;
-                }
-            }
+            ker.update_row(out.row_mut(i, j), n3, |k| (src[k], c.row(k)));
         }
     }
     out
+}
+
+/// Mode-3 product against a coefficient pair `(cr, ci)`: both halves
+/// stream each input row once (the streamed scalar `x[i, j, k]` is shared,
+/// the coefficient rows differ); each half bit-identical to the single
+/// [`mode3_product`].
+pub fn mode3_product_pair<T: Scalar>(
+    x: &Tensor3<T>,
+    cr: &Mat<T>,
+    ci: &Mat<T>,
+) -> (Tensor3<T>, Tensor3<T>) {
+    let (n1, n2, n3) = x.shape();
+    assert_eq!(cr.rows(), n3, "mode-3 coefficient rows must equal N3");
+    assert_eq!((ci.rows(), ci.cols()), (cr.rows(), cr.cols()), "pair shape mismatch");
+    let k3 = cr.cols();
+    let ker = kernels::dispatch();
+    let mut out_r = Tensor3::zeros(n1, n2, k3);
+    let mut out_m = Tensor3::zeros(n1, n2, k3);
+    for i in 0..n1 {
+        for j in 0..n2 {
+            let src = x.row(i, j);
+            ker.update_row2(out_r.row_mut(i, j), out_m.row_mut(i, j), n3, |k| {
+                let s = src[k];
+                ((s, cr.row(k)), (s, ci.row(k)))
+            });
+        }
+    }
+    (out_r, out_m)
 }
 
 #[cfg(test)]
@@ -155,6 +209,27 @@ mod tests {
         let a = mode3_product(&mode1_product(&x, &c1), &c3);
         let b = mode1_product(&mode3_product(&x, &c3), &c1);
         assert!(a.max_abs_diff(&b) < 1e-12);
+    }
+
+    #[test]
+    fn pair_products_bit_identical_to_two_singles() {
+        let mut rng = Rng::new(36);
+        let x = Tensor3::random(4, 5, 6, &mut rng);
+        let cr1 = Mat::random(4, 3, &mut rng);
+        let ci1 = Mat::random(4, 3, &mut rng);
+        let (r, m) = mode1_product_pair(&x, &cr1, &ci1);
+        assert_eq!(r.max_abs_diff(&mode1_product(&x, &cr1)), 0.0);
+        assert_eq!(m.max_abs_diff(&mode1_product(&x, &ci1)), 0.0);
+        let cr2 = Mat::random(5, 7, &mut rng);
+        let ci2 = Mat::random(5, 7, &mut rng);
+        let (r, m) = mode2_product_pair(&x, &cr2, &ci2);
+        assert_eq!(r.max_abs_diff(&mode2_product(&x, &cr2)), 0.0);
+        assert_eq!(m.max_abs_diff(&mode2_product(&x, &ci2)), 0.0);
+        let cr3 = Mat::random(6, 2, &mut rng);
+        let ci3 = Mat::random(6, 2, &mut rng);
+        let (r, m) = mode3_product_pair(&x, &cr3, &ci3);
+        assert_eq!(r.max_abs_diff(&mode3_product(&x, &cr3)), 0.0);
+        assert_eq!(m.max_abs_diff(&mode3_product(&x, &ci3)), 0.0);
     }
 
     #[test]

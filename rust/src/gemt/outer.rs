@@ -27,7 +27,7 @@
 //! assert!(gemt_outer(&x, &cs).max_abs_diff(&gemt_naive(&x, &cs)) < 1e-10);
 //! ```
 
-use super::CoeffSet;
+use super::{kernels, CoeffSet};
 use crate::tensor::{Mat, Scalar, Tensor3};
 
 /// Three-stage outer-product 3D-GEMT (summation order s = {3, 1, 2}).
@@ -35,6 +35,7 @@ pub fn gemt_outer<T: Scalar>(x: &Tensor3<T>, cs: &CoeffSet<T>) -> Tensor3<T> {
     let (n1, n2, n3) = x.shape();
     assert_eq!(cs.input_shape(), (n1, n2, n3));
     let (k1s, k2s, k3s) = cs.output_shape();
+    let k = kernels::dispatch();
 
     // Stage I (Eq. 6.1): rank-N3 update per horizontal slice:
     // Ẋ^{(n2)} += Σ_{n3} x(n3)_{N1} ∘ c3(n3)_{K3}.
@@ -44,13 +45,7 @@ pub fn gemt_outer<T: Scalar>(x: &Tensor3<T>, cs: &CoeffSet<T>) -> Tensor3<T> {
         for j in 0..n2 {
             for i in 0..n1 {
                 let xv = x.get(i, j, step); // element of column-vector x(n3)
-                if xv.is_zero() {
-                    continue;
-                }
-                let dst = s1.row_mut(i, j);
-                for (d, &cv) in dst.iter_mut().zip(crow) {
-                    *d += xv * cv;
-                }
+                k.axpy(s1.row_mut(i, j), xv, crow);
             }
         }
     }
@@ -63,13 +58,7 @@ pub fn gemt_outer<T: Scalar>(x: &Tensor3<T>, cs: &CoeffSet<T>) -> Tensor3<T> {
             let xrow: &[T] = s1.row(step, j); // ẋ(n1)^{(n2)} along k3
             for kk1 in 0..k1s {
                 let cv = cs.c1.get(step, kk1);
-                if cv.is_zero() {
-                    continue;
-                }
-                let dst = s2.row_mut(kk1, j);
-                for (d, &xv) in dst.iter_mut().zip(xrow) {
-                    *d += cv * xv;
-                }
+                k.axpy(s2.row_mut(kk1, j), cv, xrow);
             }
         }
     }
@@ -84,13 +73,7 @@ pub fn gemt_outer<T: Scalar>(x: &Tensor3<T>, cs: &CoeffSet<T>) -> Tensor3<T> {
         for kk1 in 0..k1s {
             let src = s2.row(kk1, step);
             for (kk2, &cv) in crow.iter().enumerate() {
-                if cv.is_zero() {
-                    continue;
-                }
-                let dst = out.row_mut(kk1, kk2);
-                for (d, &xv) in dst.iter_mut().zip(src) {
-                    *d += xv * cv;
-                }
+                k.axpy(out.row_mut(kk1, kk2), cv, src);
             }
         }
     }
@@ -105,18 +88,14 @@ pub fn sr_gemm<T: Scalar>(x: &Mat<T>, c: &Mat<T>, out: &mut Mat<T>) {
     assert_eq!(c.rows(), c.cols(), "SR-GEMM streams a square coefficient matrix");
     assert_eq!(x.cols(), c.rows(), "inner dimension mismatch");
     assert_eq!((out.rows(), out.cols()), (x.rows(), c.cols()));
+    let k = kernels::dispatch();
     for n in 0..c.rows() {
         let crow = c.row(n);
         for m in 0..x.rows() {
             let xv = x.get(m, n);
-            if xv.is_zero() {
-                continue;
-            }
             let base = m * out.cols();
             let orow = &mut out.data_mut()[base..base + crow.len()];
-            for (d, &cv) in orow.iter_mut().zip(crow) {
-                *d += xv * cv;
-            }
+            k.axpy(orow, xv, crow);
         }
     }
 }

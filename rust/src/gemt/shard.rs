@@ -31,9 +31,11 @@
 //!
 //! The same three tile kernels are exactly the three single-mode products,
 //! so this module also provides [`mode1_sharded`] / [`mode2_sharded`] /
-//! [`mode3_sharded`] — the parallel building blocks the split-complex DFT
-//! ([`super::split`]) rides on: four real mode products per mode, on the
-//! engine path instead of the scalar reference.
+//! [`mode3_sharded`] plus their `_pair` variants — the parallel building
+//! blocks the split-complex DFT ([`super::split`]) rides on: four real
+//! mode products per mode, executed as two tiled *pair* sweeps (each input
+//! tensor against both `(cos, ±sin)` halves at once), on the engine path
+//! instead of the scalar reference.
 //!
 //! ```
 //! use triada::gemt::shard::{gemt_sharded_with, ShardConfig};
@@ -57,6 +59,7 @@
 //! ```
 
 use super::engine::{gemt_engine_ctx, stage1_panel, EngineConfig};
+use super::kernels;
 use super::split::SplitCoeffs;
 use super::CoeffSet;
 use crate::pool::{self, Layer};
@@ -256,21 +259,17 @@ fn stage2_panel<T: Scalar>(
     if w == 0 {
         return;
     }
+    let ker = kernels::dispatch();
     for step0 in (0..n1).step_by(block) {
         let step1 = (step0 + block).min(n1);
         for (r, dst) in panel.chunks_mut(w).enumerate() {
             let flat = first_row + r;
             let (kk1, j) = (flat / n2, flat % n2);
-            for step in step0..step1 {
-                let cv = c.get(step, kk1);
-                if cv.is_zero() {
-                    continue; // ESOP skip (§6) — same predicate as gemt_outer
-                }
-                let srow = src.row(step, j);
-                for (d, &sv) in dst.iter_mut().zip(srow) {
-                    *d += cv * sv;
-                }
-            }
+            // ESOP skip (§6) applied per step inside the kernel — same
+            // predicate as gemt_outer, ascending step order per element.
+            ker.update_row(dst, step1 - step0, |s| {
+                (c.get(step0 + s, kk1), src.row(step0 + s, j))
+            });
         }
     }
 }
@@ -290,21 +289,162 @@ fn stage3_panel<T: Scalar>(
     if w == 0 {
         return;
     }
+    let ker = kernels::dispatch();
     for step0 in (0..n2).step_by(block) {
         let step1 = (step0 + block).min(n2);
         for (r, dst) in panel.chunks_mut(w).enumerate() {
             let flat = first_row + r;
             let (i, kk2) = (flat / k2, flat % k2);
-            for step in step0..step1 {
-                let cv = c.get(step, kk2);
-                if cv.is_zero() {
-                    continue; // ESOP skip
-                }
-                let srow = src.row(i, step);
-                for (d, &sv) in dst.iter_mut().zip(srow) {
-                    *d += sv * cv;
-                }
-            }
+            // ESOP skip applied per step inside the kernel.
+            ker.update_row(dst, step1 - step0, |s| {
+                (c.get(step0 + s, kk2), src.row(i, step0 + s))
+            });
+        }
+    }
+}
+
+/// One pair tile: matching row bands of a pair product's two outputs.
+struct PairTile<'a, T> {
+    first_row: usize,
+    panel_r: &'a mut [T],
+    panel_m: &'a mut [T],
+}
+
+/// Split two equally-shaped row-major buffers into matching disjoint
+/// `band`-row tile pairs.
+fn pair_tiles<'a, T>(
+    dr: &'a mut [T],
+    dm: &'a mut [T],
+    width: usize,
+    band: usize,
+) -> Vec<PairTile<'a, T>> {
+    if dr.is_empty() || width == 0 {
+        return Vec::new();
+    }
+    debug_assert_eq!(dr.len(), dm.len());
+    debug_assert_eq!(dr.len() % width, 0);
+    dr.chunks_mut(band * width)
+        .zip(dm.chunks_mut(band * width))
+        .enumerate()
+        .map(|(i, (panel_r, panel_m))| PairTile { first_row: i * band, panel_r, panel_m })
+        .collect()
+}
+
+/// [`run_tiles`] for pair products: each task owns the matching row bands
+/// of both outputs, so one sweep of the input feeds both halves.
+fn run_pair_tiles<T: Scalar>(
+    threads: usize,
+    tiles: Vec<PairTile<'_, T>>,
+    job: impl Fn(usize, &mut [T], &mut [T]) + Sync,
+) {
+    if tiles.is_empty() {
+        return;
+    }
+    if threads <= 1 || tiles.len() == 1 {
+        for t in tiles {
+            job(t.first_row, t.panel_r, t.panel_m);
+        }
+        return;
+    }
+    let job = &job;
+    pool::global().scope(Layer::Shard, |s| {
+        for t in tiles {
+            s.spawn(move || job(t.first_row, t.panel_r, t.panel_m));
+        }
+    });
+}
+
+/// Pair variant of [`stage1_panel`] (mode-3): both halves of each owned
+/// `(i, j)` row walk the streamed scalar once per step against their own
+/// coefficient row.
+#[allow(clippy::too_many_arguments)]
+fn stage1_panel_pair<T: Scalar>(
+    x: &Tensor3<T>,
+    cr: &Mat<T>,
+    ci: &Mat<T>,
+    first_row: usize,
+    panel_r: &mut [T],
+    panel_m: &mut [T],
+    n2: usize,
+    block: usize,
+) {
+    let n3 = cr.rows();
+    let w = cr.cols();
+    if w == 0 {
+        return;
+    }
+    let ker = kernels::dispatch();
+    for step0 in (0..n3).step_by(block) {
+        let step1 = (step0 + block).min(n3);
+        for (r, (dr, dm)) in panel_r.chunks_mut(w).zip(panel_m.chunks_mut(w)).enumerate() {
+            let flat = first_row + r;
+            let (i, j) = (flat / n2, flat % n2);
+            let xrow = x.row(i, j);
+            ker.update_row2(dr, dm, step1 - step0, |s| {
+                let xv = xrow[step0 + s];
+                ((xv, cr.row(step0 + s)), (xv, ci.row(step0 + s)))
+            });
+        }
+    }
+}
+
+/// Pair variant of [`stage2_panel`] (mode-1): the shared source row is
+/// streamed once per step into both halves.
+#[allow(clippy::too_many_arguments)]
+fn stage2_panel_pair<T: Scalar>(
+    src: &Tensor3<T>,
+    cr: &Mat<T>,
+    ci: &Mat<T>,
+    first_row: usize,
+    panel_r: &mut [T],
+    panel_m: &mut [T],
+    n2: usize,
+    block: usize,
+) {
+    let (n1, _, w) = src.shape();
+    if w == 0 {
+        return;
+    }
+    let ker = kernels::dispatch();
+    for step0 in (0..n1).step_by(block) {
+        let step1 = (step0 + block).min(n1);
+        for (r, (dr, dm)) in panel_r.chunks_mut(w).zip(panel_m.chunks_mut(w)).enumerate() {
+            let flat = first_row + r;
+            let (kk1, j) = (flat / n2, flat % n2);
+            ker.update_row2(dr, dm, step1 - step0, |s| {
+                let srow = src.row(step0 + s, j);
+                ((cr.get(step0 + s, kk1), srow), (ci.get(step0 + s, kk1), srow))
+            });
+        }
+    }
+}
+
+/// Pair variant of [`stage3_panel`] (mode-2).
+#[allow(clippy::too_many_arguments)]
+fn stage3_panel_pair<T: Scalar>(
+    src: &Tensor3<T>,
+    cr: &Mat<T>,
+    ci: &Mat<T>,
+    first_row: usize,
+    panel_r: &mut [T],
+    panel_m: &mut [T],
+    k2: usize,
+    block: usize,
+) {
+    let (_, n2, w) = src.shape();
+    if w == 0 {
+        return;
+    }
+    let ker = kernels::dispatch();
+    for step0 in (0..n2).step_by(block) {
+        let step1 = (step0 + block).min(n2);
+        for (r, (dr, dm)) in panel_r.chunks_mut(w).zip(panel_m.chunks_mut(w)).enumerate() {
+            let flat = first_row + r;
+            let (i, kk2) = (flat / k2, flat % k2);
+            ker.update_row2(dr, dm, step1 - step0, |s| {
+                let srow = src.row(i, step0 + s);
+                ((cr.get(step0 + s, kk2), srow), (ci.get(step0 + s, kk2), srow))
+            });
         }
     }
 }
@@ -454,6 +594,79 @@ pub fn mode3_sharded<T: Scalar>(x: &Tensor3<T>, c: &Mat<T>, config: &ShardConfig
     out
 }
 
+/// Tiled parallel mode-1 **pair** product: both halves bit-identical to
+/// the corresponding single [`mode1_sharded`] calls, with one tiled input
+/// sweep feeding both.
+pub fn mode1_sharded_pair<T: Scalar>(
+    x: &Tensor3<T>,
+    cr: &Mat<T>,
+    ci: &Mat<T>,
+    config: &ShardConfig,
+) -> (Tensor3<T>, Tensor3<T>) {
+    let (n1, n2, n3) = x.shape();
+    assert_eq!(cr.rows(), n1, "mode-1 coefficient rows must equal N1");
+    assert_eq!((ci.rows(), ci.cols()), (cr.rows(), cr.cols()), "pair shape mismatch");
+    let k1 = cr.cols();
+    let mut out_r = Tensor3::<T>::zeros(k1, n2, n3);
+    let mut out_m = Tensor3::<T>::zeros(k1, n2, n3);
+    let threads = config.engine.effective_threads().max(1);
+    let block = config.engine.block.max(1);
+    let band = band_rows(k1 * n2, threads, config.max_tile);
+    let tiles = pair_tiles(out_r.data_mut(), out_m.data_mut(), n3, band);
+    run_pair_tiles(threads, tiles, |first, pr, pm| {
+        stage2_panel_pair(x, cr, ci, first, pr, pm, n2, block)
+    });
+    (out_r, out_m)
+}
+
+/// Tiled parallel mode-2 **pair** product; both halves bit-identical to
+/// the single [`mode2_sharded`] calls.
+pub fn mode2_sharded_pair<T: Scalar>(
+    x: &Tensor3<T>,
+    cr: &Mat<T>,
+    ci: &Mat<T>,
+    config: &ShardConfig,
+) -> (Tensor3<T>, Tensor3<T>) {
+    let (n1, n2, n3) = x.shape();
+    assert_eq!(cr.rows(), n2, "mode-2 coefficient rows must equal N2");
+    assert_eq!((ci.rows(), ci.cols()), (cr.rows(), cr.cols()), "pair shape mismatch");
+    let k2 = cr.cols();
+    let mut out_r = Tensor3::<T>::zeros(n1, k2, n3);
+    let mut out_m = Tensor3::<T>::zeros(n1, k2, n3);
+    let threads = config.engine.effective_threads().max(1);
+    let block = config.engine.block.max(1);
+    let band = band_rows(n1 * k2, threads, config.max_tile);
+    let tiles = pair_tiles(out_r.data_mut(), out_m.data_mut(), n3, band);
+    run_pair_tiles(threads, tiles, |first, pr, pm| {
+        stage3_panel_pair(x, cr, ci, first, pr, pm, k2, block)
+    });
+    (out_r, out_m)
+}
+
+/// Tiled parallel mode-3 **pair** product; both halves bit-identical to
+/// the single [`mode3_sharded`] calls.
+pub fn mode3_sharded_pair<T: Scalar>(
+    x: &Tensor3<T>,
+    cr: &Mat<T>,
+    ci: &Mat<T>,
+    config: &ShardConfig,
+) -> (Tensor3<T>, Tensor3<T>) {
+    let (n1, n2, n3) = x.shape();
+    assert_eq!(cr.rows(), n3, "mode-3 coefficient rows must equal N3");
+    assert_eq!((ci.rows(), ci.cols()), (cr.rows(), cr.cols()), "pair shape mismatch");
+    let k3 = cr.cols();
+    let mut out_r = Tensor3::<T>::zeros(n1, n2, k3);
+    let mut out_m = Tensor3::<T>::zeros(n1, n2, k3);
+    let threads = config.engine.effective_threads().max(1);
+    let block = config.engine.block.max(1);
+    let band = band_rows(n1 * n2, threads, config.max_tile);
+    let tiles = pair_tiles(out_r.data_mut(), out_m.data_mut(), k3, band);
+    run_pair_tiles(threads, tiles, |first, pr, pm| {
+        stage1_panel_pair(x, cr, ci, first, pr, pm, n2, block)
+    });
+    (out_r, out_m)
+}
+
 /// A configured sharding instance — what [`ShardedEngineBackend`] and the
 /// CLI hold. Owns nothing but the knobs; every call plans fresh and runs
 /// its tile passes on the process-wide compute pool.
@@ -525,10 +738,11 @@ impl Sharder {
     }
 
     /// Tile passes [`Sharder::dft3d_split`] executes for an `(n1, n2, n3)`
-    /// problem: four real mode products per mode, each tiled into row
-    /// bands. The split path always runs tiled products — there is no
-    /// fused single-pass shortcut — and because the DFT matrices are
-    /// square, every product tiles the same `n1·n2` output rows.
+    /// problem: two pair products per mode (each covering two of the four
+    /// real mode products in one sweep), each tiled into row bands. The
+    /// split path always runs tiled products — there is no fused
+    /// single-pass shortcut — and because the DFT matrices are square,
+    /// every product tiles the same `n1·n2` output rows.
     pub fn split_total_passes(&self, shape: (usize, usize, usize)) -> usize {
         let (n1, n2, _) = shape;
         let rows = n1 * n2;
@@ -537,12 +751,12 @@ impl Sharder {
         }
         let threads = self.config.engine.effective_threads().max(1);
         let band = band_rows(rows, threads, self.config.max_tile);
-        12 * rows.div_ceil(band)
+        6 * rows.div_ceil(band)
     }
 
     /// Split 3D DFT on the engine path: four real mode products per mode,
-    /// each a tiled parallel pass — bit-identical to the scalar
-    /// [`super::split::dft3d_split`].
+    /// executed as two tiled parallel pair sweeps — bit-identical to the
+    /// scalar [`super::split::dft3d_split`].
     pub fn dft3d_split(
         &self,
         re: &Tensor3<f64>,
@@ -566,9 +780,9 @@ impl Sharder {
     }
 
     /// [`Sharder::dft3d_split_planned`] with cooperative cancellation:
-    /// the job's [`JobContext`] is polled before each of the twelve real
-    /// mode products (an interrupted product short-circuits to a zero
-    /// tensor of the right shape, never computed against), and the typed
+    /// the job's [`JobContext`] is polled before each of the six pair
+    /// products (an interrupted product short-circuits to zero tensors of
+    /// the right shape, never computed against), and the typed
     /// [`JobError`] is returned once the chain finishes unwinding.
     pub fn dft3d_split_planned_ctx(
         &self,
@@ -577,26 +791,30 @@ impl Sharder {
         coeffs: &SplitCoeffs,
         ctx: &JobContext,
     ) -> Result<(Tensor3<f64>, Tensor3<f64>), JobError> {
-        let prod = |t: &Tensor3<f64>, c: &Mat<f64>, mode: u8| {
+        let prod_pair = |t: &Tensor3<f64>, cr: &Mat<f64>, ci: &Mat<f64>, mode: u8| {
             if ctx.interrupted().is_some() {
                 // Skip the remaining products; shapes must stay coherent
                 // so the chain unwinds without panicking. The result is
                 // discarded at the checkpoint below.
                 let (n1, n2, n3) = t.shape();
-                return match mode {
-                    1 => Tensor3::zeros(c.cols(), n2, n3),
-                    2 => Tensor3::zeros(n1, c.cols(), n3),
-                    _ => Tensor3::zeros(n1, n2, c.cols()),
+                let shape = match mode {
+                    1 => (cr.cols(), n2, n3),
+                    2 => (n1, cr.cols(), n3),
+                    _ => (n1, n2, cr.cols()),
                 };
+                return (
+                    Tensor3::zeros(shape.0, shape.1, shape.2),
+                    Tensor3::zeros(shape.0, shape.1, shape.2),
+                );
             }
             match mode {
-                1 => mode1_sharded(t, c, &self.config),
-                2 => mode2_sharded(t, c, &self.config),
-                3 => mode3_sharded(t, c, &self.config),
+                1 => mode1_sharded_pair(t, cr, ci, &self.config),
+                2 => mode2_sharded_pair(t, cr, ci, &self.config),
+                3 => mode3_sharded_pair(t, cr, ci, &self.config),
                 _ => unreachable!("mode must be 1, 2, or 3"),
             }
         };
-        let (out_re, out_im) = super::split::dft3d_split_planned(re, im, coeffs, &prod);
+        let (out_re, out_im) = super::split::dft3d_split_planned(re, im, coeffs, &prod_pair);
         ctx.checkpoint()?;
         Ok((out_re, out_im))
     }
@@ -729,10 +947,34 @@ mod tests {
     #[test]
     fn split_total_passes_counts_all_tiled_products() {
         // 6·5 = 30 output rows per mode product, band capped at 4 → 8
-        // tiles each; 4 real products per mode × 3 modes = 12 products.
+        // tiles each; 2 pair products per mode × 3 modes = 6 products.
         let sharder = Sharder::new(cfg(4, 1));
-        assert_eq!(sharder.split_total_passes((6, 5, 7)), 12 * 8);
+        assert_eq!(sharder.split_total_passes((6, 5, 7)), 6 * 8);
         assert_eq!(sharder.split_total_passes((0, 5, 7)), 0);
+    }
+
+    #[test]
+    fn pair_sharded_bit_identical_to_singles() {
+        let mut rng = Rng::new(711);
+        let x = Tensor3::random(7, 6, 5, &mut rng);
+        let cr1 = Mat::random(7, 9, &mut rng);
+        let ci1 = Mat::random(7, 9, &mut rng);
+        let cr2 = Mat::random(6, 3, &mut rng);
+        let ci2 = Mat::random(6, 3, &mut rng);
+        let cr3 = Mat::random(5, 8, &mut rng);
+        let ci3 = Mat::random(5, 8, &mut rng);
+        for threads in [1usize, 2, 8] {
+            let c = cfg(2, threads);
+            let (r, m) = mode1_sharded_pair(&x, &cr1, &ci1, &c);
+            assert_eq!(r.max_abs_diff(&mode1_sharded(&x, &cr1, &c)), 0.0);
+            assert_eq!(m.max_abs_diff(&mode1_sharded(&x, &ci1, &c)), 0.0);
+            let (r, m) = mode2_sharded_pair(&x, &cr2, &ci2, &c);
+            assert_eq!(r.max_abs_diff(&mode2_sharded(&x, &cr2, &c)), 0.0);
+            assert_eq!(m.max_abs_diff(&mode2_sharded(&x, &ci2, &c)), 0.0);
+            let (r, m) = mode3_sharded_pair(&x, &cr3, &ci3, &c);
+            assert_eq!(r.max_abs_diff(&mode3_sharded(&x, &cr3, &c)), 0.0);
+            assert_eq!(m.max_abs_diff(&mode3_sharded(&x, &ci3, &c)), 0.0);
+        }
     }
 
     #[test]

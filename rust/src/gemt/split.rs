@@ -4,11 +4,13 @@
 //!
 //! For a complex mode product `y = x·C` with `x = a+ib`, `C = R+iM`:
 //! `Re(y) = a·R − b·M`, `Im(y) = a·M + b·R` — four real mode products per
-//! complex one. A TriADA cell would hold a 2-component local element and do
-//! the same four MACs.
+//! complex one, executed as **two pair products** (`a×(R,M)` and `b×(R,M)`)
+//! so each input tensor is swept once against both coefficient halves
+//! ([`super::kernels::Kernels::update_row2`]). A TriADA cell would hold a
+//! 2-component local element and do the same four MACs.
 //!
 //! The mode-product executor is pluggable: [`dft3d_split`] runs the scalar
-//! reference products, while [`crate::gemt::shard::Sharder::dft3d_split`]
+//! reference pair products, while [`crate::gemt::shard::Sharder::dft3d_split`]
 //! injects the tiled parallel engine products — same four-MAC structure,
 //! bit-identical results.
 //!
@@ -88,17 +90,23 @@ impl SplitCoeffs {
         re: &Tensor3<f64>,
         im: &Tensor3<f64>,
     ) -> (Tensor3<f64>, Tensor3<f64>) {
-        dft3d_split_planned(re, im, self, &scalar_mode_product)
+        dft3d_split_planned(re, im, self, &scalar_mode_product_pair)
     }
 }
 
-/// The scalar reference single-mode-product executor.
-fn scalar_mode_product(t: &Tensor3<f64>, c: &Mat<f64>, mode: u8) -> Tensor3<f64> {
-    use super::mode_product::{mode1_product, mode2_product, mode3_product};
+/// The scalar reference pair-product executor: one tensor against both
+/// coefficient halves in a single sweep.
+fn scalar_mode_product_pair(
+    t: &Tensor3<f64>,
+    cr: &Mat<f64>,
+    ci: &Mat<f64>,
+    mode: u8,
+) -> (Tensor3<f64>, Tensor3<f64>) {
+    use super::mode_product::{mode1_product_pair, mode2_product_pair, mode3_product_pair};
     match mode {
-        1 => mode1_product(t, c),
-        2 => mode2_product(t, c),
-        3 => mode3_product(t, c),
+        1 => mode1_product_pair(t, cr, ci),
+        2 => mode2_product_pair(t, cr, ci),
+        3 => mode3_product_pair(t, cr, ci),
         _ => unreachable!("mode must be 1, 2, or 3"),
     }
 }
@@ -113,15 +121,20 @@ pub fn dft3d_split(
     SplitCoeffs::new(re.shape(), inverse).run_scalar(re, im)
 }
 
+/// The pluggable pair-product executor type: one real tensor against a
+/// `(cos, ±sin)` coefficient pair along `mode`, returning both halves.
+pub(crate) type PairProduct<'e> =
+    dyn Fn(&Tensor3<f64>, &Mat<f64>, &Mat<f64>, u8) -> (Tensor3<f64>, Tensor3<f64>) + 'e;
+
 /// Split 3D DFT over **precomputed** stationary coefficients and a
-/// pluggable single-mode-product executor. The split pair walks the same
+/// pluggable pair-product executor. The split pair walks the same
 /// `{3, 1, 2}` mode order as the three-stage chain; every executor that is
-/// bit-identical to the scalar mode products yields a bit-identical DFT.
+/// bit-identical to the scalar pair products yields a bit-identical DFT.
 pub(crate) fn dft3d_split_planned(
     re: &Tensor3<f64>,
     im: &Tensor3<f64>,
     coeffs: &SplitCoeffs,
-    prod: &(dyn Fn(&Tensor3<f64>, &Mat<f64>, u8) -> Tensor3<f64>),
+    prod_pair: &PairProduct<'_>,
 ) -> (Tensor3<f64>, Tensor3<f64>) {
     assert_eq!(re.shape(), im.shape());
     assert_eq!(
@@ -132,7 +145,7 @@ pub(crate) fn dft3d_split_planned(
     let (mut a, mut b) = (re.clone(), im.clone());
     for mode in [3u8, 1, 2] {
         let (cr, ci) = coeffs.pair(mode);
-        let (na, nb) = split_mode_product(&a, &b, cr, ci, mode, prod);
+        let (na, nb) = split_mode_product(&a, &b, cr, ci, mode, prod_pair);
         a = na;
         b = nb;
     }
@@ -140,19 +153,18 @@ pub(crate) fn dft3d_split_planned(
 }
 
 /// One split complex mode product: `(a+ib) ×ₘ (R+iM)` — four real mode
-/// products combined as `Re = aR − bM`, `Im = aM + bR`.
+/// products, run as two pair sweeps, combined as `Re = aR − bM`,
+/// `Im = aM + bR`.
 fn split_mode_product(
     a: &Tensor3<f64>,
     b: &Tensor3<f64>,
     cr: &Mat<f64>,
     ci: &Mat<f64>,
     mode: u8,
-    prod: &(dyn Fn(&Tensor3<f64>, &Mat<f64>, u8) -> Tensor3<f64>),
+    prod_pair: &PairProduct<'_>,
 ) -> (Tensor3<f64>, Tensor3<f64>) {
-    let ar = prod(a, cr, mode);
-    let am = prod(a, ci, mode);
-    let br = prod(b, cr, mode);
-    let bm = prod(b, ci, mode);
+    let (ar, am) = prod_pair(a, cr, ci, mode);
+    let (br, bm) = prod_pair(b, cr, ci, mode);
     // Re = aR − bM ; Im = aM + bR
     let re = ar.add(&bm.scale(-1.0));
     let im = am.add(&br);

@@ -35,10 +35,31 @@ pub trait Scalar:
     fn is_zero(self) -> bool {
         self == Self::zero()
     }
-    /// Fused-ish multiply-add: self + a*b. The simulator's atomic MAC.
+    /// Multiply-accumulate: `self + a*b`. The simulator's atomic MAC.
+    ///
+    /// **Rounding contract:** this is the *non-fused* form — the product
+    /// `a*b` rounds once, the add rounds again (two roundings total).
+    /// Every dispatch-path kernel in [`crate::gemt::kernels`] performs
+    /// exactly this operation per summation step, which is what makes the
+    /// scalar reference, the chunked portable kernels, and the AVX2 wide
+    /// kernels bit-identical. For the true single-rounding fused form see
+    /// [`Scalar::mul_add`].
     #[inline]
     fn mac(self, a: Self, b: Self) -> Self {
         self + a * b
+    }
+
+    /// Fused multiply-add: `self + a*b` with a **single** rounding where
+    /// the type supports it (`f64`/`f32` lower to a hardware FMA). The
+    /// default falls back to the two-rounding [`Scalar::mac`].
+    ///
+    /// Not used on any dispatch path — results would differ from the
+    /// reference in the last ulp. It exists for the measurement-only
+    /// [`crate::gemt::kernels::axpy_fma`] path the E4 roundoff experiment
+    /// quantifies that difference with.
+    #[inline]
+    fn mul_add(self, a: Self, b: Self) -> Self {
+        self.mac(a, b)
     }
 }
 
@@ -59,6 +80,11 @@ impl Scalar for f64 {
     fn abs_f64(self) -> f64 {
         self.abs()
     }
+    #[inline]
+    fn mul_add(self, a: f64, b: f64) -> f64 {
+        // inherent f64::mul_add — a single-rounding hardware FMA
+        a.mul_add(b, self)
+    }
 }
 
 impl Scalar for f32 {
@@ -78,6 +104,10 @@ impl Scalar for f32 {
     fn abs_f64(self) -> f64 {
         self.abs() as f64
     }
+    #[inline]
+    fn mul_add(self, a: f32, b: f32) -> f32 {
+        a.mul_add(b, self)
+    }
 }
 
 #[cfg(test)]
@@ -96,5 +126,22 @@ mod tests {
     fn f32_conversions() {
         assert_eq!(f32::from_f64(1.5), 1.5f32);
         assert_eq!((-2.0f32).abs_f64(), 2.0);
+    }
+
+    #[test]
+    fn mul_add_fuses_where_mac_rounds_twice() {
+        // a² needs 105 significand bits, so the rounded product equals
+        // 1 + 2ε and loses the ε² tail. Subtracting that rounded product
+        // cancels everything mac kept (two roundings → exactly 0) while
+        // the fused form retains the tail (one rounding → exactly ε²).
+        let a = 1.0 + f64::EPSILON;
+        let p = a * a;
+        assert_eq!(Scalar::mul_add(-p, a, a), f64::EPSILON * f64::EPSILON);
+        assert_eq!((-p).mac(a, a), 0.0);
+
+        let a = 1.0 + f32::EPSILON;
+        let p = a * a;
+        assert_eq!(Scalar::mul_add(-p, a, a), f32::EPSILON * f32::EPSILON);
+        assert_eq!((-p).mac(a, a), 0.0);
     }
 }

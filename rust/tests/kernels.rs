@@ -1,0 +1,296 @@
+//! Kernel-layer parity and wiring: the wide (4-step register-blocked,
+//! AVX2/portable) microkernels must be **bit-identical** to the scalar
+//! reference for every dtype, length, tail, and sparsity pattern; forcing
+//! either kind end-to-end must not change a single bit of any gemt path;
+//! and no hand-rolled inner axpy loop may survive outside `gemt::kernels`.
+
+use std::sync::Mutex;
+
+use triada::gemt::engine::{gemt_engine_on, EngineConfig};
+use triada::gemt::kernels::{self, KernelKind, Kernels};
+use triada::gemt::shard::{gemt_sharded_with, ShardConfig, Sharder};
+use triada::gemt::{gemt_outer, CoeffSet};
+use triada::pool::{ComputePool, PoolConfig};
+use triada::proptest::run_prop;
+use triada::tensor::{sparsify, Complex64, Mat, Scalar, Tensor3};
+use triada::util::Rng;
+
+/// Serializes tests that flip the process-wide [`kernels::force_kernel`]
+/// selection. (The kernels are bit-identical, so racing would not change
+/// numbers — but tests asserting on *which* kind ran must not interleave.)
+static FORCE_LOCK: Mutex<()> = Mutex::new(());
+
+fn fill<T: Scalar>(g: &mut triada::proptest::Gen, n: usize) -> Vec<T> {
+    (0..n).map(|_| T::from_f64(g.f64_in(-2.0, 2.0))).collect()
+}
+
+/// axpy / axpy2 / update_row / update_row2 parity for one dtype: wide vs
+/// scalar handles, exact equality, over remainder-heavy lengths,
+/// misaligned subslice offsets, zero and sparse step scalars.
+fn kernel_parity_case<T: Scalar>(g: &mut triada::proptest::Gen) -> Result<(), String> {
+    let scalar = Kernels::with_kind(KernelKind::Scalar);
+    let wide = Kernels::with_kind(KernelKind::Wide);
+    let len = g.usize_in(0, 67);
+    let off = if len > 0 { g.usize_in(0, len.min(5)) } else { 0 };
+
+    // rank-1 axpy on a misaligned subslice, sometimes zero.
+    let src: Vec<T> = fill(g, len);
+    let a = if g.usize_in(0, 4) == 0 { T::zero() } else { T::from_f64(g.f64_in(-2.0, 2.0)) };
+    let base: Vec<T> = fill(g, len);
+    let (mut s, mut w) = (base.clone(), base.clone());
+    scalar.axpy(&mut s[off..], a, &src[off..]);
+    wide.axpy(&mut w[off..], a, &src[off..]);
+    if s != w {
+        return Err(format!("axpy diverged (len {len}, off {off})"));
+    }
+
+    // paired axpy with a shared source row (the split-DFT pattern).
+    let a0 = if g.usize_in(0, 3) == 0 { T::zero() } else { T::from_f64(g.f64_in(-2.0, 2.0)) };
+    let a1 = if g.usize_in(0, 3) == 0 { T::zero() } else { T::from_f64(g.f64_in(-2.0, 2.0)) };
+    let (mut s0, mut s1) = (base.clone(), fill::<T>(g, len));
+    let (mut w0, mut w1) = (s0.clone(), s1.clone());
+    scalar.axpy2(&mut s0, a0, &src, &mut s1, a1, &src);
+    wide.axpy2(&mut w0, a0, &src, &mut w1, a1, &src);
+    if s0 != w0 || s1 != w1 {
+        return Err(format!("axpy2 diverged (len {len})"));
+    }
+
+    // multi-step row update with a sparse step-scalar pattern — exercises
+    // the 4-step block gather, the chunk-granular zero skip, and the 1–3
+    // step drain remainder.
+    let steps = g.usize_in(0, 11);
+    let rows: Vec<Vec<T>> = (0..steps).map(|_| fill(g, len)).collect();
+    let coef: Vec<T> = (0..steps)
+        .map(|_| if g.usize_in(0, 2) == 0 { T::zero() } else { T::from_f64(g.f64_in(-2.0, 2.0)) })
+        .collect();
+    let (mut s, mut w) = (base.clone(), base.clone());
+    scalar.update_row(&mut s, steps, |t| (coef[t], rows[t].as_slice()));
+    wide.update_row(&mut w, steps, |t| (coef[t], rows[t].as_slice()));
+    if s != w {
+        return Err(format!("update_row diverged (len {len}, steps {steps})"));
+    }
+
+    // paired row update vs two independent single updates.
+    let coef2: Vec<T> = (0..steps)
+        .map(|_| if g.usize_in(0, 2) == 0 { T::zero() } else { T::from_f64(g.f64_in(-2.0, 2.0)) })
+        .collect();
+    let (mut p0, mut p1) = (base.clone(), base.clone());
+    wide.update_row2(&mut p0, &mut p1, steps, |t| {
+        ((coef[t], rows[t].as_slice()), (coef2[t], rows[t].as_slice()))
+    });
+    let mut q1 = base.clone();
+    wide.update_row(&mut q1, steps, |t| (coef2[t], rows[t].as_slice()));
+    if p0 != s || p1 != q1 {
+        return Err(format!("update_row2 diverged (len {len}, steps {steps})"));
+    }
+    Ok(())
+}
+
+#[test]
+fn wide_matches_scalar_bitwise_f64() {
+    run_prop("kernel parity f64", 200, kernel_parity_case::<f64>);
+}
+
+#[test]
+fn wide_matches_scalar_bitwise_f32() {
+    run_prop("kernel parity f32", 200, kernel_parity_case::<f32>);
+}
+
+#[test]
+fn wide_matches_scalar_bitwise_complex64() {
+    run_prop("kernel parity complex64", 120, kernel_parity_case::<Complex64>);
+}
+
+/// Forcing scalar vs wide must produce bit-identical results on every
+/// gemt execution path: the outer-product reference, the fused engine on
+/// explicit pools of width 1/2/8, the sharded path, and the split DFT.
+#[test]
+fn forced_kinds_bit_identical_end_to_end() {
+    let _guard = FORCE_LOCK.lock().unwrap();
+    run_prop("forced kernel end-to-end identity", 12, |g| {
+        let (n1, n2, n3) = g.shape_in(1, 9);
+        let (k1, k2, k3) = g.shape_in(1, 9);
+        let mut x = Tensor3::random(n1, n2, n3, g.rng());
+        if g.usize_in(0, 1) == 0 {
+            let mut srng = Rng::new(7);
+            sparsify(&mut x, 0.6, &mut srng);
+        }
+        let cs = CoeffSet::new(
+            Mat::random(n1, k1, g.rng()),
+            Mat::random(n2, k2, g.rng()),
+            Mat::random(n3, k3, g.rng()),
+        );
+
+        let run_all = || {
+            let outer = gemt_outer(&x, &cs);
+            let shard = gemt_sharded_with(
+                &x,
+                &cs,
+                &ShardConfig { max_tile: 3, engine: EngineConfig::with_threads(2) },
+            );
+            let mut engines = Vec::new();
+            for width in [1usize, 2, 8] {
+                let pool = ComputePool::new(PoolConfig::with_threads(width));
+                engines.push(gemt_engine_on(
+                    &pool,
+                    &x,
+                    &cs,
+                    &EngineConfig { threads: width, block: 4 },
+                ));
+                pool.shutdown();
+            }
+            (outer, shard, engines)
+        };
+
+        kernels::force_kernel(Some(KernelKind::Scalar));
+        let (outer_s, shard_s, engines_s) = run_all();
+        kernels::force_kernel(Some(KernelKind::Wide));
+        let (outer_w, shard_w, engines_w) = run_all();
+        kernels::force_kernel(None);
+
+        if outer_s.max_abs_diff(&outer_w) != 0.0 {
+            return Err("gemt_outer differs between forced kinds".to_string());
+        }
+        if shard_s.max_abs_diff(&shard_w) != 0.0 {
+            return Err("gemt_sharded differs between forced kinds".to_string());
+        }
+        for (i, (es, ew)) in engines_s.iter().zip(&engines_w).enumerate() {
+            if es.max_abs_diff(ew) != 0.0 {
+                return Err(format!("engine (pool #{i}) differs between forced kinds"));
+            }
+            if es.max_abs_diff(&outer_s) != 0.0 {
+                return Err(format!("engine (pool #{i}) differs from gemt_outer"));
+            }
+        }
+        if shard_s.max_abs_diff(&outer_s) != 0.0 {
+            return Err("sharded differs from gemt_outer".to_string());
+        }
+        Ok(())
+    });
+}
+
+/// The split DFT (pair products) under both forced kinds, on both the
+/// scalar and sharded executors — all four combinations bit-identical.
+#[test]
+fn forced_kinds_bit_identical_split_dft() {
+    let _guard = FORCE_LOCK.lock().unwrap();
+    let mut rng = Rng::new(905);
+    let re = Tensor3::random(6, 5, 7, &mut rng);
+    let im = Tensor3::random(6, 5, 7, &mut rng);
+    let sharder = Sharder::new(ShardConfig { max_tile: 4, engine: EngineConfig::with_threads(2) });
+    let mut results = Vec::new();
+    for kind in [KernelKind::Scalar, KernelKind::Wide] {
+        kernels::force_kernel(Some(kind));
+        results.push(triada::gemt::split::dft3d_split(&re, &im, false));
+        results.push(sharder.dft3d_split(&re, &im, false));
+    }
+    kernels::force_kernel(None);
+    let (r0, i0) = &results[0];
+    for (j, (r, i)) in results.iter().enumerate().skip(1) {
+        assert_eq!(r.max_abs_diff(r0), 0.0, "split re diverged (combination {j})");
+        assert_eq!(i.max_abs_diff(i0), 0.0, "split im diverged (combination {j})");
+    }
+}
+
+/// Plan-backend identity: preparing and executing a transform plan under
+/// forced scalar and forced wide kernels yields bit-identical outputs.
+#[test]
+fn forced_kinds_bit_identical_through_plan_backends() {
+    use triada::coordinator::{Backend, EngineBackend, PlanSpec, ReferenceBackend, ShardedEngineBackend};
+    use triada::runtime::Direction;
+    use triada::transforms::TransformKind;
+
+    let _guard = FORCE_LOCK.lock().unwrap();
+    let mut rng = Rng::new(906);
+    let x = Tensor3::random(8, 8, 8, &mut rng).to_f32();
+    let spec = PlanSpec::new(TransformKind::Dct2, Direction::Forward, (8, 8, 8));
+    let backends: Vec<(&str, Box<dyn Backend>)> = vec![
+        ("reference", Box::new(ReferenceBackend)),
+        ("engine", Box::new(EngineBackend::new(EngineConfig::with_threads(2)))),
+        (
+            "sharded",
+            Box::new(ShardedEngineBackend::new(ShardConfig {
+                max_tile: 4,
+                engine: EngineConfig::with_threads(2),
+            })),
+        ),
+    ];
+    for (name, backend) in &backends {
+        let mut outs = Vec::new();
+        for kind in [KernelKind::Scalar, KernelKind::Wide] {
+            kernels::force_kernel(Some(kind));
+            let plan = backend.prepare(spec).expect("prepare");
+            outs.push(plan.execute(&[x.clone()]).expect("execute"));
+        }
+        kernels::force_kernel(None);
+        let (a, b) = (&outs[0], &outs[1]);
+        assert_eq!(a.len(), b.len(), "{name}: output arity changed");
+        for (ta, tb) in a.iter().zip(b.iter()) {
+            assert_eq!(
+                ta.max_abs_diff(tb),
+                0.0,
+                "{name}: plan output differs between forced kinds"
+            );
+        }
+    }
+}
+
+/// `TRIADA_KERNEL`-style selection strings parse exactly as the config
+/// layer validates them, and the config section configures selection.
+#[test]
+fn selection_parsing_and_config_wiring() {
+    let _guard = FORCE_LOCK.lock().unwrap();
+    assert_eq!(kernels::parse_kind("auto").unwrap(), None);
+    assert_eq!(kernels::parse_kind("scalar").unwrap(), Some(KernelKind::Scalar));
+    assert_eq!(kernels::parse_kind("WIDE").unwrap(), Some(KernelKind::Wide));
+    assert!(kernels::parse_kind("sse2").is_err());
+
+    // force > config. (The env layer sits between them but cannot be
+    // exercised here: it is read once per process and tests share one.)
+    let cfg = triada::config::Config::parse("[kernels]\nforce = scalar\n").unwrap();
+    kernels::configure_from_config(&cfg).unwrap();
+    if std::env::var_os("TRIADA_KERNEL").is_none() {
+        assert_eq!(kernels::selected(), KernelKind::Scalar);
+    }
+    kernels::force_kernel(Some(KernelKind::Wide));
+    assert_eq!(kernels::selected(), KernelKind::Wide);
+    kernels::force_kernel(None);
+    // restore auto for the rest of the binary
+    let auto = triada::config::Config::parse("[kernels]\nforce = auto\n").unwrap();
+    kernels::configure_from_config(&auto).unwrap();
+
+    let bad = triada::config::Config::parse("[kernels]\nforce = fast\n").unwrap();
+    assert!(kernels::configure_from_config(&bad).is_err());
+
+    // stats surface a named selection and ISA.
+    let s = kernels::stats();
+    assert!(["scalar", "wide"].contains(&s.selected));
+    assert!(["scalar", "avx2", "neon", "portable"].contains(&s.isa));
+}
+
+/// Every hand-rolled inner axpy loop in `gemt/` was deduped onto the
+/// kernel layer: no `*dst += ...` compound-assignment inner loop survives
+/// outside `gemt/kernels/`.
+#[test]
+fn no_raw_axpy_loops_left_in_gemt() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/src/gemt");
+    let mut offenders = Vec::new();
+    for entry in std::fs::read_dir(dir).expect("read src/gemt") {
+        let path = entry.expect("dir entry").path();
+        if path.extension().and_then(|e| e.to_str()) != Some("rs") {
+            continue; // skips the kernels/ subdirectory too
+        }
+        let text = std::fs::read_to_string(&path).expect("read source");
+        for (lineno, line) in text.lines().enumerate() {
+            let t = line.trim_start();
+            if t.starts_with('*') && t.contains("+=") {
+                offenders.push(format!("{}:{}: {}", path.display(), lineno + 1, t));
+            }
+        }
+    }
+    assert!(
+        offenders.is_empty(),
+        "raw `*dst += ...` inner loops must route through gemt::kernels:\n{}",
+        offenders.join("\n")
+    );
+}
