@@ -21,6 +21,7 @@
 //!   the code; the gain is a within-run ratio and survives machine swaps.
 
 use std::sync::Arc;
+use std::thread;
 use std::time::Duration;
 
 use triada::bench::Table;
@@ -32,6 +33,9 @@ use triada::coordinator::{Coordinator, CoordinatorConfig, TransformJob};
 use triada::gemt::engine::EngineConfig;
 use triada::gemt::shard::ShardConfig;
 use triada::runtime::{Direction, PjrtService};
+use triada::server::client::ClientConn;
+use triada::server::wire::{self, TransformRequest};
+use triada::server::{Server, ServerConfig};
 use triada::tensor::Tensor3;
 use triada::transforms::TransformKind;
 use triada::util::{human, Rng, Timer};
@@ -57,6 +61,15 @@ struct ThroughputRow {
 struct BatchGain {
     backend: &'static str,
     gain: f64,
+}
+
+/// Serve-mode measurement: the same engine backend driven over HTTP
+/// loopback vs in-process, as a within-run overhead ratio (machine-robust,
+/// like the batching gains).
+struct ServeMeasurement {
+    http_thrpt: f64,
+    in_process_thrpt: f64,
+    overhead_ratio: f64,
 }
 
 fn drive(backend: Arc<dyn Backend>, policy: BatchPolicy, jobs: usize) -> (f64, f64, f64, f64) {
@@ -87,6 +100,69 @@ fn drive(backend: Arc<dyn Backend>, policy: BatchPolicy, jobs: usize) -> (f64, f
     assert_eq!(snap.plans.builds, 2, "expected one plan build per (kind, direction, shape)");
     c.shutdown();
     (jobs as f64 / wall, snap.latency_p50_s, snap.latency_p99_s, snap.mean_batch_size)
+}
+
+/// The same load as [`drive`], but through the HTTP front-end: four
+/// keep-alive loopback clients posting framed-binary transforms, each
+/// waiting for its response before the next (closed-loop, like a real
+/// caller). Returns (throughput, request p50, request p99, mean batch).
+fn drive_http(policy: BatchPolicy, jobs: usize) -> (f64, f64, f64, f64) {
+    const CLIENTS: u64 = 4;
+    let backend: Arc<dyn Backend> = Arc::new(EngineBackend::new(EngineConfig::with_threads(2)));
+    let config = CoordinatorConfig {
+        workers: 4,
+        queue_depth: 256,
+        batch: policy,
+        ..CoordinatorConfig::default()
+    };
+    let server_cfg = ServerConfig { listen: "127.0.0.1:0".to_string(), ..ServerConfig::default() };
+    let server = Server::start(Coordinator::start(config, backend), server_cfg)
+        .expect("binding an ephemeral loopback port");
+    let addr = server.addr();
+    let per_client = jobs / CLIENTS as usize;
+    let t = Timer::start();
+    let joins: Vec<_> = (0..CLIENTS)
+        .map(|cl| {
+            thread::spawn(move || {
+                let mut rng = Rng::new(600 + cl);
+                let mut conn = ClientConn::connect(addr).expect("connecting to the bench server");
+                for i in 0..per_client {
+                    let x = Tensor3::random(8, 8, 8, &mut rng).to_f32();
+                    let kind = [TransformKind::Dct2, TransformKind::Dht][i % 2];
+                    let request = TransformRequest {
+                        kind,
+                        direction: Direction::Forward,
+                        shape: (8, 8, 8),
+                        deadline_ms: None,
+                        inputs: vec![x],
+                    };
+                    let resp = conn
+                        .request(
+                            "POST",
+                            "/v1/transform",
+                            &[],
+                            wire::CONTENT_TYPE_TENSOR,
+                            &wire::encode_request_binary(&request),
+                        )
+                        .expect("served bench request");
+                    assert_eq!(resp.status, 200, "served bench request failed");
+                }
+            })
+        })
+        .collect();
+    for j in joins {
+        j.join().unwrap();
+    }
+    let wall = t.elapsed_s();
+    let snap = server.metrics();
+    assert_eq!(snap.plans.builds, 2, "expected one plan build per (kind, direction, shape)");
+    assert!(server.drain(Duration::from_secs(30)), "bench server must drain cleanly");
+    (
+        (per_client * CLIENTS as usize) as f64 / wall,
+        snap.server.request_p50_s,
+        snap.server.request_p99_s,
+        snap.mean_batch_size,
+    )
 }
 
 fn main() {
@@ -147,6 +223,31 @@ fn main() {
         }
     }
 
+    // Serve mode: the engine backend behind the HTTP front-end at the
+    // (16, 2ms) policy — closed-loop clients cap the in-flight depth, so
+    // this also measures how well batching survives real request arrival.
+    let serve_policy = BatchPolicy { max_batch: 16, window: Duration::from_millis(2) };
+    let (http_thrpt, serve_p50, serve_p99, serve_mb) = drive_http(serve_policy, jobs);
+    let in_process_thrpt = rows
+        .iter()
+        .find(|r| r.backend == "engine (2 threads)" && r.max_batch == 16 && r.window_ms == 2)
+        .expect("the in-process engine (16, 2ms) row runs in every mode")
+        .thrpt;
+    let serve = ServeMeasurement {
+        http_thrpt,
+        in_process_thrpt,
+        overhead_ratio: http_thrpt / in_process_thrpt,
+    };
+    t.row(&[
+        "serve (http, engine 2 threads)".to_string(),
+        "16".to_string(),
+        "2ms".to_string(),
+        human::rate(http_thrpt),
+        human::duration(serve_p50),
+        human::duration(serve_p99),
+        format!("{serve_mb:.1}"),
+    ]);
+
     if let Some(service) = &pjrt_service {
         service.handle().warmup().expect("warmup");
         for &(max_batch, window_ms) in policies {
@@ -182,10 +283,17 @@ fn main() {
         println!("\n(pjrt artifacts unavailable — run `make artifacts` for the AOT rows)");
     }
     t.print();
+    println!(
+        "\nserve overhead: {} over http vs {} in-process = {:.3}x",
+        human::rate(serve.http_thrpt),
+        human::rate(serve.in_process_thrpt),
+        serve.overhead_ratio
+    );
 
     let gains = batch_gains(&rows);
     check_throughput_regression(&gains);
-    let json = throughput_json(&rows, &gains);
+    check_serve_regression(&serve);
+    let json = throughput_json(&rows, &gains, &serve);
     let json_path = "BENCH_throughput.json";
     match std::fs::write(json_path, &json) {
         Ok(()) => println!("\nwrote {json_path} ({} rows, {} gains)", rows.len(), gains.len()),
@@ -259,6 +367,41 @@ fn check_throughput_regression(gains: &[BatchGain]) {
     }
 }
 
+/// Gate the serve-mode overhead ratio (HTTP loopback throughput over
+/// in-process) against the committed baseline — the same 75% floor the
+/// batching gains use. A missing baseline or one without a serve section
+/// is reported, not fatal.
+fn check_serve_regression(serve: &ServeMeasurement) {
+    let path = std::env::var("TRIADA_BENCH_BASELINE")
+        .unwrap_or_else(|_| "BENCH_throughput.json".to_string());
+    let baseline = match std::fs::read_to_string(&path) {
+        Ok(s) => s,
+        Err(e) => {
+            println!("no throughput baseline at {path} ({e}); skipping serve check");
+            return;
+        }
+    };
+    let Some(at) = baseline.find("\"serve\"") else {
+        println!("baseline {path} has no serve section; skipping serve check");
+        return;
+    };
+    let Some(base) = parse_field_after(&baseline[at..], "\"overhead_ratio\": ") else {
+        println!("baseline {path} serve overhead_ratio is unparsable; skipping");
+        return;
+    };
+    let floor = base * 0.75;
+    assert!(
+        serve.overhead_ratio >= floor,
+        "SERVE REGRESSION: http-over-in-process ratio {:.4}x fell more than 25% below the \
+         {path} baseline {base:.4}x (floor {floor:.4}x)",
+        serve.overhead_ratio
+    );
+    println!(
+        "serve baseline check: overhead ratio {:.4}x vs baseline {base:.4}x (floor {floor:.4}x) ok",
+        serve.overhead_ratio
+    );
+}
+
 /// Parse the float immediately following `key` in `s` (hand-rolled — the
 /// offline image has no JSON dependency).
 fn parse_field_after(s: &str, key: &str) -> Option<f64> {
@@ -271,7 +414,7 @@ fn parse_field_after(s: &str, key: &str) -> Option<f64> {
 }
 
 /// Render the serving measurements as a machine-readable JSON summary.
-fn throughput_json(rows: &[ThroughputRow], gains: &[BatchGain]) -> String {
+fn throughput_json(rows: &[ThroughputRow], gains: &[BatchGain], serve: &ServeMeasurement) -> String {
     let mut json = String::from("{\n");
     json.push_str("  \"bench\": \"throughput\",\n");
     json.push_str("  \"shape\": [8, 8, 8],\n");
@@ -296,6 +439,11 @@ fn throughput_json(rows: &[ThroughputRow], gains: &[BatchGain]) -> String {
         ));
     }
     json.push_str("  ],\n");
+    json.push_str(&format!(
+        "  \"serve\": {{\"throughput_jobs_s\": {:.3}, \"in_process_jobs_s\": {:.3}, \
+         \"overhead_ratio\": {:.4}}},\n",
+        serve.http_thrpt, serve.in_process_thrpt, serve.overhead_ratio
+    ));
     json.push_str("  \"gains\": [\n");
     for (i, g) in gains.iter().enumerate() {
         json.push_str(&format!(

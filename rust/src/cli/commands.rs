@@ -54,7 +54,14 @@ COMMANDS:
         --plan-cache N           stationary plans kept resident (LRU) [32]
         --deadline-ms N          default per-job deadline (0 = none)
         --config FILE            INI config (sections [coordinator],
-                                 [engine], [plan_cache], [pool], [faults])
+                                 [engine], [plan_cache], [pool], [faults],
+                                 [server])
+        --listen ADDR:PORT       serve HTTP on a real socket instead of the
+                                 demo loop (POST /v1/transform, /v1/batch;
+                                 GET /v1/metrics, /v1/healthz, /v1/readyz);
+                                 SIGINT/SIGTERM drains gracefully
+        --offline                force the in-process demo loop (the
+                                 default when --listen is absent)
     help                         this text
 
 Fault injection: set TRIADA_FAULTS (e.g. seed=7,transient_p=0.2) or a
@@ -397,6 +404,25 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         }
         other => bail!("unknown backend {other:?}"),
     };
+    // `--listen` turns serve into the real network front-end; without it
+    // (or with `--offline`) the in-process demo loop below runs as before.
+    let listen = args.opt("listen");
+    anyhow::ensure!(
+        !(listen.is_some() && args.flag("offline")),
+        "--listen starts the network server and --offline runs the in-process demo; pick one"
+    );
+    if let Some(addr) = listen {
+        anyhow::ensure!(
+            args.opt("jobs").is_none() && args.opt("shape").is_none(),
+            "--jobs/--shape drive the offline demo loop; drop them with --listen"
+        );
+        let mut server_cfg = match &file_cfg {
+            Some(c) => crate::server::ServerConfig::from_config(c)?,
+            None => crate::server::ServerConfig::default(),
+        };
+        server_cfg.listen = addr.to_string();
+        return serve_network(cfg, backend, server_cfg);
+    }
     let jobs = args.opt_usize("jobs", 64)?;
     let shape = args.opt_shape("shape", (8, 8, 8))?;
     println!(
@@ -450,5 +476,52 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         }
     }
     coordinator.shutdown();
+    Ok(())
+}
+
+/// `serve --listen`: run the HTTP front-end until SIGINT/SIGTERM, then
+/// drain gracefully and print the final metrics.
+fn serve_network(
+    cfg: CoordinatorConfig,
+    backend: Arc<dyn crate::coordinator::Backend>,
+    server_cfg: crate::server::ServerConfig,
+) -> anyhow::Result<()> {
+    println!(
+        "coordinator: backend={} workers={} queue={} batch={}x/{:?} plan-cache={} pool={}w",
+        backend.name(),
+        cfg.workers,
+        cfg.queue_depth,
+        cfg.batch.max_batch,
+        cfg.batch.window,
+        cfg.plan_capacity,
+        crate::pool::global().width()
+    );
+    let drain_timeout = server_cfg.drain_timeout;
+    let coordinator = Coordinator::start(cfg, backend);
+    crate::server::signal::install();
+    let server = crate::server::Server::start(coordinator, server_cfg)?;
+    println!(
+        "serving http://{} — POST /v1/transform /v1/batch, GET /v1/metrics /v1/healthz /v1/readyz (SIGINT/SIGTERM drains)",
+        server.addr()
+    );
+    while !crate::server::signal::shutdown_requested() {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    println!("drain: intake stopped; in-flight requests finishing (new ones get 503)");
+    let graceful = server.drain(drain_timeout);
+    let snap = server.metrics();
+    println!("{}", snap.summary());
+    if crate::faults::armed() {
+        let fs = crate::faults::stats();
+        println!(
+            "faults: {} transients / {} slowdowns / {} plan panics / {} pool panics injected",
+            fs.transients, fs.slowdowns, fs.plan_panics, fs.pool_panics
+        );
+    }
+    println!(
+        "drain {} within {:?}",
+        if graceful { "completed gracefully" } else { "canceled stragglers at the deadline" },
+        drain_timeout
+    );
     Ok(())
 }

@@ -196,6 +196,7 @@ pub fn documented_keys() -> Vec<(&'static str, &'static str, String)> {
     let shard = crate::gemt::ShardConfig::default();
     let pool = crate::pool::PoolConfig::default();
     let faults = crate::faults::FaultPlan::default();
+    let server = crate::server::ServerConfig::default();
     vec![
         ("coordinator", "workers", "auto".to_string()),
         ("coordinator", "queue_depth", coord.queue_depth.to_string()),
@@ -237,6 +238,15 @@ pub fn documented_keys() -> Vec<(&'static str, &'static str, String)> {
         ("pool", "engine_share", pool.engine_share.to_string()),
         ("pool", "shard_share", pool.shard_share.to_string()),
         ("pool", "coordinator_share", pool.coordinator_share.to_string()),
+        ("server", "listen", server.listen.clone()),
+        ("server", "max_body_bytes", server.max_body_bytes.to_string()),
+        ("server", "max_inflight_per_client", server.max_inflight_per_client.to_string()),
+        ("server", "submit_wait_ms", "0".to_string()),
+        (
+            "server",
+            "drain_timeout_ms",
+            format!("{}", server.drain_timeout.as_secs_f64() * 1000.0),
+        ),
     ]
 }
 
@@ -393,6 +403,11 @@ p1 = 64
         }
         for key in ["threads", "pin", "engine_share", "shard_share", "coordinator_share"] {
             assert!(keys.iter().any(|(s, k, _)| *s == "pool" && *k == key), "{key}");
+        }
+        for key in
+            ["listen", "max_body_bytes", "max_inflight_per_client", "submit_wait_ms", "drain_timeout_ms"]
+        {
+            assert!(keys.iter().any(|(s, k, _)| *s == "server" && *k == key), "{key}");
         }
         assert!(keys.iter().any(|(s, k, d)| *s == "kernels" && *k == "force" && d == "auto"));
     }

@@ -68,6 +68,11 @@ pub struct MetricsSnapshot {
     /// ([`crate::gemt::kernels::stats`]). Filled by
     /// [`super::server::Coordinator::metrics`]; zero for a bare `Metrics`.
     pub kernels: crate::gemt::kernels::KernelStats,
+    /// Wire front-end counters ([`crate::server::ServerStats`]): HTTP
+    /// request/latency/shed-load/disconnect totals. Filled by
+    /// [`crate::server::Server::metrics`] and the `/v1/metrics` route;
+    /// zero for a coordinator with no server in front of it.
+    pub server: crate::server::ServerStats,
 }
 
 impl Default for Metrics {
@@ -165,6 +170,7 @@ impl Metrics {
             pool: crate::pool::PoolStats::default(),
             fallback_reasons: Vec::new(),
             kernels: crate::gemt::kernels::KernelStats::default(),
+            server: crate::server::ServerStats::default(),
         }
     }
 }
@@ -216,6 +222,16 @@ impl MetricsSnapshot {
                 self.kernels.scalar_dispatches,
             ));
         }
+        if self.server.requests > 0 {
+            s.push_str(&format!(
+                " | http: {} reqs ({} ok / {} shed / {} hung up) p99={}",
+                self.server.requests,
+                self.server.ok,
+                self.server.rejected,
+                self.server.disconnects,
+                human::duration(self.server.request_p99_s),
+            ));
+        }
         if !self.fallback_reasons.is_empty() {
             s.push_str(&format!(" | DEGRADED ({} reason(s))", self.fallback_reasons.len()));
         }
@@ -265,6 +281,7 @@ mod tests {
         assert_eq!(s.pool, crate::pool::PoolStats::default());
         assert!(s.fallback_reasons.is_empty());
         assert_eq!(s.kernels, crate::gemt::kernels::KernelStats::default());
+        assert_eq!(s.server, crate::server::ServerStats::default());
     }
 
     #[test]
@@ -299,5 +316,17 @@ mod tests {
         };
         let line = s.summary();
         assert!(line.contains("kernels=wide/avx2 (40 wide / 2 scalar dispatches)"), "{line}");
+        // Wire counters appear once the HTTP front-end has served traffic.
+        assert!(!line.contains("http:"), "no http traffic yet: {line}");
+        s.server = crate::server::ServerStats {
+            connections: 3,
+            requests: 10,
+            ok: 7,
+            rejected: 2,
+            disconnects: 1,
+            ..Default::default()
+        };
+        let line = s.summary();
+        assert!(line.contains("http: 10 reqs (7 ok / 2 shed / 1 hung up)"), "{line}");
     }
 }

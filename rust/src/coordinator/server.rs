@@ -350,6 +350,18 @@ impl Coordinator {
         self.admit(job, self.default_ctx(), Admission::Within(timeout))
     }
 
+    /// [`Coordinator::submit_within`] under a caller-built context (the
+    /// HTTP front-end's backpressure fallback: `try_submit_ctx` shed, now
+    /// wait a bounded moment for a slot before answering 429).
+    pub fn submit_within_ctx(
+        &self,
+        job: TransformJob,
+        ctx: JobContext,
+        timeout: Duration,
+    ) -> Result<JobHandle, SubmitError> {
+        self.admit(job, ctx, Admission::Within(timeout))
+    }
+
     /// Submit and wait (convenience).
     pub fn transform(&self, job: TransformJob) -> anyhow::Result<JobResult> {
         self.submit(job)?.wait()
@@ -417,6 +429,14 @@ impl Coordinator {
     /// finish the drain. Returns `true` when the drain completed without
     /// canceling anything.
     pub fn shutdown_within(self, timeout: Duration) -> bool {
+        self.drain_within(timeout)
+    }
+
+    /// [`Coordinator::shutdown_within`] by reference — for owners that
+    /// embed the coordinator in a shared structure (the HTTP front-end)
+    /// and cannot consume it. After draining, the coordinator only
+    /// rejects (`ShuttingDown`); dropping it later is a no-op.
+    pub fn drain_within(&self, timeout: Duration) -> bool {
         let deadline = Instant::now() + timeout;
         self.submit_q.close();
         let mut graceful = true;

@@ -45,6 +45,7 @@ pub mod gemt;
 pub mod pool;
 pub mod proptest;
 pub mod runtime;
+pub mod server;
 pub mod sim;
 pub mod tensor;
 pub mod transforms;

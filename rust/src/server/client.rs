@@ -1,0 +1,164 @@
+//! A minimal blocking HTTP/1.1 client over a raw `TcpStream` — just enough
+//! for the black-box protocol tests, the chaos-over-the-wire suite, and
+//! the served-throughput bench to drive a real socket without any client
+//! dependency.
+
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use anyhow::{bail, Context};
+
+use super::http::{self, RequestError};
+
+/// One parsed HTTP response.
+#[derive(Clone, Debug)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    /// Case-insensitive header lookup (first match).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// The body as UTF-8 text.
+    pub fn text(&self) -> anyhow::Result<&str> {
+        std::str::from_utf8(&self.body).context("response body is not UTF-8")
+    }
+}
+
+/// A keep-alive connection to the server.
+pub struct ClientConn {
+    reader: BufReader<TcpStream>,
+}
+
+impl ClientConn {
+    /// Connect to the server.
+    pub fn connect(addr: SocketAddr) -> anyhow::Result<ClientConn> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        // A generous safety net so a wedged server fails a test instead of
+        // hanging it forever.
+        let _ = stream.set_read_timeout(Some(Duration::from_secs(120)));
+        Ok(ClientConn { reader: BufReader::new(stream) })
+    }
+
+    /// The underlying stream (for tests that drop or shut down mid-request).
+    pub fn stream(&self) -> &TcpStream {
+        self.reader.get_ref()
+    }
+
+    /// Send one request and read the response (connection stays open).
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        content_type: &str,
+        body: &[u8],
+    ) -> anyhow::Result<HttpResponse> {
+        let mut head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: triada\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n",
+            body.len()
+        );
+        for (name, value) in headers {
+            head.push_str(name);
+            head.push_str(": ");
+            head.push_str(value);
+            head.push_str("\r\n");
+        }
+        head.push_str("\r\n");
+        let stream = self.reader.get_mut();
+        stream.write_all(head.as_bytes()).context("writing request head")?;
+        stream.write_all(body).context("writing request body")?;
+        stream.flush().context("flushing request")?;
+        self.read_response()
+    }
+
+    /// Send only the request (no response read) — for tests that hang up
+    /// mid-flight.
+    pub fn send_only(
+        &mut self,
+        method: &str,
+        path: &str,
+        content_type: &str,
+        body: &[u8],
+    ) -> anyhow::Result<()> {
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: triada\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n\r\n",
+            body.len()
+        );
+        let stream = self.reader.get_mut();
+        stream.write_all(head.as_bytes()).context("writing request head")?;
+        stream.write_all(body).context("writing request body")?;
+        stream.flush().context("flushing request")?;
+        Ok(())
+    }
+
+    fn read_response(&mut self) -> anyhow::Result<HttpResponse> {
+        let status_line = match http::read_line_limited(&mut self.reader) {
+            Ok(Some(line)) => line,
+            Ok(None) => bail!("connection closed before a status line"),
+            Err(e) => bail!("reading status line: {}", describe(e)),
+        };
+        let mut parts = status_line.split_whitespace();
+        let (version, status) = match (parts.next(), parts.next()) {
+            (Some(v), Some(s)) => (v, s),
+            _ => bail!("bad status line {status_line:?}"),
+        };
+        if !version.starts_with("HTTP/1.") {
+            bail!("unsupported version in {status_line:?}");
+        }
+        let status: u16 = status.parse().with_context(|| format!("bad status {status:?}"))?;
+        let headers = http::read_headers(&mut self.reader).map_err(|e| {
+            anyhow::anyhow!("reading response headers: {}", describe(e))
+        })?;
+        let response = HttpResponse { status, headers, body: Vec::new() };
+        let length = match response.header("content-length") {
+            None => 0,
+            Some(v) => v.trim().parse::<usize>().with_context(|| format!("bad length {v:?}"))?,
+        };
+        let mut body = vec![0u8; length];
+        std::io::Read::read_exact(&mut self.reader, &mut body).context("reading body")?;
+        Ok(HttpResponse { body, ..response })
+    }
+}
+
+fn describe(e: RequestError) -> String {
+    match e {
+        RequestError::Eof => "eof".into(),
+        RequestError::TooLarge(n) => format!("{n}-byte body too large"),
+        RequestError::Malformed(m) => m,
+        RequestError::Io(e) => format!("{e}"),
+    }
+}
+
+/// One-shot request on a fresh connection (closed afterwards).
+pub fn request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    content_type: &str,
+    body: &[u8],
+) -> anyhow::Result<HttpResponse> {
+    let mut conn = ClientConn::connect(addr)?;
+    conn.request(method, path, headers, content_type, body)
+}
+
+/// One-shot GET.
+pub fn get(addr: SocketAddr, path: &str) -> anyhow::Result<HttpResponse> {
+    request(addr, "GET", path, &[], "text/plain", b"")
+}
+
+/// One-shot JSON POST.
+pub fn post_json(addr: SocketAddr, path: &str, body: &str) -> anyhow::Result<HttpResponse> {
+    request(addr, "POST", path, &[], super::wire::CONTENT_TYPE_JSON, body.as_bytes())
+}

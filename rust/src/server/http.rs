@@ -1,0 +1,249 @@
+//! Blocking HTTP/1.1 message framing: bounded request reading and response
+//! writing over any `BufRead`/`Write` pair.
+//!
+//! This is deliberately a small subset — request line + headers +
+//! `Content-Length` body, keep-alive by default — because both ends of the
+//! wire are ours (the server in [`super::service`], the test/bench client
+//! in [`super::client`]). Chunked transfer encoding, trailers, and
+//! `Expect: continue` are rejected as malformed rather than half-supported.
+//! Every read is bounded: header lines are capped at 16 KiB, header count
+//! at 128, and bodies at the caller's limit, so a malicious or broken peer
+//! cannot balloon memory.
+
+use std::io::{BufRead, Write};
+
+/// Longest accepted header/request line (bytes, including CRLF).
+pub const MAX_LINE_BYTES: usize = 16 * 1024;
+/// Most headers accepted per message.
+pub const MAX_HEADERS: usize = 128;
+
+/// One parsed HTTP request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub method: String,
+    /// Raw request target (may carry a query string; routing strips it).
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Case-insensitive header lookup (first match).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Why a request could not be read.
+#[derive(Debug)]
+pub enum RequestError {
+    /// Clean end of stream before any request byte (keep-alive close).
+    Eof,
+    /// Declared body exceeds the server's limit (the payload carries it).
+    TooLarge(usize),
+    /// Syntactically broken message.
+    Malformed(String),
+    /// Transport error mid-message.
+    Io(std::io::Error),
+}
+
+/// Read one request off the stream. Body length comes from
+/// `Content-Length` (absent = empty body).
+pub fn read_request(r: &mut impl BufRead, max_body: usize) -> Result<Request, RequestError> {
+    // Tolerate blank lines between keep-alive requests (RFC 9112 §2.2).
+    let line = loop {
+        match read_line_limited(r)? {
+            None => return Err(RequestError::Eof),
+            Some(l) if l.trim().is_empty() => continue,
+            Some(l) => break l,
+        }
+    };
+    let mut parts = line.split_whitespace();
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v), None) => (m.to_string(), p.to_string(), v),
+        _ => return Err(RequestError::Malformed(format!("bad request line {line:?}"))),
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(RequestError::Malformed(format!("unsupported version {version:?}")));
+    }
+    let headers = read_headers(r)?;
+    let mut request = Request { method, path, headers, body: Vec::new() };
+    if request.header("transfer-encoding").is_some() {
+        return Err(RequestError::Malformed("chunked transfer encoding not supported".into()));
+    }
+    let length = match request.header("content-length") {
+        None => 0,
+        Some(v) => v
+            .trim()
+            .parse::<usize>()
+            .map_err(|_| RequestError::Malformed(format!("bad content-length {v:?}")))?,
+    };
+    if length > max_body {
+        return Err(RequestError::TooLarge(length));
+    }
+    if length > 0 {
+        let mut body = vec![0u8; length];
+        r.read_exact(&mut body).map_err(RequestError::Io)?;
+        request.body = body;
+    }
+    Ok(request)
+}
+
+/// Read the header block (terminated by an empty line).
+pub fn read_headers(r: &mut impl BufRead) -> Result<Vec<(String, String)>, RequestError> {
+    let mut headers = Vec::new();
+    loop {
+        let line = match read_line_limited(r)? {
+            None => return Err(RequestError::Malformed("eof inside header block".into())),
+            Some(l) => l,
+        };
+        let line = line.trim_end_matches(['\r', '\n']);
+        if line.is_empty() {
+            return Ok(headers);
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(RequestError::Malformed("too many headers".into()));
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(RequestError::Malformed(format!("bad header line {line:?}")));
+        };
+        headers.push((name.trim().to_string(), value.trim().to_string()));
+    }
+}
+
+/// Read one `\n`-terminated line with a hard length cap. `None` = clean EOF
+/// at a line boundary.
+pub fn read_line_limited(r: &mut impl BufRead) -> Result<Option<String>, RequestError> {
+    let mut line = Vec::new();
+    loop {
+        let buf = r.fill_buf().map_err(RequestError::Io)?;
+        if buf.is_empty() {
+            return if line.is_empty() {
+                Ok(None)
+            } else {
+                Err(RequestError::Malformed("eof mid-line".into()))
+            };
+        }
+        let (chunk, done) = match buf.iter().position(|&b| b == b'\n') {
+            Some(pos) => (pos + 1, true),
+            None => (buf.len(), false),
+        };
+        line.extend_from_slice(&buf[..chunk]);
+        r.consume(chunk);
+        if line.len() > MAX_LINE_BYTES {
+            return Err(RequestError::Malformed("header line too long".into()));
+        }
+        if done {
+            return String::from_utf8(line)
+                .map(Some)
+                .map_err(|_| RequestError::Malformed("non-UTF-8 header line".into()));
+        }
+    }
+}
+
+/// Canonical reason phrase for the statuses this server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        499 => "Client Closed Request",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// Write one complete response (status line, headers, body).
+pub fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    content_type: &str,
+    extra_headers: &[(&str, String)],
+    body: &[u8],
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n",
+        status,
+        reason(status),
+        content_type,
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    for (name, value) in extra_headers {
+        head.push_str(name);
+        head.push_str(": ");
+        head.push_str(value);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    #[test]
+    fn parses_request_with_body() {
+        let raw = b"POST /v1/transform HTTP/1.1\r\nHost: x\r\nContent-Length: 5\r\n\r\nhello";
+        let mut r = BufReader::new(&raw[..]);
+        let req = read_request(&mut r, 1024).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/transform");
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.header("HOST"), Some("x"));
+        assert_eq!(req.body, b"hello");
+    }
+
+    #[test]
+    fn keep_alive_reads_two_requests_then_eof() {
+        let raw = b"GET /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\n\r\n";
+        let mut r = BufReader::new(&raw[..]);
+        assert_eq!(read_request(&mut r, 0).unwrap().path, "/a");
+        assert_eq!(read_request(&mut r, 0).unwrap().path, "/b");
+        assert!(matches!(read_request(&mut r, 0), Err(RequestError::Eof)));
+    }
+
+    #[test]
+    fn oversized_body_is_typed() {
+        let raw = b"POST / HTTP/1.1\r\nContent-Length: 100\r\n\r\n";
+        let mut r = BufReader::new(&raw[..]);
+        assert!(matches!(read_request(&mut r, 10), Err(RequestError::TooLarge(100))));
+    }
+
+    #[test]
+    fn malformed_lines_are_typed() {
+        for raw in [&b"NOT-HTTP\r\n\r\n"[..], b"GET / SPDY/3\r\n\r\n", b"GET / HTTP/1.1\r\nbad\r\n\r\n"] {
+            let mut r = BufReader::new(raw);
+            assert!(
+                matches!(read_request(&mut r, 0), Err(RequestError::Malformed(_))),
+                "{raw:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn response_has_framing_headers() {
+        let mut out = Vec::new();
+        write_response(&mut out, 429, "application/json", &[("Retry-After", "1".into())], b"{}", true)
+            .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 2\r\n"));
+        assert!(text.contains("Retry-After: 1\r\n"));
+        assert!(text.contains("Connection: keep-alive\r\n"));
+        assert!(text.ends_with("\r\n\r\n{}"));
+    }
+}

@@ -1,0 +1,151 @@
+//! The network serving front-end: HTTP/1.1 over the coordinator.
+//!
+//! ```text
+//!   client ──TCP──▶ accept loop ──▶ connection thread
+//!                                        │  parse (json.rs / wire.rs / http.rs)
+//!                                        ▼
+//!                        admission: try_submit_ctx ──429/503+Retry-After──▶
+//!                                        │ ok
+//!                                        ▼
+//!                        coordinator (batcher → plan cache → compute pool)
+//!                                        │ JobResult (typed or tensors)
+//!                                        ▼
+//!                        response: 200 bit-exact payload │ typed error body
+//! ```
+//!
+//! Routes:
+//!
+//! | Route               | Meaning                                          |
+//! |---------------------|--------------------------------------------------|
+//! | `POST /v1/transform`| one job; JSON (base64 tensors) or framed binary  |
+//! | `POST /v1/batch`    | `{"jobs": [...]}`; per-entry inline results      |
+//! | `GET /v1/metrics`   | the full [`crate::coordinator::MetricsSnapshot`] |
+//! | `GET /v1/healthz`   | liveness (always 200 while the process runs)     |
+//! | `GET /v1/readyz`    | readiness (503 once draining)                    |
+//!
+//! Error bodies are always `{"error": {"code", "message"}}` with a stable
+//! code: `queue_full`/`too_many_inflight` (429 + `Retry-After`),
+//! `draining`/`shutting_down` (503 + `Retry-After`), `deadline_exceeded`
+//! (504), `canceled` (499), `invalid_spec`/`bad_request` (400),
+//! `body_too_large` (413), `execute_failed` (500).
+//!
+//! The front-end adds no execution machinery of its own: requests map to
+//! [`crate::coordinator::TransformJob`]s, deadlines to
+//! [`crate::util::JobContext`]s, hang-ups to cancel tokens, and drain to
+//! [`crate::coordinator::Coordinator::drain_within`] — the wire preserves
+//! the coordinator's semantics, and `rust/tests/server_http.rs` proves it
+//! black-box against a real socket.
+//!
+//! ```
+//! use triada::coordinator::{Coordinator, CoordinatorConfig, ReferenceBackend};
+//! use triada::server::{client, Server, ServerConfig};
+//! use std::sync::Arc;
+//!
+//! let coordinator = Coordinator::start(CoordinatorConfig::default(), Arc::new(ReferenceBackend));
+//! let cfg = ServerConfig { listen: "127.0.0.1:0".into(), ..ServerConfig::default() };
+//! let server = Server::start(coordinator, cfg).unwrap();
+//! let health = client::get(server.addr(), "/v1/healthz").unwrap();
+//! assert_eq!(health.status, 200);
+//! assert!(server.drain(std::time::Duration::from_secs(5)));
+//! ```
+
+pub mod client;
+pub mod http;
+pub mod json;
+mod service;
+pub mod signal;
+pub mod wire;
+
+pub use service::{Server, ServerStats};
+
+use std::time::Duration;
+
+/// `[server]` configuration (see `docs/CONFIG.md`; drift-checked against
+/// these defaults by `config_md_documents_every_key_and_default`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServerConfig {
+    /// Listen address, `host:port` (port `0` = ephemeral).
+    pub listen: String,
+    /// Largest accepted request body in bytes (413 beyond it).
+    pub max_body_bytes: usize,
+    /// Most concurrent requests per client IP (429 beyond it; `0` =
+    /// unlimited).
+    pub max_inflight_per_client: usize,
+    /// How long admission may wait for queue space after the `try_submit`
+    /// fast path sheds (`None` = reject immediately with 429).
+    pub submit_wait: Option<Duration>,
+    /// Drain budget on shutdown: in-flight requests get this long to
+    /// finish before stragglers are canceled (still resolving typed).
+    pub drain_timeout: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            listen: "127.0.0.1:8080".to_string(),
+            max_body_bytes: 16 * 1024 * 1024,
+            max_inflight_per_client: 64,
+            submit_wait: None,
+            drain_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+impl ServerConfig {
+    /// Read the `[server]` section (absent keys keep their defaults).
+    pub fn from_config(cfg: &crate::config::Config) -> anyhow::Result<ServerConfig> {
+        let mut out = ServerConfig::default();
+        if let Some(listen) = cfg.get("server", "listen") {
+            out.listen = listen.to_string();
+        }
+        if let Some(bytes) = cfg.get_usize("server", "max_body_bytes")? {
+            anyhow::ensure!(bytes > 0, "server.max_body_bytes must be positive");
+            out.max_body_bytes = bytes;
+        }
+        if let Some(limit) = cfg.get_usize("server", "max_inflight_per_client")? {
+            out.max_inflight_per_client = limit;
+        }
+        if let Some(ms) = cfg.get_f64("server", "submit_wait_ms")? {
+            anyhow::ensure!(
+                ms.is_finite() && ms >= 0.0,
+                "server.submit_wait_ms must be finite and non-negative, got {ms}"
+            );
+            out.submit_wait = (ms > 0.0).then(|| Duration::from_secs_f64(ms / 1e3));
+        }
+        if let Some(ms) = cfg.get_f64("server", "drain_timeout_ms")? {
+            anyhow::ensure!(
+                ms.is_finite() && ms >= 0.0,
+                "server.drain_timeout_ms must be finite and non-negative, got {ms}"
+            );
+            out.drain_timeout = Duration::from_secs_f64(ms / 1e3);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_roundtrip_and_validation() {
+        let mut cfg = crate::config::Config::default();
+        assert_eq!(ServerConfig::from_config(&cfg).unwrap(), ServerConfig::default());
+        cfg.set("server", "listen", "0.0.0.0:9090");
+        cfg.set("server", "max_body_bytes", "1024");
+        cfg.set("server", "max_inflight_per_client", "0");
+        cfg.set("server", "submit_wait_ms", "250");
+        cfg.set("server", "drain_timeout_ms", "1500");
+        let s = ServerConfig::from_config(&cfg).unwrap();
+        assert_eq!(s.listen, "0.0.0.0:9090");
+        assert_eq!(s.max_body_bytes, 1024);
+        assert_eq!(s.max_inflight_per_client, 0);
+        assert_eq!(s.submit_wait, Some(Duration::from_millis(250)));
+        assert_eq!(s.drain_timeout, Duration::from_millis(1500));
+        cfg.set("server", "max_body_bytes", "0");
+        assert!(ServerConfig::from_config(&cfg).is_err());
+        cfg.set("server", "max_body_bytes", "1024");
+        cfg.set("server", "submit_wait_ms", "-1");
+        assert!(ServerConfig::from_config(&cfg).is_err());
+    }
+}

@@ -1,0 +1,665 @@
+//! The HTTP server proper: accept loop, routing, admission, per-client
+//! fairness, disconnect-driven cancellation, and graceful drain.
+//!
+//! One `std::net` thread per connection — the work behind every request is
+//! CPU-bound and runs on the shared compute pool, so connection threads
+//! spend their lives blocked on I/O or a job handle and an async runtime
+//! would buy nothing offline (see the coordinator's module docs). The
+//! serving semantics all reuse coordinator machinery:
+//!
+//! * admission — `try_submit_ctx` fast path, optional
+//!   `submit_within_ctx` backpressure fallback, typed `SubmitError` →
+//!   429/503 with `Retry-After`;
+//! * deadlines — `deadline_ms` (field or `x-triada-deadline-ms` header) →
+//!   the job's [`crate::util::JobContext`];
+//! * cancellation — a client that hangs up mid-wait cancels its job
+//!   through the existing cancel token and the job resolves typed;
+//! * drain — stop accepting, finish in-flight requests (new ones get 503),
+//!   then [`crate::coordinator::Coordinator::drain_within`].
+
+use std::collections::HashMap;
+use std::io::{BufReader, Write};
+use std::net::{IpAddr, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::Context;
+
+use crate::coordinator::{
+    Coordinator, JobHandle, JobResult, MetricsSnapshot, SubmitError, TransformJob, WaitOutcome,
+};
+use crate::util::stats::Histogram;
+use crate::util::JobContext;
+
+use super::http::{self, Request, RequestError};
+use super::wire::{self, ApiError, TransformRequest};
+use super::ServerConfig;
+
+/// How often a waiting request polls its job handle (and, between polls,
+/// the connection for a client hang-up).
+const WAIT_POLL: Duration = Duration::from_millis(25);
+/// How long the non-blocking accept loop naps when idle.
+const ACCEPT_POLL: Duration = Duration::from_millis(2);
+/// Most entries accepted in one `/v1/batch` body.
+const MAX_BATCH_JOBS: usize = 1024;
+
+/// Wire front-end counters, surfaced as `MetricsSnapshot::server` and in
+/// the `/v1/metrics` document. Buckets are disjoint: every finished
+/// request lands in exactly one of `ok` / `client_errors` / `rejected` /
+/// `deadline_errors` / `server_errors` / `disconnects`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ServerStats {
+    /// TCP connections accepted.
+    pub connections: u64,
+    /// HTTP requests that produced a response.
+    pub requests: u64,
+    /// 2xx responses.
+    pub ok: u64,
+    /// 4xx responses other than shed load and client hang-ups.
+    pub client_errors: u64,
+    /// Admission rejections: 429 (queue full, fairness) and 503 (draining).
+    pub rejected: u64,
+    /// 504 responses (deadline expired before or during execution).
+    pub deadline_errors: u64,
+    /// 5xx responses.
+    pub server_errors: u64,
+    /// Requests whose client hung up mid-wait; their job was canceled
+    /// through the cancel token (the 499 goes nowhere).
+    pub disconnects: u64,
+    /// Request latency (read → response written), seconds.
+    pub request_p50_s: f64,
+    /// Tail request latency, seconds.
+    pub request_p99_s: f64,
+}
+
+struct StatsInner {
+    stats: ServerStats,
+    latency: Histogram,
+}
+
+struct Shared {
+    coordinator: Coordinator,
+    cfg: ServerConfig,
+    draining: AtomicBool,
+    /// POST requests currently being served; drain waits for zero.
+    inflight: Mutex<usize>,
+    idle: Condvar,
+    /// Per-client fairness: in-flight request count by peer IP.
+    per_client: Mutex<HashMap<IpAddr, usize>>,
+    stats: Mutex<StatsInner>,
+}
+
+impl Shared {
+    fn draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    fn record_response(&self, status: u16, latency_s: f64, disconnect: bool) {
+        let mut g = self.stats.lock().unwrap();
+        g.stats.requests += 1;
+        g.latency.record(latency_s.max(0.0));
+        if disconnect {
+            g.stats.disconnects += 1;
+        } else {
+            match status {
+                200..=299 => g.stats.ok += 1,
+                429 | 503 => g.stats.rejected += 1,
+                504 => g.stats.deadline_errors += 1,
+                499 => g.stats.disconnects += 1,
+                400..=499 => g.stats.client_errors += 1,
+                _ => g.stats.server_errors += 1,
+            }
+        }
+    }
+
+    fn server_stats(&self) -> ServerStats {
+        let g = self.stats.lock().unwrap();
+        let mut s = g.stats.clone();
+        s.request_p50_s = g.latency.quantile(0.50);
+        s.request_p99_s = g.latency.quantile(0.99);
+        s
+    }
+
+    /// Coordinator snapshot with the server counters filled in.
+    fn full_metrics(&self) -> MetricsSnapshot {
+        let mut snap = self.coordinator.metrics();
+        snap.server = self.server_stats();
+        snap
+    }
+}
+
+/// RAII in-flight marker: drain waits until every one of these is dropped.
+struct InflightGuard<'a> {
+    shared: &'a Shared,
+}
+
+impl<'a> InflightGuard<'a> {
+    fn enter(shared: &'a Shared) -> InflightGuard<'a> {
+        *shared.inflight.lock().unwrap() += 1;
+        InflightGuard { shared }
+    }
+}
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        *self.shared.inflight.lock().unwrap() -= 1;
+        self.shared.idle.notify_all();
+    }
+}
+
+/// RAII per-client slot (fairness bound); `None` limit = unlimited.
+struct ClientSlot<'a> {
+    shared: &'a Shared,
+    ip: IpAddr,
+}
+
+impl<'a> ClientSlot<'a> {
+    fn enter(shared: &'a Shared, ip: IpAddr) -> Result<ClientSlot<'a>, ApiError> {
+        let limit = shared.cfg.max_inflight_per_client;
+        let mut g = shared.per_client.lock().unwrap();
+        let count = g.entry(ip).or_insert(0);
+        if limit > 0 && *count >= limit {
+            return Err(ApiError::too_many_inflight(limit));
+        }
+        *count += 1;
+        Ok(ClientSlot { shared, ip })
+    }
+}
+
+impl Drop for ClientSlot<'_> {
+    fn drop(&mut self) {
+        let mut g = self.shared.per_client.lock().unwrap();
+        if let Some(count) = g.get_mut(&self.ip) {
+            *count -= 1;
+            if *count == 0 {
+                g.remove(&self.ip);
+            }
+        }
+    }
+}
+
+/// The running HTTP front-end. Dropping it drains with the configured
+/// timeout; [`Server::drain`] does the same explicitly and reports whether
+/// everything finished before the deadline.
+pub struct Server {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    accept: Mutex<Option<thread::JoinHandle<()>>>,
+    drained: AtomicBool,
+}
+
+impl Server {
+    /// Bind `cfg.listen` and start serving the coordinator. Port 0 picks
+    /// an ephemeral port; [`Server::addr`] reports the bound address.
+    pub fn start(coordinator: Coordinator, cfg: ServerConfig) -> anyhow::Result<Server> {
+        let listener = TcpListener::bind(&cfg.listen)
+            .with_context(|| format!("binding {:?}", cfg.listen))?;
+        let addr = listener.local_addr().context("resolving bound address")?;
+        listener.set_nonblocking(true).context("non-blocking listener")?;
+        let shared = Arc::new(Shared {
+            coordinator,
+            cfg,
+            draining: AtomicBool::new(false),
+            inflight: Mutex::new(0),
+            idle: Condvar::new(),
+            per_client: Mutex::new(HashMap::new()),
+            stats: Mutex::new(StatsInner {
+                stats: ServerStats::default(),
+                latency: Histogram::latency(),
+            }),
+        });
+        let for_accept = Arc::clone(&shared);
+        let accept = thread::Builder::new()
+            .name("triada-http-accept".into())
+            .spawn(move || accept_loop(listener, for_accept))
+            .context("spawning accept thread")?;
+        Ok(Server {
+            shared,
+            addr,
+            accept: Mutex::new(Some(accept)),
+            drained: AtomicBool::new(false),
+        })
+    }
+
+    /// The bound listen address.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The configuration the server runs with.
+    pub fn config(&self) -> &ServerConfig {
+        &self.shared.cfg
+    }
+
+    /// The coordinator behind the wire (for in-process inspection).
+    pub fn coordinator(&self) -> &Coordinator {
+        &self.shared.coordinator
+    }
+
+    /// Coordinator metrics with the wire counters filled in — the same
+    /// document `/v1/metrics` serves.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.shared.full_metrics()
+    }
+
+    /// Graceful drain: stop accepting (the listener closes, so new
+    /// connects are refused), answer requests on live keep-alive
+    /// connections with 503, let in-flight requests finish, then drain the
+    /// coordinator with whatever time remains (stragglers past the
+    /// deadline are canceled and still resolve typed). Returns `true` when
+    /// everything finished inside `timeout`. Idempotent.
+    pub fn drain(&self, timeout: Duration) -> bool {
+        if self.drained.swap(true, Ordering::SeqCst) {
+            return true;
+        }
+        let deadline = Instant::now() + timeout;
+        self.shared.draining.store(true, Ordering::SeqCst);
+        if let Some(handle) = self.accept.lock().unwrap().take() {
+            let _ = handle.join();
+        }
+        // In-flight requests hold job handles that resolve while the
+        // coordinator is still live — wait for them first.
+        let mut graceful = self.wait_inflight(deadline);
+        let remaining = deadline
+            .saturating_duration_since(Instant::now())
+            .max(Duration::from_millis(1));
+        graceful &= self.shared.coordinator.drain_within(remaining);
+        // Past the deadline the coordinator canceled stragglers; their
+        // handlers now hold typed results — give them a bounded moment to
+        // finish writing so no response is silently dropped.
+        self.wait_inflight(Instant::now() + Duration::from_secs(5));
+        graceful
+    }
+
+    fn wait_inflight(&self, deadline: Instant) -> bool {
+        let mut g = self.shared.inflight.lock().unwrap();
+        while *g > 0 {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let step = deadline.saturating_duration_since(now).min(Duration::from_millis(20));
+            let (gg, _) = self.shared.idle.wait_timeout(g, step).unwrap();
+            g = gg;
+        }
+        true
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        if !self.drained.load(Ordering::SeqCst) {
+            let timeout = self.shared.cfg.drain_timeout;
+            self.drain(timeout);
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    loop {
+        if shared.draining() {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                shared.stats.lock().unwrap().stats.connections += 1;
+                let for_conn = Arc::clone(&shared);
+                let spawned = thread::Builder::new()
+                    .name("triada-http-conn".into())
+                    .spawn(move || handle_connection(for_conn, stream, peer));
+                if spawned.is_err() {
+                    // Thread exhaustion: shed this connection and keep serving.
+                    thread::sleep(ACCEPT_POLL);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => thread::sleep(ACCEPT_POLL),
+            Err(_) => thread::sleep(ACCEPT_POLL),
+        }
+    }
+    // The listener drops here; the OS refuses new connections from now on.
+}
+
+fn handle_connection(shared: Arc<Shared>, stream: TcpStream, peer: SocketAddr) {
+    let _ = stream.set_nodelay(true);
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    loop {
+        let request = match http::read_request(&mut reader, shared.cfg.max_body_bytes) {
+            Ok(r) => r,
+            Err(RequestError::Eof) | Err(RequestError::Io(_)) => break,
+            Err(RequestError::TooLarge(declared)) => {
+                let e = ApiError::body_too_large(declared, shared.cfg.max_body_bytes);
+                let _ = respond_error(&mut writer, &e, false);
+                shared.record_response(e.status, 0.0, false);
+                break;
+            }
+            Err(RequestError::Malformed(message)) => {
+                let e = ApiError::bad_request(message);
+                let _ = respond_error(&mut writer, &e, false);
+                shared.record_response(e.status, 0.0, false);
+                break;
+            }
+        };
+        if !route(&shared, &mut writer, &request, peer) {
+            break;
+        }
+    }
+}
+
+/// Serve one request. Returns whether the connection should stay open.
+fn route(shared: &Shared, writer: &mut TcpStream, request: &Request, peer: SocketAddr) -> bool {
+    let started = Instant::now();
+    let path = request.path.split('?').next().unwrap_or("");
+    let wants_close = request
+        .header("connection")
+        .map(|v| v.eq_ignore_ascii_case("close"))
+        .unwrap_or(false);
+    let keep_alive = !wants_close && !shared.draining();
+    let outcome: RouteOutcome = match (request.method.as_str(), path) {
+        ("GET", "/v1/healthz") => {
+            plain(writer, 200, "ok\n", keep_alive)
+        }
+        ("GET", "/v1/readyz") => {
+            if shared.draining() {
+                typed(writer, &ApiError::draining(), keep_alive)
+            } else {
+                plain(writer, 200, "ready\n", keep_alive)
+            }
+        }
+        ("GET", "/v1/metrics") => {
+            let body = wire::metrics_json(&shared.full_metrics());
+            let res = http::write_response(
+                writer,
+                200,
+                wire::CONTENT_TYPE_JSON,
+                &[],
+                body.as_bytes(),
+                keep_alive,
+            );
+            written(200, res)
+        }
+        ("POST", "/v1/transform") => handle_transform(shared, writer, request, peer, keep_alive),
+        ("POST", "/v1/batch") => handle_batch(shared, writer, request, peer, keep_alive),
+        (method, "/v1/healthz" | "/v1/readyz" | "/v1/metrics" | "/v1/transform" | "/v1/batch") => {
+            typed(writer, &ApiError::method_not_allowed(method, path), keep_alive)
+        }
+        _ => typed(writer, &ApiError::not_found(path), keep_alive),
+    };
+    shared.record_response(outcome.status, started.elapsed().as_secs_f64(), outcome.disconnect);
+    keep_alive && outcome.write_ok
+}
+
+struct RouteOutcome {
+    status: u16,
+    write_ok: bool,
+    disconnect: bool,
+}
+
+fn written(status: u16, res: std::io::Result<()>) -> RouteOutcome {
+    RouteOutcome { status, write_ok: res.is_ok(), disconnect: false }
+}
+
+fn plain(writer: &mut TcpStream, status: u16, body: &str, keep_alive: bool) -> RouteOutcome {
+    let res = http::write_response(writer, status, "text/plain", &[], body.as_bytes(), keep_alive);
+    RouteOutcome { status, write_ok: res.is_ok(), disconnect: false }
+}
+
+fn typed(writer: &mut TcpStream, e: &ApiError, keep_alive: bool) -> RouteOutcome {
+    let res = respond_error(writer, e, keep_alive);
+    RouteOutcome { status: e.status, write_ok: res.is_ok(), disconnect: false }
+}
+
+fn respond_error(writer: &mut impl Write, e: &ApiError, keep_alive: bool) -> std::io::Result<()> {
+    let mut extra: Vec<(&str, String)> = Vec::new();
+    if let Some(secs) = e.retry_after() {
+        extra.push(("Retry-After", secs.to_string()));
+    }
+    http::write_response(
+        writer,
+        e.status,
+        wire::CONTENT_TYPE_JSON,
+        &extra,
+        e.body().as_bytes(),
+        keep_alive,
+    )
+}
+
+/// Parse the request body (by content type) and apply the deadline header.
+fn parse_request(request: &Request) -> Result<(TransformRequest, bool), ApiError> {
+    let content_type = request.header("content-type").unwrap_or(wire::CONTENT_TYPE_JSON);
+    let binary = content_type.starts_with(wire::CONTENT_TYPE_TENSOR);
+    let mut parsed = if binary {
+        wire::request_from_binary(&request.body)?
+    } else {
+        let text = std::str::from_utf8(&request.body)
+            .map_err(|_| ApiError::bad_request("body is not UTF-8"))?;
+        let v = super::json::Json::parse(text)
+            .map_err(|e| ApiError::bad_request(format!("body JSON: {e:#}")))?;
+        wire::request_from_json(&v)?
+    };
+    if let Some(header) = request.header(wire::DEADLINE_HEADER) {
+        let ms: f64 = header
+            .trim()
+            .parse()
+            .map_err(|_| ApiError::bad_request(format!("bad {} value {header:?}", wire::DEADLINE_HEADER)))?;
+        if !ms.is_finite() || ms < 0.0 {
+            return Err(ApiError::bad_request(format!(
+                "{} must be finite and non-negative, got {ms}",
+                wire::DEADLINE_HEADER
+            )));
+        }
+        parsed.deadline_ms = Some(ms);
+    }
+    Ok((parsed, binary))
+}
+
+fn context_for(deadline_ms: Option<f64>) -> JobContext {
+    match deadline_ms {
+        Some(ms) if ms > 0.0 => JobContext::deadline_in(Duration::from_secs_f64(ms / 1e3)),
+        _ => JobContext::new(),
+    }
+}
+
+/// Admission: `try_submit_ctx` fast path; on a full queue, optionally wait
+/// `submit_wait` for a slot before shedding (429).
+fn submit(shared: &Shared, job: TransformJob, ctx: JobContext) -> Result<JobHandle, ApiError> {
+    match shared.coordinator.try_submit_ctx(job, ctx.clone()) {
+        Ok(handle) => Ok(handle),
+        Err(SubmitError::QueueFull(job)) => match shared.cfg.submit_wait {
+            Some(wait) => shared
+                .coordinator
+                .submit_within_ctx(job, ctx, wait)
+                .map_err(|e| ApiError::from_submit_error(&e)),
+            None => Err(ApiError::queue_full()),
+        },
+        Err(e) => Err(ApiError::from_submit_error(&e)),
+    }
+}
+
+/// Wait for a job while watching the connection: a client hang-up cancels
+/// the job through its cancel token, and the wait continues so the job
+/// still resolves typed (and is counted) before the handler exits.
+fn wait_watching_client(
+    handle: &JobHandle,
+    stream: &TcpStream,
+    disconnected: &mut bool,
+) -> Result<JobResult, ApiError> {
+    loop {
+        match handle.wait_timeout(WAIT_POLL) {
+            WaitOutcome::Ready(result) => return Ok(result),
+            WaitOutcome::Disconnected => {
+                return Err(ApiError::execute_failed("coordinator dropped the job"))
+            }
+            WaitOutcome::TimedOut => {
+                if !*disconnected && client_gone(stream) {
+                    *disconnected = true;
+                    handle.cancel();
+                }
+            }
+        }
+    }
+}
+
+/// Has the peer hung up? A zero-byte `peek` readback means EOF; anything
+/// readable means a (pipelined) byte is waiting and the client is alive.
+fn client_gone(stream: &TcpStream) -> bool {
+    if stream.set_nonblocking(true).is_err() {
+        return true;
+    }
+    let mut probe = [0u8; 1];
+    let gone = match stream.peek(&mut probe) {
+        Ok(0) => true,
+        Ok(_) => false,
+        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => false,
+        Err(_) => true,
+    };
+    let _ = stream.set_nonblocking(false);
+    gone
+}
+
+fn handle_transform(
+    shared: &Shared,
+    writer: &mut TcpStream,
+    request: &Request,
+    peer: SocketAddr,
+    keep_alive: bool,
+) -> RouteOutcome {
+    // Count ourselves in-flight *before* re-checking the drain flag: drain
+    // sets the flag and then waits for zero in-flight, so this ordering
+    // means it either sees us (and waits) or we see it (and shed).
+    let _inflight = InflightGuard::enter(shared);
+    if shared.draining() {
+        return typed(writer, &ApiError::draining(), false);
+    }
+    let _slot = match ClientSlot::enter(shared, peer.ip()) {
+        Ok(slot) => slot,
+        Err(e) => return typed(writer, &e, keep_alive),
+    };
+    let (parsed, binary) = match parse_request(request) {
+        Ok(p) => p,
+        Err(e) => return typed(writer, &e, keep_alive),
+    };
+    let job = TransformJob::new(parsed.kind, parsed.direction, parsed.inputs);
+    if let Err(e) = job.validate() {
+        return typed(writer, &ApiError::invalid_spec(format!("{e:#}")), keep_alive);
+    }
+    let handle = match submit(shared, job, context_for(parsed.deadline_ms)) {
+        Ok(h) => h,
+        Err(e) => return typed(writer, &e, keep_alive),
+    };
+    let mut disconnected = false;
+    let result = match wait_watching_client(&handle, writer, &mut disconnected) {
+        Ok(r) => r,
+        Err(e) => {
+            let mut out = typed(writer, &e, keep_alive);
+            out.disconnect = disconnected;
+            return out;
+        }
+    };
+    let mut outcome = match &result.outputs {
+        Ok(outputs) => {
+            let (content_type, body) = if binary {
+                (wire::CONTENT_TYPE_TENSOR, wire::encode_result_binary(&result, outputs))
+            } else {
+                (
+                    wire::CONTENT_TYPE_JSON,
+                    wire::encode_result_json(&result, outputs).into_bytes(),
+                )
+            };
+            let res = http::write_response(writer, 200, content_type, &[], &body, keep_alive);
+            written(200, res)
+        }
+        Err(_) => typed(writer, &ApiError::from_job_result(&result), keep_alive),
+    };
+    outcome.disconnect = disconnected;
+    outcome
+}
+
+fn handle_batch(
+    shared: &Shared,
+    writer: &mut TcpStream,
+    request: &Request,
+    peer: SocketAddr,
+    keep_alive: bool,
+) -> RouteOutcome {
+    let _inflight = InflightGuard::enter(shared);
+    if shared.draining() {
+        return typed(writer, &ApiError::draining(), false);
+    }
+    let _slot = match ClientSlot::enter(shared, peer.ip()) {
+        Ok(slot) => slot,
+        Err(e) => return typed(writer, &e, keep_alive),
+    };
+    let content_type = request.header("content-type").unwrap_or(wire::CONTENT_TYPE_JSON);
+    if content_type.starts_with(wire::CONTENT_TYPE_TENSOR) {
+        let e = ApiError::bad_request("/v1/batch only accepts application/json");
+        return typed(writer, &e, keep_alive);
+    }
+    let parsed = std::str::from_utf8(&request.body)
+        .map_err(|_| ApiError::bad_request("body is not UTF-8"))
+        .and_then(|text| {
+            super::json::Json::parse(text)
+                .map_err(|e| ApiError::bad_request(format!("body JSON: {e:#}")))
+        });
+    let body = match parsed {
+        Ok(v) => v,
+        Err(e) => return typed(writer, &e, keep_alive),
+    };
+    let entries = match body.get("jobs").and_then(super::json::Json::as_array) {
+        Some(entries) if entries.len() <= MAX_BATCH_JOBS => entries,
+        Some(entries) => {
+            let e = ApiError::bad_request(format!(
+                "batch of {} exceeds the {MAX_BATCH_JOBS}-job limit",
+                entries.len()
+            ));
+            return typed(writer, &e, keep_alive);
+        }
+        None => {
+            let e = ApiError::invalid_spec("missing array field \"jobs\"");
+            return typed(writer, &e, keep_alive);
+        }
+    };
+    // Admit every entry first (jobs of one batch run concurrently), then
+    // collect in order. Per-entry failures are inline results, not a
+    // request-level error.
+    let mut admitted: Vec<Result<JobHandle, ApiError>> = Vec::with_capacity(entries.len());
+    for entry in entries {
+        let outcome = wire::request_from_json(entry).and_then(|parsed| {
+            let job = TransformJob::new(parsed.kind, parsed.direction, parsed.inputs);
+            job.validate().map_err(|e| ApiError::invalid_spec(format!("{e:#}")))?;
+            submit(shared, job, context_for(parsed.deadline_ms))
+        });
+        admitted.push(outcome);
+    }
+    let mut disconnected = false;
+    let mut canceled_rest = false;
+    let mut results: Vec<String> = Vec::with_capacity(admitted.len());
+    for outcome in &admitted {
+        match outcome {
+            Err(e) => results.push(e.body()),
+            Ok(handle) => match wait_watching_client(handle, writer, &mut disconnected) {
+                Err(e) => results.push(e.body()),
+                Ok(result) => match &result.outputs {
+                    Ok(outputs) => results.push(wire::encode_result_json(&result, outputs)),
+                    Err(_) => results.push(ApiError::from_job_result(&result).body()),
+                },
+            },
+        }
+        if disconnected && !canceled_rest {
+            // The client is gone: cancel the rest of the batch too.
+            canceled_rest = true;
+            for handle in admitted.iter().flatten() {
+                handle.cancel();
+            }
+        }
+    }
+    let body = format!("{{\"results\":[{}]}}", results.join(","));
+    let res =
+        http::write_response(writer, 200, wire::CONTENT_TYPE_JSON, &[], body.as_bytes(), keep_alive);
+    let mut outcome = written(200, res);
+    outcome.disconnect = disconnected;
+    outcome
+}

@@ -1,0 +1,71 @@
+//! SIGINT/SIGTERM → drain flag, with no libc dependency.
+//!
+//! The offline build carries no signal crate, so `serve --listen` installs
+//! the handlers through the C `signal(2)` entry point directly: the
+//! handler only flips a static atomic (async-signal-safe by construction),
+//! and the CLI's run loop polls [`shutdown_requested`] and drains the
+//! server when it flips. On non-Unix targets [`install`] is a no-op and
+//! Ctrl-C simply kills the process (the [`super::Server`] drop drain still
+//! runs for in-process embedders).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+/// Has a SIGINT/SIGTERM (or a programmatic [`request_shutdown`]) arrived?
+pub fn shutdown_requested() -> bool {
+    SHUTDOWN.load(Ordering::SeqCst)
+}
+
+/// Trip the shutdown flag from code (tests, embedders).
+pub fn request_shutdown() {
+    SHUTDOWN.store(true, Ordering::SeqCst);
+}
+
+/// Reset the flag (tests that exercise the run loop more than once).
+pub fn reset() {
+    SHUTDOWN.store(false, Ordering::SeqCst);
+}
+
+/// Install the SIGINT and SIGTERM handlers. Idempotent; later installs
+/// re-point the handlers at the same flag.
+#[cfg(unix)]
+pub fn install() {
+    extern "C" fn on_signal(_signum: i32) {
+        // Only an atomic store: async-signal-safe.
+        SHUTDOWN.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        // The C library's signal(2); usize stands in for sighandler_t on
+        // both sides (function pointers are address-sized).
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGINT, on_signal);
+        signal(SIGTERM, on_signal);
+    }
+}
+
+/// Non-Unix: no handler to install; the flag still works programmatically.
+#[cfg(not(unix))]
+pub fn install() {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flag_flips_and_resets() {
+        reset();
+        assert!(!shutdown_requested());
+        request_shutdown();
+        assert!(shutdown_requested());
+        reset();
+        assert!(!shutdown_requested());
+        // Installing the handlers must not disturb the flag.
+        install();
+        assert!(!shutdown_requested());
+    }
+}

@@ -1,0 +1,748 @@
+//! Wire serialization for the HTTP front-end: base64, the little-endian
+//! tensor payload codec, the transform request/response bodies, the typed
+//! error body, and the `/v1/metrics` document.
+//!
+//! Two body formats carry the same information:
+//!
+//! * **JSON** (`application/json`) — the spec fields inline plus each
+//!   tensor as a base64 string of its little-endian element bytes.
+//! * **Binary** (`application/x-triada-tensor`) — a 4-byte little-endian
+//!   spec length, the spec JSON (without `"tensors"`), then the raw
+//!   little-endian element bytes of every tensor concatenated in order.
+//!
+//! Both are bit-exact: elements travel as their IEEE-754 bytes, never
+//! through decimal formatting, so what the client sends is what the plan
+//! executes on (and `-0.0`, subnormals, and NaN payloads all survive).
+//!
+//! ```
+//! use triada::server::wire;
+//! use triada::tensor::Tensor3;
+//! let t: Tensor3<f32> = Tensor3::from_fn(2, 3, 4, |i, j, k| (i + 10 * j + 100 * k) as f32);
+//! let bytes = wire::tensor_bytes(&t);
+//! let back: Tensor3<f32> = wire::tensor_from_bytes((2, 3, 4), &bytes).unwrap();
+//! assert_eq!(wire::tensor_bytes(&back), bytes);
+//! ```
+
+use anyhow::{bail, ensure, Context};
+
+use crate::coordinator::{JobResult, MetricsSnapshot, SubmitError};
+use crate::runtime::Direction;
+use crate::tensor::{Complex64, Scalar, Tensor3};
+use crate::transforms::TransformKind;
+use crate::util::JobError;
+
+use super::json::{self, Json};
+
+/// Content type of JSON request/response bodies.
+pub const CONTENT_TYPE_JSON: &str = "application/json";
+/// Content type of the framed binary tensor format.
+pub const CONTENT_TYPE_TENSOR: &str = "application/x-triada-tensor";
+/// Request header carrying the per-request deadline (overrides the
+/// `deadline_ms` body field).
+pub const DEADLINE_HEADER: &str = "x-triada-deadline-ms";
+
+// ---------------------------------------------------------------------------
+// base64 (standard alphabet, padded)
+
+const B64_ALPHABET: &[u8; 64] =
+    b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+/// Standard padded base64.
+pub fn b64encode(data: &[u8]) -> String {
+    let mut out = String::with_capacity(data.len().div_ceil(3) * 4);
+    for chunk in data.chunks(3) {
+        let b = [chunk[0], *chunk.get(1).unwrap_or(&0), *chunk.get(2).unwrap_or(&0)];
+        let n = (u32::from(b[0]) << 16) | (u32::from(b[1]) << 8) | u32::from(b[2]);
+        out.push(B64_ALPHABET[(n >> 18) as usize & 63] as char);
+        out.push(B64_ALPHABET[(n >> 12) as usize & 63] as char);
+        out.push(if chunk.len() > 1 { B64_ALPHABET[(n >> 6) as usize & 63] as char } else { '=' });
+        out.push(if chunk.len() > 2 { B64_ALPHABET[n as usize & 63] as char } else { '=' });
+    }
+    out
+}
+
+/// Decode standard padded base64 (whitespace is rejected — the wire never
+/// wraps lines).
+pub fn b64decode(text: &str) -> anyhow::Result<Vec<u8>> {
+    fn val(c: u8) -> anyhow::Result<u32> {
+        match c {
+            b'A'..=b'Z' => Ok(u32::from(c - b'A')),
+            b'a'..=b'z' => Ok(u32::from(c - b'a') + 26),
+            b'0'..=b'9' => Ok(u32::from(c - b'0') + 52),
+            b'+' => Ok(62),
+            b'/' => Ok(63),
+            _ => bail!("invalid base64 byte {:?}", c as char),
+        }
+    }
+    let bytes = text.as_bytes();
+    ensure!(bytes.len() % 4 == 0, "base64 length {} is not a multiple of 4", bytes.len());
+    let mut out = Vec::with_capacity(bytes.len() / 4 * 3);
+    for (i, quad) in bytes.chunks_exact(4).enumerate() {
+        let last = (i + 1) * 4 == bytes.len();
+        let pad = if last { quad.iter().rev().take_while(|&&c| c == b'=').count() } else { 0 };
+        ensure!(pad <= 2, "too much base64 padding");
+        ensure!(
+            !quad[..4 - pad].contains(&b'='),
+            "base64 padding only allowed at the end"
+        );
+        let mut n = 0u32;
+        for &c in &quad[..4 - pad] {
+            n = (n << 6) | val(c)?;
+        }
+        n <<= 6 * pad;
+        out.push((n >> 16) as u8);
+        if pad < 2 {
+            out.push((n >> 8) as u8);
+        }
+        if pad < 1 {
+            out.push(n as u8);
+        }
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Tensor payload codec
+
+/// A scalar with a defined little-endian wire encoding.
+pub trait WireScalar: Scalar {
+    /// Wire dtype tag (`"f32"` / `"f64"` / `"c64"`).
+    const DTYPE: &'static str;
+    /// Bytes per element on the wire.
+    const BYTES: usize;
+    fn put_le(self, out: &mut Vec<u8>);
+    /// Decode one element from exactly [`WireScalar::BYTES`] bytes.
+    fn get_le(chunk: &[u8]) -> Self;
+}
+
+impl WireScalar for f32 {
+    const DTYPE: &'static str = "f32";
+    const BYTES: usize = 4;
+    fn put_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn get_le(chunk: &[u8]) -> Self {
+        f32::from_le_bytes(chunk.try_into().expect("4-byte chunk"))
+    }
+}
+
+impl WireScalar for f64 {
+    const DTYPE: &'static str = "f64";
+    const BYTES: usize = 8;
+    fn put_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn get_le(chunk: &[u8]) -> Self {
+        f64::from_le_bytes(chunk.try_into().expect("8-byte chunk"))
+    }
+}
+
+impl WireScalar for Complex64 {
+    const DTYPE: &'static str = "c64";
+    const BYTES: usize = 16;
+    fn put_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.re.to_le_bytes());
+        out.extend_from_slice(&self.im.to_le_bytes());
+    }
+    fn get_le(chunk: &[u8]) -> Self {
+        Complex64::new(
+            f64::from_le_bytes(chunk[..8].try_into().expect("8-byte re")),
+            f64::from_le_bytes(chunk[8..].try_into().expect("8-byte im")),
+        )
+    }
+}
+
+/// The little-endian element bytes of a tensor (row-major, the storage
+/// order of [`Tensor3`]).
+pub fn tensor_bytes<T: WireScalar>(t: &Tensor3<T>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(t.len() * T::BYTES);
+    for &v in t.data() {
+        v.put_le(&mut out);
+    }
+    out
+}
+
+/// Rebuild a tensor from its wire bytes; the byte count must match the
+/// shape exactly.
+pub fn tensor_from_bytes<T: WireScalar>(
+    shape: (usize, usize, usize),
+    bytes: &[u8],
+) -> anyhow::Result<Tensor3<T>> {
+    let want = shape.0 * shape.1 * shape.2 * T::BYTES;
+    ensure!(
+        bytes.len() == want,
+        "payload is {} bytes but shape {:?} as {} needs {}",
+        bytes.len(),
+        shape,
+        T::DTYPE,
+        want
+    );
+    let data: Vec<T> = bytes.chunks_exact(T::BYTES).map(T::get_le).collect();
+    Ok(Tensor3::from_vec(shape.0, shape.1, shape.2, data))
+}
+
+/// [`tensor_bytes`] as base64 (the JSON body representation).
+pub fn tensor_to_base64<T: WireScalar>(t: &Tensor3<T>) -> String {
+    b64encode(&tensor_bytes(t))
+}
+
+/// Decode a base64 tensor against an expected shape.
+pub fn tensor_from_base64<T: WireScalar>(
+    shape: (usize, usize, usize),
+    text: &str,
+) -> anyhow::Result<Tensor3<T>> {
+    tensor_from_bytes(shape, &b64decode(text)?)
+}
+
+// ---------------------------------------------------------------------------
+// Typed API errors
+
+/// A typed protocol error: HTTP status + stable machine-readable code +
+/// human message. Rendered as `{"error": {"code": ..., "message": ...}}`.
+#[derive(Clone, Debug)]
+pub struct ApiError {
+    pub status: u16,
+    pub code: &'static str,
+    pub message: String,
+}
+
+impl ApiError {
+    pub fn bad_request(message: impl Into<String>) -> ApiError {
+        ApiError { status: 400, code: "bad_request", message: message.into() }
+    }
+    pub fn invalid_spec(message: impl Into<String>) -> ApiError {
+        ApiError { status: 400, code: "invalid_spec", message: message.into() }
+    }
+    pub fn body_too_large(declared: usize, limit: usize) -> ApiError {
+        ApiError {
+            status: 413,
+            code: "body_too_large",
+            message: format!("body of {declared} bytes exceeds the {limit}-byte limit"),
+        }
+    }
+    pub fn queue_full() -> ApiError {
+        ApiError { status: 429, code: "queue_full", message: "submission queue full".into() }
+    }
+    pub fn too_many_inflight(limit: usize) -> ApiError {
+        ApiError {
+            status: 429,
+            code: "too_many_inflight",
+            message: format!("client already has {limit} request(s) in flight"),
+        }
+    }
+    pub fn draining() -> ApiError {
+        ApiError { status: 503, code: "draining", message: "server is draining".into() }
+    }
+    pub fn shutting_down() -> ApiError {
+        ApiError { status: 503, code: "shutting_down", message: "coordinator shutting down".into() }
+    }
+    pub fn deadline_exceeded() -> ApiError {
+        ApiError { status: 504, code: "deadline_exceeded", message: "job deadline exceeded".into() }
+    }
+    pub fn canceled() -> ApiError {
+        ApiError { status: 499, code: "canceled", message: "job canceled".into() }
+    }
+    pub fn execute_failed(message: impl Into<String>) -> ApiError {
+        ApiError { status: 500, code: "execute_failed", message: message.into() }
+    }
+    pub fn not_found(path: &str) -> ApiError {
+        ApiError { status: 404, code: "not_found", message: format!("no route {path:?}") }
+    }
+    pub fn method_not_allowed(method: &str, path: &str) -> ApiError {
+        ApiError {
+            status: 405,
+            code: "method_not_allowed",
+            message: format!("{method} not allowed on {path}"),
+        }
+    }
+
+    /// The JSON error body.
+    pub fn body(&self) -> String {
+        format!(
+            "{{\"error\":{{\"code\":{},\"message\":{}}}}}",
+            json::escape(self.code),
+            json::escape(&self.message)
+        )
+    }
+
+    /// `Retry-After` seconds for shed-load statuses (429/503).
+    pub fn retry_after(&self) -> Option<u64> {
+        match self.status {
+            429 => Some(1),
+            503 => Some(2),
+            _ => None,
+        }
+    }
+
+    /// Map a typed coordinator admission error.
+    pub fn from_submit_error(e: &SubmitError) -> ApiError {
+        match e {
+            SubmitError::QueueFull(_) => ApiError::queue_full(),
+            SubmitError::ShuttingDown(_) => ApiError::shutting_down(),
+            SubmitError::DeadlineExpired(_) => ApiError::deadline_exceeded(),
+        }
+    }
+
+    /// Map a resolved job's failure to the documented status/code.
+    pub fn from_job_result(res: &JobResult) -> ApiError {
+        match res.job_error() {
+            Some(JobError::Canceled) => ApiError::canceled(),
+            Some(JobError::DeadlineExceeded) => ApiError::deadline_exceeded(),
+            None => match &res.outputs {
+                Err(e) => ApiError::execute_failed(format!("{e:#}")),
+                Ok(_) => ApiError::execute_failed("not an error"),
+            },
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Transform request bodies
+
+/// A decoded `/v1/transform` request (or one `/v1/batch` entry).
+#[derive(Clone, Debug)]
+pub struct TransformRequest {
+    pub kind: TransformKind,
+    pub direction: Direction,
+    pub shape: (usize, usize, usize),
+    /// Per-request deadline in milliseconds (`None`/`0` = none). The
+    /// [`DEADLINE_HEADER`] overrides this field.
+    pub deadline_ms: Option<f64>,
+    /// One tensor for real kinds, the `(re, im)` pair for the split DFT.
+    pub inputs: Vec<Tensor3<f32>>,
+}
+
+fn spec_fields(v: &Json) -> Result<(TransformKind, Direction, (usize, usize, usize), Option<f64>), ApiError> {
+    let kind_text = v
+        .get("kind")
+        .and_then(Json::as_str)
+        .ok_or_else(|| ApiError::invalid_spec("missing string field \"kind\""))?;
+    let kind: TransformKind =
+        kind_text.parse().map_err(|e| ApiError::invalid_spec(format!("{e}")))?;
+    let dir_text = v
+        .get("direction")
+        .and_then(Json::as_str)
+        .ok_or_else(|| ApiError::invalid_spec("missing string field \"direction\""))?;
+    let direction =
+        Direction::parse(dir_text).map_err(|e| ApiError::invalid_spec(format!("{e}")))?;
+    let shape_arr = v
+        .get("shape")
+        .and_then(Json::as_array)
+        .ok_or_else(|| ApiError::invalid_spec("missing array field \"shape\""))?;
+    if shape_arr.len() != 3 {
+        return Err(ApiError::invalid_spec(format!(
+            "\"shape\" must have 3 entries, got {}",
+            shape_arr.len()
+        )));
+    }
+    let dim = |i: usize| -> Result<usize, ApiError> {
+        shape_arr[i]
+            .as_u64()
+            .map(|n| n as usize)
+            .ok_or_else(|| ApiError::invalid_spec("\"shape\" entries must be non-negative integers"))
+    };
+    let shape = (dim(0)?, dim(1)?, dim(2)?);
+    let deadline_ms = match v.get("deadline_ms") {
+        None | Some(Json::Null) => None,
+        Some(d) => {
+            let ms = d
+                .as_f64()
+                .ok_or_else(|| ApiError::invalid_spec("\"deadline_ms\" must be a number"))?;
+            if !ms.is_finite() || ms < 0.0 {
+                return Err(ApiError::invalid_spec(format!(
+                    "\"deadline_ms\" must be finite and non-negative, got {ms}"
+                )));
+            }
+            Some(ms)
+        }
+    };
+    Ok((kind, direction, shape, deadline_ms))
+}
+
+/// How many input tensors a kind carries on the wire.
+fn arity(kind: TransformKind) -> usize {
+    if kind == TransformKind::DftSplit {
+        2
+    } else {
+        1
+    }
+}
+
+/// Decode a JSON transform request (one already-parsed object).
+pub fn request_from_json(v: &Json) -> Result<TransformRequest, ApiError> {
+    let (kind, direction, shape, deadline_ms) = spec_fields(v)?;
+    let tensors = v
+        .get("tensors")
+        .and_then(Json::as_array)
+        .ok_or_else(|| ApiError::invalid_spec("missing array field \"tensors\""))?;
+    if tensors.len() != arity(kind) {
+        return Err(ApiError::invalid_spec(format!(
+            "{} expects {} tensor(s), got {}",
+            kind.name(),
+            arity(kind),
+            tensors.len()
+        )));
+    }
+    let mut inputs = Vec::with_capacity(tensors.len());
+    for (i, t) in tensors.iter().enumerate() {
+        let text = t
+            .as_str()
+            .ok_or_else(|| ApiError::invalid_spec("\"tensors\" entries must be base64 strings"))?;
+        let tensor = tensor_from_base64::<f32>(shape, text)
+            .map_err(|e| ApiError::invalid_spec(format!("tensor {i}: {e:#}")))?;
+        inputs.push(tensor);
+    }
+    Ok(TransformRequest { kind, direction, shape, deadline_ms, inputs })
+}
+
+/// Decode a framed binary transform request
+/// (`[u32 LE spec_len][spec JSON][raw f32 LE payload]`).
+pub fn request_from_binary(body: &[u8]) -> Result<TransformRequest, ApiError> {
+    if body.len() < 4 {
+        return Err(ApiError::bad_request("binary body shorter than its length prefix"));
+    }
+    let spec_len = u32::from_le_bytes(body[..4].try_into().expect("4-byte prefix")) as usize;
+    if body.len() < 4 + spec_len {
+        return Err(ApiError::bad_request(format!(
+            "spec length {spec_len} overruns the {}-byte body",
+            body.len()
+        )));
+    }
+    let spec_text = std::str::from_utf8(&body[4..4 + spec_len])
+        .map_err(|_| ApiError::bad_request("spec JSON is not UTF-8"))?;
+    let spec = Json::parse(spec_text)
+        .map_err(|e| ApiError::bad_request(format!("spec JSON: {e:#}")))?;
+    let (kind, direction, shape, deadline_ms) = spec_fields(&spec)?;
+    let payload = &body[4 + spec_len..];
+    let per_tensor = shape.0 * shape.1 * shape.2 * <f32 as WireScalar>::BYTES;
+    let want = per_tensor * arity(kind);
+    if payload.len() != want {
+        return Err(ApiError::invalid_spec(format!(
+            "payload is {} bytes but {} × shape {:?} as f32 needs {}",
+            payload.len(),
+            arity(kind),
+            shape,
+            want
+        )));
+    }
+    let inputs = if per_tensor == 0 {
+        vec![Tensor3::zeros(shape.0, shape.1, shape.2); arity(kind)]
+    } else {
+        payload
+            .chunks_exact(per_tensor)
+            .map(|chunk| tensor_from_bytes::<f32>(shape, chunk).expect("size checked"))
+            .collect()
+    };
+    Ok(TransformRequest { kind, direction, shape, deadline_ms, inputs })
+}
+
+fn spec_json(req: &TransformRequest) -> String {
+    let mut s = format!(
+        "{{\"kind\":{},\"direction\":{},\"shape\":[{},{},{}]",
+        json::escape(req.kind.name()),
+        json::escape(req.direction.name()),
+        req.shape.0,
+        req.shape.1,
+        req.shape.2
+    );
+    if let Some(ms) = req.deadline_ms {
+        s.push_str(&format!(",\"deadline_ms\":{}", json::render_num(ms)));
+    }
+    s
+}
+
+/// Encode a request as a JSON body.
+pub fn encode_request_json(req: &TransformRequest) -> String {
+    let mut s = spec_json(req);
+    s.push_str(",\"tensors\":[");
+    for (i, t) in req.inputs.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push('"');
+        s.push_str(&tensor_to_base64(t));
+        s.push('"');
+    }
+    s.push_str("]}");
+    s
+}
+
+/// Encode a request in the framed binary format.
+pub fn encode_request_binary(req: &TransformRequest) -> Vec<u8> {
+    let mut spec = spec_json(req);
+    spec.push('}');
+    let mut out = Vec::new();
+    out.extend_from_slice(&(spec.len() as u32).to_le_bytes());
+    out.extend_from_slice(spec.as_bytes());
+    for t in &req.inputs {
+        out.extend_from_slice(&tensor_bytes(t));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Result bodies
+
+fn result_meta(res: &JobResult, outputs: &[Tensor3<f32>]) -> String {
+    let shape = outputs.first().map(|t| t.shape()).unwrap_or((0, 0, 0));
+    format!(
+        "{{\"id\":{},\"backend\":{},\"batch_size\":{},\"latency_s\":{},\"shape\":[{},{},{}]",
+        res.id,
+        json::escape(res.backend),
+        res.batch_size,
+        json::render_num(res.latency_s),
+        shape.0,
+        shape.1,
+        shape.2
+    )
+}
+
+/// Encode a successful result as a JSON body.
+pub fn encode_result_json(res: &JobResult, outputs: &[Tensor3<f32>]) -> String {
+    let mut s = result_meta(res, outputs);
+    s.push_str(",\"tensors\":[");
+    for (i, t) in outputs.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push('"');
+        s.push_str(&tensor_to_base64(t));
+        s.push('"');
+    }
+    s.push_str("]}");
+    s
+}
+
+/// Encode a successful result in the framed binary format (meta JSON plus
+/// a `"tensors"` count, then raw payload).
+pub fn encode_result_binary(res: &JobResult, outputs: &[Tensor3<f32>]) -> Vec<u8> {
+    let mut meta = result_meta(res, outputs);
+    meta.push_str(&format!(",\"tensors\":{}", outputs.len()));
+    meta.push('}');
+    let mut out = Vec::new();
+    out.extend_from_slice(&(meta.len() as u32).to_le_bytes());
+    out.extend_from_slice(meta.as_bytes());
+    for t in outputs {
+        out.extend_from_slice(&tensor_bytes(t));
+    }
+    out
+}
+
+/// Decode a JSON result body into its meta document and tensors.
+pub fn decode_result_json(body: &str) -> anyhow::Result<(Json, Vec<Tensor3<f32>>)> {
+    let v = Json::parse(body)?;
+    let shape_arr = v.get("shape").and_then(Json::as_array).context("missing \"shape\"")?;
+    ensure!(shape_arr.len() == 3, "result shape must have 3 entries");
+    let shape = (
+        shape_arr[0].as_u64().context("bad shape entry")? as usize,
+        shape_arr[1].as_u64().context("bad shape entry")? as usize,
+        shape_arr[2].as_u64().context("bad shape entry")? as usize,
+    );
+    let tensors = v.get("tensors").and_then(Json::as_array).context("missing \"tensors\"")?;
+    let mut out = Vec::with_capacity(tensors.len());
+    for t in tensors {
+        out.push(tensor_from_base64::<f32>(shape, t.as_str().context("tensor not a string")?)?);
+    }
+    Ok((v, out))
+}
+
+/// Decode a framed binary result body into its meta document and tensors.
+pub fn decode_result_binary(body: &[u8]) -> anyhow::Result<(Json, Vec<Tensor3<f32>>)> {
+    ensure!(body.len() >= 4, "binary result shorter than its length prefix");
+    let meta_len = u32::from_le_bytes(body[..4].try_into().expect("4-byte prefix")) as usize;
+    ensure!(body.len() >= 4 + meta_len, "meta length overruns body");
+    let meta = Json::parse(std::str::from_utf8(&body[4..4 + meta_len]).context("meta not UTF-8")?)?;
+    let shape_arr = meta.get("shape").and_then(Json::as_array).context("missing \"shape\"")?;
+    ensure!(shape_arr.len() == 3, "result shape must have 3 entries");
+    let shape = (
+        shape_arr[0].as_u64().context("bad shape entry")? as usize,
+        shape_arr[1].as_u64().context("bad shape entry")? as usize,
+        shape_arr[2].as_u64().context("bad shape entry")? as usize,
+    );
+    let count = meta.get("tensors").and_then(Json::as_u64).context("missing \"tensors\"")? as usize;
+    let payload = &body[4 + meta_len..];
+    let per_tensor = shape.0 * shape.1 * shape.2 * <f32 as WireScalar>::BYTES;
+    ensure!(
+        payload.len() == per_tensor * count,
+        "payload is {} bytes, expected {} tensors × {} bytes",
+        payload.len(),
+        count,
+        per_tensor
+    );
+    let tensors = if per_tensor == 0 {
+        vec![Tensor3::zeros(shape.0, shape.1, shape.2); count]
+    } else {
+        payload
+            .chunks_exact(per_tensor)
+            .map(|chunk| tensor_from_bytes::<f32>(shape, chunk).expect("size checked"))
+            .collect()
+    };
+    Ok((meta, tensors))
+}
+
+// ---------------------------------------------------------------------------
+// Metrics document
+
+/// Render a [`MetricsSnapshot`] as the `/v1/metrics` JSON document.
+pub fn metrics_json(s: &MetricsSnapshot) -> String {
+    let num = json::render_num;
+    let mut out = format!(
+        "{{\"jobs\":{{\"completed\":{},\"failed\":{},\"rejected\":{},\"canceled\":{},\"deadline_missed\":{},\"retries\":{},\"failovers\":{}}}",
+        s.completed, s.failed, s.rejected, s.canceled, s.deadline_missed, s.retries, s.failovers
+    );
+    out.push_str(&format!(
+        ",\"batches\":{{\"count\":{},\"mean_size\":{}}}",
+        s.batches,
+        num(s.mean_batch_size)
+    ));
+    out.push_str(&format!(
+        ",\"latency\":{{\"p50_s\":{},\"p95_s\":{},\"p99_s\":{},\"mean_s\":{},\"queue_wait_p50_s\":{}}}",
+        num(s.latency_p50_s),
+        num(s.latency_p95_s),
+        num(s.latency_p99_s),
+        num(s.latency_mean_s),
+        num(s.queue_wait_p50_s)
+    ));
+    out.push_str(&format!(
+        ",\"throughput_jobs_per_s\":{},\"uptime_s\":{}",
+        num(s.throughput_jobs_per_s),
+        num(s.uptime_s)
+    ));
+    out.push_str(&format!(
+        ",\"plans\":{{\"hits\":{},\"misses\":{},\"builds\":{},\"evictions\":{},\"entries\":{}}}",
+        s.plans.hits, s.plans.misses, s.plans.builds, s.plans.evictions, s.plans.entries
+    ));
+    out.push_str(&format!(
+        ",\"pool\":{{\"workers\":{},\"queue_depth\":{},\"submitted\":{},\"executed\":{},\"stolen\":{},\"panics\":{},\"task_wait_mean_s\":{}}}",
+        s.pool.workers,
+        s.pool.queue_depth,
+        s.pool.submitted,
+        s.pool.executed,
+        s.pool.stolen,
+        s.pool.panics,
+        num(s.pool.task_wait_mean_s)
+    ));
+    out.push_str(&format!(
+        ",\"kernels\":{{\"selected\":{},\"isa\":{},\"scalar_dispatches\":{},\"wide_dispatches\":{}}}",
+        json::escape(s.kernels.selected),
+        json::escape(s.kernels.isa),
+        s.kernels.scalar_dispatches,
+        s.kernels.wide_dispatches
+    ));
+    out.push_str(&format!(
+        ",\"server\":{{\"connections\":{},\"requests\":{},\"ok\":{},\"client_errors\":{},\"rejected\":{},\"deadline_errors\":{},\"server_errors\":{},\"disconnects\":{},\"request_p50_s\":{},\"request_p99_s\":{}}}",
+        s.server.connections,
+        s.server.requests,
+        s.server.ok,
+        s.server.client_errors,
+        s.server.rejected,
+        s.server.deadline_errors,
+        s.server.server_errors,
+        s.server.disconnects,
+        num(s.server.request_p50_s),
+        num(s.server.request_p99_s)
+    ));
+    out.push_str(",\"fallback_reasons\":[");
+    for (i, reason) in s.fallback_reasons.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&json::escape(reason));
+    }
+    out.push_str("]}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base64_roundtrips_all_remainders() {
+        for len in 0..=9 {
+            let data: Vec<u8> = (0..len).map(|i| (i * 37 + 5) as u8).collect();
+            let text = b64encode(&data);
+            assert_eq!(b64decode(&text).unwrap(), data, "len {len}: {text}");
+        }
+        assert_eq!(b64encode(b"foob"), "Zm9vYg==");
+        assert_eq!(b64decode("Zm9vYmFy").unwrap(), b"foobar");
+    }
+
+    #[test]
+    fn base64_rejects_junk() {
+        assert!(b64decode("abc").is_err(), "bad length");
+        assert!(b64decode("ab=c").is_err(), "interior padding");
+        assert!(b64decode("a c=").is_err(), "whitespace");
+        assert!(b64decode("====").is_err(), "all padding");
+    }
+
+    #[test]
+    fn tensor_codec_is_bit_exact() {
+        let t: Tensor3<f32> = Tensor3::from_vec(
+            1,
+            2,
+            3,
+            vec![0.0, -0.0, f32::MIN_POSITIVE / 2.0, f32::NAN, -3.25, 1e30],
+        );
+        let bytes = tensor_bytes(&t);
+        let back: Tensor3<f32> = tensor_from_bytes((1, 2, 3), &bytes).unwrap();
+        assert_eq!(tensor_bytes(&back), bytes, "NaN/-0.0 survive bitwise");
+        let b64 = tensor_to_base64(&t);
+        let back: Tensor3<f32> = tensor_from_base64((1, 2, 3), &b64).unwrap();
+        assert_eq!(tensor_bytes(&back), bytes);
+        // Wrong shape is typed, not a panic.
+        assert!(tensor_from_bytes::<f32>((2, 2, 3), &bytes).is_err());
+    }
+
+    #[test]
+    fn request_json_binary_roundtrip() {
+        let t = Tensor3::from_fn(3, 2, 5, |i, j, k| (i as f32) - (j as f32) * 0.5 + k as f32);
+        let req = TransformRequest {
+            kind: TransformKind::Dct2,
+            direction: Direction::Inverse,
+            shape: (3, 2, 5),
+            deadline_ms: Some(125.5),
+            inputs: vec![t],
+        };
+        for parse_back in [
+            request_from_json(&Json::parse(&encode_request_json(&req)).unwrap()).unwrap(),
+            request_from_binary(&encode_request_binary(&req)).unwrap(),
+        ] {
+            assert_eq!(parse_back.kind, req.kind);
+            assert_eq!(parse_back.direction, req.direction);
+            assert_eq!(parse_back.shape, req.shape);
+            assert_eq!(parse_back.deadline_ms, req.deadline_ms);
+            assert_eq!(tensor_bytes(&parse_back.inputs[0]), tensor_bytes(&req.inputs[0]));
+        }
+    }
+
+    #[test]
+    fn typed_spec_errors() {
+        let bad = |text: &str| {
+            request_from_json(&Json::parse(text).unwrap()).expect_err(text)
+        };
+        assert_eq!(bad(r#"{"direction":"forward","shape":[2,2,2],"tensors":[]}"#).code, "invalid_spec");
+        let e = bad(r#"{"kind":"dct99","direction":"forward","shape":[2,2,2],"tensors":[]}"#);
+        assert!(e.message.contains("dct2"), "lists valid kinds: {}", e.message);
+        assert_eq!(bad(r#"{"kind":"dct2","direction":"sideways","shape":[2,2,2],"tensors":[]}"#).code, "invalid_spec");
+        assert_eq!(bad(r#"{"kind":"dct2","direction":"forward","shape":[2,2],"tensors":[]}"#).code, "invalid_spec");
+        assert_eq!(bad(r#"{"kind":"dct2","direction":"forward","shape":[2,2,2],"deadline_ms":-1,"tensors":["AAAA"]}"#).code, "invalid_spec");
+        assert_eq!(bad(r#"{"kind":"dct2","direction":"forward","shape":[2,2,2],"tensors":["AAAA","BBBB"]}"#).code, "invalid_spec");
+        assert!(request_from_binary(b"\x01").unwrap_err().code == "bad_request");
+        assert!(request_from_binary(b"\xff\xff\xff\xff....").unwrap_err().code == "bad_request");
+    }
+
+    #[test]
+    fn error_body_is_parseable_json() {
+        let e = ApiError::invalid_spec("weird \"quoted\" spec\n");
+        let v = Json::parse(&e.body()).unwrap();
+        assert_eq!(v.get("error").unwrap().get("code").unwrap().as_str(), Some("invalid_spec"));
+        assert_eq!(
+            v.get("error").unwrap().get("message").unwrap().as_str(),
+            Some("weird \"quoted\" spec\n")
+        );
+        assert_eq!(ApiError::queue_full().retry_after(), Some(1));
+        assert_eq!(ApiError::draining().retry_after(), Some(2));
+        assert_eq!(ApiError::deadline_exceeded().retry_after(), None);
+    }
+}

@@ -16,6 +16,7 @@
 //! workflow's spec flows in.
 
 use std::sync::Arc;
+use std::thread;
 use std::time::Duration;
 
 use triada::coordinator::backend::reference_execute;
@@ -27,6 +28,10 @@ use triada::coordinator::{
 use triada::faults::{self, FaultPlan};
 use triada::gemt::engine::EngineConfig;
 use triada::runtime::Direction;
+use triada::server::client;
+use triada::server::json::Json;
+use triada::server::wire::{self, TransformRequest};
+use triada::server::{Server, ServerConfig};
 use triada::tensor::Tensor3;
 use triada::transforms::TransformKind;
 use triada::util::{JobContext, Rng};
@@ -287,4 +292,148 @@ fn pool_panic_storm_recovers_every_job() {
     assert_eq!(snap.failed, 0, "{}", snap.summary());
     faults::disarm();
     c.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Chaos over the wire: the same robustness invariants hold when every
+// request travels the HTTP front-end instead of the in-process submit path.
+
+/// Ephemeral-port server over an engine-backed coordinator.
+fn wire_server(engine_threads: usize, cfg: CoordinatorConfig) -> Server {
+    let backend = Arc::new(EngineBackend::new(EngineConfig::with_threads(engine_threads)));
+    let server_cfg = ServerConfig { listen: "127.0.0.1:0".to_string(), ..ServerConfig::default() };
+    Server::start(Coordinator::start(cfg, backend), server_cfg).unwrap()
+}
+
+fn wire_request(rng: &mut Rng) -> TransformRequest {
+    let shapes = [(4usize, 4usize, 4usize), (4, 5, 6), (3, 3, 3)];
+    let shape = shapes[rng.usize(shapes.len())];
+    let kind = [TransformKind::Dct2, TransformKind::Dht][rng.usize(2)];
+    let direction = if rng.bool(0.25) { Direction::Inverse } else { Direction::Forward };
+    let input = Tensor3::random(shape.0, shape.1, shape.2, rng).to_f32();
+    TransformRequest { kind, direction, shape, deadline_ms: None, inputs: vec![input] }
+}
+
+#[test]
+fn wire_sweep_under_faults_every_response_typed_and_bit_identical() {
+    let _guard = faults::serial_lock();
+    let base = base_plan();
+    faults::configure(FaultPlan { seed: base.seed.wrapping_add(909), ..base });
+    let server = wire_server(2, config(2, 64, 4));
+    let addr = server.addr();
+    // Three concurrent clients, half JSON and half framed binary; every
+    // request either completes bit-identically to the scalar reference or
+    // resolves as a typed protocol error — never a hang, never a mangled
+    // body.
+    let joins: Vec<_> = (0..3u64)
+        .map(|t| {
+            thread::spawn(move || {
+                let mut rng = Rng::new(0xB17E + t);
+                let binary = t % 2 == 1;
+                let (mut ok, mut shed, mut failed) = (0u64, 0u64, 0u64);
+                for _ in 0..8 {
+                    let request = wire_request(&mut rng);
+                    let resp = if binary {
+                        client::request(
+                            addr,
+                            "POST",
+                            "/v1/transform",
+                            &[],
+                            wire::CONTENT_TYPE_TENSOR,
+                            &wire::encode_request_binary(&request),
+                        )
+                    } else {
+                        client::post_json(addr, "/v1/transform", &wire::encode_request_json(&request))
+                    }
+                    .expect("the socket itself must stay healthy under faults");
+                    match resp.status {
+                        200 => {
+                            let outputs = if binary {
+                                wire::decode_result_binary(&resp.body).unwrap().1
+                            } else {
+                                wire::decode_result_json(resp.text().unwrap()).unwrap().1
+                            };
+                            let want =
+                                reference_execute(request.kind, request.direction, &request.inputs)
+                                    .unwrap();
+                            assert_eq!(outputs.len(), want.len());
+                            for (o, w) in outputs.iter().zip(&want) {
+                                assert_eq!(
+                                    wire::tensor_bytes(o),
+                                    wire::tensor_bytes(w),
+                                    "served result under faults diverged from the reference"
+                                );
+                            }
+                            ok += 1;
+                        }
+                        429 => shed += 1,
+                        500 => failed += 1,
+                        status => panic!("unexpected status {status} under faults"),
+                    }
+                    if resp.status != 200 {
+                        // Every error is a parseable typed body.
+                        let doc = Json::parse(resp.text().unwrap()).unwrap();
+                        assert!(
+                            doc.get("error").and_then(|e| e.get("code")).is_some(),
+                            "untyped error body under faults"
+                        );
+                    }
+                }
+                (ok, shed, failed)
+            })
+        })
+        .collect();
+    let totals: Vec<(u64, u64, u64)> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    let ok: u64 = totals.iter().map(|(o, _, _)| o).sum();
+    let shed: u64 = totals.iter().map(|(_, s, _)| s).sum();
+    let failed: u64 = totals.iter().map(|(_, _, f)| f).sum();
+    faults::disarm();
+    assert!(server.drain(Duration::from_secs(30)), "faulty traffic must still drain");
+    let snap = server.metrics();
+    // The coordinator's buckets agree exactly with what the clients saw.
+    assert_eq!(snap.completed, ok, "{}", snap.summary());
+    assert_eq!(snap.failed, failed, "{}", snap.summary());
+    assert_eq!(snap.server.ok, ok, "{}", snap.summary());
+    assert_eq!(snap.server.rejected, shed, "{}", snap.summary());
+    assert_eq!(snap.server.server_errors, failed, "{}", snap.summary());
+    assert_eq!(snap.server.requests, ok + shed + failed, "{}", snap.summary());
+}
+
+#[test]
+fn transient_storm_over_the_wire_exact_retry_and_failover_counts() {
+    let _guard = faults::serial_lock();
+    // Every engine execute attempt fails transiently: each wire request
+    // retries `attempts - 1` times, then completes on the reference
+    // failover — and says so in its response meta.
+    faults::configure(FaultPlan { seed: 2, transient_p: 1.0, ..FaultPlan::default() });
+    let server = wire_server(1, config(1, 8, 1));
+    let mut rng = Rng::new(0x51E);
+    for _ in 0..2 {
+        let request = wire_request(&mut rng);
+        let resp = client::post_json(
+            server.addr(),
+            "/v1/transform",
+            &wire::encode_request_json(&request),
+        )
+        .unwrap();
+        assert_eq!(resp.status, 200, "{:?}", resp.text());
+        let (meta, outputs) = wire::decode_result_json(resp.text().unwrap()).unwrap();
+        assert_eq!(
+            meta.get("backend").and_then(Json::as_str),
+            Some("cpu-reference"),
+            "exhausted retries must fail over and report it on the wire"
+        );
+        let want = reference_execute(request.kind, request.direction, &request.inputs).unwrap();
+        for (o, w) in outputs.iter().zip(&want) {
+            assert_eq!(wire::tensor_bytes(o), wire::tensor_bytes(w));
+        }
+    }
+    faults::disarm();
+    assert!(server.drain(Duration::from_secs(10)));
+    let snap = server.metrics();
+    let per_job = u64::from(CoordinatorConfig::default().retry.attempts - 1);
+    assert_eq!(snap.retries, 2 * per_job, "{}", snap.summary());
+    assert_eq!(snap.failovers, 2, "{}", snap.summary());
+    assert_eq!(snap.completed, 2, "{}", snap.summary());
+    assert_eq!(snap.server.ok, 2, "{}", snap.summary());
 }

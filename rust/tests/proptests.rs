@@ -10,8 +10,11 @@ use triada::gemt::engine::{gemt_engine_with, EngineConfig};
 use triada::gemt::parenthesize::{gemt_ordered, ParenOrder};
 use triada::gemt::{self, gemt_inner, gemt_naive, gemt_outer, CoeffSet};
 use triada::proptest::run_prop;
+use triada::runtime::Direction;
+use triada::server::json::Json;
+use triada::server::wire::{self, TransformRequest};
 use triada::sim::{self, SimConfig};
-use triada::tensor::{sparsify, Mat, Tensor3};
+use triada::tensor::{sparsify, Complex64, Mat, Tensor3};
 use triada::transforms::TransformKind;
 use triada::{prop_assert, prop_assert_close};
 
@@ -384,6 +387,139 @@ fn prop_dwht_transform_is_involutory_in_3d() {
         let x = Tensor3::random(shape.0, shape.1, shape.2, g.rng());
         let twice = gemt::dxt3d_forward(&gemt::dxt3d_forward(&x, kind), kind);
         prop_assert!(x.max_abs_diff(&twice) < 1e-8, "{} not involutory", kind.name());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wire_tensor_codec_bit_exact_all_dtypes() {
+    // The HTTP wire codec (raw little-endian bytes and their base64 form)
+    // must round-trip every dtype bit-exactly — including -0.0, NaN,
+    // infinities, subnormals, and zero-volume tensors, none of which
+    // survive a decimal detour.
+    run_prop("wire codec bit-exact", 40, |g| {
+        let shape = (g.usize_in(0, 5), g.usize_in(0, 5), g.usize_in(0, 5));
+        let n = shape.0 * shape.1 * shape.2;
+        let special = [
+            0.0f64,
+            -0.0,
+            f64::NAN,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::MIN_POSITIVE / 4.0,
+        ];
+        let mut draw = |g: &mut triada::proptest::Gen| {
+            if g.rng().bool(0.3) {
+                *g.choose(&special)
+            } else {
+                g.rng().f64_range(-1e6, 1e6)
+            }
+        };
+
+        let t32 = Tensor3::from_vec(
+            shape.0,
+            shape.1,
+            shape.2,
+            (0..n).map(|_| draw(g) as f32).collect(),
+        );
+        let bytes = wire::tensor_bytes(&t32);
+        prop_assert!(bytes.len() == n * 4, "f32 wire width at {shape:?}");
+        let back: Tensor3<f32> =
+            wire::tensor_from_bytes(shape, &bytes).map_err(|e| format!("{e:#}"))?;
+        prop_assert!(wire::tensor_bytes(&back) == bytes, "f32 raw roundtrip at {shape:?}");
+        let back: Tensor3<f32> = wire::tensor_from_base64(shape, &wire::tensor_to_base64(&t32))
+            .map_err(|e| format!("{e:#}"))?;
+        prop_assert!(wire::tensor_bytes(&back) == bytes, "f32 base64 roundtrip at {shape:?}");
+        if n > 0 {
+            prop_assert!(
+                wire::tensor_from_bytes::<f32>(shape, &bytes[..bytes.len() - 1]).is_err(),
+                "truncated payload must be rejected, not zero-padded"
+            );
+        }
+
+        let t64 = Tensor3::from_vec(shape.0, shape.1, shape.2, (0..n).map(|_| draw(g)).collect());
+        let bytes = wire::tensor_bytes(&t64);
+        prop_assert!(bytes.len() == n * 8, "f64 wire width at {shape:?}");
+        let back: Tensor3<f64> =
+            wire::tensor_from_bytes(shape, &bytes).map_err(|e| format!("{e:#}"))?;
+        prop_assert!(wire::tensor_bytes(&back) == bytes, "f64 raw roundtrip at {shape:?}");
+        let back: Tensor3<f64> = wire::tensor_from_base64(shape, &wire::tensor_to_base64(&t64))
+            .map_err(|e| format!("{e:#}"))?;
+        prop_assert!(wire::tensor_bytes(&back) == bytes, "f64 base64 roundtrip at {shape:?}");
+
+        let tc = Tensor3::from_vec(
+            shape.0,
+            shape.1,
+            shape.2,
+            (0..n).map(|_| Complex64::new(draw(g), draw(g))).collect(),
+        );
+        let bytes = wire::tensor_bytes(&tc);
+        prop_assert!(bytes.len() == n * 16, "c64 wire width at {shape:?}");
+        let back: Tensor3<Complex64> =
+            wire::tensor_from_bytes(shape, &bytes).map_err(|e| format!("{e:#}"))?;
+        prop_assert!(wire::tensor_bytes(&back) == bytes, "c64 raw roundtrip at {shape:?}");
+        let back: Tensor3<Complex64> =
+            wire::tensor_from_base64(shape, &wire::tensor_to_base64(&tc))
+                .map_err(|e| format!("{e:#}"))?;
+        prop_assert!(wire::tensor_bytes(&back) == bytes, "c64 base64 roundtrip at {shape:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wire_request_roundtrip_all_kinds() {
+    // A transform request encoded to either body format and decoded back
+    // is the identical request: spec fields exactly, deadline exactly
+    // (shortest-roundtrip decimal), tensors bit-exactly — for every kind,
+    // including the two-tensor split DFT and zero-volume shapes.
+    run_prop("wire request roundtrip", 30, |g| {
+        let kind = *g.choose(&TransformKind::ALL);
+        let shape = if kind == TransformKind::Dwht {
+            (g.pow2_in(1, 8), g.pow2_in(1, 8), g.pow2_in(1, 8))
+        } else if g.rng().bool(0.15) {
+            (0, g.usize_in(0, 4), g.usize_in(1, 4))
+        } else {
+            g.shape_in(1, 6)
+        };
+        let arity = if kind == TransformKind::DftSplit { 2 } else { 1 };
+        let n = shape.0 * shape.1 * shape.2;
+        let inputs: Vec<Tensor3<f32>> = (0..arity)
+            .map(|_| {
+                Tensor3::from_vec(
+                    shape.0,
+                    shape.1,
+                    shape.2,
+                    (0..n).map(|_| g.rng().f64_range(-1e4, 1e4) as f32).collect(),
+                )
+            })
+            .collect();
+        let deadline_ms = if g.rng().bool(0.5) { Some(g.f64_in(0.5, 1e6)) } else { None };
+        let direction = *g.choose(&[Direction::Forward, Direction::Inverse]);
+        let request = TransformRequest { kind, direction, shape, deadline_ms, inputs };
+        let doc = Json::parse(&wire::encode_request_json(&request))
+            .map_err(|e| format!("encoded request must parse: {e:#}"))?;
+        let json_back = wire::request_from_json(&doc)
+            .map_err(|e| format!("json decode: {} {}", e.code, e.message))?;
+        let bin_back = wire::request_from_binary(&wire::encode_request_binary(&request))
+            .map_err(|e| format!("binary decode: {} {}", e.code, e.message))?;
+        for (fmt, back) in [("json", &json_back), ("binary", &bin_back)] {
+            prop_assert!(back.kind == request.kind, "{fmt}: kind at {shape:?}");
+            prop_assert!(back.direction == request.direction, "{fmt}: direction at {shape:?}");
+            prop_assert!(back.shape == request.shape, "{fmt}: shape at {shape:?}");
+            prop_assert!(
+                back.deadline_ms == request.deadline_ms,
+                "{fmt}: deadline {:?} must survive exactly, got {:?}",
+                request.deadline_ms,
+                back.deadline_ms
+            );
+            prop_assert!(back.inputs.len() == request.inputs.len(), "{fmt}: arity");
+            for (o, w) in back.inputs.iter().zip(&request.inputs) {
+                prop_assert!(
+                    wire::tensor_bytes(o) == wire::tensor_bytes(w),
+                    "{fmt}: tensor bytes diverged at {shape:?}"
+                );
+            }
+        }
         Ok(())
     });
 }
