@@ -241,6 +241,15 @@ pub fn documented_keys() -> Vec<(&'static str, &'static str, String)> {
         ("server", "listen", server.listen.clone()),
         ("server", "max_body_bytes", server.max_body_bytes.to_string()),
         ("server", "max_inflight_per_client", server.max_inflight_per_client.to_string()),
+        ("server", "max_connections", server.max_connections.to_string()),
+        (
+            "server",
+            "read_timeout_ms",
+            format!(
+                "{}",
+                server.read_timeout.map_or(0.0, |d| d.as_secs_f64() * 1000.0)
+            ),
+        ),
         ("server", "submit_wait_ms", "0".to_string()),
         (
             "server",
@@ -404,9 +413,15 @@ p1 = 64
         for key in ["threads", "pin", "engine_share", "shard_share", "coordinator_share"] {
             assert!(keys.iter().any(|(s, k, _)| *s == "pool" && *k == key), "{key}");
         }
-        for key in
-            ["listen", "max_body_bytes", "max_inflight_per_client", "submit_wait_ms", "drain_timeout_ms"]
-        {
+        for key in [
+            "listen",
+            "max_body_bytes",
+            "max_inflight_per_client",
+            "max_connections",
+            "read_timeout_ms",
+            "submit_wait_ms",
+            "drain_timeout_ms",
+        ] {
             assert!(keys.iter().any(|(s, k, _)| *s == "server" && *k == key), "{key}");
         }
         assert!(keys.iter().any(|(s, k, d)| *s == "kernels" && *k == "force" && d == "auto"));

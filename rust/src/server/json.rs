@@ -31,7 +31,7 @@ pub enum Json {
 impl Json {
     /// Parse a complete JSON document (trailing garbage is an error).
     pub fn parse(text: &str) -> anyhow::Result<Json> {
-        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        let mut p = Parser { b: text.as_bytes(), i: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -162,9 +162,16 @@ pub fn escape(s: &str) -> String {
     out
 }
 
+/// Deepest accepted container nesting. The parser recurses once per
+/// `[`/`{` level, so untrusted bodies must not get to pick the recursion
+/// depth — a few KiB of `[[[[…` would otherwise overflow the connection
+/// thread's stack and abort the process.
+pub const MAX_DEPTH: usize = 64;
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl Parser<'_> {
@@ -189,8 +196,15 @@ impl Parser<'_> {
 
     fn value(&mut self) -> anyhow::Result<Json> {
         match self.peek()? {
-            b'{' => self.object(),
-            b'[' => self.array(),
+            c @ (b'{' | b'[') => {
+                self.depth += 1;
+                if self.depth > MAX_DEPTH {
+                    bail!("JSON nested deeper than {MAX_DEPTH} levels at offset {}", self.i);
+                }
+                let v = if c == b'{' { self.object() } else { self.array() };
+                self.depth -= 1;
+                v
+            }
             b'"' => Ok(Json::Str(self.string()?)),
             b't' => self.literal("true", Json::Bool(true)),
             b'f' => self.literal("false", Json::Bool(false)),
@@ -380,6 +394,21 @@ mod tests {
         assert!(Json::parse("{} extra").is_err());
         assert!(Json::parse("'single'").is_err());
         assert!(Json::parse("\"\\u12\"").is_err());
+    }
+
+    #[test]
+    fn nesting_beyond_the_depth_limit_is_a_typed_error_not_a_stack_overflow() {
+        // At the limit: parses.
+        let ok = format!("{}1{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(Json::parse(&ok).is_ok());
+        // One past it: typed error.
+        let over = format!("{}1{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        let e = Json::parse(&over).unwrap_err();
+        assert!(format!("{e:#}").contains("nested deeper"), "{e:#}");
+        // A ~20KB bomb of unclosed brackets (the remote-DoS shape) errors
+        // early instead of recursing 20k frames deep.
+        assert!(Json::parse(&"[".repeat(20_000)).is_err());
+        assert!(Json::parse(&"{\"k\":".repeat(20_000)).is_err());
     }
 
     #[test]

@@ -25,7 +25,8 @@
 //!
 //! Error bodies are always `{"error": {"code", "message"}}` with a stable
 //! code: `queue_full`/`too_many_inflight` (429 + `Retry-After`),
-//! `draining`/`shutting_down` (503 + `Retry-After`), `deadline_exceeded`
+//! `draining`/`shutting_down`/`too_many_connections` (503 +
+//! `Retry-After`), `deadline_exceeded`
 //! (504), `canceled` (499), `invalid_spec`/`bad_request` (400),
 //! `body_too_large` (413), `execute_failed` (500).
 //!
@@ -69,8 +70,17 @@ pub struct ServerConfig {
     /// Largest accepted request body in bytes (413 beyond it).
     pub max_body_bytes: usize,
     /// Most concurrent requests per client IP (429 beyond it; `0` =
-    /// unlimited).
+    /// unlimited). A batch counts each of its entries against this bound.
     pub max_inflight_per_client: usize,
+    /// Most concurrently open connections (503 `too_many_connections`
+    /// beyond it; `0` = unlimited). One OS thread serves each connection,
+    /// so this bounds the thread count too.
+    pub max_connections: usize,
+    /// Socket read timeout: how long a connection may sit idle (or dribble
+    /// bytes) before it is closed — the slowloris bound. `None` = no
+    /// timeout. Applies only to reading requests, never to a job's run
+    /// time (deadlines cover that).
+    pub read_timeout: Option<Duration>,
     /// How long admission may wait for queue space after the `try_submit`
     /// fast path sheds (`None` = reject immediately with 429).
     pub submit_wait: Option<Duration>,
@@ -85,6 +95,8 @@ impl Default for ServerConfig {
             listen: "127.0.0.1:8080".to_string(),
             max_body_bytes: 16 * 1024 * 1024,
             max_inflight_per_client: 64,
+            max_connections: 1024,
+            read_timeout: Some(Duration::from_secs(30)),
             submit_wait: None,
             drain_timeout: Duration::from_secs(5),
         }
@@ -104,6 +116,16 @@ impl ServerConfig {
         }
         if let Some(limit) = cfg.get_usize("server", "max_inflight_per_client")? {
             out.max_inflight_per_client = limit;
+        }
+        if let Some(limit) = cfg.get_usize("server", "max_connections")? {
+            out.max_connections = limit;
+        }
+        if let Some(ms) = cfg.get_f64("server", "read_timeout_ms")? {
+            anyhow::ensure!(
+                ms.is_finite() && ms >= 0.0,
+                "server.read_timeout_ms must be finite and non-negative, got {ms}"
+            );
+            out.read_timeout = (ms > 0.0).then(|| Duration::from_secs_f64(ms / 1e3));
         }
         if let Some(ms) = cfg.get_f64("server", "submit_wait_ms")? {
             anyhow::ensure!(
@@ -134,18 +156,30 @@ mod tests {
         cfg.set("server", "listen", "0.0.0.0:9090");
         cfg.set("server", "max_body_bytes", "1024");
         cfg.set("server", "max_inflight_per_client", "0");
+        cfg.set("server", "max_connections", "7");
+        cfg.set("server", "read_timeout_ms", "0");
         cfg.set("server", "submit_wait_ms", "250");
         cfg.set("server", "drain_timeout_ms", "1500");
         let s = ServerConfig::from_config(&cfg).unwrap();
         assert_eq!(s.listen, "0.0.0.0:9090");
         assert_eq!(s.max_body_bytes, 1024);
         assert_eq!(s.max_inflight_per_client, 0);
+        assert_eq!(s.max_connections, 7);
+        assert_eq!(s.read_timeout, None, "0 disables the read timeout");
         assert_eq!(s.submit_wait, Some(Duration::from_millis(250)));
         assert_eq!(s.drain_timeout, Duration::from_millis(1500));
+        cfg.set("server", "read_timeout_ms", "125");
+        assert_eq!(
+            ServerConfig::from_config(&cfg).unwrap().read_timeout,
+            Some(Duration::from_millis(125))
+        );
         cfg.set("server", "max_body_bytes", "0");
         assert!(ServerConfig::from_config(&cfg).is_err());
         cfg.set("server", "max_body_bytes", "1024");
         cfg.set("server", "submit_wait_ms", "-1");
+        assert!(ServerConfig::from_config(&cfg).is_err());
+        cfg.set("server", "submit_wait_ms", "250");
+        cfg.set("server", "read_timeout_ms", "-1");
         assert!(ServerConfig::from_config(&cfg).is_err());
     }
 }

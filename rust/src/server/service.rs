@@ -20,7 +20,7 @@
 use std::collections::HashMap;
 use std::io::{BufReader, Write};
 use std::net::{IpAddr, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
@@ -59,7 +59,8 @@ pub struct ServerStats {
     pub ok: u64,
     /// 4xx responses other than shed load and client hang-ups.
     pub client_errors: u64,
-    /// Admission rejections: 429 (queue full, fairness) and 503 (draining).
+    /// Admission rejections: 429 (queue full, fairness) and 503
+    /// (draining, connection cap).
     pub rejected: u64,
     /// 504 responses (deadline expired before or during execution).
     pub deadline_errors: u64,
@@ -86,6 +87,9 @@ struct Shared {
     /// POST requests currently being served; drain waits for zero.
     inflight: Mutex<usize>,
     idle: Condvar,
+    /// Open connections (each holds one OS thread); bounded by
+    /// `cfg.max_connections`.
+    conns: AtomicUsize,
     /// Per-client fairness: in-flight request count by peer IP.
     per_client: Mutex<HashMap<IpAddr, usize>>,
     stats: Mutex<StatsInner>,
@@ -149,22 +153,25 @@ impl Drop for InflightGuard<'_> {
     }
 }
 
-/// RAII per-client slot (fairness bound); `None` limit = unlimited.
+/// RAII per-client slots (fairness bound); `0` limit = unlimited. A
+/// transform takes one slot; a batch takes one per entry, so the fairness
+/// cap bounds a client's in-flight *jobs*, not its in-flight requests.
 struct ClientSlot<'a> {
     shared: &'a Shared,
     ip: IpAddr,
+    n: usize,
 }
 
 impl<'a> ClientSlot<'a> {
-    fn enter(shared: &'a Shared, ip: IpAddr) -> Result<ClientSlot<'a>, ApiError> {
+    fn enter(shared: &'a Shared, ip: IpAddr, n: usize) -> Result<ClientSlot<'a>, ApiError> {
         let limit = shared.cfg.max_inflight_per_client;
         let mut g = shared.per_client.lock().unwrap();
-        let count = g.entry(ip).or_insert(0);
-        if limit > 0 && *count >= limit {
+        let current = g.get(&ip).copied().unwrap_or(0);
+        if limit > 0 && current + n > limit {
             return Err(ApiError::too_many_inflight(limit));
         }
-        *count += 1;
-        Ok(ClientSlot { shared, ip })
+        *g.entry(ip).or_insert(0) += n;
+        Ok(ClientSlot { shared, ip, n })
     }
 }
 
@@ -172,11 +179,37 @@ impl Drop for ClientSlot<'_> {
     fn drop(&mut self) {
         let mut g = self.shared.per_client.lock().unwrap();
         if let Some(count) = g.get_mut(&self.ip) {
-            *count -= 1;
+            *count -= self.n;
             if *count == 0 {
                 g.remove(&self.ip);
             }
         }
+    }
+}
+
+/// RAII open-connection counter (the `max_connections` bound).
+struct ConnPermit<'a> {
+    shared: &'a Shared,
+}
+
+impl<'a> ConnPermit<'a> {
+    /// Count this connection; `Err` when the server is at its cap (the
+    /// count is still held until drop so the shed response is covered).
+    fn enter(shared: &'a Shared) -> Result<ConnPermit<'a>, ConnPermit<'a>> {
+        let limit = shared.cfg.max_connections;
+        let prev = shared.conns.fetch_add(1, Ordering::SeqCst);
+        let permit = ConnPermit { shared };
+        if limit > 0 && prev >= limit {
+            Err(permit)
+        } else {
+            Ok(permit)
+        }
+    }
+}
+
+impl Drop for ConnPermit<'_> {
+    fn drop(&mut self) {
+        self.shared.conns.fetch_sub(1, Ordering::SeqCst);
     }
 }
 
@@ -204,6 +237,7 @@ impl Server {
             draining: AtomicBool::new(false),
             inflight: Mutex::new(0),
             idle: Condvar::new(),
+            conns: AtomicUsize::new(0),
             per_client: Mutex::new(HashMap::new()),
             stats: Mutex::new(StatsInner {
                 stats: ServerStats::default(),
@@ -323,12 +357,28 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
 
 fn handle_connection(shared: Arc<Shared>, stream: TcpStream, peer: SocketAddr) {
     let _ = stream.set_nodelay(true);
+    // The slowloris bound: a peer that opens a socket and sends nothing
+    // (or dribbles header bytes) gets its reads timed out and the
+    // connection closed, instead of pinning this thread forever.
+    let _ = stream.set_read_timeout(shared.cfg.read_timeout);
     let Ok(read_half) = stream.try_clone() else { return };
     let mut reader = BufReader::new(read_half);
     let mut writer = stream;
+    // The connection cap: at the limit, shed with a typed 503 and close.
+    let _permit = match ConnPermit::enter(&shared) {
+        Ok(permit) => permit,
+        Err(_permit) => {
+            let e = ApiError::too_many_connections(shared.cfg.max_connections);
+            let _ = respond_error(&mut writer, &e, false);
+            shared.record_response(e.status, 0.0, false);
+            return;
+        }
+    };
     loop {
         let request = match http::read_request(&mut reader, shared.cfg.max_body_bytes) {
             Ok(r) => r,
+            // Io covers both transport errors and an expired read timeout
+            // (WouldBlock/TimedOut) — either way the connection is done.
             Err(RequestError::Eof) | Err(RequestError::Io(_)) => break,
             Err(RequestError::TooLarge(declared)) => {
                 let e = ApiError::body_too_large(declared, shared.cfg.max_body_bytes);
@@ -440,20 +490,30 @@ fn parse_request(request: &Request) -> Result<(TransformRequest, bool), ApiError
             .map_err(|e| ApiError::bad_request(format!("body JSON: {e:#}")))?;
         wire::request_from_json(&v)?
     };
-    if let Some(header) = request.header(wire::DEADLINE_HEADER) {
-        let ms: f64 = header
-            .trim()
-            .parse()
-            .map_err(|_| ApiError::bad_request(format!("bad {} value {header:?}", wire::DEADLINE_HEADER)))?;
-        if !ms.is_finite() || ms < 0.0 {
-            return Err(ApiError::bad_request(format!(
-                "{} must be finite and non-negative, got {ms}",
-                wire::DEADLINE_HEADER
-            )));
-        }
+    if let Some(ms) = deadline_header(request)? {
         parsed.deadline_ms = Some(ms);
     }
     Ok((parsed, binary))
+}
+
+/// The [`wire::DEADLINE_HEADER`] value, validated. It overrides the
+/// `deadline_ms` body field — on `/v1/transform` and on every entry of a
+/// `/v1/batch`.
+fn deadline_header(request: &Request) -> Result<Option<f64>, ApiError> {
+    let Some(header) = request.header(wire::DEADLINE_HEADER) else {
+        return Ok(None);
+    };
+    let ms: f64 = header
+        .trim()
+        .parse()
+        .map_err(|_| ApiError::bad_request(format!("bad {} value {header:?}", wire::DEADLINE_HEADER)))?;
+    if !ms.is_finite() || ms < 0.0 {
+        return Err(ApiError::bad_request(format!(
+            "{} must be finite and non-negative, got {ms}",
+            wire::DEADLINE_HEADER
+        )));
+    }
+    Ok(Some(ms))
 }
 
 fn context_for(deadline_ms: Option<f64>) -> JobContext {
@@ -534,7 +594,7 @@ fn handle_transform(
     if shared.draining() {
         return typed(writer, &ApiError::draining(), false);
     }
-    let _slot = match ClientSlot::enter(shared, peer.ip()) {
+    let _slot = match ClientSlot::enter(shared, peer.ip(), 1) {
         Ok(slot) => slot,
         Err(e) => return typed(writer, &e, keep_alive),
     };
@@ -589,15 +649,15 @@ fn handle_batch(
     if shared.draining() {
         return typed(writer, &ApiError::draining(), false);
     }
-    let _slot = match ClientSlot::enter(shared, peer.ip()) {
-        Ok(slot) => slot,
-        Err(e) => return typed(writer, &e, keep_alive),
-    };
     let content_type = request.header("content-type").unwrap_or(wire::CONTENT_TYPE_JSON);
     if content_type.starts_with(wire::CONTENT_TYPE_TENSOR) {
         let e = ApiError::bad_request("/v1/batch only accepts application/json");
         return typed(writer, &e, keep_alive);
     }
+    let header_deadline_ms = match deadline_header(request) {
+        Ok(ms) => ms,
+        Err(e) => return typed(writer, &e, keep_alive),
+    };
     let parsed = std::str::from_utf8(&request.body)
         .map_err(|_| ApiError::bad_request("body is not UTF-8"))
         .and_then(|text| {
@@ -622,12 +682,22 @@ fn handle_batch(
             return typed(writer, &e, keep_alive);
         }
     };
+    // Every entry becomes a concurrent job, so the batch takes one
+    // fairness slot per entry — otherwise a client could multiply the
+    // per-IP in-flight cap by the batch limit.
+    let _slot = match ClientSlot::enter(shared, peer.ip(), entries.len().max(1)) {
+        Ok(slot) => slot,
+        Err(e) => return typed(writer, &e, keep_alive),
+    };
     // Admit every entry first (jobs of one batch run concurrently), then
     // collect in order. Per-entry failures are inline results, not a
     // request-level error.
     let mut admitted: Vec<Result<JobHandle, ApiError>> = Vec::with_capacity(entries.len());
     for entry in entries {
-        let outcome = wire::request_from_json(entry).and_then(|parsed| {
+        let outcome = wire::request_from_json(entry).and_then(|mut parsed| {
+            if let Some(ms) = header_deadline_ms {
+                parsed.deadline_ms = Some(ms);
+            }
             let job = TransformJob::new(parsed.kind, parsed.direction, parsed.inputs);
             job.validate().map_err(|e| ApiError::invalid_spec(format!("{e:#}")))?;
             submit(shared, job, context_for(parsed.deadline_ms))

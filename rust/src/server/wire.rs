@@ -162,13 +162,37 @@ pub fn tensor_bytes<T: WireScalar>(t: &Tensor3<T>) -> Vec<u8> {
     out
 }
 
+/// Ceiling on the element count of one wire tensor (per dimension and as
+/// a product). The real bound on a request is the body length check
+/// against `server.max_body_bytes` — this ceiling just rejects absurd
+/// shapes up front so no later size computation (`dims × elem bytes ×
+/// arity`, `Tensor3` capacity) can get anywhere near `usize` overflow.
+pub const MAX_TENSOR_ELEMS: u64 = 1 << 32;
+
+/// Checked byte size of `count` tensors of `shape`: `None` when the
+/// element or byte count would overflow `usize` (wire sizes are attacker
+/// chosen, so this must never wrap).
+fn checked_payload_bytes(
+    shape: (usize, usize, usize),
+    elem_bytes: usize,
+    count: usize,
+) -> Option<usize> {
+    shape
+        .0
+        .checked_mul(shape.1)?
+        .checked_mul(shape.2)?
+        .checked_mul(elem_bytes)?
+        .checked_mul(count)
+}
+
 /// Rebuild a tensor from its wire bytes; the byte count must match the
 /// shape exactly.
 pub fn tensor_from_bytes<T: WireScalar>(
     shape: (usize, usize, usize),
     bytes: &[u8],
 ) -> anyhow::Result<Tensor3<T>> {
-    let want = shape.0 * shape.1 * shape.2 * T::BYTES;
+    let want = checked_payload_bytes(shape, T::BYTES, 1)
+        .with_context(|| format!("shape {shape:?} byte count overflows"))?;
     ensure!(
         bytes.len() == want,
         "payload is {} bytes but shape {:?} as {} needs {}",
@@ -228,6 +252,13 @@ impl ApiError {
             status: 429,
             code: "too_many_inflight",
             message: format!("client already has {limit} request(s) in flight"),
+        }
+    }
+    pub fn too_many_connections(limit: usize) -> ApiError {
+        ApiError {
+            status: 503,
+            code: "too_many_connections",
+            message: format!("server already has {limit} connection(s) open"),
         }
     }
     pub fn draining() -> ApiError {
@@ -338,10 +369,22 @@ fn spec_fields(v: &Json) -> Result<(TransformKind, Direction, (usize, usize, usi
     let dim = |i: usize| -> Result<usize, ApiError> {
         shape_arr[i]
             .as_u64()
+            .filter(|&n| n <= MAX_TENSOR_ELEMS)
             .map(|n| n as usize)
-            .ok_or_else(|| ApiError::invalid_spec("\"shape\" entries must be non-negative integers"))
+            .ok_or_else(|| {
+                ApiError::invalid_spec(format!(
+                    "\"shape\" entries must be integers in [0, {MAX_TENSOR_ELEMS}]"
+                ))
+            })
     };
     let shape = (dim(0)?, dim(1)?, dim(2)?);
+    // u128 so the product itself can't overflow before it is checked.
+    let elems = shape.0 as u128 * shape.1 as u128 * shape.2 as u128;
+    if elems > u128::from(MAX_TENSOR_ELEMS) {
+        return Err(ApiError::invalid_spec(format!(
+            "shape {shape:?} has {elems} elements, above the {MAX_TENSOR_ELEMS} limit"
+        )));
+    }
     let deadline_ms = match v.get("deadline_ms") {
         None | Some(Json::Null) => None,
         Some(d) => {
@@ -414,8 +457,11 @@ pub fn request_from_binary(body: &[u8]) -> Result<TransformRequest, ApiError> {
         .map_err(|e| ApiError::bad_request(format!("spec JSON: {e:#}")))?;
     let (kind, direction, shape, deadline_ms) = spec_fields(&spec)?;
     let payload = &body[4 + spec_len..];
-    let per_tensor = shape.0 * shape.1 * shape.2 * <f32 as WireScalar>::BYTES;
-    let want = per_tensor * arity(kind);
+    let per_tensor = checked_payload_bytes(shape, <f32 as WireScalar>::BYTES, 1)
+        .ok_or_else(|| ApiError::invalid_spec(format!("shape {shape:?} byte count overflows")))?;
+    let want = per_tensor
+        .checked_mul(arity(kind))
+        .ok_or_else(|| ApiError::invalid_spec(format!("shape {shape:?} byte count overflows")))?;
     if payload.len() != want {
         return Err(ApiError::invalid_spec(format!(
             "payload is {} bytes but {} × shape {:?} as f32 needs {}",
@@ -561,9 +607,13 @@ pub fn decode_result_binary(body: &[u8]) -> anyhow::Result<(Json, Vec<Tensor3<f3
     );
     let count = meta.get("tensors").and_then(Json::as_u64).context("missing \"tensors\"")? as usize;
     let payload = &body[4 + meta_len..];
-    let per_tensor = shape.0 * shape.1 * shape.2 * <f32 as WireScalar>::BYTES;
+    let per_tensor = checked_payload_bytes(shape, <f32 as WireScalar>::BYTES, 1)
+        .with_context(|| format!("shape {shape:?} byte count overflows"))?;
+    let want = per_tensor
+        .checked_mul(count)
+        .with_context(|| format!("{count} tensors of shape {shape:?} overflow"))?;
     ensure!(
-        payload.len() == per_tensor * count,
+        payload.len() == want,
         "payload is {} bytes, expected {} tensors × {} bytes",
         payload.len(),
         count,
@@ -730,6 +780,36 @@ mod tests {
         assert_eq!(bad(r#"{"kind":"dct2","direction":"forward","shape":[2,2,2],"tensors":["AAAA","BBBB"]}"#).code, "invalid_spec");
         assert!(request_from_binary(b"\x01").unwrap_err().code == "bad_request");
         assert!(request_from_binary(b"\xff\xff\xff\xff....").unwrap_err().code == "bad_request");
+    }
+
+    #[test]
+    fn huge_shapes_resolve_typed_not_wrapped() {
+        // [2^31, 2^31, 1] as f32 wraps per_tensor to 0 under unchecked
+        // release-mode math — it must be a typed 400, never a panic or a
+        // zero-byte "match".
+        let spec = r#"{"kind":"dct2","direction":"forward","shape":[2147483648,2147483648,1]}"#;
+        let mut body = Vec::new();
+        body.extend_from_slice(&(spec.len() as u32).to_le_bytes());
+        body.extend_from_slice(spec.as_bytes());
+        let e = request_from_binary(&body).unwrap_err();
+        assert_eq!(e.code, "invalid_spec");
+        assert!(e.message.contains("elements"), "{}", e.message);
+        // Same spec over JSON.
+        let json = spec.replace('}', ",\"tensors\":[\"\"]}");
+        let e = request_from_json(&Json::parse(&json).unwrap()).unwrap_err();
+        assert_eq!(e.code, "invalid_spec");
+        // A single dimension above the ceiling is rejected even when a
+        // zero dim makes the product small (Tensor3 size math is unchecked).
+        let spec = r#"{"kind":"dct2","direction":"forward","shape":[9007199254740992,2,0],"tensors":[""]}"#;
+        let e = request_from_json(&Json::parse(spec).unwrap()).unwrap_err();
+        assert_eq!(e.code, "invalid_spec");
+        // Client-side result decoding is checked the same way.
+        let meta = r#"{"shape":[2147483648,2147483648,1],"tensors":1}"#;
+        let mut body = Vec::new();
+        body.extend_from_slice(&(meta.len() as u32).to_le_bytes());
+        body.extend_from_slice(meta.as_bytes());
+        assert!(decode_result_binary(&body).is_err());
+        assert!(tensor_from_bytes::<f32>((usize::MAX, 2, 2), &[]).is_err());
     }
 
     #[test]

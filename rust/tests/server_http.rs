@@ -328,6 +328,21 @@ fn malformed_bodies_resolve_typed_400() {
         .unwrap();
     assert_eq!(resp.status, 400);
     assert_eq!(error_code(&resp), "bad_request");
+    // A nesting bomb trips the JSON parser's depth limit as a typed 400
+    // instead of overflowing the connection thread's stack.
+    let bomb = "[".repeat(20_000);
+    let resp = client::post_json(addr, "/v1/transform", &bomb).unwrap();
+    assert_eq!(resp.status, 400);
+    assert_eq!(error_code(&resp), "bad_request");
+    // A shape whose byte count wraps usize is a typed 400, not a panic.
+    let resp = client::post_json(
+        addr,
+        "/v1/transform",
+        "{\"kind\":\"dct2\",\"direction\":\"forward\",\"shape\":[2147483648,2147483648,1],\"tensors\":[\"\"]}",
+    )
+    .unwrap();
+    assert_eq!(resp.status, 400);
+    assert_eq!(error_code(&resp), "invalid_spec");
     let snap = server.metrics();
     assert_eq!(snap.server.ok, 0);
     assert!(snap.server.client_errors >= 8);
@@ -460,6 +475,115 @@ fn per_client_inflight_cap_sheds_429_too_many_inflight() {
     assert!(server.drain(Duration::from_secs(5)));
 }
 
+#[test]
+fn batch_entries_count_against_the_per_client_cap() {
+    let mut cfg = ephemeral_config();
+    cfg.max_inflight_per_client = 4;
+    let server = Server::start(coordinator(2, 64, 4, Arc::new(ReferenceBackend)), cfg).unwrap();
+    let mut rng = Rng::new(53);
+    let entry = |rng: &mut Rng| {
+        wire::encode_request_json(&req(
+            TransformKind::Dct2,
+            Direction::Forward,
+            vec![random_input(rng, (3, 3, 3))],
+            None,
+        ))
+    };
+    // Five entries against a cap of four: the whole batch sheds with the
+    // fairness code — the cap bounds jobs, not requests, so a batch can't
+    // multiply it by the batch limit.
+    let five: Vec<String> = (0..5).map(|_| entry(&mut rng)).collect();
+    let resp = client::post_json(
+        server.addr(),
+        "/v1/batch",
+        &format!("{{\"jobs\":[{}]}}", five.join(",")),
+    )
+    .unwrap();
+    assert_eq!(resp.status, 429, "{:?}", resp.text());
+    assert_eq!(error_code(&resp), "too_many_inflight");
+    assert_eq!(resp.header("retry-after"), Some("1"));
+    // Four entries fit and all serve.
+    let four: Vec<String> = (0..4).map(|_| entry(&mut rng)).collect();
+    let resp = client::post_json(
+        server.addr(),
+        "/v1/batch",
+        &format!("{{\"jobs\":[{}]}}", four.join(",")),
+    )
+    .unwrap();
+    assert_eq!(resp.status, 200, "{:?}", resp.text());
+    let doc = Json::parse(resp.text().unwrap()).unwrap();
+    let results = doc.get("results").and_then(Json::as_array).unwrap();
+    assert_eq!(results.len(), 4);
+    for r in results {
+        assert!(r.get("error").is_none(), "entry failed: {:?}", r.render());
+    }
+    let snap = server.metrics();
+    assert_eq!(snap.completed, 4);
+    assert_eq!(snap.rejected, 0, "the shed batch never reached the coordinator");
+    assert!(server.drain(Duration::from_secs(5)));
+}
+
+// ---------------------------------------------------------------------------
+// Connection hygiene: idle timeout and the open-connection cap
+
+#[test]
+fn idle_and_dribbling_connections_are_timed_out() {
+    let mut cfg = ephemeral_config();
+    cfg.read_timeout = Some(Duration::from_millis(150));
+    let server = Server::start(coordinator(1, 8, 1, Arc::new(ReferenceBackend)), cfg).unwrap();
+    let addr = server.addr();
+    // One connection that never sends a byte, one that dribbles a partial
+    // request line and stalls — the slowloris shapes.
+    let idle = ClientConn::connect(addr).unwrap();
+    let dribble = ClientConn::connect(addr).unwrap();
+    std::io::Write::write_all(&mut dribble.stream(), b"POST /v1/tra").unwrap();
+    for (conn, what) in [(&idle, "idle"), (&dribble, "dribbling")] {
+        conn.stream().set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut buf = [0u8; 16];
+        let n = std::io::Read::read(&mut conn.stream(), &mut buf)
+            .unwrap_or_else(|e| panic!("{what} connection was never closed: {e}"));
+        assert_eq!(n, 0, "{what} connection must see EOF, not a response");
+    }
+    // The server is still healthy afterwards.
+    assert_eq!(client::get(addr, "/v1/healthz").unwrap().status, 200);
+    assert!(server.drain(Duration::from_secs(5)));
+}
+
+#[test]
+fn connection_cap_sheds_503_too_many_connections() {
+    let mut cfg = ephemeral_config();
+    cfg.max_connections = 1;
+    let server = Server::start(coordinator(1, 8, 1, Arc::new(ReferenceBackend)), cfg).unwrap();
+    let addr = server.addr();
+    // Hold the single permitted connection open and idle...
+    let held = ClientConn::connect(addr).unwrap();
+    // ...then probe until the cap engages (the held connection's thread
+    // registers asynchronously, so early probes may still win the slot).
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let probe = client::get(addr, "/v1/healthz").unwrap();
+        if probe.status == 503 {
+            assert_eq!(error_code(&probe), "too_many_connections");
+            assert_eq!(probe.header("retry-after"), Some("2"));
+            break;
+        }
+        assert_eq!(probe.status, 200, "{:?}", probe.text());
+        assert!(Instant::now() < deadline, "connection cap never engaged");
+        thread::sleep(Duration::from_millis(5));
+    }
+    // Hanging up frees the slot.
+    drop(held);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        if client::get(addr, "/v1/healthz").unwrap().status == 200 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "slot never freed after the hang-up");
+        thread::sleep(Duration::from_millis(5));
+    }
+    assert!(server.drain(Duration::from_secs(5)));
+}
+
 // ---------------------------------------------------------------------------
 // Deadlines and cancellation
 
@@ -502,6 +626,50 @@ fn deadline_expires_to_504_body_field_and_header() {
     assert_eq!(snap.deadline_missed, 2);
     assert_eq!(snap.server.deadline_errors, 2);
     assert_eq!(snap.completed, 0);
+    assert!(server.drain(Duration::from_secs(5)));
+}
+
+#[test]
+fn batch_honors_the_deadline_header_on_every_entry() {
+    let (server, gate) = gated_server(2, 16, ephemeral_config());
+    let mut rng = Rng::new(61);
+    // Neither entry carries a body deadline; the header supplies one, so
+    // both park at the closed gate and expire instead of hanging forever.
+    let entries: Vec<String> = (0..2)
+        .map(|_| {
+            wire::encode_request_json(&req(
+                TransformKind::Dct2,
+                Direction::Forward,
+                vec![random_input(&mut rng, (3, 3, 3))],
+                None,
+            ))
+        })
+        .collect();
+    let resp = client::request(
+        server.addr(),
+        "POST",
+        "/v1/batch",
+        &[(wire::DEADLINE_HEADER, "25")],
+        wire::CONTENT_TYPE_JSON,
+        format!("{{\"jobs\":[{}]}}", entries.join(",")).as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(resp.status, 200, "{:?}", resp.text());
+    let doc = Json::parse(resp.text().unwrap()).unwrap();
+    let results = doc.get("results").and_then(Json::as_array).unwrap();
+    assert_eq!(results.len(), 2);
+    for r in results {
+        let code = r
+            .get("error")
+            .and_then(|e| e.get("code"))
+            .and_then(Json::as_str)
+            .unwrap_or_else(|| panic!("entry must expire typed: {:?}", r.render()));
+        assert_eq!(code, "deadline_exceeded");
+    }
+    let snap = server.metrics();
+    assert_eq!(snap.deadline_missed, 2, "{}", snap.summary());
+    assert_eq!(snap.completed, 0);
+    gate.open.store(true, Ordering::SeqCst);
     assert!(server.drain(Duration::from_secs(5)));
 }
 
