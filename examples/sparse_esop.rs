@@ -8,9 +8,17 @@
 //! accuracy side-effect (shorter accumulation chains → smaller f32
 //! roundoff, §6 last paragraph).
 //!
+//! It then pushes the same workloads through the serving stack's
+//! plan-time router: the `PlanCache` wraps every prepared plan in a
+//! density probe, and inputs at or above the `[sparse]` threshold run on
+//! the compressed-fiber path (bit-identical to the dense engine) while
+//! the rest stay dense.
+//!
 //! Run: `cargo run --release --example sparse_esop`
 
+use triada::coordinator::{PlanCache, PlanSpec, ReferenceBackend};
 use triada::gemt::{gemt_outer, CoeffSet};
+use triada::runtime::Direction;
 use triada::sim::{self, SimConfig};
 use triada::tensor::{relu_sparsify, sparsify, Tensor3};
 use triada::transforms::TransformKind;
@@ -100,6 +108,45 @@ fn main() -> anyhow::Result<()> {
         sparsify(&mut x, s, &mut rng);
         println!("  sparsity {:>4.0}% : {:.3e}", s * 100.0, f32_accumulation_error(&x, &cs));
     }
+
+    // Plan-time routing (ESOP level 2): the decision the coordinator makes
+    // for every cached plan. Each (kind, shape) spec below gets its own
+    // plan, so each input's density is probed independently — the 95%
+    // sparse one crosses the threshold and runs compressed, the others
+    // stay on the dense engine. Either way the result is bit-identical,
+    // so routing is purely a performance decision.
+    println!("\nplan-time routing through the serving PlanCache:");
+    println!(
+        "  selection = {}, compress at sparsity >= {:.2}",
+        triada::sparse::selection_name(),
+        triada::sparse::threshold()
+    );
+    let cache = PlanCache::new(4);
+    for (kind, s) in
+        [(TransformKind::Dct2, 0.0), (TransformKind::Dht, 0.5), (TransformKind::Dst1, 0.95)]
+    {
+        let spec = PlanSpec::new(kind, Direction::Forward, (n, n, n));
+        let plan = cache.prepare(&ReferenceBackend, spec)?;
+        let mut x = Tensor3::random(n, n, n, &mut rng);
+        sparsify(&mut x, s, &mut rng);
+        let y = plan.execute(&[x.to_f32()])?;
+        anyhow::ensure!(y.len() == 1, "one output tensor per real-kind request");
+    }
+    let stats = triada::sparse::stats();
+    for route in &stats.plans {
+        println!(
+            "  {:<24} sparsity {:>5.1}% -> {} path ({} execute{})",
+            route.plan,
+            route.sparsity * 100.0,
+            route.path,
+            route.executes,
+            if route.executes == 1 { "" } else { "s" }
+        );
+    }
+    println!(
+        "  totals: {} compressed / {} dense routes; {} nnz processed, {} stored zeros skipped",
+        stats.compressed_routes, stats.dense_routes, stats.nnz_processed, stats.zeros_skipped
+    );
 
     println!("\nsparse_esop OK");
     Ok(())

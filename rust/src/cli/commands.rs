@@ -36,6 +36,9 @@ COMMANDS:
                                  repeated engine tile passes [128]
         --timeout-ms N           abort cooperatively past this deadline
                                  (engine path stops between phases/tiles)
+        --sparsity F             zero-fraction of the input [0]
+        --sparse                 force the compressed sparse path and
+                                 report the routing decision
     simulate                     run the TriADA device simulator
         --kind, --shape          as above
         --sparsity F             zero-fraction of the input [0]
@@ -55,7 +58,7 @@ COMMANDS:
         --deadline-ms N          default per-job deadline (0 = none)
         --config FILE            INI config (sections [coordinator],
                                  [engine], [plan_cache], [pool], [faults],
-                                 [server])
+                                 [kernels], [sparse], [server])
         --listen ADDR:PORT       serve HTTP on a real socket instead of the
                                  demo loop (POST /v1/transform, /v1/batch;
                                  GET /v1/metrics, /v1/healthz, /v1/readyz);
@@ -97,6 +100,11 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
         "kernels: {} selected ({} isa); force with TRIADA_KERNEL=auto|scalar|wide",
         crate::gemt::kernels::selected().name(),
         crate::gemt::kernels::isa()
+    );
+    println!(
+        "sparse: {} routing (compress at sparsity >= {:.2}); force with TRIADA_SPARSE=auto|dense|compressed",
+        crate::sparse::selection_name(),
+        crate::sparse::threshold()
     );
     let dir = args.opt_or("artifacts", "artifacts");
     match crate::runtime::ArtifactManifest::load(dir) {
@@ -154,6 +162,14 @@ fn cmd_transform(args: &Args) -> anyhow::Result<()> {
     let shape = args.opt_shape("shape", (8, 8, 8))?;
     let inverse = args.flag("inverse");
     let use_engine = args.flag("engine");
+    let use_sparse = args.flag("sparse");
+    if use_sparse {
+        anyhow::ensure!(!use_engine, "--sparse runs its own sparse engine; drop --engine");
+        anyhow::ensure!(
+            kind != TransformKind::DftSplit,
+            "the split complex DFT has no compressed path; pick another --kind"
+        );
+    }
     if !use_engine {
         anyhow::ensure!(
             args.opt("threads").is_none()
@@ -171,6 +187,7 @@ fn cmd_transform(args: &Args) -> anyhow::Result<()> {
         None
     };
     let path = match &sharder {
+        None if use_sparse => "compressed sparse".to_string(),
         None => "scalar".to_string(),
         // The split DFT never takes the fused single-pass engine: it always
         // runs 4 tiled real mode products per mode, so report those passes
@@ -193,7 +210,24 @@ fn cmd_transform(args: &Args) -> anyhow::Result<()> {
     };
     let stopped = |e: crate::util::JobError| anyhow::anyhow!("transform stopped: {e}");
     let mut rng = Rng::new(args.opt_usize("seed", 42)? as u64);
-    let x = Tensor3::random(shape.0, shape.1, shape.2, &mut rng);
+    let mut x = Tensor3::random(shape.0, shape.1, shape.2, &mut rng);
+    match args.opt_f64("sparsity", 0.0)? {
+        f if f > 0.0 && f <= 1.0 => sparsify(&mut x, f, &mut rng),
+        f if f == 0.0 => {}
+        f => bail!("--sparsity must be a fraction in [0, 1], got {f}"),
+    }
+    if use_sparse {
+        // Report what plan-time routing would decide, then run compressed
+        // regardless — `--sparse` is the CLI's force knob.
+        let stats = crate::sparse::DensityStats::measure(&x);
+        println!(
+            "sparse: density={:.3} sparsity={:.3} | auto (threshold {:.2}) would pick {}; --sparse forces compressed",
+            stats.density(),
+            stats.sparsity,
+            crate::sparse::threshold(),
+            crate::sparse::decide(stats.sparsity).name()
+        );
+    }
     let square_macs =
         gemt::three_stage_macs(shape.0, shape.1, shape.2, shape.0, shape.1, shape.2);
 
@@ -228,6 +262,16 @@ fn cmd_transform(args: &Args) -> anyhow::Result<()> {
             Some(s) => {
                 let plan = s.plan(shape, shape);
                 s.run_planned_ctx(&x, &cs, &plan, &ctx).map_err(stopped)?
+            }
+            None if use_sparse => {
+                let sx = crate::sparse::SparseTensor3::from_dense(&x);
+                crate::sparse::gemt_sparse_ctx(
+                    &sx,
+                    &cs,
+                    &gemt::engine::EngineConfig::default(),
+                    &ctx,
+                )
+                .map_err(stopped)?
             }
             None => {
                 ctx.checkpoint().map_err(stopped)?;
@@ -337,6 +381,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     // environment variable wins; see `gemt::kernels` selection precedence).
     if let Some(c) = &file_cfg {
         crate::gemt::kernels::configure_from_config(c)?;
+    }
+    // A `[sparse]` section pins the density-routing selection/threshold
+    // (the TRIADA_SPARSE environment variable wins; see `crate::sparse`).
+    if let Some(c) = &file_cfg {
+        crate::sparse::configure_from_config(c)?;
     }
     if let Some(w) = args.opt("workers") {
         cfg.workers = w.parse().context("--workers")?;

@@ -25,7 +25,7 @@ pub struct Args {
 /// Option names that take no value (everything else with `--` expects one).
 const KNOWN_FLAGS: &[&str] = &[
     "help", "version", "esop", "no-esop", "dense", "trace", "verbose", "quiet", "inverse",
-    "engine", "offline",
+    "engine", "offline", "sparse",
 ];
 
 /// Parse a raw argv (excluding the program name).

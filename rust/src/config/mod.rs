@@ -149,6 +149,28 @@ impl Config {
         }
         Ok(KernelSettings { force })
     }
+
+    /// Typed view of the `[sparse]` section (the compressed sparse tensor
+    /// subsystem, `crate::sparse`). Validates that `force` is one of
+    /// `auto` / `dense` / `compressed` and that `threshold` is a finite
+    /// sparsity fraction in `[0, 1]`.
+    pub fn sparse_settings(&self) -> anyhow::Result<SparseSettings> {
+        let force = self.get("sparse", "force").map(|v| v.to_string());
+        if let Some(f) = &force {
+            anyhow::ensure!(
+                matches!(f.as_str(), "auto" | "dense" | "compressed"),
+                "sparse.force={f:?} is not one of auto|dense|compressed"
+            );
+        }
+        let threshold = self.get_f64("sparse", "threshold")?;
+        if let Some(t) = threshold {
+            anyhow::ensure!(
+                t.is_finite() && (0.0..=1.0).contains(&t),
+                "sparse.threshold={t} must be a fraction in [0, 1]"
+            );
+        }
+        Ok(SparseSettings { force, threshold })
+    }
 }
 
 /// Parsed `[engine]` keys; `None` means "not set, use the engine default".
@@ -169,6 +191,16 @@ pub struct KernelSettings {
     /// Kernel choice: `"auto"` (default), `"scalar"`, or `"wide"`. The
     /// `TRIADA_KERNEL` environment variable overrides this key.
     pub force: Option<String>,
+}
+
+/// Parsed `[sparse]` keys; `None` means "not set, use auto selection".
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SparseSettings {
+    /// Route choice: `"auto"` (default), `"dense"`, or `"compressed"`. The
+    /// `TRIADA_SPARSE` environment variable overrides this key.
+    pub force: Option<String>,
+    /// Sparsity fraction at which auto selection routes compressed.
+    pub threshold: Option<f64>,
 }
 
 /// Parsed `[pool]` keys; `None` means "not set, use the pool default".
@@ -232,6 +264,8 @@ pub fn documented_keys() -> Vec<(&'static str, &'static str, String)> {
         ("engine", "block", engine.block.to_string()),
         ("engine", "max_tile", shard.max_tile.to_string()),
         ("kernels", "force", "auto".to_string()),
+        ("sparse", "force", "auto".to_string()),
+        ("sparse", "threshold", crate::sparse::DEFAULT_SPARSE_THRESHOLD.to_string()),
         ("plan_cache", "capacity", coord.plan_capacity.to_string()),
         ("pool", "threads", pool.threads.to_string()),
         ("pool", "pin", pool.pin.to_string()),
@@ -398,6 +432,38 @@ p1 = 64
     }
 
     #[test]
+    fn sparse_settings_parse_and_validate() {
+        for (text, want) in [
+            ("", SparseSettings::default()),
+            (
+                "[sparse]\nforce = compressed\n",
+                SparseSettings { force: Some("compressed".to_string()), threshold: None },
+            ),
+            (
+                "[sparse]\nforce = \"dense\"\nthreshold = 0.75\n",
+                SparseSettings { force: Some("dense".to_string()), threshold: Some(0.75) },
+            ),
+            (
+                "[sparse]\nthreshold = 1.0\n",
+                SparseSettings { force: None, threshold: Some(1.0) },
+            ),
+        ] {
+            let c = Config::parse(text).unwrap();
+            assert_eq!(c.sparse_settings().unwrap(), want, "{text:?}");
+        }
+        for bad in [
+            "[sparse]\nforce = csr\n",
+            "[sparse]\nthreshold = 1.5\n",
+            "[sparse]\nthreshold = -0.1\n",
+            "[sparse]\nthreshold = nan\n",
+            "[sparse]\nthreshold = lots\n",
+        ] {
+            let c = Config::parse(bad).unwrap();
+            assert!(c.sparse_settings().is_err(), "{bad:?}");
+        }
+    }
+
+    #[test]
     fn documented_keys_cover_both_sections() {
         let keys = documented_keys();
         assert!(keys.iter().any(|(s, k, _)| *s == "coordinator" && *k == "workers"));
@@ -425,5 +491,7 @@ p1 = 64
             assert!(keys.iter().any(|(s, k, _)| *s == "server" && *k == key), "{key}");
         }
         assert!(keys.iter().any(|(s, k, d)| *s == "kernels" && *k == "force" && d == "auto"));
+        assert!(keys.iter().any(|(s, k, d)| *s == "sparse" && *k == "force" && d == "auto"));
+        assert!(keys.iter().any(|(s, k, d)| *s == "sparse" && *k == "threshold" && d == "0.9"));
     }
 }

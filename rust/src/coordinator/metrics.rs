@@ -73,6 +73,11 @@ pub struct MetricsSnapshot {
     /// [`crate::server::Server::metrics`] and the `/v1/metrics` route;
     /// zero for a coordinator with no server in front of it.
     pub server: crate::server::ServerStats,
+    /// Sparsity-routing selection, per-plan density/route decisions, and
+    /// nnz/skip counters ([`crate::sparse::stats`]). Filled by
+    /// [`super::server::Coordinator::metrics`]; default for a bare
+    /// `Metrics`.
+    pub sparse: crate::sparse::SparseStats,
 }
 
 impl Default for Metrics {
@@ -171,6 +176,7 @@ impl Metrics {
             fallback_reasons: Vec::new(),
             kernels: crate::gemt::kernels::KernelStats::default(),
             server: crate::server::ServerStats::default(),
+            sparse: crate::sparse::SparseStats::default(),
         }
     }
 }
@@ -220,6 +226,17 @@ impl MetricsSnapshot {
                 self.kernels.isa,
                 self.kernels.wide_dispatches,
                 self.kernels.scalar_dispatches,
+            ));
+        }
+        if self.sparse.dense_routes + self.sparse.compressed_routes > 0 {
+            s.push_str(&format!(
+                " | sparse={} thr={:.2} ({} compressed / {} dense routes, {} nnz / {} skipped)",
+                self.sparse.selection,
+                self.sparse.threshold,
+                self.sparse.compressed_routes,
+                self.sparse.dense_routes,
+                self.sparse.nnz_processed,
+                self.sparse.zeros_skipped,
             ));
         }
         if self.server.requests > 0 {
@@ -282,6 +299,7 @@ mod tests {
         assert!(s.fallback_reasons.is_empty());
         assert_eq!(s.kernels, crate::gemt::kernels::KernelStats::default());
         assert_eq!(s.server, crate::server::ServerStats::default());
+        assert_eq!(s.sparse, crate::sparse::SparseStats::default());
     }
 
     #[test]
@@ -328,5 +346,21 @@ mod tests {
         };
         let line = s.summary();
         assert!(line.contains("http: 10 reqs (7 ok / 2 shed / 1 hung up)"), "{line}");
+        // Sparse routing appears once any route decision has been made.
+        assert!(!line.contains("sparse="), "no sparse traffic yet: {line}");
+        s.sparse = crate::sparse::SparseStats {
+            selection: "auto",
+            threshold: 0.9,
+            dense_routes: 3,
+            compressed_routes: 5,
+            nnz_processed: 100,
+            zeros_skipped: 900,
+            plans: Vec::new(),
+        };
+        let line = s.summary();
+        assert!(
+            line.contains("sparse=auto thr=0.90 (5 compressed / 3 dense routes, 100 nnz / 900 skipped)"),
+            "{line}"
+        );
     }
 }

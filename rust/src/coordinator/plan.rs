@@ -326,7 +326,10 @@ impl PlanCache {
         crate::faults::maybe_plan_build_panic();
 
         // Build outside the lock: other specs stay servable meanwhile.
-        let built = backend.prepare(spec);
+        // Every successful build gains the sparsity-routing layer here, so
+        // all backends benefit without knowing about it (direct
+        // `Backend::prepare` callers stay unwrapped).
+        let built = backend.prepare(spec).map(crate::sparse::maybe_wrap);
 
         let mut state = self.state.lock().unwrap();
         match built {
@@ -498,6 +501,21 @@ mod tests {
         let plan = cache.prepare(&ReferenceBackend, spec(4)).unwrap();
         assert_eq!(plan.spec(), spec(4));
         assert_eq!(cache.stats().builds, 1);
+    }
+
+    #[test]
+    fn cached_plans_gain_sparsity_routing() {
+        let _g = crate::sparse::selection_lock();
+        crate::sparse::force_sparse(Some(crate::sparse::SparseMode::Compressed));
+        let cache = PlanCache::new(2);
+        let plan = cache.prepare(&ReferenceBackend, spec(4)).unwrap();
+        // Transparent wrap: spec and backend name are the inner plan's.
+        assert_eq!(plan.spec(), spec(4));
+        assert_eq!(plan.backend_name(), "cpu-reference");
+        let before = crate::sparse::stats().compressed_routes;
+        plan.execute(&[rand32(4, 4, 4, 9)]).unwrap();
+        assert_eq!(crate::sparse::stats().compressed_routes, before + 1);
+        crate::sparse::force_sparse(None);
     }
 
     #[test]

@@ -376,6 +376,7 @@ impl Coordinator {
         snap.plans = self.plans.stats();
         snap.pool = crate::pool::global().stats();
         snap.kernels = crate::gemt::kernels::stats();
+        snap.sparse = crate::sparse::stats();
         let mut reasons = self.backend.fallback_reasons();
         reasons.extend(self.dispatcher.fallback_reasons());
         snap.fallback_reasons = reasons;

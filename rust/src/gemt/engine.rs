@@ -230,7 +230,7 @@ pub fn gemt_engine_on_ctx<T: Scalar>(
 /// panels fan out as [`Layer::Engine`] tasks on a pool scope, which blocks
 /// (helping) until the phase is complete. `split_row_blocks` never yields
 /// an empty panel, so every submitted task has real work.
-fn run_panels<T: Scalar>(
+pub(crate) fn run_panels<T: Scalar>(
     pool: &ComputePool,
     panels: Vec<(usize, &mut [T])>,
     job: impl Fn(usize, &mut [T]) + Send + Sync,
@@ -253,7 +253,7 @@ fn run_panels<T: Scalar>(
 /// contiguous, row-aligned mutable panels; returns `(first_row, panel)`
 /// pairs. Disjointness is by construction — this is what makes the worker
 /// pool barrier- and lock-free within a phase.
-fn split_row_blocks<T>(
+pub(crate) fn split_row_blocks<T>(
     data: &mut [T],
     rows: usize,
     row_len: usize,
@@ -311,7 +311,7 @@ pub(crate) fn stage1_panel<T: Scalar>(
 /// (reading the shared Stage-I result, writing only owned storage); Stage
 /// III immediately re-slices it laterally through C₂ into the owned output
 /// rows. No other thread ever touches this panel: lock-free by ownership.
-fn stage23_panel<T: Scalar>(
+pub(crate) fn stage23_panel<T: Scalar>(
     s1: &Tensor3<T>,
     cs: &CoeffSet<T>,
     first_k1: usize,

@@ -18,9 +18,10 @@
 //!   serving-style coordinator ([`coordinator`]) that batches and routes
 //!   transform jobs. Python never runs on the request path. All CPU
 //!   parallelism — engine panels, shard tiles, coordinator batches — runs
-//!   on one process-wide work-stealing compute pool ([`pool`]), and the
+//!   on one process-wide work-stealing compute pool ([`pool`]), the
 //!   whole request path is exercised under deterministic fault injection
-//!   ([`faults`]).
+//!   ([`faults`]), and highly sparse inputs route through a compressed
+//!   sparse path at plan time ([`sparse`]).
 //!
 //! ## Quick start
 //!
@@ -47,6 +48,7 @@ pub mod proptest;
 pub mod runtime;
 pub mod server;
 pub mod sim;
+pub mod sparse;
 pub mod tensor;
 pub mod transforms;
 pub mod util;

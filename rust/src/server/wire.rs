@@ -692,6 +692,29 @@ pub fn metrics_json(s: &MetricsSnapshot) -> String {
         num(s.server.request_p50_s),
         num(s.server.request_p99_s)
     ));
+    out.push_str(&format!(
+        ",\"sparse\":{{\"selection\":{},\"threshold\":{},\"dense_routes\":{},\"compressed_routes\":{},\"nnz_processed\":{},\"zeros_skipped\":{},\"plans\":[",
+        json::escape(s.sparse.selection),
+        num(s.sparse.threshold),
+        s.sparse.dense_routes,
+        s.sparse.compressed_routes,
+        s.sparse.nnz_processed,
+        s.sparse.zeros_skipped
+    ));
+    for (i, route) in s.sparse.plans.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"plan\":{},\"density\":{},\"sparsity\":{},\"path\":{},\"executes\":{}}}",
+            json::escape(&route.plan),
+            num(route.density),
+            num(route.sparsity),
+            json::escape(route.path),
+            route.executes
+        ));
+    }
+    out.push_str("]}");
     out.push_str(",\"fallback_reasons\":[");
     for (i, reason) in s.fallback_reasons.iter().enumerate() {
         if i > 0 {

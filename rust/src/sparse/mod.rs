@@ -1,0 +1,342 @@
+//! Sparsity-adaptive execution: compressed sparse tensors, sparse mode
+//! products, and plan-time density routing.
+//!
+//! The paper's ESOP method (§6) — "avoids unnecessary computing and
+//! communication operations with zero-valued operands" — is applied at
+//! three escalating levels in this repo:
+//!
+//! 1. **elementwise/chunkwise** inside dense storage (`gemt/kernels`):
+//!    always on, zero configuration;
+//! 2. **compressed storage** ([`SparseTensor3`]): zeros are never stored,
+//!    so Stage I never even tests them ([`gemt_sparse`]);
+//! 3. **plan-time routing** ([`SparsityAware`]): each prepared plan
+//!    measures its first input's density once ([`DensityStats`], cached),
+//!    then routes every execute to the dense (ESOP-dense — the kernels
+//!    keep their elementwise skips) or the compressed path.
+//!
+//! # Routing selection
+//!
+//! Mirrors the `[kernels]` precedent exactly. Precedence: [`force_sparse`]
+//! (test/bench hook) > `TRIADA_SPARSE` env (`auto`/`dense`/`compressed`,
+//! read once) > `[sparse] force` config ([`configure_from_config`]) >
+//! auto. Auto compresses when the measured input sparsity is at or above
+//! the threshold (`[sparse] threshold`, default
+//! [`DEFAULT_SPARSE_THRESHOLD`]) — below it, compression overhead buys
+//! too little skipped work. Every route taken, plus nnz/skip totals from
+//! the compressed kernels, is observable via [`stats`] (surfaced in
+//! `MetricsSnapshot`, `triada info`, and `GET /v1/metrics`).
+//!
+//! Both routes are bit-identical — routing is purely a performance
+//! decision, which is what makes the force knobs safe to flip anywhere.
+
+mod plan;
+mod product;
+mod tensor;
+
+pub use plan::{maybe_wrap, SparsityAware};
+pub use product::{
+    gemt_sparse, gemt_sparse_ctx, gemt_sparse_on, gemt_sparse_on_ctx, sparse_mode1_product,
+    sparse_mode2_product, sparse_mode3_product,
+};
+pub use tensor::{DensityStats, SparseFiber, SparseTensor3};
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Default input-sparsity fraction at or above which auto routing picks
+/// the compressed path (`[sparse] threshold`).
+pub const DEFAULT_SPARSE_THRESHOLD: f64 = 0.9;
+
+/// Which execution path serves a plan's requests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SparseMode {
+    /// Dense storage on the backend's own path (ESOP skips stay active
+    /// elementwise in the kernels).
+    Dense,
+    /// Compress the input and run [`gemt_sparse`].
+    Compressed,
+}
+
+impl SparseMode {
+    /// Stable lowercase name (`"dense"` / `"compressed"`).
+    pub fn name(self) -> &'static str {
+        match self {
+            SparseMode::Dense => "dense",
+            SparseMode::Compressed => "compressed",
+        }
+    }
+}
+
+/// Parse a selection string: `auto` (=> `None`), `dense`, or `compressed`.
+pub fn parse_mode(s: &str) -> anyhow::Result<Option<SparseMode>> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "auto" => Ok(None),
+        "dense" => Ok(Some(SparseMode::Dense)),
+        "compressed" => Ok(Some(SparseMode::Compressed)),
+        other => anyhow::bail!("sparse selection must be auto|dense|compressed, got {other:?}"),
+    }
+}
+
+// Selection state. 0 = unset/auto, 1 = dense, 2 = compressed.
+static FORCED: AtomicU8 = AtomicU8::new(0);
+static CONFIGURED: AtomicU8 = AtomicU8::new(0);
+static ENV: OnceLock<Option<SparseMode>> = OnceLock::new();
+
+// Routing threshold as f64 bits; the sentinel means "unset, use default"
+// (u64::MAX is a NaN payload no valid threshold in [0, 1] encodes to).
+const THRESHOLD_UNSET: u64 = u64::MAX;
+static THRESHOLD_BITS: AtomicU64 = AtomicU64::new(THRESHOLD_UNSET);
+
+static DENSE_ROUTES: AtomicU64 = AtomicU64::new(0);
+static COMPRESSED_ROUTES: AtomicU64 = AtomicU64::new(0);
+static NNZ_PROCESSED: AtomicU64 = AtomicU64::new(0);
+static ZEROS_SKIPPED: AtomicU64 = AtomicU64::new(0);
+
+fn encode(mode: Option<SparseMode>) -> u8 {
+    match mode {
+        None => 0,
+        Some(SparseMode::Dense) => 1,
+        Some(SparseMode::Compressed) => 2,
+    }
+}
+
+fn decode(v: u8) -> Option<SparseMode> {
+    match v {
+        1 => Some(SparseMode::Dense),
+        2 => Some(SparseMode::Compressed),
+        _ => None,
+    }
+}
+
+fn env_choice() -> Option<SparseMode> {
+    *ENV.get_or_init(|| match std::env::var("TRIADA_SPARSE") {
+        Ok(v) => match parse_mode(&v) {
+            Ok(mode) => mode,
+            Err(e) => {
+                eprintln!("warning: ignoring invalid TRIADA_SPARSE: {e}");
+                None
+            }
+        },
+        Err(_) => None,
+    })
+}
+
+/// Process-wide override used by tests and benches to pin the routing
+/// decision regardless of env/config. `None` restores normal selection.
+/// Safe to flip at any time — both routes are bit-identical.
+pub fn force_sparse(mode: Option<SparseMode>) {
+    FORCED.store(encode(mode), Ordering::Relaxed);
+}
+
+/// Selection and counters are process-global; tests that pin the routing
+/// mode or assert counter deltas hold this lock so cargo's parallel test
+/// threads never observe each other's forces.
+#[doc(hidden)]
+pub fn selection_lock() -> std::sync::MutexGuard<'static, ()> {
+    static GATE: OnceLock<Mutex<()>> = OnceLock::new();
+    GATE.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Apply the `[sparse]` config section (`force = auto|dense|compressed`,
+/// `threshold = 0.0..=1.0`). The `TRIADA_SPARSE` environment variable,
+/// read lazily once, wins over the forced mode; [`force_sparse`] wins
+/// over both.
+pub fn configure_from_config(cfg: &crate::config::Config) -> anyhow::Result<()> {
+    let settings = cfg.sparse_settings()?;
+    if let Some(force) = settings.force {
+        CONFIGURED.store(encode(parse_mode(&force)?), Ordering::Relaxed);
+    }
+    if let Some(t) = settings.threshold {
+        set_threshold(t)?;
+    }
+    Ok(())
+}
+
+/// Set the auto-routing sparsity threshold (must be finite, in `[0, 1]`).
+pub fn set_threshold(t: f64) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        t.is_finite() && (0.0..=1.0).contains(&t),
+        "sparse threshold must be in [0, 1], got {t}"
+    );
+    THRESHOLD_BITS.store(t.to_bits(), Ordering::Relaxed);
+    Ok(())
+}
+
+/// The sparsity fraction at or above which auto routing compresses.
+pub fn threshold() -> f64 {
+    match THRESHOLD_BITS.load(Ordering::Relaxed) {
+        THRESHOLD_UNSET => DEFAULT_SPARSE_THRESHOLD,
+        bits => f64::from_bits(bits),
+    }
+}
+
+/// The pinned routing mode, if any (`None` = auto-by-threshold).
+pub fn selected() -> Option<SparseMode> {
+    if let Some(mode) = decode(FORCED.load(Ordering::Relaxed)) {
+        return Some(mode);
+    }
+    if let Some(mode) = env_choice() {
+        return Some(mode);
+    }
+    decode(CONFIGURED.load(Ordering::Relaxed))
+}
+
+/// Name of the active selection: `"auto"`, `"dense"`, or `"compressed"`.
+pub fn selection_name() -> &'static str {
+    selected().map_or("auto", SparseMode::name)
+}
+
+/// The routing decision for one measured input sparsity under the
+/// current selection and threshold.
+pub fn decide(sparsity: f64) -> SparseMode {
+    match selected() {
+        Some(mode) => mode,
+        None if sparsity >= threshold() => SparseMode::Compressed,
+        None => SparseMode::Dense,
+    }
+}
+
+/// One plan's cached routing decision, as surfaced in metrics.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanRoute {
+    /// The plan's display form (`kind direction n1xn2xn3`).
+    pub plan: String,
+    /// Measured nonzero fraction of the plan's first input.
+    pub density: f64,
+    /// Measured zero fraction (`1 - density`).
+    pub sparsity: f64,
+    /// Path serving the latest execute: `"dense"` / `"compressed"`.
+    pub path: &'static str,
+    /// Executes served by this plan since it was first routed.
+    pub executes: u64,
+}
+
+/// Most distinct plans kept in the route registry; a long-running server
+/// replaying many shapes keeps the newest entries' counters fresh and
+/// stops recording new plans past the cap.
+const MAX_PLAN_ROUTES: usize = 32;
+
+static ROUTES: Mutex<Vec<PlanRoute>> = Mutex::new(Vec::new());
+
+/// Record one routing decision for a plan (upserting its registry entry)
+/// and bump the per-path counter.
+pub(crate) fn record_route(plan: String, stats: DensityStats, mode: SparseMode) {
+    match mode {
+        SparseMode::Dense => DENSE_ROUTES.fetch_add(1, Ordering::Relaxed),
+        SparseMode::Compressed => COMPRESSED_ROUTES.fetch_add(1, Ordering::Relaxed),
+    };
+    let mut routes = ROUTES.lock().unwrap();
+    if let Some(entry) = routes.iter_mut().find(|r| r.plan == plan) {
+        entry.path = mode.name();
+        entry.density = stats.density();
+        entry.sparsity = stats.sparsity;
+        entry.executes += 1;
+        return;
+    }
+    if routes.len() < MAX_PLAN_ROUTES {
+        routes.push(PlanRoute {
+            plan,
+            density: stats.density(),
+            sparsity: stats.sparsity,
+            path: mode.name(),
+            executes: 1,
+        });
+    }
+}
+
+/// Record one compressed Stage-I pass: how many stored entries were
+/// processed and how many zeros never left compressed storage.
+pub(crate) fn record_skips(nnz: u64, zeros: u64) {
+    NNZ_PROCESSED.fetch_add(nnz, Ordering::Relaxed);
+    ZEROS_SKIPPED.fetch_add(zeros, Ordering::Relaxed);
+}
+
+/// Point-in-time sparsity observability: the active selection and
+/// threshold, route counters, compressed-kernel nnz/skip totals, and the
+/// per-plan route registry.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SparseStats {
+    /// Active selection at snapshot time (`auto`/`dense`/`compressed`).
+    pub selection: &'static str,
+    /// Auto-routing sparsity threshold at snapshot time.
+    pub threshold: f64,
+    /// Executes routed to a dense path.
+    pub dense_routes: u64,
+    /// Executes routed to the compressed path.
+    pub compressed_routes: u64,
+    /// Stored entries processed by compressed kernels.
+    pub nnz_processed: u64,
+    /// Zero elements skipped in compressed form (never stored or tested).
+    pub zeros_skipped: u64,
+    /// Per-plan density and chosen path (capped registry).
+    pub plans: Vec<PlanRoute>,
+}
+
+/// Snapshot the sparsity routing state and counters.
+pub fn stats() -> SparseStats {
+    SparseStats {
+        selection: selection_name(),
+        threshold: threshold(),
+        dense_routes: DENSE_ROUTES.load(Ordering::Relaxed),
+        compressed_routes: COMPRESSED_ROUTES.load(Ordering::Relaxed),
+        nnz_processed: NNZ_PROCESSED.load(Ordering::Relaxed),
+        zeros_skipped: ZEROS_SKIPPED.load(Ordering::Relaxed),
+        plans: ROUTES.lock().unwrap().clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_mode_accepts_the_three_selections() {
+        assert_eq!(parse_mode("auto").unwrap(), None);
+        assert_eq!(parse_mode(" Dense ").unwrap(), Some(SparseMode::Dense));
+        assert_eq!(parse_mode("COMPRESSED").unwrap(), Some(SparseMode::Compressed));
+        assert!(parse_mode("csr").is_err());
+    }
+
+    #[test]
+    fn decide_honors_force_then_threshold() {
+        let _g = selection_lock();
+        // force_sparse is process-global; exercise and always restore.
+        force_sparse(Some(SparseMode::Dense));
+        assert_eq!(decide(1.0), SparseMode::Dense);
+        assert_eq!(selection_name(), "dense");
+        force_sparse(Some(SparseMode::Compressed));
+        assert_eq!(decide(0.0), SparseMode::Compressed);
+        force_sparse(None);
+        // Auto under the default/env selection: only meaningful when no
+        // TRIADA_SPARSE is pinned for this process.
+        if selected().is_none() {
+            assert_eq!(decide(threshold()), SparseMode::Compressed);
+            assert_eq!(decide(threshold() - 0.1), SparseMode::Dense);
+        }
+    }
+
+    #[test]
+    fn threshold_validates_and_roundtrips() {
+        let _g = selection_lock();
+        assert!(set_threshold(1.5).is_err());
+        assert!(set_threshold(f64::NAN).is_err());
+        let before = threshold();
+        set_threshold(0.25).unwrap();
+        assert_eq!(threshold(), 0.25);
+        set_threshold(before).unwrap();
+    }
+
+    #[test]
+    fn route_registry_upserts_and_counts() {
+        let plan = "test-plan route_registry_upserts".to_string();
+        let stats_a = DensityStats { total: 10, nnz: 1, sparsity: 0.9, max_slab_sparsity: 1.0 };
+        record_route(plan.clone(), stats_a, SparseMode::Compressed);
+        record_route(plan.clone(), stats_a, SparseMode::Compressed);
+        let s = stats();
+        let entry = s.plans.iter().find(|r| r.plan == plan).expect("entry recorded");
+        assert_eq!(entry.path, "compressed");
+        assert_eq!(entry.executes, 2);
+        assert!((entry.density - 0.1).abs() < 1e-12);
+        assert!(s.compressed_routes >= 2);
+    }
+}

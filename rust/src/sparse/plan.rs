@@ -1,0 +1,264 @@
+//! The [`SparsityAware`] plan layer: density measured once per plan,
+//! every execute routed dense-vs-compressed.
+//!
+//! [`maybe_wrap`] is applied by the coordinator's
+//! [`crate::coordinator::PlanCache`] to every successfully prepared plan,
+//! so all backends (reference, engine, sharded engine, sim, PJRT) gain
+//! sparsity routing without knowing about it. The wrapper is transparent:
+//! it reports the inner plan's spec and backend name, and both routes
+//! produce bit-identical outputs — the dense route *is* the inner plan,
+//! and the compressed route ([`crate::sparse::gemt_sparse`]) shares the
+//! reference's kernel layer and accumulation order.
+//!
+//! Density is measured on the first request's input and cached for the
+//! plan's lifetime (plans are keyed by `(kind, direction, shape)` and
+//! servers typically stream same-density workloads per shape); the
+//! *selection* (force knobs, threshold) is re-read on every execute, so
+//! flipping `TRIADA_SPARSE`-style forces mid-run takes effect immediately.
+
+use std::sync::{Arc, OnceLock};
+
+use crate::coordinator::plan::{Plan, PlanSpec};
+use crate::gemt::engine::EngineConfig;
+use crate::gemt::CoeffSet;
+use crate::runtime::Direction;
+use crate::tensor::Tensor3;
+use crate::transforms::TransformKind;
+use crate::util::JobContext;
+
+use super::{decide, record_route, DensityStats, SparseMode, SparseTensor3};
+
+/// A plan wrapper that measures input density once and routes each
+/// execute to the wrapped plan (dense) or the compressed sparse path.
+pub struct SparsityAware {
+    inner: Arc<dyn Plan>,
+    /// Measured on the first request, cached for the plan's lifetime.
+    density: OnceLock<DensityStats>,
+    /// Stationary coefficients for the compressed route, built lazily on
+    /// the first compressed execute — a plan that always routes dense
+    /// never pays for (or holds) them.
+    coeffs: OnceLock<CoeffSet<f64>>,
+}
+
+/// Wrap a freshly prepared plan in the sparsity-routing layer. The split
+/// complex DFT streams an `(re, im)` pair through paired coefficients the
+/// compressed path cannot serve, so those plans pass through untouched.
+pub fn maybe_wrap(plan: Arc<dyn Plan>) -> Arc<dyn Plan> {
+    if plan.spec().kind == TransformKind::DftSplit {
+        return plan;
+    }
+    Arc::new(SparsityAware {
+        inner: plan,
+        density: OnceLock::new(),
+        coeffs: OnceLock::new(),
+    })
+}
+
+impl SparsityAware {
+    /// The measured density stats, if a request has been routed yet.
+    pub fn density(&self) -> Option<DensityStats> {
+        self.density.get().copied()
+    }
+
+    /// Validate `inputs` and pick this request's route, recording the
+    /// decision in the process-wide sparse stats.
+    fn route(&self, inputs: &[Tensor3<f32>]) -> anyhow::Result<SparseMode> {
+        let spec = self.inner.spec();
+        spec.check_inputs(inputs)?;
+        let stats = *self.density.get_or_init(|| DensityStats::measure(&inputs[0]));
+        let mode = decide(stats.sparsity);
+        record_route(spec.to_string(), stats, mode);
+        Ok(mode)
+    }
+
+    fn coeffs(&self) -> &CoeffSet<f64> {
+        self.coeffs.get_or_init(|| {
+            let spec = self.inner.spec();
+            let (n1, n2, n3) = spec.shape;
+            match spec.direction {
+                Direction::Forward => CoeffSet::forward(spec.kind, n1, n2, n3),
+                Direction::Inverse => CoeffSet::inverse(spec.kind, n1, n2, n3),
+            }
+        })
+    }
+
+    /// The compressed route: compress the (f64-widened) input and run the
+    /// sparse three-stage GEMT. The context is polled before compression
+    /// and at the sparse engine's phase boundaries, exactly like the dense
+    /// engine path.
+    fn execute_compressed(
+        &self,
+        inputs: &[Tensor3<f32>],
+        ctx: &JobContext,
+    ) -> anyhow::Result<Vec<Tensor3<f32>>> {
+        ctx.checkpoint().map_err(anyhow::Error::new)?;
+        let x = inputs[0].to_f64();
+        let sx = SparseTensor3::from_dense(&x);
+        let out = super::gemt_sparse_ctx(&sx, self.coeffs(), &EngineConfig::default(), ctx)
+            .map_err(anyhow::Error::new)?;
+        Ok(vec![out.to_f32()])
+    }
+}
+
+impl Plan for SparsityAware {
+    fn spec(&self) -> PlanSpec {
+        self.inner.spec()
+    }
+
+    fn backend_name(&self) -> &'static str {
+        self.inner.backend_name()
+    }
+
+    fn execute(&self, inputs: &[Tensor3<f32>]) -> anyhow::Result<Vec<Tensor3<f32>>> {
+        match self.route(inputs)? {
+            SparseMode::Dense => self.inner.execute(inputs),
+            SparseMode::Compressed => self.execute_compressed(inputs, &JobContext::default()),
+        }
+    }
+
+    fn execute_ctx(
+        &self,
+        inputs: &[Tensor3<f32>],
+        ctx: &JobContext,
+    ) -> anyhow::Result<Vec<Tensor3<f32>>> {
+        match self.route(inputs)? {
+            SparseMode::Dense => self.inner.execute_ctx(inputs, ctx),
+            SparseMode::Compressed => self.execute_compressed(inputs, ctx),
+        }
+    }
+
+    fn execute_batch(
+        &self,
+        requests: &[Vec<Tensor3<f32>>],
+    ) -> anyhow::Result<Vec<Vec<Tensor3<f32>>>> {
+        // One routing decision per batch (the density cache is
+        // plan-level; batch members share the plan's spec and shape).
+        let Some(first) = requests.first() else {
+            return Ok(Vec::new());
+        };
+        match self.route(first)? {
+            SparseMode::Dense => self.inner.execute_batch(requests),
+            SparseMode::Compressed => requests
+                .iter()
+                .map(|inputs| {
+                    self.spec().check_inputs(inputs)?;
+                    self.execute_compressed(inputs, &JobContext::default())
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::{Backend, ReferenceBackend};
+    use crate::sparse::{force_sparse, selection_lock, stats};
+    use crate::tensor::sparsify;
+    use crate::util::{JobError, Rng};
+    use std::time::{Duration, Instant};
+
+    fn sparse_input(n: usize, frac: f64, seed: u64) -> Tensor3<f32> {
+        let mut rng = Rng::new(seed);
+        let mut x = Tensor3::random(n, n, n, &mut rng);
+        sparsify(&mut x, frac, &mut rng);
+        x.to_f32()
+    }
+
+    fn prepared(n: usize) -> Arc<dyn Plan> {
+        let spec = PlanSpec::new(TransformKind::Dct2, Direction::Forward, (n, n, n));
+        ReferenceBackend.prepare(spec).unwrap()
+    }
+
+    #[test]
+    fn wrapped_plan_is_transparent_and_bit_identical_on_both_routes() {
+        let _g = selection_lock();
+        let inner = prepared(6);
+        let wrapped = maybe_wrap(inner.clone());
+        assert_eq!(wrapped.spec(), inner.spec());
+        assert_eq!(wrapped.backend_name(), inner.backend_name());
+        let x = sparse_input(6, 0.95, 200);
+        let want = inner.execute(&[x.clone()]).unwrap();
+        for mode in [Some(SparseMode::Dense), Some(SparseMode::Compressed), None] {
+            force_sparse(mode);
+            let got = wrapped.execute(&[x.clone()]).unwrap();
+            assert_eq!(got[0], want[0], "route {mode:?} must be bit-identical");
+        }
+        force_sparse(None);
+    }
+
+    #[test]
+    fn routing_decisions_are_recorded_in_stats() {
+        let _g = selection_lock();
+        let wrapped = maybe_wrap(prepared(5));
+        let x = sparse_input(5, 1.0, 201); // all-zero input: sparsity 1.0
+        force_sparse(Some(SparseMode::Compressed));
+        let before = stats();
+        wrapped.execute(&[x.clone()]).unwrap();
+        wrapped.execute(&[x]).unwrap();
+        force_sparse(None);
+        let after = stats();
+        assert_eq!(after.compressed_routes - before.compressed_routes, 2);
+        let entry = after
+            .plans
+            .iter()
+            .find(|r| r.plan == "dct2 forward 5x5x5")
+            .expect("plan recorded in route registry");
+        assert_eq!(entry.path, "compressed");
+        assert_eq!(entry.density, 0.0);
+        assert_eq!(entry.sparsity, 1.0);
+    }
+
+    #[test]
+    fn dft_split_plans_pass_through_unwrapped() {
+        let spec = PlanSpec::new(TransformKind::DftSplit, Direction::Forward, (4, 4, 4));
+        let inner = ReferenceBackend.prepare(spec).unwrap();
+        let wrapped = maybe_wrap(inner.clone());
+        assert!(Arc::ptr_eq(&inner, &wrapped), "split DFT must not be wrapped");
+    }
+
+    #[test]
+    fn compressed_route_resolves_cancellation_and_deadline_typed() {
+        let _g = selection_lock();
+        let wrapped = maybe_wrap(prepared(4));
+        let x = sparse_input(4, 0.9, 202);
+        force_sparse(Some(SparseMode::Compressed));
+        let ctx = JobContext::new();
+        ctx.cancel.cancel();
+        let err = wrapped.execute_ctx(&[x.clone()], &ctx).unwrap_err();
+        assert_eq!(err.downcast_ref::<JobError>(), Some(&JobError::Canceled));
+        let expired = JobContext::with_deadline(Instant::now() - Duration::from_millis(1));
+        let err = wrapped.execute_ctx(&[x], &expired).unwrap_err();
+        assert_eq!(err.downcast_ref::<JobError>(), Some(&JobError::DeadlineExceeded));
+        force_sparse(None);
+    }
+
+    #[test]
+    fn execute_batch_routes_once_and_matches_per_request() {
+        let _g = selection_lock();
+        let wrapped = maybe_wrap(prepared(4));
+        let requests: Vec<Vec<Tensor3<f32>>> =
+            (0..3).map(|i| vec![sparse_input(4, 0.95, 210 + i)]).collect();
+        for mode in [SparseMode::Dense, SparseMode::Compressed] {
+            force_sparse(Some(mode));
+            let batched = wrapped.execute_batch(&requests).unwrap();
+            assert_eq!(batched.len(), 3);
+            for (req, out) in requests.iter().zip(&batched) {
+                let direct = wrapped.execute(req).unwrap();
+                assert_eq!(direct[0], out[0], "{mode:?}");
+            }
+        }
+        force_sparse(None);
+        assert!(wrapped.execute_batch(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn compressed_route_rejects_bad_inputs() {
+        let _g = selection_lock();
+        let wrapped = maybe_wrap(prepared(4));
+        force_sparse(Some(SparseMode::Compressed));
+        assert!(wrapped.execute(&[]).is_err());
+        assert!(wrapped.execute(&[sparse_input(5, 0.5, 220)]).is_err());
+        force_sparse(None);
+    }
+}

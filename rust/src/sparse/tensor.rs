@@ -1,0 +1,316 @@
+//! Compressed sparse 3D tensors and plan-time density statistics.
+//!
+//! [`SparseTensor3`] stores only the structurally-nonzero elements of a
+//! [`Tensor3`] in a linearized, fiber-grouped layout (the CSF/ALTO family:
+//! one sorted stream of linearized indices plus fiber pointers over the
+//! `n1·n2` mode-3 fibers, instead of per-mode pointer trees). Row-major
+//! linearization makes the mode-3 fiber the native view — exactly the
+//! access pattern Stage I of the outer-product schedule (Eq. 6.1) and the
+//! mode-3 product consume — while mode-1/2 consumers scatter one fiber at
+//! a time into a dense scratch row ([`SparseTensor3::scatter_fiber`]).
+//!
+//! **Losslessness.** Compression drops an element only when its *bit
+//! pattern* is the canonical zero ([`Scalar::is_structural_zero`]): `-0.0`
+//! and NaN are stored explicitly, so `to_dense(from_dense(x))` reproduces
+//! `x` bit-for-bit. Stored `-0.0` entries are still *numerically* zero and
+//! the dense kernels skip them via [`Scalar::is_zero`]; feeding them
+//! through [`crate::gemt::kernels::Kernels::update_row`] therefore
+//! produces the same operation sequence as the dense path — which is what
+//! keeps the sparse products bit-identical to `gemt_outer`.
+
+use crate::tensor::{zero_histogram, Scalar, Tensor3};
+
+/// A 3D tensor compressed to its structurally-nonzero elements.
+///
+/// Storage is three parallel arrays: `values[e]` at linearized row-major
+/// index `indices[e]` (ascending), with `fiber_ptr[f]..fiber_ptr[f+1]`
+/// delimiting the entries of mode-3 fiber `f = i·n2 + j`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseTensor3<T> {
+    shape: (usize, usize, usize),
+    values: Vec<T>,
+    /// Linearized row-major index `(i·n2 + j)·n3 + k` per stored element,
+    /// strictly ascending.
+    indices: Vec<usize>,
+    /// `n1·n2 + 1` offsets into `values`/`indices`, one per mode-3 fiber.
+    fiber_ptr: Vec<usize>,
+}
+
+impl<T: Scalar> SparseTensor3<T> {
+    /// Compress a dense tensor: keep every element that is not the
+    /// canonical zero bit pattern (see the module docs on losslessness).
+    pub fn from_dense(x: &Tensor3<T>) -> SparseTensor3<T> {
+        let (n1, n2, n3) = x.shape();
+        let fibers = n1 * n2;
+        let mut values = Vec::new();
+        let mut indices = Vec::new();
+        let mut fiber_ptr = Vec::with_capacity(fibers + 1);
+        fiber_ptr.push(0);
+        for (idx, &v) in x.data().iter().enumerate() {
+            // Row-major iteration crosses a fiber boundary every n3
+            // elements; record the boundary offsets as we pass them.
+            while fiber_ptr.len() <= idx / n3.max(1) {
+                fiber_ptr.push(values.len());
+            }
+            if !v.is_structural_zero() {
+                values.push(v);
+                indices.push(idx);
+            }
+        }
+        while fiber_ptr.len() <= fibers {
+            fiber_ptr.push(values.len());
+        }
+        SparseTensor3 { shape: (n1, n2, n3), values, indices, fiber_ptr }
+    }
+
+    /// Decompress back to dense storage; exact inverse of
+    /// [`SparseTensor3::from_dense`], bit-for-bit.
+    pub fn to_dense(&self) -> Tensor3<T> {
+        let (n1, n2, n3) = self.shape;
+        let mut out = Tensor3::zeros(n1, n2, n3);
+        for (&idx, &v) in self.indices.iter().zip(&self.values) {
+            out.data_mut()[idx] = v;
+        }
+        out
+    }
+
+    /// Dense shape `(n1, n2, n3)`.
+    pub fn shape(&self) -> (usize, usize, usize) {
+        self.shape
+    }
+
+    /// Number of stored (structurally nonzero) elements.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Total elements of the dense shape.
+    pub fn len(&self) -> usize {
+        let (n1, n2, n3) = self.shape;
+        n1 * n2 * n3
+    }
+
+    /// True when the dense shape has no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Stored fraction: `nnz / len` (0.0 for the empty tensor).
+    pub fn density(&self) -> f64 {
+        if self.is_empty() {
+            0.0
+        } else {
+            self.nnz() as f64 / self.len() as f64
+        }
+    }
+
+    /// One mode-3 fiber's stored entries as `(k, value)` pairs in
+    /// ascending `k` — the native compressed view Stage I iterates.
+    pub fn fiber(&self, i: usize, j: usize) -> SparseFiber<'_, T> {
+        let (_, n2, n3) = self.shape;
+        let f = i * n2 + j;
+        let (lo, hi) = (self.fiber_ptr[f], self.fiber_ptr[f + 1]);
+        SparseFiber {
+            base: f * n3,
+            indices: &self.indices[lo..hi],
+            values: &self.values[lo..hi],
+        }
+    }
+
+    /// Scatter fiber `(i, j)` into a dense length-`n3` row (clearing it
+    /// first). Mode-1/2 consumers use this to rebuild exactly the rows the
+    /// dense kernels would have read — zeros land as `+0.0`, stored `-0.0`
+    /// and NaN come back verbatim — so downstream accumulation stays
+    /// bit-identical to the dense path.
+    pub fn scatter_fiber(&self, i: usize, j: usize, row: &mut [T]) {
+        let (_, _, n3) = self.shape;
+        assert_eq!(row.len(), n3);
+        row.fill(T::zero());
+        let fiber = self.fiber(i, j);
+        for (k, v) in fiber.iter() {
+            row[k] = v;
+        }
+    }
+
+    /// Stored entries per slab along one mode (`0`, `1`, or `2`) — the
+    /// per-mode fiber-view statistic (how much work each mode-product
+    /// step has left after compression).
+    pub fn slab_nnz(&self, mode: usize) -> Vec<usize> {
+        let (n1, n2, n3) = self.shape;
+        let n = [n1, n2, n3][mode];
+        let mut counts = vec![0usize; n];
+        for &idx in &self.indices {
+            let (i, rest) = (idx / (n2 * n3), idx % (n2 * n3));
+            let (j, k) = (rest / n3, rest % n3);
+            counts[[i, j, k][mode]] += 1;
+        }
+        counts
+    }
+}
+
+/// Borrowed view of one mode-3 fiber's stored entries.
+pub struct SparseFiber<'a, T> {
+    base: usize,
+    indices: &'a [usize],
+    values: &'a [T],
+}
+
+impl<'a, T: Scalar> SparseFiber<'a, T> {
+    /// Stored entries in this fiber.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// The `s`-th stored entry as `(k, value)`; `k` is the mode-3
+    /// coordinate inside the fiber.
+    #[inline]
+    pub fn entry(&self, s: usize) -> (usize, T) {
+        // Within fiber f every linearized index is f·n3 + k.
+        (self.indices[s] - self.base, self.values[s])
+    }
+
+    /// Iterate `(k, value)` in ascending `k`.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, T)> + '_ {
+        (0..self.nnz()).map(|s| self.entry(s))
+    }
+}
+
+/// Plan-time density statistics of one input tensor, measured once and
+/// cached in the plan (Deinsum's "decide dense-vs-sparse where shape and
+/// density are known" applied at our plan layer).
+///
+/// Zeros here are *numeric* ([`Scalar::is_zero`], so `-0.0` counts): this
+/// is a routing heuristic about skippable work, not about what compressed
+/// storage keeps.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DensityStats {
+    /// Total elements measured.
+    pub total: usize,
+    /// Numerically nonzero elements.
+    pub nnz: usize,
+    /// Fraction of numeric zeros, `0.0 ..= 1.0` (0.0 for empty input).
+    pub sparsity: f64,
+    /// Highest zero fraction of any single mode-1/2/3 slab — flags
+    /// structured (slab-concentrated) sparsity.
+    pub max_slab_sparsity: f64,
+}
+
+impl DensityStats {
+    /// Measure one tensor (one pass via [`zero_histogram`]).
+    pub fn measure<T: Scalar>(t: &Tensor3<T>) -> DensityStats {
+        let h = zero_histogram(t);
+        let total = t.len();
+        let zeros = h.zeros();
+        DensityStats {
+            total,
+            nnz: total - zeros,
+            sparsity: if total == 0 { 0.0 } else { zeros as f64 / total as f64 },
+            max_slab_sparsity: h.max_slab_sparsity(),
+        }
+    }
+
+    /// Nonzero fraction (`1 - sparsity`).
+    pub fn density(&self) -> f64 {
+        1.0 - self.sparsity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Complex64;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip_is_bit_lossless_f64() {
+        let mut rng = Rng::new(71);
+        let mut x = Tensor3::random(5, 4, 3, &mut rng);
+        // Plant the adversarial bit patterns compression must keep.
+        x.set(0, 0, 0, -0.0);
+        x.set(1, 2, 1, f64::NAN);
+        x.set(4, 3, 2, 0.0);
+        let sx = SparseTensor3::from_dense(&x);
+        let back = sx.to_dense();
+        for (a, b) in x.data().iter().zip(back.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // -0.0 and NaN are stored; the one +0.0 is dropped.
+        assert_eq!(sx.nnz(), x.len() - 1);
+    }
+
+    #[test]
+    fn roundtrip_is_bit_lossless_f32_and_complex() {
+        let mut x32 = Tensor3::<f32>::from_fn(3, 3, 3, |i, j, k| (i * j * k) as f32);
+        x32.set(0, 1, 2, -0.0);
+        let back32 = SparseTensor3::from_dense(&x32).to_dense();
+        for (a, b) in x32.data().iter().zip(back32.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+
+        let mut xc = Tensor3::<Complex64>::zeros(2, 2, 2);
+        xc.set(0, 0, 1, Complex64::new(0.0, 3.0)); // zero real, nonzero imag
+        xc.set(1, 1, 0, Complex64::new(-0.0, 0.0)); // structurally nonzero
+        let sc = SparseTensor3::from_dense(&xc);
+        assert_eq!(sc.nnz(), 2);
+        let backc = sc.to_dense();
+        for (a, b) in xc.data().iter().zip(backc.data()) {
+            assert_eq!(a.re.to_bits(), b.re.to_bits());
+            assert_eq!(a.im.to_bits(), b.im.to_bits());
+        }
+    }
+
+    #[test]
+    fn fibers_yield_ascending_k_entries() {
+        let mut x = Tensor3::<f64>::zeros(2, 2, 5);
+        x.set(1, 0, 4, 4.0);
+        x.set(1, 0, 1, 1.0);
+        x.set(0, 1, 2, 2.0);
+        let sx = SparseTensor3::from_dense(&x);
+        let got: Vec<(usize, f64)> = sx.fiber(1, 0).iter().collect();
+        assert_eq!(got, vec![(1, 1.0), (4, 4.0)]);
+        assert_eq!(sx.fiber(0, 0).nnz(), 0);
+        let mut row = vec![9.0; 5];
+        sx.scatter_fiber(0, 1, &mut row);
+        assert_eq!(row, vec![0.0, 0.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn slab_nnz_counts_per_mode() {
+        let mut x = Tensor3::<f64>::zeros(2, 3, 4);
+        x.set(0, 0, 0, 1.0);
+        x.set(0, 2, 3, 1.0);
+        x.set(1, 2, 3, 1.0);
+        let sx = SparseTensor3::from_dense(&x);
+        assert_eq!(sx.slab_nnz(0), vec![2, 1]);
+        assert_eq!(sx.slab_nnz(1), vec![1, 0, 2]);
+        assert_eq!(sx.slab_nnz(2), vec![1, 0, 0, 2]);
+    }
+
+    #[test]
+    fn empty_and_degenerate_shapes() {
+        let e = SparseTensor3::from_dense(&Tensor3::<f64>::zeros(0, 0, 0));
+        assert!(e.is_empty());
+        assert_eq!(e.nnz(), 0);
+        assert_eq!(e.density(), 0.0);
+        assert_eq!(e.to_dense().shape(), (0, 0, 0));
+        // n3 = 0 exercises the fiber-boundary arithmetic with empty fibers.
+        let z = SparseTensor3::from_dense(&Tensor3::<f64>::zeros(2, 3, 0));
+        assert_eq!(z.nnz(), 0);
+        assert_eq!(z.to_dense().shape(), (2, 3, 0));
+    }
+
+    #[test]
+    fn density_stats_measure_counts_numeric_zeros() {
+        let mut x = Tensor3::<f64>::from_fn(2, 2, 2, |_, _, _| 1.0);
+        x.set(0, 0, 0, 0.0);
+        x.set(0, 0, 1, -0.0); // numeric zero, structural nonzero
+        let d = DensityStats::measure(&x);
+        assert_eq!(d.total, 8);
+        assert_eq!(d.nnz, 6);
+        assert!((d.sparsity - 0.25).abs() < 1e-12);
+        assert!((d.density() - 0.75).abs() < 1e-12);
+        // The (0,0,:) fiber is half zero; no slab beats 2/4 zeros.
+        assert!(d.max_slab_sparsity >= 0.5);
+        assert_eq!(DensityStats::measure(&Tensor3::<f64>::zeros(0, 0, 0)).sparsity, 0.0);
+    }
+}

@@ -124,6 +124,14 @@ impl Scalar for Complex64 {
     fn abs_f64(self) -> f64 {
         self.abs()
     }
+    #[inline]
+    fn re_f64(self) -> f64 {
+        self.re
+    }
+    #[inline]
+    fn is_structural_zero(self) -> bool {
+        self.re.to_bits() == 0 && self.im.to_bits() == 0
+    }
 }
 
 #[cfg(test)]

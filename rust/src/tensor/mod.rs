@@ -15,5 +15,8 @@ pub mod tensor3;
 pub use complex::Complex64;
 pub use mat::Mat;
 pub use scalar::Scalar;
-pub use sparse::{relu_sparsify, sparsify, sparsity_of, SparsityPattern};
+pub use sparse::{
+    relu_sparsify, relu_sparsify_at, sparsify, sparsity_of, zero_histogram, SparsityPattern,
+    ZeroHistogram,
+};
 pub use tensor3::Tensor3;

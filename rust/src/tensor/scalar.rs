@@ -35,6 +35,18 @@ pub trait Scalar:
     fn is_zero(self) -> bool {
         self == Self::zero()
     }
+    /// Real part as f64 (the value itself for real types). Thresholding
+    /// helpers like [`crate::tensor::relu_sparsify`] compare on this.
+    fn re_f64(self) -> f64;
+    /// True only for the canonical zero **bit pattern** (`+0.0`; both
+    /// parts `+0.0` for complex). This is the predicate compressed sparse
+    /// storage drops elements by: `-0.0` and NaN payloads are *not*
+    /// structural zeros, so they stay stored and dense↔sparse conversion
+    /// is lossless. Contrast [`Scalar::is_zero`], which is the numeric
+    /// ESOP predicate (`-0.0` counts as zero there).
+    fn is_structural_zero(self) -> bool {
+        self.is_zero()
+    }
     /// Multiply-accumulate: `self + a*b`. The simulator's atomic MAC.
     ///
     /// **Rounding contract:** this is the *non-fused* form — the product
@@ -81,6 +93,14 @@ impl Scalar for f64 {
         self.abs()
     }
     #[inline]
+    fn re_f64(self) -> f64 {
+        self
+    }
+    #[inline]
+    fn is_structural_zero(self) -> bool {
+        self.to_bits() == 0
+    }
+    #[inline]
     fn mul_add(self, a: f64, b: f64) -> f64 {
         // inherent f64::mul_add — a single-rounding hardware FMA
         a.mul_add(b, self)
@@ -105,6 +125,14 @@ impl Scalar for f32 {
         self.abs() as f64
     }
     #[inline]
+    fn re_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline]
+    fn is_structural_zero(self) -> bool {
+        self.to_bits() == 0
+    }
+    #[inline]
     fn mul_add(self, a: f32, b: f32) -> f32 {
         a.mul_add(b, self)
     }
@@ -120,6 +148,20 @@ mod tests {
         assert_eq!(2.0f64.mac(3.0, 4.0), 14.0);
         assert!(0.0f64.is_zero());
         assert!(!1e-300f64.is_zero());
+    }
+
+    #[test]
+    fn structural_zero_is_bit_level() {
+        // -0.0 is numerically zero (ESOP skips it) but structurally nonzero
+        // (compression must keep it to stay lossless).
+        assert!((-0.0f64).is_zero());
+        assert!(!(-0.0f64).is_structural_zero());
+        assert!(0.0f64.is_structural_zero());
+        assert!(!f64::NAN.is_structural_zero());
+        assert!(!(-0.0f32).is_structural_zero());
+        assert!(0.0f32.is_structural_zero());
+        assert_eq!((-1.5f32).re_f64(), -1.5);
+        assert_eq!(2.5f64.re_f64(), 2.5);
     }
 
     #[test]

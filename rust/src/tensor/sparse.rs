@@ -52,13 +52,21 @@ pub fn sparsity_of<T: Scalar>(t: &Tensor3<T>) -> f64 {
     t.zero_count() as f64 / t.len() as f64
 }
 
-/// ReLU-like sparsification: zero all negative elements (the paper's AI
-/// motivation — activations after ReLU/SquaredReLU are sparse).
-pub fn relu_sparsify(t: &mut Tensor3<f64>) -> SparsityPattern {
+/// ReLU-like sparsification: zero all elements with negative real part
+/// (the paper's AI motivation — activations after ReLU/SquaredReLU are
+/// sparse). Works for any [`Scalar`]; see [`relu_sparsify_at`] for a
+/// non-zero threshold.
+pub fn relu_sparsify<T: Scalar>(t: &mut Tensor3<T>) -> SparsityPattern {
+    relu_sparsify_at(t, 0.0)
+}
+
+/// Generalized ReLU: zero every element whose **real part** is strictly
+/// below `threshold`. NaN real parts compare false and are kept.
+pub fn relu_sparsify_at<T: Scalar>(t: &mut Tensor3<T>, threshold: f64) -> SparsityPattern {
     let total = t.len();
     for v in t.data_mut() {
-        if *v < 0.0 {
-            *v = 0.0;
+        if v.re_f64() < threshold {
+            *v = T::zero();
         }
     }
     let zeros = t.zero_count();
@@ -68,6 +76,74 @@ pub fn relu_sparsify(t: &mut Tensor3<f64>) -> SparsityPattern {
         zeros,
         total,
     }
+}
+
+/// Per-mode-slab zero counts: `mode1[i]` is the number of exactly-zero
+/// elements in slab `x[i, :, :]`, and likewise `mode2[j]` / `mode3[k]`
+/// for the other two modes. One pass over the tensor; the sparsity
+/// planner reuses this to spot structured (slab-concentrated) sparsity
+/// on top of the overall density.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ZeroHistogram {
+    /// Zeros per mode-1 slab (`n1` entries).
+    pub mode1: Vec<usize>,
+    /// Zeros per mode-2 slab (`n2` entries).
+    pub mode2: Vec<usize>,
+    /// Zeros per mode-3 slab (`n3` entries).
+    pub mode3: Vec<usize>,
+}
+
+impl ZeroHistogram {
+    /// Total zero elements (every mode's histogram sums to the same count).
+    pub fn zeros(&self) -> usize {
+        self.mode1.iter().sum()
+    }
+
+    /// The highest zero *fraction* of any single slab across all three
+    /// modes (0.0 for an empty tensor) — a cheap structured-sparsity flag.
+    pub fn max_slab_sparsity(&self) -> f64 {
+        let mut best = 0.0f64;
+        let n1 = self.mode1.len();
+        let n2 = self.mode2.len();
+        let n3 = self.mode3.len();
+        for (slabs, area) in [
+            (&self.mode1, n2 * n3),
+            (&self.mode2, n1 * n3),
+            (&self.mode3, n1 * n2),
+        ] {
+            if area == 0 {
+                continue;
+            }
+            for &z in slabs.iter() {
+                best = best.max(z as f64 / area as f64);
+            }
+        }
+        best
+    }
+}
+
+/// Count exactly-zero elements per slab along every mode in one pass.
+pub fn zero_histogram<T: Scalar>(t: &Tensor3<T>) -> ZeroHistogram {
+    let (n1, n2, n3) = t.shape();
+    let mut h = ZeroHistogram {
+        mode1: vec![0; n1],
+        mode2: vec![0; n2],
+        mode3: vec![0; n3],
+    };
+    let mut idx = 0;
+    for i in 0..n1 {
+        for j in 0..n2 {
+            for k in 0..n3 {
+                if t.data()[idx].is_zero() {
+                    h.mode1[i] += 1;
+                    h.mode2[j] += 1;
+                    h.mode3[k] += 1;
+                }
+                idx += 1;
+            }
+        }
+    }
+    h
 }
 
 #[cfg(test)]
@@ -110,6 +186,42 @@ mod tests {
         // uniform[-1,1) → about half negative
         assert!((p.realized - 0.5).abs() < 0.1, "realized={}", p.realized);
         assert!(t.data().iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn relu_is_generic_and_thresholded() {
+        use crate::tensor::Complex64;
+        // Complex: zero by real part, keep non-negative real parts.
+        let mut c = Tensor3::from_fn(2, 2, 2, |i, j, k| {
+            Complex64::new((i as f64) - 0.5, (j + k) as f64)
+        });
+        relu_sparsify(&mut c);
+        assert!(c.data().iter().all(|v| !(v.re < 0.0)));
+        // f32 with a non-zero threshold.
+        let mut t = Tensor3::from_fn(3, 1, 1, |i, _, _| i as f32);
+        let p = relu_sparsify_at(&mut t, 2.0);
+        assert_eq!(p.zeros, 2); // 0.0 and 1.0 fall below 2.0
+        assert_eq!(t.get(2, 0, 0), 2.0);
+    }
+
+    #[test]
+    fn zero_histogram_counts_per_slab() {
+        let mut t = Tensor3::from_fn(2, 3, 4, |_, _, _| 1.0f64);
+        // Zero out the whole slab i=1 plus one extra element at (0,2,3).
+        for j in 0..3 {
+            for k in 0..4 {
+                t.set(1, j, k, 0.0);
+            }
+        }
+        t.set(0, 2, 3, 0.0);
+        let h = zero_histogram(&t);
+        assert_eq!(h.mode1, vec![1, 12]);
+        assert_eq!(h.mode2.iter().sum::<usize>(), 13);
+        assert_eq!(h.mode3.iter().sum::<usize>(), 13);
+        assert_eq!(h.zeros(), 13);
+        // Slab i=1 is fully zero → max slab sparsity is 1.0.
+        assert_eq!(h.max_slab_sparsity(), 1.0);
+        assert_eq!(zero_histogram(&Tensor3::<f64>::zeros(0, 0, 0)).max_slab_sparsity(), 0.0);
     }
 
     #[test]

@@ -32,7 +32,8 @@ use triada::server::client;
 use triada::server::json::Json;
 use triada::server::wire::{self, TransformRequest};
 use triada::server::{Server, ServerConfig};
-use triada::tensor::Tensor3;
+use triada::sparse::{self, SparseMode};
+use triada::tensor::{sparsify, Tensor3};
 use triada::transforms::TransformKind;
 use triada::util::{JobContext, Rng};
 
@@ -291,6 +292,74 @@ fn pool_panic_storm_recovers_every_job() {
     assert_eq!(snap.completed, 1, "{}", snap.summary());
     assert_eq!(snap.failed, 0, "{}", snap.summary());
     faults::disarm();
+    c.shutdown();
+}
+
+#[test]
+fn compressed_route_under_faults_resolves_typed_or_bit_identical() {
+    // Faults armed while every plan is pinned to the compressed-fiber
+    // path: transients, slowdowns, a plan-build panic, and pool-task
+    // panics all land during sparse-phase execution (the compressed
+    // Stage I runs on the same pool the injector targets). The lifecycle
+    // invariants must hold unchanged — and since the compressed route is
+    // bit-identical by contract, completion still means exact equality
+    // with the scalar reference.
+    let _faults_guard = faults::serial_lock();
+    let _sparse_guard = sparse::selection_lock();
+    sparse::force_sparse(Some(SparseMode::Compressed));
+    let base = base_plan();
+    faults::configure(FaultPlan { seed: base.seed.wrapping_add(4242), ..base });
+    let backend = Arc::new(EngineBackend::new(EngineConfig::with_threads(2)));
+    let c = Coordinator::start(config(2, 64, 2), backend);
+    let mut rng = Rng::new(0x5AA5);
+    let routes_before = sparse::stats().compressed_routes;
+    let mut submitted = Vec::new();
+    for i in 0..16 {
+        // Genuinely sparse activations, so the fiber walk has zeros to
+        // skip while the injector fires around it.
+        let shapes = [(4usize, 4usize, 4usize), (4, 5, 6), (8, 8, 8)];
+        let shape = shapes[rng.usize(shapes.len())];
+        let kind = [TransformKind::Dct2, TransformKind::Dht][rng.usize(2)];
+        let mut x = Tensor3::random(shape.0, shape.1, shape.2, &mut rng);
+        sparsify(&mut x, 0.9, &mut rng);
+        let job = TransformJob::new(kind, Direction::Forward, vec![x.to_f32()]);
+        let want_cancel = i % 6 == 5;
+        let ctx = if i % 8 == 7 {
+            JobContext::deadline_in(Duration::from_millis(2))
+        } else {
+            JobContext::new()
+        };
+        let spec = job.clone();
+        let h = c.submit_ctx(job, ctx).expect("blocking submit must admit");
+        if want_cancel {
+            h.cancel();
+        }
+        submitted.push((spec, h));
+    }
+    let accepted = submitted.len() as u64;
+    for (job, h) in submitted {
+        let res = resolve(h);
+        match &res.outputs {
+            Ok(_) => assert_bit_identical(&res, &job),
+            Err(e) => assert!(
+                res.job_error().is_some() || faults::is_transient(e),
+                "under faults every sparse-routed job either completes or resolves typed: {e:#}"
+            ),
+        }
+    }
+    let snap = c.metrics();
+    assert_eq!(
+        snap.completed + snap.failed + snap.canceled + snap.deadline_missed,
+        accepted,
+        "every accepted job must be accounted exactly once: {}",
+        snap.summary()
+    );
+    assert!(
+        sparse::stats().compressed_routes > routes_before,
+        "the forced compressed route must actually have served executes"
+    );
+    faults::disarm();
+    sparse::force_sparse(None);
     c.shutdown();
 }
 

@@ -176,9 +176,18 @@ fn health_ready_and_metrics_respond() {
     assert_eq!(metrics.status, 200);
     assert_eq!(metrics.header("content-type"), Some(wire::CONTENT_TYPE_JSON));
     let doc = Json::parse(metrics.text().unwrap()).unwrap();
-    for section in ["jobs", "batches", "latency", "plans", "pool", "kernels", "server"] {
+    for section in ["jobs", "batches", "latency", "plans", "pool", "kernels", "server", "sparse"] {
         assert!(doc.get(section).is_some(), "metrics document lacks {section:?}");
     }
+    let selection = doc
+        .get("sparse")
+        .and_then(|s| s.get("selection"))
+        .and_then(Json::as_str)
+        .expect("sparse.selection");
+    assert!(
+        ["auto", "dense", "compressed"].contains(&selection),
+        "unexpected sparse selection {selection:?}"
+    );
     // The metrics GETs themselves are counted.
     let requests = doc
         .get("server")
